@@ -1,0 +1,15 @@
+//! Fairness (paper Fig 15): an LTP flow and a BBR flow share a 1 Gbps
+//! bottleneck; neither starves the other.
+//!
+//! Run: `cargo run --release --example fairness_demo`
+
+fn main() {
+    let r = ltp::figures::fig15(false);
+    println!(
+        "LTP delivered {:.1} MB, BBR {:.1} MB → share {:.1}%, Jain {:.4}",
+        r.ltp_bytes as f64 / 1e6,
+        r.bbr_bytes as f64 / 1e6,
+        r.share * 100.0,
+        r.jain
+    );
+}

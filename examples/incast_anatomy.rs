@@ -1,0 +1,37 @@
+//! Anatomy of the incast problem (paper Figs 2–3) and LTP's fix: 8 workers
+//! blast a PS through one switch; TCP grows a straggler tail, LTP's Early
+//! Close cuts it.
+//!
+//! Run: `cargo run --release --example incast_anatomy`
+
+use ltp::cc::CcAlgo;
+use ltp::config::Workload;
+use ltp::ps::{run_training, Proto, TrainingCfg};
+use ltp::simnet::LossModel;
+use ltp::MS;
+
+fn main() {
+    println!("== Fig 3: the FCT tail under incast (TCP Reno) ==");
+    let (summary, _) = ltp::figures::fig3(true);
+    println!("straggler factor (max/p50): {:.2}x\n", summary.max / summary.p50.max(1e-9));
+
+    println!("== The same incast as a training workload, per protocol ==");
+    for loss in [0.0, 0.005] {
+        for proto in [Proto::Ltp, Proto::Tcp(CcAlgo::Bbr), Proto::Tcp(CcAlgo::Reno)] {
+            let mut cfg = TrainingCfg::modeled(proto, Workload::Micro, 8);
+            cfg.iters = 4;
+            if loss > 0.0 {
+                cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: loss });
+            }
+            let r = run_training(&cfg);
+            println!(
+                "loss {:>5.2}% | {:>5} | mean BST {:>8.2} ms | delivered {:>6.2}%",
+                loss * 100.0,
+                r.proto,
+                r.mean_bst() as f64 / MS as f64,
+                r.mean_delivered() * 100.0
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,43 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. Load the AOT JAX/Pallas artifacts with the PJRT runtime (L2/L1).
+//! 2. Run one LTP flow over a lossy simulated link (L3) and watch Early
+//!    Close cut the retransmission tail.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use ltp::proto::{run_single_flow, EarlyCloseCfg};
+use ltp::runtime::{default_artifacts_dir, literal_f32, literal_i32, to_f32, Runtime};
+use ltp::simnet::{LinkCfg, LossModel};
+use ltp::{MS, SEC};
+
+fn main() -> anyhow::Result<()> {
+    // --- L3: one loss-tolerant flow over a 1 Gbps link with 2 % loss. ----
+    let link = LinkCfg::dcn(1, 50).with_loss(LossModel::Bernoulli { p: 0.02 });
+    let ec = EarlyCloseCfg { lt_threshold: 20 * MS, deadline: 120 * MS, pct: 0.8 };
+    let (s, r) = run_single_flow(2_000_000, vec![0, 99], link, ec, 7, 30 * SEC);
+    println!("LTP flow: closed {:?} with {:.1}% delivered in {}", r.reason.unwrap(),
+        r.pct_at_close * 100.0, ltp::util::fmt_nanos(r.elapsed));
+    println!("          {} packets, {} retransmissions, criticals ok: {}\n",
+        s.pkts_sent, s.retransmissions, r.criticals_ok);
+
+    // --- L2/L1: execute the AOT transformer + Pallas aggregation. --------
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest_tiny.txt").exists() {
+        println!("(artifacts not built — run `make artifacts` to see the PJRT half)");
+        return Ok(());
+    }
+    let rt = Runtime::cpu(dir)?;
+    let m = ltp::config::ModelManifest::load(ltp::runtime::default_artifacts_dir(), "tiny")?;
+    let params = to_f32(&rt.load("init_tiny")?.run(&[])?[0])?;
+    let mut corpus = ltp::ps::Corpus::new(m.vocab, 1);
+    let tokens = corpus.next_batch(m.batch, m.seq_len + 1);
+    let out = rt.load("train_step_tiny")?.run(&[
+        literal_f32(&params, &[m.padded_dim as i64])?,
+        literal_i32(&tokens, &[m.batch as i64, m.seq_len as i64 + 1])?,
+    ])?;
+    let loss = to_f32(&out[1])?[0];
+    println!("PJRT: train_step_tiny on {} → loss {:.4} (≈ ln|V| = {:.4})",
+        rt.platform(), loss, (m.vocab as f32).ln());
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Federated/WAN scenario (paper §VI-C): heterogeneous worker links over a
+//! 1 Gbps/40 ms WAN with bursty loss. LTP's per-link LT thresholds give
+//! each worker its own budget; slow links contribute fewer gradients but
+//! never stall the round past the deadline.
+//!
+//! Run: `cargo run --release --example wan_federated`
+
+use ltp::cc::CcAlgo;
+use ltp::config::{NetEnv, Workload};
+use ltp::ps::{run_training, Proto, TrainingCfg};
+use ltp::simnet::LossModel;
+use ltp::MS;
+
+fn main() {
+    let ge = LossModel::GilbertElliott {
+        p_gb: 0.002,
+        p_bg: 0.05,
+        loss_good: 0.0005,
+        loss_bad: 0.15,
+    };
+    for proto in [Proto::Ltp, Proto::Tcp(CcAlgo::Bbr), Proto::Tcp(CcAlgo::Cubic)] {
+        let mut cfg = TrainingCfg::modeled(proto, Workload::Micro, 8);
+        cfg.link = NetEnv::Wan1g.link().with_loss(ge);
+        cfg.deadline_slack = NetEnv::Wan1g.deadline_slack();
+        cfg.iters = 4;
+        let r = run_training(&cfg);
+        println!(
+            "{:>5} | iters {} | mean BST {:>9.1} ms | gather p50/p99 {:>7.1}/{:>7.1} ms | delivered {:>6.2}%",
+            r.proto,
+            r.iters.len(),
+            r.mean_bst() as f64 / MS as f64,
+            r.gather_summary.p50,
+            r.gather_summary.p99,
+            r.mean_delivered() * 100.0
+        );
+    }
+}

@@ -1,0 +1,119 @@
+"""AOT export: lower every L2/L1 program once to HLO *text* for the Rust
+runtime (``rust/src/runtime``).
+
+HLO text — not ``HloModuleProto.serialize()`` — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(the version behind the `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts [--presets tiny,small]``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import aggregate as agg
+from .kernels import sparsify as sp
+
+# Fig 5 sweep (paper: k = 5..40).
+TOPK_FRACTIONS = [5, 10, 15, 20, 25, 30, 35, 40]
+# Workers baked into the aggregation artifact; fewer workers use zero mask
+# rows.
+AGG_WORKERS = {"tiny": 8, "small": 8, "base": 2}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir, name, fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name}.hlo.txt ({len(text) // 1024} KiB)")
+
+
+def write_manifest(out_dir, cfg):
+    path = os.path.join(out_dir, f"manifest_{cfg.name}.txt")
+    with open(path, "w") as f:
+        f.write(f"# LTP model manifest: preset {cfg.name}\n")
+        for k in ("vocab", "d_model", "n_layers", "n_heads", "seq_len", "batch"):
+            f.write(f"{k} {getattr(cfg, k)}\n")
+        f.write(f"param_count {M.param_count(cfg)}\n")
+        f.write(f"padded_dim {M.padded_dim(cfg)}\n")
+        f.write(f"agg_workers {AGG_WORKERS[cfg.name]}\n")
+        f.write(f"tile_d {agg.TILE_D}\n")
+        f.write("tensors:\n")
+        for name, numel in M.tensor_manifest(cfg):
+            f.write(f"{name} {numel}\n")
+    print(f"  wrote manifest_{cfg.name}.txt")
+
+
+def export_preset(out_dir, preset):
+    cfg = M.PRESETS[preset]
+    dpad = M.padded_dim(cfg)
+    w = AGG_WORKERS[preset]
+    print(f"preset {preset}: D={M.param_count(cfg)} Dpad={dpad} W={w}")
+
+    step, step_example = M.make_train_step(cfg)
+    export(out_dir, f"train_step_{preset}", step, step_example)
+
+    ev, ev_example = M.make_eval(cfg)
+    export(out_dir, f"eval_{preset}", ev, ev_example)
+
+    export(out_dir, f"init_{preset}", lambda: (M.init_params(cfg),), ())
+
+    fvec = jax.ShapeDtypeStruct((dpad,), jnp.float32)
+    fmat = jax.ShapeDtypeStruct((w, dpad), jnp.float32)
+    lr = jax.ShapeDtypeStruct((1,), jnp.float32)
+    export(
+        out_dir,
+        f"aggregate_{preset}",
+        lambda p, v, g, m, l: agg.masked_aggregate(p, v, g, m, l),
+        (fvec, fvec, fmat, fmat, lr),
+    )
+
+    if preset == "tiny":
+        for k in TOPK_FRACTIONS:
+            export(
+                out_dir,
+                f"topk_{preset}_k{k}",
+                lambda g, kf=k: (sp.top_k_block(g, kf / 100.0),),
+                (fvec,),
+            )
+        # Random-k mask application (mask computed by the caller).
+        export(
+            out_dir,
+            f"randk_{preset}",
+            lambda g, m: (sp.random_k_apply(g, m),),
+            (fvec, fvec),
+        )
+
+    write_manifest(out_dir, cfg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for preset in args.presets.split(","):
+        export_preset(args.out, preset.strip())
+    # Stamp for make's incremental check.
+    open(os.path.join(args.out, ".stamp"), "w").write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

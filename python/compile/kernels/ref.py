@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package is checked against these references by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes/values) before
+AOT export. The Rust side additionally cross-checks the aggregation math in
+``rust/tests/runtime_e2e.rs``.
+"""
+
+import jax.numpy as jnp
+
+
+def masked_aggregate_ref(p, v, g, m, lr, momentum=0.9):
+    """Bubble-filling-aware PS update (paper §III-C semantics).
+
+    Args:
+      p: [D] parameters.
+      v: [D] momentum buffer.
+      g: [W, D] per-worker gradients; elements lost in transit are zero
+         (packet bubbles).
+      m: [W, D] arrival mask; 1.0 where the element arrived, 0.0 where it
+         was dropped by Early Close. A worker that contributed nothing is a
+         zero row.
+      lr: scalar learning rate.
+      momentum: momentum coefficient.
+
+    Returns:
+      (p', v'): mean over *arrived* contributions per element (missing
+      contributions neither add mass nor dilute — the denominator is the
+      arrival count, floored at 1), then SGD-with-momentum.
+    """
+    s = jnp.sum(g * m, axis=0)
+    cnt = jnp.maximum(jnp.sum(m, axis=0), 1.0)
+    mean = s / cnt
+    v2 = momentum * v + mean
+    p2 = p - lr * v2
+    return p2, v2
+
+
+def random_k_apply_ref(g, mask):
+    """Random-k sparsification: apply a 0/1 keep mask."""
+    return g * mask
+
+
+def top_k_block_ref(g, k_frac, block=4096):
+    """Blockwise approximate Top-k (the TPU adaptation of CUDA top-k).
+
+    Keeps the top ``k_frac`` fraction *within each block* by magnitude —
+    no global sort, matching what the Pallas kernel can do with VMEM-local
+    data. ``g`` is [D] with D a multiple of ``block``.
+    """
+    d = g.shape[0]
+    assert d % block == 0
+    k = max(1, int(round(block * k_frac)))
+    gb = g.reshape(d // block, block)
+    mags = jnp.abs(gb)
+    # Threshold = k-th largest magnitude per block.
+    thresh = -jnp.sort(-mags, axis=1)[:, k - 1 : k]
+    mask = (mags >= thresh).astype(g.dtype)
+    return (gb * mask).reshape(d)

@@ -1,0 +1,203 @@
+"""L2: the training workload — a decoder-only transformer LM in pure JAX.
+
+The paper trains ResNet/VGG on CIFAR-10 on GPUs; on this CPU-only testbed
+the *real-compute* workload is a causal-LM transformer over synthetic token
+data (DESIGN.md §2 substitution map). The network/protocol experiments use
+the paper's exact message sizes via modeled compute instead.
+
+Interface contract with the Rust runtime (everything is flat f32):
+
+  train_step(params[D], tokens[B, S+1]) -> (grads[D], loss[])
+  eval_loss(params[D], tokens[B, S+1]) -> (loss[],)
+  init_params(seed) -> params[D]          (exported as an artifact too)
+  aggregate — see kernels/aggregate.py; applied on the PS per D-chunk.
+
+D is padded to a multiple of kernels.aggregate.TILE_D so the PS can chunk
+the flat vector uniformly. The tensor manifest (name, numel per tensor,
+plus the pad) is written next to the artifacts for the Rust side.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.aggregate import TILE_D
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self):
+        return 4 * self.d_model
+
+
+PRESETS = {
+    # ~0.8 M params — the e2e training example (CPU-friendly).
+    "tiny": ModelCfg("tiny", vocab=512, d_model=128, n_layers=2, n_heads=4,
+                     seq_len=64, batch=8),
+    # ~13 M params — medium runs.
+    "small": ModelCfg("small", vocab=4096, d_model=384, n_layers=6, n_heads=6,
+                      seq_len=128, batch=4),
+    # ~113 M params — smoke-scale only on CPU (DESIGN.md §5).
+    "base": ModelCfg("base", vocab=32768, d_model=768, n_layers=12, n_heads=12,
+                     seq_len=128, batch=1),
+}
+
+
+def tensor_manifest(cfg: ModelCfg):
+    """Ordered (name, numel) list — must match Rust grad::Manifest."""
+    d, v, s = cfg.d_model, cfg.vocab, cfg.seq_len
+    out = [("tok_embed", v * d), ("pos_embed", s * d)]
+    for i in range(cfg.n_layers):
+        p = f"block{i}."
+        out += [
+            (p + "ln1_g", d), (p + "ln1_b", d),
+            (p + "wq", d * d), (p + "wk", d * d),
+            (p + "wv", d * d), (p + "wo", d * d),
+            (p + "ln2_g", d), (p + "ln2_b", d),
+            (p + "w1", d * cfg.d_ff), (p + "b1", cfg.d_ff),
+            (p + "w2", cfg.d_ff * d), (p + "b2", d),
+        ]
+    out += [("lnf_g", d), ("lnf_b", d), ("head", d * v)]
+    return out
+
+
+def param_count(cfg: ModelCfg):
+    return sum(n for _, n in tensor_manifest(cfg))
+
+
+def padded_dim(cfg: ModelCfg):
+    d = param_count(cfg)
+    return (d + TILE_D - 1) // TILE_D * TILE_D
+
+
+def _unflatten(cfg: ModelCfg, flat):
+    params = {}
+    off = 0
+    for name, numel in tensor_manifest(cfg):
+        params[name] = flat[off:off + numel]
+        off += numel
+    return params
+
+
+def _shape(cfg: ModelCfg, params):
+    d, v, s, f = cfg.d_model, cfg.vocab, cfg.seq_len, cfg.d_ff
+    sh = {
+        "tok_embed": (v, d), "pos_embed": (s, d),
+        "lnf_g": (d,), "lnf_b": (d,), "head": (d, v),
+    }
+    for i in range(cfg.n_layers):
+        p = f"block{i}."
+        sh.update({
+            p + "ln1_g": (d,), p + "ln1_b": (d,),
+            p + "wq": (d, d), p + "wk": (d, d), p + "wv": (d, d), p + "wo": (d, d),
+            p + "ln2_g": (d,), p + "ln2_b": (d,),
+            p + "w1": (d, f), p + "b1": (f,), p + "w2": (f, d), p + "b2": (d,),
+        })
+    return {k: w.reshape(sh[k]) for k, w in params.items()}
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _block(cfg: ModelCfg, p, prefix, x, causal_mask):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    y = _layernorm(x, p[prefix + "ln1_g"], p[prefix + "ln1_b"])
+    B, S, _ = y.shape
+    q = (y @ p[prefix + "wq"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    k = (y @ p[prefix + "wk"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    v = (y @ p[prefix + "wv"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(dh))
+    att = jnp.where(causal_mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    o = (att @ v).transpose(0, 2, 1, 3).reshape(B, S, d)
+    x = x + o @ p[prefix + "wo"]
+    y = _layernorm(x, p[prefix + "ln2_g"], p[prefix + "ln2_b"])
+    y = jax.nn.gelu(y @ p[prefix + "w1"] + p[prefix + "b1"])
+    return x + y @ p[prefix + "w2"] + p[prefix + "b2"]
+
+
+def loss_fn(cfg: ModelCfg, flat_params, tokens):
+    """Causal-LM cross-entropy. tokens: [B, S+1] int32."""
+    real = param_count(cfg)
+    p = _shape(cfg, _unflatten(cfg, flat_params[:real]))
+    x_tok = tokens[:, :-1]
+    y_tok = tokens[:, 1:]
+    S = cfg.seq_len
+    x = p["tok_embed"][x_tok] + p["pos_embed"][None, :S, :]
+    mask = jnp.tril(jnp.ones((S, S), dtype=bool))[None, None]
+    for i in range(cfg.n_layers):
+        x = _block(cfg, p, f"block{i}.", x, mask)
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    logits = x @ p["head"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y_tok[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelCfg, flat_params, tokens):
+    """(grads[Dpad], loss[]) — grads padded with zeros to the chunk size."""
+    loss, grads = jax.value_and_grad(loss_fn, argnums=1)(cfg, flat_params, tokens)
+    return grads, loss
+
+
+def eval_loss(cfg: ModelCfg, flat_params, tokens):
+    return (loss_fn(cfg, flat_params, tokens),)
+
+
+def init_params(cfg: ModelCfg, seed=0):
+    """Flat [Dpad] init, matching the manifest order. Scaled-normal init."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, numel in tensor_manifest(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_b", "_g", "b1", "b2")):
+            w = (jnp.ones if name.endswith("_g") else jnp.zeros)(numel, jnp.float32)
+        else:
+            scale = 0.02
+            w = scale * jax.random.normal(sub, (numel,), jnp.float32)
+        chunks.append(w)
+    flat = jnp.concatenate(chunks)
+    pad = padded_dim(cfg) - flat.shape[0]
+    return jnp.concatenate([flat, jnp.zeros(pad, jnp.float32)])
+
+
+def make_train_step(cfg: ModelCfg):
+    """Jit-able closure with the padded-D contract used for AOT export."""
+    dpad = padded_dim(cfg)
+
+    def step(flat_params, tokens):
+        grads, loss = train_step(cfg, flat_params, tokens)
+        return grads, loss
+
+    example = (
+        jax.ShapeDtypeStruct((dpad,), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32),
+    )
+    return step, example
+
+
+def make_eval(cfg: ModelCfg):
+    dpad = padded_dim(cfg)
+    example = (
+        jax.ShapeDtypeStruct((dpad,), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32),
+    )
+    return functools.partial(eval_loss, cfg), example

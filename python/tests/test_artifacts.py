@@ -1,0 +1,48 @@
+"""AOT artifact sanity: exported HLO text parses structurally and the
+manifest round-trips against the model definition."""
+
+import os
+import pytest
+
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest_tiny.txt")),
+    reason="run `make artifacts` first",
+)
+
+
+def test_manifest_file_matches_model():
+    cfg = M.PRESETS["tiny"]
+    path = os.path.join(ART, "manifest_tiny.txt")
+    lines = open(path).read().splitlines()
+    kv = {}
+    tensors = []
+    in_tensors = False
+    for line in lines:
+        if line.startswith("#"):
+            continue
+        if line == "tensors:":
+            in_tensors = True
+            continue
+        k, val = line.rsplit(" ", 1)
+        if in_tensors:
+            tensors.append((k, int(val)))
+        else:
+            kv[k] = int(val)
+    assert kv["param_count"] == M.param_count(cfg)
+    assert kv["padded_dim"] == M.padded_dim(cfg)
+    assert tensors == M.tensor_manifest(cfg)
+
+
+@pytest.mark.parametrize(
+    "name",
+    ["train_step_tiny", "eval_tiny", "init_tiny", "aggregate_tiny", "randk_tiny"],
+)
+def test_hlo_text_exists_and_parses_shallowly(name):
+    path = os.path.join(ART, f"{name}.hlo.txt")
+    text = open(path).read()
+    assert text.startswith("HloModule"), f"{name} is not HLO text"
+    assert "ENTRY" in text

@@ -1,0 +1,98 @@
+"""Kernel-vs-oracle correctness: the Pallas kernels must agree with the
+pure-jnp references across randomized shapes and values (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.aggregate import masked_aggregate, TILE_D
+from compile.kernels.sparsify import random_k_apply, top_k_block, BLOCK
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape).astype(jnp.float32)
+
+
+class TestMaskedAggregate:
+    @given(
+        w=st.integers(1, 8),
+        tiles=st.integers(1, 3),
+        seed=st.integers(0, 2**16),
+        lr=st.floats(1e-4, 1.0),
+        momentum=st.floats(0.0, 0.99),
+    )
+    def test_matches_reference(self, w, tiles, seed, lr, momentum):
+        d = tiles * TILE_D
+        p = rand(seed, (d,))
+        v = rand(seed + 1, (d,), 0.1)
+        g = rand(seed + 2, (w, d))
+        m = (jax.random.uniform(jax.random.PRNGKey(seed + 3), (w, d)) > 0.4).astype(
+            jnp.float32
+        )
+        lr_v = jnp.array([lr], jnp.float32)
+        p2, v2 = masked_aggregate(p, v, g, m, lr_v, momentum=momentum)
+        pr, vr = ref.masked_aggregate_ref(p, v, g, m, lr, momentum=momentum)
+        np.testing.assert_allclose(p2, pr, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(v2, vr, rtol=1e-5, atol=1e-6)
+
+    def test_all_lost_elements_keep_params_moving_by_momentum_only(self):
+        d = TILE_D
+        p = rand(0, (d,))
+        v = rand(1, (d,), 0.5)
+        g = rand(2, (2, d))
+        m = jnp.zeros((2, d), jnp.float32)  # nothing arrived
+        p2, v2 = masked_aggregate(p, v, g, m, jnp.array([0.1]))
+        # mean = 0 -> v' = 0.9 v, p' = p - 0.1*0.9*v
+        np.testing.assert_allclose(v2, 0.9 * v, rtol=1e-6)
+        np.testing.assert_allclose(p2, p - 0.1 * 0.9 * v, rtol=1e-5, atol=1e-6)
+
+    def test_partial_arrival_excludes_missing_workers(self):
+        d = TILE_D
+        p = jnp.zeros(d)
+        v = jnp.zeros(d)
+        g = jnp.stack([jnp.full(d, 2.0), jnp.full(d, 6.0)])
+        m = jnp.stack([jnp.ones(d), jnp.zeros(d)])  # worker 1 fully lost
+        p2, v2 = masked_aggregate(p, v, g, m, jnp.array([1.0]), momentum=0.0)
+        # mean over arrived = 2.0 (NOT (2+6)/2 nor (2+0)/2)
+        np.testing.assert_allclose(v2, jnp.full(d, 2.0), rtol=1e-6)
+        np.testing.assert_allclose(p2, jnp.full(d, -2.0), rtol=1e-6)
+
+
+class TestSparsify:
+    @given(blocks=st.integers(1, 3), seed=st.integers(0, 2**16))
+    def test_random_k_apply_is_elementwise_multiply(self, blocks, seed):
+        d = blocks * BLOCK
+        g = rand(seed, (d,))
+        m = (jax.random.uniform(jax.random.PRNGKey(seed + 9), (d,)) > 0.5).astype(
+            jnp.float32
+        )
+        out = random_k_apply(g, m)
+        np.testing.assert_allclose(out, ref.random_k_apply_ref(g, m), rtol=0, atol=0)
+
+    @given(
+        blocks=st.integers(1, 2),
+        k=st.sampled_from([0.05, 0.1, 0.25, 0.4]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_top_k_block_close_to_reference(self, blocks, k, seed):
+        d = blocks * BLOCK
+        g = rand(seed, (d,))
+        out = np.asarray(top_k_block(g, k))
+        expect = np.asarray(ref.top_k_block_ref(g, k, block=BLOCK))
+        # Bisection resolves the threshold to ~2^-24 of max|g|; mismatches
+        # can only sit in that epsilon band around the exact k-th magnitude.
+        mismatch = out != expect
+        frac = mismatch.mean()
+        assert frac < 0.002, f"mismatch fraction {frac}"
+        kept = (out != 0).sum() / d
+        assert abs(kept - k) < 0.01 + 2.0 / BLOCK
+
+    def test_top_k_keeps_the_large_elements(self):
+        g = jnp.zeros(BLOCK).at[7].set(100.0).at[99].set(-50.0).at[1000].set(1e-3)
+        out = np.asarray(top_k_block(g, 2.0 / BLOCK))
+        assert out[7] == 100.0 and out[99] == -50.0

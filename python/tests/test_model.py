@@ -1,0 +1,70 @@
+"""L2 model sanity: shapes, manifest consistency, and trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.aggregate import TILE_D
+
+
+CFG = M.PRESETS["tiny"]
+
+
+def synth_tokens(key, cfg):
+    return jax.random.randint(key, (cfg.batch, cfg.seq_len + 1), 0, cfg.vocab)
+
+
+class TestManifest:
+    def test_param_count_matches_flat_init(self):
+        p = M.init_params(CFG)
+        assert p.shape == (M.padded_dim(CFG),)
+        assert M.padded_dim(CFG) % TILE_D == 0
+        assert M.padded_dim(CFG) - M.param_count(CFG) < TILE_D
+
+    def test_manifest_covers_every_parameter(self):
+        names = [n for n, _ in M.tensor_manifest(CFG)]
+        assert len(names) == len(set(names))
+        assert sum(n for _, n in M.tensor_manifest(CFG)) == M.param_count(CFG)
+
+    @pytest.mark.parametrize("preset", ["tiny", "small", "base"])
+    def test_presets_have_sane_sizes(self, preset):
+        cfg = M.PRESETS[preset]
+        count = M.param_count(cfg)
+        lo, hi = {"tiny": (3e5, 1e6), "small": (8e6, 2e7), "base": (1e8, 1.6e8)}[preset]
+        assert lo <= count <= hi, count
+
+
+class TestTraining:
+    def test_loss_starts_near_uniform(self):
+        p = M.init_params(CFG)
+        tok = synth_tokens(jax.random.PRNGKey(0), CFG)
+        loss = M.loss_fn(CFG, p, tok)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+    def test_grads_flow_to_all_tensors(self):
+        p = M.init_params(CFG)
+        tok = synth_tokens(jax.random.PRNGKey(0), CFG)
+        g, loss = M.train_step(CFG, p, tok)
+        assert g.shape == p.shape
+        off = 0
+        for name, numel in M.tensor_manifest(CFG):
+            gn = float(jnp.abs(g[off:off + numel]).sum())
+            assert gn > 0, f"zero gradient for {name}"
+            off += numel
+        # padding grads are exactly zero
+        assert float(jnp.abs(g[M.param_count(CFG):]).sum()) == 0.0
+
+    def test_sgd_reduces_loss_on_fixed_batch(self):
+        p = M.init_params(CFG)
+        tok = synth_tokens(jax.random.PRNGKey(1), CFG)
+        step = jax.jit(lambda p, t: M.train_step(CFG, p, t))
+        l0 = None
+        loss = None
+        for _ in range(8):
+            g, loss = step(p, tok)
+            if l0 is None:
+                l0 = float(loss)
+            p = p - 0.5 * g
+        assert float(loss) < l0 - 0.1, (l0, float(loss))

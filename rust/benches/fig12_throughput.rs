@@ -1,0 +1,9 @@
+//! Bench: regenerate Fig 12 (training throughput vs loss per protocol).
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let points = ltp::figures::fig12(true);
+    println!("fig12: {} points in {:?}", points.len(), t0.elapsed());
+}

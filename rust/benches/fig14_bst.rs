@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig 14 (BST distributions normalized to LTP) plus
+//! Fig 2/3/15 (they share the harness and are cheap).
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    ltp::figures::fig2(true);
+    ltp::figures::fig3(true);
+    let rows = ltp::figures::fig14(true);
+    ltp::figures::fig15(true);
+    println!("fig2+3+14+15: {} fig14 rows in {:?}", rows.len(), t0.elapsed());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate the paper's Fig 4 table (goodput reduction vs loss)
+//! and time the sweep. Run with `cargo bench --bench fig4_utilization`.
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let cells = ltp::figures::fig4(true);
+    println!("fig4: {} cells in {:?}", cells.len(), t0.elapsed());
+}

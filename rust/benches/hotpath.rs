@@ -1,0 +1,86 @@
+//! Microbenchmarks of the L3 hot paths (hand-rolled: no criterion in the
+//! vendored set). Reports ns/op medians over repeated runs; used by the
+//! §Perf pass in EXPERIMENTS.md.
+
+use ltp::proto::{run_single_flow, EarlyCloseCfg, LtpSender, SegmentMap};
+use ltp::simnet::{LinkCfg, LossModel};
+use ltp::wire::{LtpHeader, LTP_MSS};
+use ltp::{MS, SEC};
+use std::time::Instant;
+
+fn bench<F: FnMut() -> u64>(name: &str, iters: u32, mut f: F) {
+    let mut samples = Vec::with_capacity(iters as usize);
+    let mut units = 0u64;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        units = f();
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    samples.sort_unstable();
+    let med = samples[samples.len() / 2];
+    println!(
+        "{name:<44} median {:>10} ns  ({:>8.1} ns/unit over {units} units)",
+        med,
+        med as f64 / units.max(1) as f64
+    );
+}
+
+fn main() {
+    println!("== L3 hot paths ==");
+
+    bench("ltp header encode+decode", 50, || {
+        let mut acc = 0u64;
+        let n = 100_000;
+        for i in 0..n {
+            let h = LtpHeader::data(7, i as u32 & 0xFFFFF, ltp::wire::Importance::Normal);
+            let b = h.encode();
+            acc = acc.wrapping_add(LtpHeader::decode(&b).unwrap().seq as u64);
+        }
+        std::hint::black_box(acc);
+        n
+    });
+
+    bench("sender window: poll_transmit+ack cycle", 20, || {
+        let map = SegmentMap::new(50_000_000, LTP_MSS, vec![]);
+        let mut s = LtpSender::new(1, map, ltp::wire::MTU);
+        s.seed_cc(MS, 1_250_000_000);
+        let mut now = 0;
+        let mut sent = 0u64;
+        // Drive a synthetic 1-RTT-lag ack stream.
+        let mut pending = std::collections::VecDeque::new();
+        while sent < 30_000 {
+            while let Some(p) = s.poll_transmit(now) {
+                sent += 1;
+                pending.push_back((now + MS, p.hdr.seq));
+            }
+            while pending.front().map(|&(t, _)| t <= now).unwrap_or(false) {
+                let (_, seq) = pending.pop_front().unwrap();
+                s.handle(now, ltp::proto::ack_event(1, seq));
+            }
+            now += 50_000;
+        }
+        sent
+    });
+
+    bench("simnet: 1-flow 10MB over lossy link (events)", 10, || {
+        let cfg = LinkCfg::dcn(10, 50).with_loss(LossModel::Bernoulli { p: 0.01 });
+        let ec = EarlyCloseCfg { lt_threshold: 10 * MS, deadline: 100 * MS, pct: 0.8 };
+        let (s, _r) = run_single_flow(10_000_000, vec![0], cfg, ec, 1, 60 * SEC);
+        s.pkts_sent
+    });
+
+    bench("bubble fill 10MB, 30% loss", 20, || {
+        let map = SegmentMap::new(10_000_000, 1460, vec![]);
+        let src = vec![0xABu8; 10_000_000];
+        let mut rec = ltp::util::Bitmap::new(map.n_segs as usize);
+        let mut rng = ltp::util::Pcg64::seeded(3);
+        for i in 0..map.n_segs as usize {
+            if rng.chance(0.7) {
+                rec.set(i);
+            }
+        }
+        let out = ltp::grad::bubble_fill(&src, &map, &rec);
+        std::hint::black_box(&out);
+        map.n_segs as u64
+    });
+}

@@ -1,0 +1,291 @@
+//! BBR v1 (Cardwell et al., 2016), modeled: Startup / Drain / ProbeBW /
+//! ProbeRTT, windowed-max BtlBw over ~10 RTTs, windowed-min RTprop over
+//! 10 s, pacing-gain cycling, cwnd = gain·BDP. Loss is not a primary
+//! congestion signal — the property that keeps BBR usable in the paper's
+//! lossy-network experiments.
+
+use super::filters::{WindowedMax, WindowedMin};
+use super::{AckSample, CongestionControl};
+use crate::{Nanos, MS, SEC};
+
+const STARTUP_GAIN: f64 = 2.885; // 2/ln(2)
+const DRAIN_GAIN: f64 = 1.0 / STARTUP_GAIN;
+const CWND_GAIN: f64 = 2.0;
+const PROBE_BW_CYCLE: [f64; 8] = [1.25, 0.75, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+const RTPROP_WINDOW: Nanos = 10 * SEC;
+const PROBE_RTT_INTERVAL: Nanos = 10 * SEC;
+const PROBE_RTT_DURATION: Nanos = 200 * MS;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BbrState {
+    Startup,
+    Drain,
+    ProbeBw,
+    ProbeRtt,
+}
+
+#[derive(Debug)]
+pub struct Bbr {
+    mss: u64,
+    state: BbrState,
+    /// Max filter over delivery-rate samples (bytes/sec).
+    btlbw: WindowedMax,
+    /// Min filter over RTT samples (ns).
+    rtprop: WindowedMin,
+    pacing_gain: f64,
+    cwnd_gain: f64,
+    cycle_index: usize,
+    cycle_stamp: Nanos,
+    /// Startup plateau detection.
+    full_bw: u64,
+    full_bw_count: u32,
+    round_start: Nanos,
+    probe_rtt_done: Nanos,
+    last_probe_rtt: Nanos,
+    prior_cwnd: u64,
+}
+
+impl Bbr {
+    pub fn new(mss: u32) -> Bbr {
+        Bbr {
+            mss: mss as u64,
+            state: BbrState::Startup,
+            btlbw: WindowedMax::new(SEC), // adapted to ~10·RTprop as samples arrive
+            rtprop: WindowedMin::new(RTPROP_WINDOW),
+            pacing_gain: STARTUP_GAIN,
+            cwnd_gain: STARTUP_GAIN,
+            cycle_index: 0,
+            cycle_stamp: 0,
+            full_bw: 0,
+            full_bw_count: 0,
+            round_start: 0,
+            probe_rtt_done: 0,
+            last_probe_rtt: 0,
+            prior_cwnd: 0,
+        }
+    }
+
+    pub fn state(&self) -> BbrState {
+        self.state
+    }
+
+    /// BtlBw estimate in bytes/sec (0 until the first sample).
+    pub fn btlbw_bytes_per_sec(&self) -> u64 {
+        self.btlbw.get().unwrap_or(0)
+    }
+
+    /// RTprop estimate in ns.
+    pub fn rtprop_ns(&self) -> Nanos {
+        self.rtprop.get().unwrap_or(MS)
+    }
+
+    /// BDP in bytes at the current estimates.
+    pub fn bdp_bytes(&self) -> u64 {
+        let bw = self.btlbw_bytes_per_sec();
+        let rt = self.rtprop_ns();
+        ((bw as u128 * rt as u128) / SEC as u128) as u64
+    }
+
+    fn check_full_pipe(&mut self) {
+        let bw = self.btlbw_bytes_per_sec();
+        if bw as f64 >= self.full_bw as f64 * 1.25 {
+            self.full_bw = bw;
+            self.full_bw_count = 0;
+        } else {
+            self.full_bw_count += 1;
+        }
+    }
+
+    fn advance_cycle(&mut self, now: Nanos) {
+        if now.saturating_sub(self.cycle_stamp) >= self.rtprop_ns() {
+            self.cycle_index = (self.cycle_index + 1) % PROBE_BW_CYCLE.len();
+            self.cycle_stamp = now;
+            self.pacing_gain = PROBE_BW_CYCLE[self.cycle_index];
+        }
+    }
+}
+
+impl CongestionControl for Bbr {
+    fn name(&self) -> &'static str {
+        "bbr"
+    }
+
+    fn cwnd_bytes(&self) -> u64 {
+        if self.state == BbrState::ProbeRtt {
+            return 4 * self.mss;
+        }
+        let bdp = self.bdp_bytes();
+        if bdp == 0 {
+            10 * self.mss // no estimate yet: initial window
+        } else {
+            ((self.cwnd_gain * bdp as f64) as u64).max(4 * self.mss)
+        }
+    }
+
+    fn pacing_rate_bps(&self) -> Option<u64> {
+        let bw = self.btlbw_bytes_per_sec();
+        if bw == 0 {
+            return None;
+        }
+        Some((self.pacing_gain * bw as f64 * 8.0) as u64)
+    }
+
+    fn on_ack(&mut self, s: AckSample) {
+        // Update filters.
+        self.rtprop.add(s.now, s.rtt);
+        if let Some(rate) = s.delivery_rate_bps {
+            let rate_bytes = rate / 8;
+            // Keep the BtlBw window at ~10 RTprop.
+            self.btlbw.set_window((10 * self.rtprop_ns()).max(100 * MS));
+            self.btlbw.add(s.now, rate_bytes);
+        }
+
+        // Round boundary ≈ one RTprop.
+        let new_round = s.now.saturating_sub(self.round_start) >= self.rtprop_ns();
+        if new_round {
+            self.round_start = s.now;
+        }
+
+        match self.state {
+            BbrState::Startup => {
+                if new_round {
+                    self.check_full_pipe();
+                }
+                if self.full_bw_count >= 3 {
+                    self.state = BbrState::Drain;
+                    self.pacing_gain = DRAIN_GAIN;
+                    self.cwnd_gain = CWND_GAIN;
+                }
+            }
+            BbrState::Drain => {
+                if s.inflight_bytes <= self.bdp_bytes() {
+                    self.state = BbrState::ProbeBw;
+                    self.pacing_gain = PROBE_BW_CYCLE[0];
+                    self.cycle_index = 0;
+                    self.cycle_stamp = s.now;
+                    self.last_probe_rtt = s.now;
+                }
+            }
+            BbrState::ProbeBw => {
+                self.advance_cycle(s.now);
+                if s.now.saturating_sub(self.last_probe_rtt) >= PROBE_RTT_INTERVAL {
+                    self.state = BbrState::ProbeRtt;
+                    self.prior_cwnd = self.cwnd_bytes();
+                    self.probe_rtt_done = s.now + PROBE_RTT_DURATION.max(self.rtprop_ns());
+                }
+            }
+            BbrState::ProbeRtt => {
+                if s.now >= self.probe_rtt_done {
+                    self.state = BbrState::ProbeBw;
+                    self.last_probe_rtt = s.now;
+                    self.cycle_stamp = s.now;
+                    self.pacing_gain = PROBE_BW_CYCLE[self.cycle_index];
+                }
+            }
+        }
+    }
+
+    fn on_loss(&mut self, _now: Nanos) {
+        // BBRv1: loss is not a congestion signal. (Linux caps inflight to
+        // the estimate during recovery; the windowed filters already give
+        // that behaviour here.)
+    }
+
+    fn on_timeout(&mut self, _now: Nanos) {
+        // Conservative: restart bandwidth probing.
+        self.full_bw = 0;
+        self.full_bw_count = 0;
+        self.state = BbrState::Startup;
+        self.pacing_gain = STARTUP_GAIN;
+        self.cwnd_gain = STARTUP_GAIN;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ack(now: Nanos, rtt: Nanos, rate_bps: u64, inflight: u64) -> AckSample {
+        AckSample {
+            now,
+            acked_bytes: 1460,
+            rtt,
+            delivery_rate_bps: Some(rate_bps),
+            ece: false,
+            inflight_bytes: inflight,
+        }
+    }
+
+    #[test]
+    fn startup_exits_on_plateau() {
+        let mut cc = Bbr::new(1460);
+        // Constant delivery rate → plateau after 3 rounds.
+        let mut now = 0;
+        for _ in 0..20 {
+            now += 2 * MS;
+            cc.on_ack(ack(now, MS, 1_000_000_000, 1_000_000));
+        }
+        assert_ne!(cc.state(), BbrState::Startup);
+    }
+
+    #[test]
+    fn estimates_converge_to_link() {
+        let mut cc = Bbr::new(1460);
+        let mut now = 0;
+        for _ in 0..100 {
+            now += MS;
+            cc.on_ack(ack(now, 2 * MS, 10_000_000_000, 100_000));
+        }
+        assert_eq!(cc.btlbw_bytes_per_sec(), 10_000_000_000 / 8);
+        assert_eq!(cc.rtprop_ns(), 2 * MS);
+        // BDP = 1.25 GB/s * 2 ms = 2.5 MB
+        assert_eq!(cc.bdp_bytes(), 2_500_000);
+    }
+
+    #[test]
+    fn loss_does_not_collapse_window() {
+        let mut cc = Bbr::new(1460);
+        let mut now = 0;
+        for _ in 0..100 {
+            now += MS;
+            cc.on_ack(ack(now, 2 * MS, 10_000_000_000, 100_000));
+        }
+        let w = cc.cwnd_bytes();
+        for i in 0..50 {
+            cc.on_loss(now + i * MS);
+        }
+        assert_eq!(cc.cwnd_bytes(), w, "BBR must ignore loss");
+    }
+
+    #[test]
+    fn probe_rtt_shrinks_cwnd_temporarily() {
+        let mut cc = Bbr::new(1460);
+        let mut now = 0;
+        // Reach ProbeBw, then run past the 10 s ProbeRTT interval.
+        for _ in 0..50 {
+            now += MS;
+            cc.on_ack(ack(now, 2 * MS, 10_000_000_000, 100_000));
+        }
+        assert_eq!(cc.state(), BbrState::ProbeBw);
+        now += 11 * SEC;
+        cc.on_ack(ack(now, 2 * MS, 10_000_000_000, 100_000));
+        assert_eq!(cc.state(), BbrState::ProbeRtt);
+        assert_eq!(cc.cwnd_bytes(), 4 * 1460);
+        now += 300 * MS;
+        cc.on_ack(ack(now, 2 * MS, 10_000_000_000, 100_000));
+        assert_eq!(cc.state(), BbrState::ProbeBw);
+    }
+
+    #[test]
+    fn pacing_rate_tracks_btlbw_with_gain() {
+        let mut cc = Bbr::new(1460);
+        let mut now = 0;
+        for _ in 0..100 {
+            now += MS;
+            cc.on_ack(ack(now, 2 * MS, 8_000_000_000, 100_000));
+        }
+        let rate = cc.pacing_rate_bps().unwrap();
+        // In ProbeBw the gain cycles 0.75–1.25 around BtlBw.
+        assert!(rate >= 8_000_000_000 * 3 / 4 && rate <= 8_000_000_000 * 5 / 4, "rate {rate}");
+    }
+}

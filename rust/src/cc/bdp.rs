@@ -1,0 +1,200 @@
+//! LTP's BDP-based congestion controller (paper §III-D).
+//!
+//! Like BBR it estimates BtlBw (windowed max of delivery-rate samples) and
+//! RTprop (windowed min of RTTs) and caps *packets in flight* at the BDP.
+//! Unlike TCP, packet-loss recognition is **never** used to adjust the
+//! window. Pacing is the paper's approximation: when more than
+//! [`PACING_BURST`] packets would be released back-to-back, the sender
+//! waits per the computed pacing rate instead of bursting.
+
+use super::filters::{WindowedMax, WindowedMin};
+use crate::{Nanos, MS, SEC};
+
+/// Paper §III-D: bursts above 20 packets (10 G link, MTU 1500, ≈30 KB) are
+/// paced rather than sent back-to-back.
+pub const PACING_BURST: u32 = 20;
+
+const STARTUP_GAIN: f64 = 2.885;
+const RTPROP_WINDOW: Nanos = 10 * SEC;
+
+#[derive(Debug)]
+pub struct BdpCc {
+    mtu: u32,
+    btlbw: WindowedMax,
+    rtprop: WindowedMin,
+    /// Startup until the bandwidth estimate plateaus.
+    startup: bool,
+    full_bw: u64,
+    full_bw_count: u32,
+    round_start: Nanos,
+    /// Probe cycle for steady state (mild, BBR-like).
+    cycle_index: usize,
+    cycle_stamp: Nanos,
+}
+
+const CYCLE: [f64; 8] = [1.25, 0.75, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+
+impl BdpCc {
+    pub fn new(mtu: u32) -> BdpCc {
+        BdpCc {
+            mtu,
+            btlbw: WindowedMax::new(SEC),
+            rtprop: WindowedMin::new(RTPROP_WINDOW),
+            startup: true,
+            full_bw: 0,
+            full_bw_count: 0,
+            round_start: 0,
+            cycle_index: 0,
+            cycle_stamp: 0,
+        }
+    }
+
+    /// Ingest a per-packet ACK: RTT plus an optional delivery-rate sample.
+    pub fn on_ack(&mut self, now: Nanos, rtt: Nanos, delivery_rate_bps: Option<u64>) {
+        self.rtprop.add(now, rtt);
+        if let Some(rate) = delivery_rate_bps {
+            self.btlbw.set_window((10 * self.rtprop_ns()).max(100 * MS));
+            self.btlbw.add(now, rate / 8);
+        }
+        let new_round = now.saturating_sub(self.round_start) >= self.rtprop_ns();
+        if new_round {
+            self.round_start = now;
+            if self.startup {
+                let bw = self.btlbw_bytes_per_sec();
+                if bw as f64 >= self.full_bw as f64 * 1.25 {
+                    self.full_bw = bw;
+                    self.full_bw_count = 0;
+                } else {
+                    self.full_bw_count += 1;
+                    if self.full_bw_count >= 3 {
+                        self.startup = false;
+                        self.cycle_stamp = now;
+                    }
+                }
+            }
+        }
+        if !self.startup && now.saturating_sub(self.cycle_stamp) >= self.rtprop_ns() {
+            self.cycle_index = (self.cycle_index + 1) % CYCLE.len();
+            self.cycle_stamp = now;
+        }
+    }
+
+    pub fn in_startup(&self) -> bool {
+        self.startup
+    }
+
+    pub fn btlbw_bytes_per_sec(&self) -> u64 {
+        self.btlbw.get().unwrap_or(0)
+    }
+
+    pub fn rtprop_ns(&self) -> Nanos {
+        self.rtprop.get().unwrap_or(MS)
+    }
+
+    /// Seed the estimators from a peer's advertised values (LTP headers
+    /// carry RTprop/BtlBw — §IV-A) or from a previous flow on the same
+    /// path. Epochs share thresholds the same way (§III-B1).
+    pub fn seed(&mut self, now: Nanos, rtprop: Nanos, btlbw_bytes_per_sec: u64) {
+        if rtprop > 0 {
+            self.rtprop.add(now, rtprop);
+        }
+        if btlbw_bytes_per_sec > 0 {
+            self.btlbw.add(now, btlbw_bytes_per_sec);
+            // A seeded flow starts in steady state.
+            self.startup = false;
+        }
+    }
+
+    /// BDP in bytes.
+    pub fn bdp_bytes(&self) -> u64 {
+        ((self.btlbw_bytes_per_sec() as u128 * self.rtprop_ns() as u128) / SEC as u128) as u64
+    }
+
+    /// Cap on packets in flight (paper: "uses BDP as the maximum count of
+    /// packets in flight"). Like BBR, the steady-state cap carries a 2x
+    /// gain over the *propagation* BDP — with competing traffic the actual
+    /// RTT includes queueing, and a cap of exactly 1 BDP(rtprop) would
+    /// starve the flow. A floor of 10 packets keeps startup moving.
+    pub fn inflight_cap_pkts(&self) -> u64 {
+        let bdp = self.bdp_bytes();
+        if bdp == 0 {
+            return 10;
+        }
+        let gain = if self.startup { STARTUP_GAIN } else { 2.0 };
+        (((bdp as f64 * gain) / self.mtu as f64).ceil() as u64).max(4)
+    }
+
+    /// Pacing rate in bits/sec (None until an estimate exists).
+    pub fn pacing_rate_bps(&self) -> Option<u64> {
+        let bw = self.btlbw_bytes_per_sec();
+        if bw == 0 {
+            return None;
+        }
+        let gain = if self.startup { STARTUP_GAIN } else { CYCLE[self.cycle_index] };
+        Some((bw as f64 * 8.0 * gain) as u64)
+    }
+
+    /// Expected completion time for `bytes` on this path (paper §III-B1:
+    /// `ECT = RTprop + ModelSize/BtlBw`). Returns `None` without estimates.
+    pub fn expected_completion(&self, bytes: u64) -> Option<Nanos> {
+        let bw = self.btlbw_bytes_per_sec();
+        if bw == 0 {
+            return None;
+        }
+        Some(self.rtprop_ns() + ((bytes as u128 * SEC as u128) / bw as u128) as Nanos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimates_and_bdp() {
+        let mut cc = BdpCc::new(1500);
+        let mut now = 0;
+        for _ in 0..100 {
+            now += MS;
+            cc.on_ack(now, 2 * MS, Some(1_000_000_000)); // 1 Gbps
+        }
+        assert_eq!(cc.btlbw_bytes_per_sec(), 125_000_000);
+        assert_eq!(cc.rtprop_ns(), 2 * MS);
+        assert_eq!(cc.bdp_bytes(), 250_000);
+        assert!(!cc.in_startup());
+        // 2 x 250 KB / 1500 B ≈ 334 packets (2x steady-state gain)
+        assert_eq!(cc.inflight_cap_pkts(), 334);
+    }
+
+    #[test]
+    fn startup_cap_is_aggressive() {
+        let mut cc = BdpCc::new(1500);
+        cc.on_ack(MS, 2 * MS, Some(1_000_000_000));
+        assert!(cc.in_startup());
+        let cap = cc.inflight_cap_pkts();
+        assert!(cap as f64 >= 167.0 * 2.5, "startup cap {cap} should be gained up");
+    }
+
+    #[test]
+    fn ect_formula() {
+        let mut cc = BdpCc::new(1500);
+        cc.seed(0, 2 * MS, 125_000_000); // 1 Gbps, 2 ms
+        // 12.5 MB at 125 MB/s = 100 ms (+ 2 ms RTprop)
+        assert_eq!(cc.expected_completion(12_500_000), Some(102 * MS));
+    }
+
+    #[test]
+    fn seeding_skips_startup() {
+        let mut cc = BdpCc::new(1500);
+        cc.seed(0, MS, 1_250_000_000);
+        assert!(!cc.in_startup());
+        assert!(cc.inflight_cap_pkts() > 100);
+    }
+
+    #[test]
+    fn no_estimate_floor_cap() {
+        let cc = BdpCc::new(1500);
+        assert_eq!(cc.inflight_cap_pkts(), 10);
+        assert_eq!(cc.pacing_rate_bps(), None);
+        assert_eq!(cc.expected_completion(1000), None);
+    }
+}

@@ -1,0 +1,199 @@
+//! TCP Cubic (Ha, Rhee, Xu 2008; RFC 8312): window grows as
+//! `W(t) = C·(t − K)³ + W_max` since the last congestion event, with
+//! standard-TCP friendliness floor and fast convergence.
+
+use super::{AckSample, CongestionControl};
+use crate::Nanos;
+
+/// RFC 8312 constants.
+const C: f64 = 0.4;
+const BETA: f64 = 0.7;
+
+#[derive(Debug, Clone)]
+pub struct Cubic {
+    mss: u64,
+    cwnd: f64,
+    ssthresh: f64,
+    w_max: f64,
+    /// Time of the last congestion event.
+    epoch_start: Option<Nanos>,
+    k: f64,
+    last_rtt: Nanos,
+    loss_recovery_until: Nanos,
+    /// TCP-friendly region estimate.
+    w_est: f64,
+    /// HyStart-style delay signal: minimum RTT seen (kernel cubic exits
+    /// slow start when RTTs inflate well past this, instead of blasting
+    /// until loss).
+    min_rtt: Nanos,
+}
+
+impl Cubic {
+    pub fn new(mss: u32) -> Cubic {
+        let mss = mss as f64;
+        Cubic {
+            mss: mss as u64,
+            cwnd: 10.0 * mss,
+            ssthresh: f64::MAX,
+            w_max: 0.0,
+            epoch_start: None,
+            k: 0.0,
+            last_rtt: crate::MS,
+            loss_recovery_until: 0,
+            w_est: 0.0,
+            min_rtt: Nanos::MAX,
+        }
+    }
+
+    fn mss_f(&self) -> f64 {
+        self.mss as f64
+    }
+
+    /// Cubic window in *segments* as a function of time since epoch.
+    fn w_cubic(&self, t_sec: f64) -> f64 {
+        let w_max_seg = self.w_max / self.mss_f();
+        (C * (t_sec - self.k).powi(3) + w_max_seg) * self.mss_f()
+    }
+}
+
+impl CongestionControl for Cubic {
+    fn name(&self) -> &'static str {
+        "cubic"
+    }
+
+    fn cwnd_bytes(&self) -> u64 {
+        self.cwnd.max(self.mss_f()) as u64
+    }
+
+    fn on_ack(&mut self, s: AckSample) {
+        self.last_rtt = s.rtt;
+        self.min_rtt = self.min_rtt.min(s.rtt);
+        if self.cwnd < self.ssthresh {
+            // HyStart delay exit: queues are building, stop doubling.
+            if s.rtt > self.min_rtt * 2 && self.cwnd > 16.0 * self.mss_f() {
+                self.ssthresh = self.cwnd;
+                return;
+            }
+            self.cwnd += s.acked_bytes as f64;
+            if self.cwnd > self.ssthresh {
+                self.cwnd = self.ssthresh;
+            }
+            return;
+        }
+        let epoch = *self.epoch_start.get_or_insert(s.now);
+        let t = (s.now - epoch) as f64 / crate::SEC as f64;
+        let rtt_sec = (s.rtt as f64 / crate::SEC as f64).max(1e-6);
+        let target = self.w_cubic(t + rtt_sec);
+        // TCP-friendly region (standard AIMD estimate).
+        self.w_est += 0.5 * s.acked_bytes as f64 * self.mss_f() / self.cwnd.max(1.0) * 3.0
+            * (1.0 - BETA)
+            / (1.0 + BETA);
+        let target = target.max(self.w_est);
+        if target > self.cwnd {
+            // Approach the target over one RTT.
+            self.cwnd += (target - self.cwnd) * (s.acked_bytes as f64 / self.cwnd.max(1.0));
+        } else {
+            // Slow drift upward in the concave plateau.
+            self.cwnd += 0.01 * self.mss_f() * (s.acked_bytes as f64 / self.cwnd.max(1.0));
+        }
+    }
+
+    fn on_loss(&mut self, now: Nanos) {
+        if now < self.loss_recovery_until {
+            return;
+        }
+        // Fast convergence.
+        self.w_max = if self.cwnd < self.w_max {
+            self.cwnd * (1.0 + BETA) / 2.0
+        } else {
+            self.cwnd
+        };
+        self.cwnd = (self.cwnd * BETA).max(2.0 * self.mss_f());
+        self.ssthresh = self.cwnd;
+        self.epoch_start = Some(now);
+        let w_max_seg = self.w_max / self.mss_f();
+        let cwnd_seg = self.cwnd / self.mss_f();
+        self.k = ((w_max_seg - cwnd_seg) / C).cbrt();
+        self.w_est = self.cwnd;
+        self.loss_recovery_until = now + self.last_rtt.max(crate::MS);
+    }
+
+    fn on_timeout(&mut self, now: Nanos) {
+        self.on_loss(now);
+        self.cwnd = self.mss_f();
+        self.loss_recovery_until = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ack(now: Nanos, bytes: u64, rtt: Nanos) -> AckSample {
+        AckSample {
+            now,
+            acked_bytes: bytes,
+            rtt,
+            delivery_rate_bps: None,
+            ece: false,
+            inflight_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn slow_start_then_loss_reduces_by_beta() {
+        let mut cc = Cubic::new(1460);
+        cc.on_ack(ack(0, 100_000, crate::MS));
+        let before = cc.cwnd_bytes() as f64;
+        cc.on_loss(10 * crate::MS);
+        let after = cc.cwnd_bytes() as f64;
+        assert!((after / before - BETA).abs() < 0.01, "ratio {}", after / before);
+    }
+
+    #[test]
+    fn cubic_recovers_toward_w_max() {
+        // Keep w_max modest so the cubic K = ∛(w_max·(1−β)/C) horizon is a
+        // few seconds, then verify the concave re-approach to w_max.
+        let mut cc = Cubic::new(1460);
+        // Grow to ~512 segments (≈ 750 KB), then lose.
+        for i in 0..6 {
+            let w = cc.cwnd_bytes();
+            cc.on_ack(ack(i * crate::MS, w, crate::MS));
+        }
+        let w_before_loss = cc.cwnd_bytes();
+        cc.on_loss(30 * crate::MS);
+        assert!(cc.cwnd_bytes() < w_before_loss);
+        // K = ∛(512·0.3/0.4) ≈ 7.3 s. ACK a window every ms for 12 s.
+        let mut now = 31 * crate::MS;
+        for _ in 0..12_000 {
+            let w = cc.cwnd_bytes();
+            cc.on_ack(ack(now, w, crate::MS));
+            now += crate::MS;
+        }
+        let w_after = cc.cwnd_bytes();
+        assert!(
+            w_after as f64 > 0.9 * w_before_loss as f64,
+            "cubic should reapproach w_max: {w_after} vs {w_before_loss}"
+        );
+    }
+
+    #[test]
+    fn repeated_losses_shrink_window() {
+        let mut cc = Cubic::new(1460);
+        cc.on_ack(ack(0, 1_000_000, crate::MS));
+        let w0 = cc.cwnd_bytes();
+        for i in 0..10 {
+            cc.on_loss((10 + 10 * i) * crate::MS);
+        }
+        assert!(cc.cwnd_bytes() < w0 / 4);
+    }
+
+    #[test]
+    fn never_below_one_mss() {
+        let mut cc = Cubic::new(1460);
+        for i in 0..50 {
+            cc.on_timeout(i * crate::SEC);
+        }
+        assert!(cc.cwnd_bytes() >= 1460);
+    }
+}

@@ -1,0 +1,190 @@
+//! DCTCP (Alizadeh et al., SIGCOMM 2010): ECN-fraction-proportional window
+//! reduction. Falls back to Reno-style halving on real loss — which is what
+//! makes it as loss-fragile as Reno/Cubic in the paper's Fig 4 table.
+
+use super::{AckSample, CongestionControl};
+use crate::Nanos;
+
+const G: f64 = 1.0 / 16.0; // EWMA gain for the marked fraction
+
+#[derive(Debug, Clone)]
+pub struct Dctcp {
+    mss: u64,
+    cwnd: u64,
+    ssthresh: u64,
+    /// EWMA of the marked-byte fraction ("alpha").
+    alpha: f64,
+    /// Per-observation-window accounting.
+    acked_bytes_epoch: u64,
+    marked_bytes_epoch: u64,
+    epoch_end_accum: u64,
+    acked_accum: u64,
+    loss_recovery_until: Nanos,
+    last_rtt: Nanos,
+    /// HyStart-style delay signal: minimum RTT seen (kernel TCP exits
+    /// slow start when RTTs inflate well past this, instead of blasting
+    /// until loss).
+    min_rtt: Nanos,
+}
+
+impl Dctcp {
+    pub fn new(mss: u32) -> Dctcp {
+        let mss = mss as u64;
+        Dctcp {
+            mss,
+            cwnd: 10 * mss,
+            ssthresh: u64::MAX,
+            alpha: 0.0,
+            acked_bytes_epoch: 0,
+            marked_bytes_epoch: 0,
+            epoch_end_accum: 0,
+            acked_accum: 0,
+            loss_recovery_until: 0,
+            last_rtt: crate::MS,
+            min_rtt: Nanos::MAX,
+        }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+}
+
+impl CongestionControl for Dctcp {
+    fn name(&self) -> &'static str {
+        "dctcp"
+    }
+
+    fn cwnd_bytes(&self) -> u64 {
+        self.cwnd
+    }
+
+    fn on_ack(&mut self, s: AckSample) {
+        self.last_rtt = s.rtt;
+        self.acked_bytes_epoch += s.acked_bytes;
+        if s.ece {
+            self.marked_bytes_epoch += s.acked_bytes;
+        }
+        self.epoch_end_accum += s.acked_bytes;
+
+        // One observation window ≈ one cwnd of acked data.
+        if self.epoch_end_accum >= self.cwnd {
+            let f = if self.acked_bytes_epoch == 0 {
+                0.0
+            } else {
+                self.marked_bytes_epoch as f64 / self.acked_bytes_epoch as f64
+            };
+            self.alpha = (1.0 - G) * self.alpha + G * f;
+            if self.marked_bytes_epoch > 0 {
+                // DCTCP reduction: cwnd *= (1 − α/2).
+                let new = (self.cwnd as f64 * (1.0 - self.alpha / 2.0)) as u64;
+                self.cwnd = new.max(2 * self.mss);
+                self.ssthresh = self.cwnd;
+            }
+            self.acked_bytes_epoch = 0;
+            self.marked_bytes_epoch = 0;
+            self.epoch_end_accum = 0;
+        }
+
+        // Growth identical to Reno (with the same HyStart delay exit).
+        self.min_rtt = self.min_rtt.min(s.rtt);
+        if self.cwnd < self.ssthresh {
+            if s.rtt > self.min_rtt * 2 && self.cwnd > 16 * self.mss {
+                self.ssthresh = self.cwnd;
+                return;
+            }
+            self.cwnd += s.acked_bytes;
+            if self.cwnd > self.ssthresh {
+                self.cwnd = self.ssthresh;
+            }
+        } else {
+            self.acked_accum += s.acked_bytes;
+            if self.acked_accum >= self.cwnd {
+                self.acked_accum -= self.cwnd;
+                self.cwnd += self.mss;
+            }
+        }
+    }
+
+    fn on_loss(&mut self, now: Nanos) {
+        if now < self.loss_recovery_until {
+            return;
+        }
+        self.ssthresh = (self.cwnd / 2).max(2 * self.mss);
+        self.cwnd = self.ssthresh;
+        self.loss_recovery_until = now + self.last_rtt.max(crate::MS);
+    }
+
+    fn on_timeout(&mut self, _now: Nanos) {
+        self.ssthresh = (self.cwnd / 2).max(2 * self.mss);
+        self.cwnd = self.mss;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ack(now: Nanos, bytes: u64, ece: bool) -> AckSample {
+        AckSample {
+            now,
+            acked_bytes: bytes,
+            rtt: crate::MS,
+            delivery_rate_bps: None,
+            ece,
+            inflight_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn no_marks_no_reduction() {
+        let mut cc = Dctcp::new(1460);
+        let w0 = cc.cwnd_bytes();
+        for i in 0..20 {
+            cc.on_ack(ack(i * crate::MS, 14600, false));
+        }
+        assert!(cc.cwnd_bytes() > w0);
+        assert_eq!(cc.alpha(), 0.0);
+    }
+
+    #[test]
+    fn full_marking_converges_alpha_to_one() {
+        let mut cc = Dctcp::new(1460);
+        for i in 0..2000 {
+            let w = cc.cwnd_bytes();
+            cc.on_ack(ack(i * crate::MS, w, true));
+        }
+        assert!(cc.alpha() > 0.9, "alpha {}", cc.alpha());
+    }
+
+    #[test]
+    fn proportional_reduction_is_gentler_than_halving() {
+        // Light marking: alpha stays small → reductions ≪ 50 %.
+        let mut cc = Dctcp::new(1460);
+        // leave slow start
+        cc.on_loss(0);
+        let mut reductions = vec![];
+        let mut prev = cc.cwnd_bytes();
+        for i in 0..200 {
+            let w = cc.cwnd_bytes();
+            // 5 % of ACKs marked
+            cc.on_ack(ack((i + 10) * crate::MS, w, i % 20 == 0));
+            if cc.cwnd_bytes() < prev {
+                reductions.push(prev as f64 / cc.cwnd_bytes() as f64);
+            }
+            prev = cc.cwnd_bytes();
+        }
+        for r in reductions {
+            assert!(r < 1.5, "reduction factor {r} too sharp for light marking");
+        }
+    }
+
+    #[test]
+    fn loss_still_halves() {
+        let mut cc = Dctcp::new(1460);
+        cc.on_ack(ack(0, 100_000, false));
+        let w = cc.cwnd_bytes();
+        cc.on_loss(crate::MS);
+        assert_eq!(cc.cwnd_bytes(), w / 2);
+    }
+}

@@ -1,0 +1,139 @@
+//! Windowed min/max filters (the BBR "max-filter over 10 RTTs" /
+//! "min-filter over 10 s" primitives), shared by [`super::Bbr`] and LTP's
+//! [`super::BdpCc`].
+
+use crate::Nanos;
+use std::collections::VecDeque;
+
+/// Windowed maximum: `get()` returns the max of all samples added within
+/// the trailing `window` of time. O(1) amortized via a monotonic deque.
+#[derive(Debug, Clone)]
+pub struct WindowedMax {
+    window: Nanos,
+    /// (time, value); values strictly decreasing front→back.
+    samples: VecDeque<(Nanos, u64)>,
+}
+
+impl WindowedMax {
+    pub fn new(window: Nanos) -> Self {
+        WindowedMax { window, samples: VecDeque::new() }
+    }
+
+    pub fn set_window(&mut self, window: Nanos) {
+        self.window = window;
+    }
+
+    pub fn add(&mut self, now: Nanos, value: u64) {
+        while let Some(&(_, back)) = self.samples.back() {
+            if back <= value {
+                self.samples.pop_back();
+            } else {
+                break;
+            }
+        }
+        self.samples.push_back((now, value));
+        self.expire(now);
+    }
+
+    pub fn expire(&mut self, now: Nanos) {
+        while let Some(&(t, _)) = self.samples.front() {
+            if now.saturating_sub(t) > self.window {
+                self.samples.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn get(&self) -> Option<u64> {
+        self.samples.front().map(|&(_, v)| v)
+    }
+}
+
+/// Windowed minimum, same structure with the comparison flipped.
+#[derive(Debug, Clone)]
+pub struct WindowedMin {
+    window: Nanos,
+    samples: VecDeque<(Nanos, u64)>,
+}
+
+impl WindowedMin {
+    pub fn new(window: Nanos) -> Self {
+        WindowedMin { window, samples: VecDeque::new() }
+    }
+
+    pub fn add(&mut self, now: Nanos, value: u64) {
+        while let Some(&(_, back)) = self.samples.back() {
+            if back >= value {
+                self.samples.pop_back();
+            } else {
+                break;
+            }
+        }
+        self.samples.push_back((now, value));
+        self.expire(now);
+    }
+
+    pub fn expire(&mut self, now: Nanos) {
+        while let Some(&(t, _)) = self.samples.front() {
+            if now.saturating_sub(t) > self.window {
+                self.samples.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn get(&self) -> Option<u64> {
+        self.samples.front().map(|&(_, v)| v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windowed_max_tracks_max_and_expires() {
+        let mut f = WindowedMax::new(100);
+        f.add(0, 5);
+        f.add(10, 3);
+        f.add(20, 8);
+        assert_eq!(f.get(), Some(8));
+        f.add(50, 2);
+        assert_eq!(f.get(), Some(8));
+        // At t=130 the sample from t=20 is 110 old > 100 → expires.
+        f.add(130, 1);
+        assert_eq!(f.get(), Some(2));
+    }
+
+    #[test]
+    fn windowed_min_tracks_min_and_expires() {
+        let mut f = WindowedMin::new(100);
+        f.add(0, 5);
+        f.add(10, 9);
+        f.add(20, 2);
+        assert_eq!(f.get(), Some(2));
+        f.add(125, 7);
+        assert_eq!(f.get(), Some(7)); // the 2 at t=20 expired
+    }
+
+    #[test]
+    fn prop_max_filter_matches_naive() {
+        crate::util::proptest::check("windowed max == naive", |rng| {
+            let window = 50;
+            let mut f = WindowedMax::new(window);
+            let mut hist: Vec<(u64, u64)> = vec![];
+            let mut t = 0;
+            for _ in 0..200 {
+                t += rng.gen_range(10);
+                let v = rng.gen_range(1000);
+                f.add(t, v);
+                hist.push((t, v));
+                let naive =
+                    hist.iter().filter(|&&(ht, _)| t - ht <= window).map(|&(_, v)| v).max();
+                assert_eq!(f.get(), naive);
+            }
+        });
+    }
+}

@@ -1,0 +1,112 @@
+//! Congestion controllers.
+//!
+//! The baselines (Reno, Cubic, DCTCP, BBR) drive the reliable in-order
+//! [`crate::tcp`] transport and reproduce the kernel-TCP dynamics the paper
+//! compares against (its Fig 4 table). [`BdpCc`] is LTP's own BDP-based
+//! controller (§III-D): BBR-style BtlBw/RTprop probing, inflight capped at
+//! the estimated BDP, packet loss **never** treated as a congestion signal.
+
+mod bbr;
+mod bdp;
+mod cubic;
+mod dctcp;
+mod filters;
+mod reno;
+
+pub use bbr::Bbr;
+pub use bdp::{BdpCc, PACING_BURST};
+pub use cubic::Cubic;
+
+/// Burst allowance before pacing kicks in (paper §III-D).
+pub fn bdp_burst() -> u32 {
+    PACING_BURST
+}
+pub use dctcp::Dctcp;
+pub use filters::{WindowedMax, WindowedMin};
+pub use reno::Reno;
+
+use crate::Nanos;
+
+/// Feedback delivered to a controller for one cumulative ACK.
+#[derive(Debug, Clone, Copy)]
+pub struct AckSample {
+    pub now: Nanos,
+    /// Newly acknowledged payload bytes.
+    pub acked_bytes: u64,
+    /// RTT measured for the newest acked segment.
+    pub rtt: Nanos,
+    /// Delivery-rate sample in bytes/sec (rate estimator in the transport),
+    /// when available.
+    pub delivery_rate_bps: Option<u64>,
+    /// ECN-echo seen on this ACK.
+    pub ece: bool,
+    /// Bytes currently in flight *after* this ACK was processed.
+    pub inflight_bytes: u64,
+}
+
+/// A window/rate controller for a reliable transport.
+pub trait CongestionControl {
+    fn name(&self) -> &'static str;
+
+    /// Current congestion window in bytes (cap on inflight).
+    fn cwnd_bytes(&self) -> u64;
+
+    /// Pacing rate in *bits*/sec, if this controller paces (BBR-style).
+    /// `None` ⇒ window-limited only.
+    fn pacing_rate_bps(&self) -> Option<u64> {
+        None
+    }
+
+    /// Process an ACK.
+    fn on_ack(&mut self, sample: AckSample);
+
+    /// Packet loss inferred via dup-ACK / fast retransmit.
+    fn on_loss(&mut self, now: Nanos);
+
+    /// Retransmission timeout.
+    fn on_timeout(&mut self, now: Nanos);
+}
+
+/// Factory over the baseline controllers, used by experiment configs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CcAlgo {
+    Reno,
+    Cubic,
+    Dctcp,
+    Bbr,
+}
+
+impl CcAlgo {
+    pub const ALL: [CcAlgo; 4] = [CcAlgo::Cubic, CcAlgo::Reno, CcAlgo::Dctcp, CcAlgo::Bbr];
+
+    pub fn build(self, mss: u32) -> Box<dyn CongestionControl> {
+        match self {
+            CcAlgo::Reno => Box::new(Reno::new(mss)),
+            CcAlgo::Cubic => Box::new(Cubic::new(mss)),
+            CcAlgo::Dctcp => Box::new(Dctcp::new(mss)),
+            CcAlgo::Bbr => Box::new(Bbr::new(mss)),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CcAlgo::Reno => "reno",
+            CcAlgo::Cubic => "cubic",
+            CcAlgo::Dctcp => "dctcp",
+            CcAlgo::Bbr => "bbr",
+        }
+    }
+}
+
+impl std::str::FromStr for CcAlgo {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "reno" | "newreno" | "new-reno" => Ok(CcAlgo::Reno),
+            "cubic" => Ok(CcAlgo::Cubic),
+            "dctcp" => Ok(CcAlgo::Dctcp),
+            "bbr" => Ok(CcAlgo::Bbr),
+            other => Err(format!("unknown congestion control `{other}`")),
+        }
+    }
+}

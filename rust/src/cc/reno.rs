@@ -1,0 +1,158 @@
+//! TCP New Reno: slow start, AIMD congestion avoidance, halving on fast
+//! retransmit, collapse to one MSS on timeout (RFC 5681/6582 dynamics at
+//! the granularity the simulator models).
+
+use super::{AckSample, CongestionControl};
+use crate::Nanos;
+
+#[derive(Debug, Clone)]
+pub struct Reno {
+    mss: u64,
+    cwnd: u64,
+    ssthresh: u64,
+    /// Byte accumulator for congestion-avoidance growth (cwnd += mss per
+    /// cwnd bytes acked).
+    acked_accum: u64,
+    /// Ignore further loss signals until `now` passes this point (one
+    /// reaction per window, approximating NewReno's recovery epoch).
+    loss_recovery_until: Nanos,
+    last_rtt: Nanos,
+    /// HyStart-style delay signal: minimum RTT seen (kernel TCP exits
+    /// slow start when RTTs inflate well past this, instead of blasting
+    /// until loss).
+    min_rtt: Nanos,
+}
+
+impl Reno {
+    pub fn new(mss: u32) -> Reno {
+        let mss = mss as u64;
+        Reno {
+            mss,
+            cwnd: 10 * mss, // RFC 6928 initial window
+            ssthresh: u64::MAX,
+            acked_accum: 0,
+            loss_recovery_until: 0,
+            last_rtt: 0,
+            min_rtt: Nanos::MAX,
+        }
+    }
+
+    pub fn in_slow_start(&self) -> bool {
+        self.cwnd < self.ssthresh
+    }
+}
+
+impl CongestionControl for Reno {
+    fn name(&self) -> &'static str {
+        "reno"
+    }
+
+    fn cwnd_bytes(&self) -> u64 {
+        self.cwnd
+    }
+
+    fn on_ack(&mut self, s: AckSample) {
+        self.last_rtt = s.rtt;
+        self.min_rtt = self.min_rtt.min(s.rtt);
+        if self.in_slow_start() {
+            // HyStart delay exit: queues are building, stop doubling.
+            if s.rtt > self.min_rtt * 2 && self.cwnd > 16 * self.mss {
+                self.ssthresh = self.cwnd;
+                return;
+            }
+            self.cwnd += s.acked_bytes; // exponential growth
+            if self.cwnd > self.ssthresh {
+                self.cwnd = self.ssthresh;
+            }
+        } else {
+            // cwnd += mss per cwnd acked bytes.
+            self.acked_accum += s.acked_bytes;
+            if self.acked_accum >= self.cwnd {
+                self.acked_accum -= self.cwnd;
+                self.cwnd += self.mss;
+            }
+        }
+    }
+
+    fn on_loss(&mut self, now: Nanos) {
+        if now < self.loss_recovery_until {
+            return; // already reacted this window
+        }
+        self.ssthresh = (self.cwnd / 2).max(2 * self.mss);
+        self.cwnd = self.ssthresh;
+        self.acked_accum = 0;
+        // One reaction per RTT-ish epoch.
+        self.loss_recovery_until = now + self.last_rtt.max(crate::MS);
+    }
+
+    fn on_timeout(&mut self, now: Nanos) {
+        self.ssthresh = (self.cwnd / 2).max(2 * self.mss);
+        self.cwnd = self.mss;
+        self.acked_accum = 0;
+        self.loss_recovery_until = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ack(now: Nanos, bytes: u64) -> AckSample {
+        AckSample {
+            now,
+            acked_bytes: bytes,
+            rtt: crate::MS,
+            delivery_rate_bps: None,
+            ece: false,
+            inflight_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn slow_start_doubles_per_rtt() {
+        let mut cc = Reno::new(1460);
+        let w0 = cc.cwnd_bytes();
+        cc.on_ack(ack(0, w0)); // ack a whole window
+        assert_eq!(cc.cwnd_bytes(), 2 * w0);
+    }
+
+    #[test]
+    fn loss_halves_and_exits_slow_start() {
+        let mut cc = Reno::new(1460);
+        for i in 0..10 {
+            let w = cc.cwnd_bytes();
+            cc.on_ack(ack(i * crate::MS, w));
+        }
+        let before = cc.cwnd_bytes();
+        cc.on_loss(100 * crate::MS);
+        assert_eq!(cc.cwnd_bytes(), before / 2);
+        assert!(!cc.in_slow_start());
+    }
+
+    #[test]
+    fn one_reaction_per_window() {
+        let mut cc = Reno::new(1460);
+        cc.on_ack(ack(0, 100 * 1460));
+        let w = cc.cwnd_bytes();
+        cc.on_loss(crate::MS);
+        cc.on_loss(crate::MS + 10); // same recovery epoch: ignored
+        assert_eq!(cc.cwnd_bytes(), w / 2);
+    }
+
+    #[test]
+    fn congestion_avoidance_is_linear() {
+        let mut cc = Reno::new(1000);
+        cc.on_loss(0); // force out of slow start
+        let w = cc.cwnd_bytes();
+        cc.on_ack(ack(crate::SEC, w)); // one window acked → +1 mss
+        assert_eq!(cc.cwnd_bytes(), w + 1000);
+    }
+
+    #[test]
+    fn timeout_collapses_to_one_mss() {
+        let mut cc = Reno::new(1460);
+        cc.on_ack(ack(0, 100_000));
+        cc.on_timeout(crate::MS);
+        assert_eq!(cc.cwnd_bytes(), 1460);
+    }
+}

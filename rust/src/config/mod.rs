@@ -1,0 +1,234 @@
+//! Configuration: the model manifest emitted by the AOT step (the contract
+//! between `python/compile/model.py` and the Rust runtime), plus the
+//! experiment presets used by the CLI and the figure runners.
+
+use crate::grad::Manifest;
+use crate::simnet::{LinkCfg, LossModel};
+use crate::Nanos;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Parsed `artifacts/manifest_<preset>.txt`.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub preset: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub padded_dim: usize,
+    pub agg_workers: usize,
+    pub tile_d: usize,
+    pub tensors: Manifest,
+}
+
+impl ModelManifest {
+    pub fn load(dir: impl AsRef<Path>, preset: &str) -> Result<ModelManifest> {
+        let path = dir.as_ref().join(format!("manifest_{preset}.txt"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(preset, &text)
+    }
+
+    pub fn parse(preset: &str, text: &str) -> Result<ModelManifest> {
+        let mut kv = std::collections::HashMap::new();
+        let mut tensors = Vec::new();
+        let mut in_tensors = false;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "tensors:" {
+                in_tensors = true;
+                continue;
+            }
+            let (key, val) = line.rsplit_once(' ').context("malformed manifest line")?;
+            let val: usize = val.parse().with_context(|| format!("bad value in `{line}`"))?;
+            if in_tensors {
+                tensors.push((key.to_string(), val));
+            } else {
+                kv.insert(key.to_string(), val);
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k).copied().with_context(|| format!("manifest missing `{k}`"))
+        };
+        let m = ModelManifest {
+            preset: preset.to_string(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            seq_len: get("seq_len")?,
+            batch: get("batch")?,
+            param_count: get("param_count")?,
+            padded_dim: get("padded_dim")?,
+            agg_workers: get("agg_workers")?,
+            tile_d: get("tile_d")?,
+            tensors: Manifest {
+                tensors: tensors
+                    .into_iter()
+                    .map(|(name, numel)| crate::grad::TensorSpec { name, numel })
+                    .collect(),
+            },
+        };
+        if m.tensors.total_elems() != m.param_count {
+            bail!(
+                "manifest tensors sum to {} but param_count is {}",
+                m.tensors.total_elems(),
+                m.param_count
+            );
+        }
+        Ok(m)
+    }
+
+    /// Gradient bytes on the wire per worker per iteration (padded flat
+    /// vector).
+    pub fn wire_bytes(&self) -> u64 {
+        self.padded_dim as u64 * 4
+    }
+}
+
+/// Network environment presets used throughout the evaluation (paper §V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetEnv {
+    /// In-rack DCN: 10 Gbps, ~1 ms RTT class. (Paper Fig 4 row 2.)
+    Dcn10g,
+    /// 1 Gbps / 40 ms WAN class. (Paper Fig 4 row 1.)
+    Wan1g,
+    /// The testbed rack: 10 Gbps edge links behind one ToR.
+    Rack,
+}
+
+impl NetEnv {
+    /// Edge-link configuration for this environment.
+    pub fn link(self) -> LinkCfg {
+        match self {
+            // 10 Gbps, 0.5 ms one-way → ~1 ms RTT.
+            NetEnv::Dcn10g => LinkCfg::dcn(10, 500),
+            // 1 Gbps, 20 ms one-way → 40 ms RTT; WAN-deep buffer.
+            NetEnv::Wan1g => LinkCfg {
+                rate_bps: 1_000_000_000,
+                delay: 20 * crate::MS,
+                queue_cap_bytes: 4 * 1024 * 1024,
+                ecn_thresh_bytes: None,
+                loss: LossModel::None,
+            },
+            // Testbed: 10 Gbps edge, ~0.6 ms kernel-stack RTT (the paper's
+            // Fig 3 FCTs imply software RTTs well above the wire's);
+            // 1 MiB switch buffer per port.
+            NetEnv::Rack => LinkCfg::dcn(10, 150).with_queue(1024 * 1024),
+        }
+    }
+
+    /// Early Close deadline slack C (paper §III-B1: 30 ms DCN, 100 ms WAN).
+    pub fn deadline_slack(self) -> Nanos {
+        match self {
+            NetEnv::Dcn10g | NetEnv::Rack => 30 * crate::MS,
+            NetEnv::Wan1g => 100 * crate::MS,
+        }
+    }
+}
+
+/// Modeled workloads with the paper's message sizes (98 MB ResNet50,
+/// 528 MB VGG16) and calibrated compute times (paper §V-B: ResNet50 is
+/// computation-intensive, VGG16 communication-intensive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    Resnet50,
+    Vgg16,
+    /// Small message for protocol microbenchmarks.
+    Micro,
+}
+
+impl Workload {
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Resnet50 => "resnet50",
+            Workload::Vgg16 => "vgg16",
+            Workload::Micro => "micro",
+        }
+    }
+
+    /// Gradient bytes per worker per iteration.
+    pub fn model_bytes(self) -> u64 {
+        match self {
+            Workload::Resnet50 => 98 * 1_000_000,
+            Workload::Vgg16 => 528 * 1_000_000,
+            Workload::Micro => 4 * 1_000_000,
+        }
+    }
+
+    /// Modeled compute time per batch (T4-class GPU, batch 32, CIFAR-10 —
+    /// calibrated so the clean-network comm/comp ratio matches the paper's
+    /// Fig 2 shape).
+    pub fn compute_time(self) -> Nanos {
+        match self {
+            Workload::Resnet50 => 120 * crate::MS,
+            Workload::Vgg16 => 90 * crate::MS,
+            Workload::Micro => 10 * crate::MS,
+        }
+    }
+
+    /// Images per batch (throughput accounting, paper reports images/sec).
+    pub fn batch_images(self) -> u64 {
+        32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# LTP model manifest: preset tiny
+vocab 512
+d_model 128
+n_layers 2
+n_heads 4
+seq_len 64
+batch 8
+param_count 300
+padded_dim 4096
+agg_workers 8
+tile_d 4096
+tensors:
+tok_embed 100
+block0.wq 200
+";
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = ModelManifest::parse("tiny", SAMPLE).unwrap();
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.padded_dim, 4096);
+        assert_eq!(m.tensors.tensors.len(), 2);
+        assert_eq!(m.wire_bytes(), 4096 * 4);
+    }
+
+    #[test]
+    fn rejects_inconsistent_counts() {
+        let bad = SAMPLE.replace("param_count 300", "param_count 999");
+        assert!(ModelManifest::parse("tiny", &bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if dir.join("manifest_tiny.txt").exists() {
+            let m = ModelManifest::load(&dir, "tiny").unwrap();
+            assert_eq!(m.padded_dim % m.tile_d, 0);
+            assert!(m.param_count > 100_000);
+        }
+    }
+
+    #[test]
+    fn workload_sizes_match_paper() {
+        assert_eq!(Workload::Resnet50.model_bytes(), 98_000_000);
+        assert!(Workload::Vgg16.model_bytes() > 5 * Workload::Resnet50.model_bytes());
+    }
+}

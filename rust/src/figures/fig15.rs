@@ -1,0 +1,145 @@
+//! Paper Fig 15 — fairness: an LTP flow and a BBR flow sharing one
+//! bottleneck. The paper reports LTP consuming ≈97 % of what BBR does.
+
+use crate::cc::CcAlgo;
+use crate::metrics::Table;
+use crate::proto::{EarlyCloseCfg, LtpReceiver, LtpSender, LtpSenderNode, LtpReceiverNode, SegmentMap};
+use crate::simnet::{LinkCfg, Sim};
+use crate::tcp::{TcpReceiverNode, TcpSender, TcpSenderNode};
+use crate::util::jain_fairness;
+use crate::wire::{LTP_MSS, TCP_MSS};
+use crate::SEC;
+
+#[derive(Debug, Clone)]
+pub struct Fig15Result {
+    pub ltp_bytes: u64,
+    pub bbr_bytes: u64,
+    pub share: f64,
+    pub jain: f64,
+}
+
+/// Two long-running flows (LTP vs BBR) share a 1 Gbps bottleneck for a
+/// fixed interval; report delivered-byte shares.
+pub fn fig15(quick: bool) -> Fig15Result {
+    let duration = if quick { 3 * SEC } else { 10 * SEC };
+    let bytes: u64 = 4_000_000_000; // effectively unbounded for the window
+    let mut sim = Sim::new(77);
+    let sw = sim.add_switch(500);
+    // Shared bottleneck: both receivers behind the same 1 Gbps downlink.
+    let edge = LinkCfg::wan(1000, 2);
+
+    // LTP pair.
+    let map = SegmentMap::new(bytes, crate::grad::Manifest::aligned_payload(LTP_MSS), vec![]);
+    let mut ltp_snd = LtpSender::new(1, map, crate::wire::MTU);
+    ltp_snd.seed_cc(8 * crate::MS, 125_000_000);
+    let ltp_rx = LtpReceiver::new(1, EarlyCloseCfg::reliable(), vec![]);
+
+    let sink = sim.add_host(Box::new(SinkPair::default()));
+    let (down, _) = sim.add_duplex(sink, sw, edge);
+    sim.set_default_uplink(sink, down);
+    let _ = down;
+
+    // Both senders on their own uplinks; both receivers co-located on one
+    // host behind the shared bottleneck.
+    let ltp_a = sim.add_host(Box::new(LtpSenderNode::new(ltp_snd, sink)));
+    let (up1, _) = sim.add_duplex(ltp_a, sw, edge);
+    sim.set_default_uplink(ltp_a, up1);
+
+    let bbr = TcpSender::new(2, bytes, TCP_MSS, CcAlgo::Bbr.build(TCP_MSS));
+    let tcp_a = sim.add_host(Box::new(TcpSenderNode::new(bbr, sink)));
+    let (up2, _) = sim.add_duplex(tcp_a, sw, edge);
+    sim.set_default_uplink(tcp_a, up2);
+
+    // Attach the receivers to the sink.
+    {
+        let node = sim.node_as::<SinkPair>(sink);
+        node.ltp = Some(LtpReceiverNode::new(ltp_rx));
+        node.tcp = Some(TcpReceiverNode::new());
+    }
+
+    sim.run_until(duration);
+
+    let node = sim.node_as::<SinkPair>(sink);
+    let ltp_bytes = node
+        .ltp
+        .as_ref()
+        .map(|n| {
+            let rx = &n.receiver;
+            rx.received_bitmap().count_ones() as u64 * 1460
+        })
+        .unwrap_or(0);
+    let bbr_bytes = node.tcp.as_ref().map(|n| n.bytes_received(2)).unwrap_or(0);
+    let share = ltp_bytes as f64 / bbr_bytes.max(1) as f64;
+    let jain = jain_fairness(&[ltp_bytes as f64, bbr_bytes as f64]);
+    let mut table = Table::new(vec!["flow", "delivered (MB)", "share of BBR", "Jain index"]);
+    table
+        .row(vec![
+            "ltp".to_string(),
+            format!("{:.1}", ltp_bytes as f64 / 1e6),
+            format!("{:.1}%", share * 100.0),
+            format!("{jain:.4}"),
+        ])
+        .row(vec![
+            "bbr".to_string(),
+            format!("{:.1}", bbr_bytes as f64 / 1e6),
+            "100.0%".to_string(),
+            format!("{jain:.4}"),
+        ]);
+    table.emit("fig15", "Fig 15 — fairness of LTP vs BBR on one bottleneck");
+    Fig15Result { ltp_bytes, bbr_bytes, share, jain }
+}
+
+/// A host carrying both an LTP receiver and a TCP receiver (the shared
+/// destination behind the bottleneck).
+#[derive(Default)]
+struct SinkPair {
+    ltp: Option<LtpReceiverNode>,
+    tcp: Option<TcpReceiverNode>,
+}
+
+impl crate::simnet::Node for SinkPair {
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn on_packet(&mut self, ctx: &mut crate::simnet::Ctx, pkt: crate::simnet::Packet) {
+        match pkt.kind {
+            crate::wire::PacketKind::Ltp(_) => {
+                if let Some(n) = &mut self.ltp {
+                    n.on_packet(ctx, pkt);
+                }
+            }
+            crate::wire::PacketKind::Tcp(_) => {
+                if let Some(n) = &mut self.tcp {
+                    n.on_packet(ctx, pkt);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut crate::simnet::Ctx, token: u64) {
+        if let Some(n) = &mut self.ltp {
+            n.on_timer(ctx, token);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig15_shares_are_comparable() {
+        let r = fig15(true);
+        assert!(r.ltp_bytes > 0 && r.bbr_bytes > 0);
+        // Paper: ≈97 % of BBR; accept a generous band (0.6–1.7) — the
+        // shape claim is "neither flow starves the other".
+        assert!(
+            r.share > 0.6 && r.share < 1.7,
+            "share {} out of band",
+            r.share
+        );
+        assert!(r.jain > 0.9, "jain {}", r.jain);
+    }
+}

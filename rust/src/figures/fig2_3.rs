@@ -1,0 +1,131 @@
+//! Paper Fig 2 (DML scaling: epoch time vs workers, comm/comp ratio) and
+//! Fig 3 (long-tail FCT distribution under 8→1 incast).
+
+use crate::config::Workload;
+use crate::metrics::Table;
+use crate::ps::{run_training, Proto, TrainingCfg};
+use crate::simnet::{LinkCfg, Sim};
+use crate::tcp::{FctLog, TcpReceiverNode, TcpSender, TcpSenderNode};
+use crate::util::{Histogram, Summary};
+use crate::wire::TCP_MSS;
+use crate::{MS, SEC};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub workers: usize,
+    pub iter_time_ms: f64,
+    pub comm_ratio: f64,
+}
+
+/// Fig 2: ResNet50-sized training on 1/2/4/8 workers over kernel-default
+/// TCP. Epoch time per worker shrinks, but the communication share grows —
+/// the scalability problem motivating LTP.
+pub fn fig2(quick: bool) -> Vec<Fig2Row> {
+    let iters = if quick { 2 } else { 5 };
+    let mut rows = Vec::new();
+    let mut table = Table::new(vec![
+        "workers",
+        "iter time (ms)",
+        "compute (ms)",
+        "comm share",
+        "samples/s (total)",
+    ]);
+    for &w in &[1usize, 2, 4, 8] {
+        let mut cfg = TrainingCfg::modeled(
+            Proto::Tcp(crate::cc::CcAlgo::Cubic),
+            Workload::Resnet50,
+            w,
+        );
+        cfg.iters = iters;
+        let report = run_training(&cfg);
+        let iter_time =
+            report.total_time as f64 / report.iters.len().max(1) as f64 / MS as f64;
+        let comp_ms = cfg.compute_time as f64 / MS as f64;
+        let comm_ratio = (iter_time - comp_ms).max(0.0) / iter_time.max(1e-9);
+        table.row(vec![
+            w.to_string(),
+            format!("{iter_time:.1}"),
+            format!("{comp_ms:.1}"),
+            format!("{:.1}%", comm_ratio * 100.0),
+            format!("{:.1}", report.throughput(w, Workload::Resnet50.batch_images())),
+        ]);
+        rows.push(Fig2Row { workers: w, iter_time_ms: iter_time, comm_ratio });
+    }
+    table.emit("fig2", "Fig 2 — scaling: iteration time and communication share vs workers");
+    rows
+}
+
+/// Fig 3: FCT probability density of an 8→1 incast with fixed-size
+/// messages under TCP — most flows bunch together, stragglers form the
+/// long tail that stalls BSP.
+pub fn fig3(quick: bool) -> (Summary, Histogram) {
+    let bytes: u64 = 10_000_000;
+    let rounds = if quick { 3 } else { 10 };
+    let mut fcts_ms: Vec<f64> = Vec::new();
+    for round in 0..rounds {
+        let log: FctLog = Rc::new(RefCell::new(vec![]));
+        let mut sim = Sim::new(100 + round);
+        let sw = sim.add_switch(500);
+        let rcv = sim.add_host(Box::new(TcpReceiverNode::new()));
+        // Shallow per-port buffer (the regime where incast stragglers form:
+        // a synchronized burst overflows the queue and an unlucky flow eats
+        // a 200 ms min-RTO).
+        let edge = LinkCfg::dcn(10, 5).with_queue(64 * 1024);
+        let (r_up, _) = sim.add_duplex(rcv, sw, edge);
+        sim.set_default_uplink(rcv, r_up);
+        for i in 0..8u64 {
+            let snd =
+                TcpSender::new(i, bytes, TCP_MSS, crate::cc::CcAlgo::Reno.build(TCP_MSS));
+            let h = sim.add_host(Box::new(TcpSenderNode::new(snd, rcv).with_log(log.clone())));
+            let (up, _) = sim.add_duplex(h, sw, edge);
+            sim.set_default_uplink(h, up);
+        }
+        sim.run_until(120 * SEC);
+        fcts_ms.extend(log.borrow().iter().map(|&(_, t, _)| t as f64 / MS as f64));
+    }
+    let summary = Summary::of(&fcts_ms);
+    let mut hist = Histogram::new(0.0, summary.max * 1.05 + 1e-9, 20);
+    for &f in &fcts_ms {
+        hist.add(f);
+    }
+    let mut table = Table::new(vec!["FCT bin (ms)", "density"]);
+    for (i, d) in hist.density().iter().enumerate() {
+        table.row(vec![format!("{:.1}", hist.center(i)), format!("{d:.3}")]);
+    }
+    table.emit("fig3", "Fig 3 — FCT distribution of 8→1 incast (TCP Reno)");
+    println!(
+        "fig3: n={} p50={:.1} ms p99={:.1} ms max={:.1} ms tail(max/p50)={:.2}x\n",
+        summary.count,
+        summary.p50,
+        summary.p99,
+        summary.max,
+        summary.max / summary.p50.max(1e-9)
+    );
+    (summary, hist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_comm_share_grows_with_workers() {
+        let rows = fig2(true);
+        assert_eq!(rows.len(), 4);
+        // The defining shape: more workers → larger communication share.
+        assert!(
+            rows[3].comm_ratio > rows[0].comm_ratio,
+            "comm share must grow: {:?}",
+            rows.iter().map(|r| r.comm_ratio).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fig3_has_a_long_tail() {
+        let (s, _h) = fig3(true);
+        assert_eq!(s.count, 24);
+        assert!(s.max > 1.05 * s.p50, "incast must produce stragglers: max {} p50 {}", s.max, s.p50);
+    }
+}

@@ -1,0 +1,191 @@
+//! Real-compute figures (need `make artifacts`):
+//!
+//! * Fig 5 — Top-k vs Random-k: final loss (accuracy proxy) and relative
+//!   throughput as a function of the kept fraction k, using the L1 Pallas
+//!   sparsification kernels on the transformer workload (substituting the
+//!   paper's ResNet18/CIFAR-10 — DESIGN.md §2).
+//! * Fig 13 — time-to-accuracy: sim-time until the training loss reaches a
+//!   target, per protocol and loss rate, with real gradients flowing
+//!   through the transports (LTP drops are *actual* bubbles).
+
+use crate::metrics::Table;
+use crate::ps::{
+    run_with, Corpus, Proto, RealCompute, RealTraining, TrainingCfg, XlaAggregate,
+};
+use crate::runtime::{default_artifacts_dir, literal_f32, to_f32, Runtime};
+use crate::simnet::LossModel;
+use crate::util::Pcg64;
+use crate::{MS, SEC};
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+fn require_runtime() -> Result<Runtime> {
+    let dir = default_artifacts_dir();
+    anyhow::ensure!(
+        dir.join("manifest_tiny.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    Runtime::cpu(dir).context("PJRT CPU client")
+}
+
+/// One sparsified training run: every worker gradient is pushed through
+/// `sparsify` before aggregation (transport lossless, isolating the
+/// sparsifier's effect — paper Fig 5 methodology).
+fn sparsified_run(
+    rt: &Runtime,
+    iters: u64,
+    sparsify: &dyn Fn(&Runtime, &mut Vec<f32>, &mut Pcg64) -> Result<f64>,
+) -> Result<(f32, f64)> {
+    let shared = RealTraining::new(rt, "tiny", 0.08)?;
+    let d = shared.manifest.padded_dim;
+    let mut rng = Pcg64::seeded(11);
+    let mut corpus = Corpus::new(shared.manifest.vocab, 1);
+    let step = rt.load("train_step_tiny")?;
+    let mut last_loss = f32::NAN;
+    let mut sparsify_secs = 0.0;
+    for iter in 0..iters {
+        // Single-worker equivalent loop (Fig 5 isolates compression cost,
+        // not incast): compute → sparsify → aggregate.
+        let tokens = corpus.next_batch(shared.manifest.batch, shared.manifest.seq_len + 1);
+        let p = literal_f32(&shared.blackboard.params(), &[d as i64])?;
+        let t = crate::runtime::literal_i32(
+            &tokens,
+            &[shared.manifest.batch as i64, shared.manifest.seq_len as i64 + 1],
+        )?;
+        let out = step.run(&[p, t])?;
+        let mut grads = to_f32(&out[0])?;
+        last_loss = to_f32(&out[1])?[0];
+        sparsify_secs += sparsify(rt, &mut grads, &mut rng)?;
+        shared.blackboard.put_grads(0, iter, grads);
+        let mut agg = XlaAggregate { shared: shared.clone(), n_workers: 1 };
+        use crate::ps::Aggregate as _;
+        agg.aggregate(iter, &[None]);
+    }
+    Ok((last_loss, sparsify_secs))
+}
+
+/// Fig 5: Random-k vs Top-k across k ∈ {5..40} %.
+pub fn fig5(quick: bool) -> Result<()> {
+    let rt = require_runtime()?;
+    let iters = if quick { 6 } else { 20 };
+    let ks: &[u32] = if quick { &[5, 20, 40] } else { &[5, 10, 15, 20, 25, 30, 35, 40] };
+    let mut table =
+        Table::new(vec!["k%", "random-k loss", "top-k loss", "randk cost(s)", "topk cost(s)", "throughput gain"]);
+    for &k in ks {
+        // Random-k: the keep mask is drawn host-side (cheap) and applied by
+        // the randk Pallas kernel.
+        let randk = |rt: &Runtime, grads: &mut Vec<f32>, rng: &mut Pcg64| -> Result<f64> {
+            let d = grads.len();
+            let kernel = rt.load("randk_tiny")?;
+            let t0 = Instant::now();
+            // Bernoulli keep mask — Random-k's whole point is that the
+            // selection is trivial (this is also exactly what random wire
+            // loss does); the mask draw is part of the measured cost.
+            let frac = k as f64 / 100.0;
+            let mut mask = vec![0.0f32; d];
+            for m in mask.iter_mut() {
+                if rng.chance(frac) {
+                    *m = 1.0;
+                }
+            }
+            let out = kernel.run(&[
+                literal_f32(grads, &[d as i64])?,
+                literal_f32(&mask, &[d as i64])?,
+            ])?;
+            *grads = to_f32(&out[0])?;
+            Ok(t0.elapsed().as_secs_f64())
+        };
+        // Top-k: the per-block bisection kernel (CUDA-topk's TPU rethink).
+        let topk = |rt: &Runtime, grads: &mut Vec<f32>, _rng: &mut Pcg64| -> Result<f64> {
+            let d = grads.len();
+            let kernel = rt.load(&format!("topk_tiny_k{k}"))?;
+            let t0 = Instant::now();
+            let out = kernel.run(&[literal_f32(grads, &[d as i64])?])?;
+            *grads = to_f32(&out[0])?;
+            Ok(t0.elapsed().as_secs_f64())
+        };
+        let (loss_r, cost_r) = sparsified_run(&rt, iters, &randk)?;
+        let (loss_t, cost_t) = sparsified_run(&rt, iters, &topk)?;
+        table.row(vec![
+            format!("{k}"),
+            format!("{loss_r:.3}"),
+            format!("{loss_t:.3}"),
+            format!("{cost_r:.3}"),
+            format!("{cost_t:.3}"),
+            format!("{:.2}x", cost_t / cost_r.max(1e-9)),
+        ]);
+    }
+    table.emit("fig5", "Fig 5 — Random-k vs Top-k: final training loss and sparsification cost");
+    Ok(())
+}
+
+/// Fig 13: sim-time to reach a target training loss, per protocol × loss
+/// rate, with real gradients and real (bubble-filled) aggregation.
+pub fn fig13(quick: bool) -> Result<()> {
+    let rt = require_runtime()?;
+    let workers = 4;
+    let target = 4.8f32;
+    let max_iters = if quick { 20 } else { 60 };
+    let protos: &[Proto] = if quick {
+        &[Proto::Ltp, Proto::Tcp(crate::cc::CcAlgo::Cubic)]
+    } else {
+        &[
+            Proto::Ltp,
+            Proto::Tcp(crate::cc::CcAlgo::Bbr),
+            Proto::Tcp(crate::cc::CcAlgo::Cubic),
+            Proto::Tcp(crate::cc::CcAlgo::Reno),
+        ]
+    };
+    let loss_rates: &[f64] = if quick { &[0.0, 0.01] } else { &[0.0, 0.001, 0.01] };
+    let mut table = Table::new(vec!["proto", "net loss", "TTA (sim s)", "final loss", "delivered"]);
+    for &proto in protos {
+        for &p in loss_rates {
+            let shared = RealTraining::new(&rt, "tiny", 0.08)?;
+            let mut cfg =
+                TrainingCfg::modeled(proto, crate::config::Workload::Micro, workers);
+            cfg.model_bytes = shared.manifest.wire_bytes();
+            cfg.critical = shared.manifest.tensors.critical_segments(
+                crate::grad::Manifest::aligned_payload(crate::wire::LTP_MSS),
+            );
+            cfg.iters = max_iters;
+            cfg.compute_time = 50 * MS;
+            if p > 0.0 {
+                cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p });
+            }
+            cfg.horizon = 3600 * SEC;
+            let shared2 = shared.clone();
+            let report = run_with(
+                &cfg,
+                move |w, _| {
+                    Box::new(RealCompute {
+                        shared: shared2.clone(),
+                        corpus: Corpus::new(shared2.manifest.vocab, 500 + w as u64),
+                    })
+                },
+                Box::new(XlaAggregate { shared: shared.clone(), n_workers: workers }),
+            );
+            let tta = report
+                .iters
+                .iter()
+                .find(|i| i.loss.map(|l| l <= target).unwrap_or(false))
+                .map(|i| format!("{:.2}", i.end as f64 / SEC as f64))
+                .unwrap_or_else(|| "—".into());
+            let final_loss = report
+                .iters
+                .iter()
+                .rev()
+                .find_map(|i| i.loss)
+                .map(|l| format!("{l:.3}"))
+                .unwrap_or_else(|| "—".into());
+            table.row(vec![
+                proto.name(),
+                format!("{:.2}%", p * 100.0),
+                tta,
+                final_loss,
+                format!("{:.1}%", report.mean_delivered() * 100.0),
+            ]);
+        }
+    }
+    table.emit("fig13", &format!("Fig 13 — time to loss ≤ {target} (real training, {workers} workers)"));
+    Ok(())
+}

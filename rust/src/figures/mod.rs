@@ -1,0 +1,63 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md §4). Each runner prints the same rows/series the paper
+//! reports and returns structured data for tests and benches.
+//!
+//! The `quick` flag shrinks message counts/iterations so the benches stay
+//! fast; shapes (who wins, by roughly what factor) are preserved.
+
+mod fig12;
+mod fig2_3;
+mod fig4;
+mod fig5_13;
+mod fig15;
+
+pub use fig12::{fig12, fig14, Fig12Point};
+pub use fig2_3::{fig2, fig3, Fig2Row};
+pub use fig4::{fig4, Fig4Cell};
+pub use fig5_13::{fig13, fig5};
+pub use fig15::{fig15, Fig15Result};
+
+/// Loss rates used across the evaluation (paper §V-B, from ATP's eval).
+pub const LOSS_RATES: [f64; 5] = [0.0, 0.0001, 0.001, 0.005, 0.01];
+
+/// Fig 4's wider loss-rate sweep.
+pub const FIG4_LOSS_RATES: [f64; 7] = [0.0, 0.0001, 0.001, 0.005, 0.01, 0.03, 0.05];
+
+/// Run a figure by name ("fig2" … "fig15", or "all").
+pub fn run(name: &str, quick: bool) -> anyhow::Result<()> {
+    match name {
+        "fig2" => {
+            fig2(quick);
+        }
+        "fig3" => {
+            fig3(quick);
+        }
+        "fig4" => {
+            fig4(quick);
+        }
+        "fig5" => fig5(quick)?,
+        "fig12" => {
+            fig12(quick);
+        }
+        "fig13" => fig13(quick)?,
+        "fig14" => {
+            fig14(quick);
+        }
+        "fig15" => {
+            fig15(quick);
+        }
+        "all" => {
+            fig2(quick);
+            fig3(quick);
+            fig4(quick);
+            fig12(quick);
+            fig14(quick);
+            fig15(quick);
+            // Real-compute figures last (need artifacts).
+            fig5(quick)?;
+            fig13(quick)?;
+        }
+        other => anyhow::bail!("unknown figure `{other}` (fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! Bubble-filling (paper §III-C): reconstruct a gradient buffer from the
+//! segments that actually arrived, zero-filling the holes (*packet
+//! bubbles*), and derive the per-element arrival mask the PS aggregation
+//! kernel divides by.
+
+use super::ALIGN;
+use crate::proto::SegmentMap;
+use crate::util::Bitmap;
+
+/// Reassemble a message: bytes of received segments are copied from `src`
+/// (the sender's flattened gradient — in-process transfer), missing
+/// segments become zeros.
+pub fn bubble_fill(src: &[u8], map: &SegmentMap, received: &Bitmap) -> Vec<u8> {
+    let mut out = vec![0u8; map.total_bytes() as usize];
+    bubble_fill_into(src, map, received, &mut out);
+    out
+}
+
+/// [`bubble_fill`] into a caller-provided buffer (hot path: the PS reuses
+/// one buffer per worker). `out` must be `map.total_bytes()` long and is
+/// fully overwritten.
+pub fn bubble_fill_into(src: &[u8], map: &SegmentMap, received: &Bitmap, out: &mut [u8]) {
+    assert_eq!(out.len() as u64, map.total_bytes());
+    assert_eq!(src.len() as u64, map.total_bytes());
+    for seg in 0..map.n_segs {
+        let (a, b) = map.byte_range(seg);
+        let (a, b) = (a as usize, b as usize);
+        if received.get(seg as usize) {
+            out[a..b].copy_from_slice(&src[a..b]);
+        } else {
+            out[a..b].fill(0);
+        }
+    }
+}
+
+/// Per-element arrival mask (1.0 = element arrived, 0.0 = bubble), fed to
+/// the masked-mean aggregation kernel. `numel` = total f32 elements.
+pub fn element_mask(map: &SegmentMap, received: &Bitmap, numel: usize) -> Vec<f32> {
+    assert_eq!(map.seg_payload % ALIGN, 0, "padding-bubble invariant violated");
+    let mut mask = vec![0.0f32; numel];
+    let per_seg = (map.seg_payload / ALIGN) as usize;
+    for seg in 0..map.n_segs as usize {
+        if received.get(seg) {
+            let a = seg * per_seg;
+            let b = (a + (map.payload_len(seg as u32) / ALIGN) as usize).min(numel);
+            mask[a..b].fill(1.0);
+        }
+    }
+    mask
+}
+
+/// Demonstration of paper Fig 8(a): what goes wrong *without* padding
+/// bubbles. Splits a float across a packet boundary, zero-fills one half,
+/// and returns `(aligned_value, corrupted_value)` for the affected element.
+pub fn misaligned_corruption_demo(value: f32) -> (f32, f32) {
+    let bytes = value.to_le_bytes();
+    // Aligned loss: the whole element is zeroed → 0.0 (a harmless bubble).
+    let aligned = 0.0f32;
+    // Misaligned loss: the packet boundary falls mid-element; the first two
+    // bytes survive, the last two are zero-filled.
+    let corrupted = f32::from_le_bytes([bytes[0], bytes[1], 0, 0]);
+    (aligned, corrupted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn map_of(bytes: u64) -> SegmentMap {
+        SegmentMap::new(bytes, 1460, vec![])
+    }
+
+    fn full_bitmap(n: u32) -> Bitmap {
+        let mut b = Bitmap::new(n as usize);
+        for i in 0..n as usize {
+            b.set(i);
+        }
+        b
+    }
+
+    #[test]
+    fn full_reception_is_identity() {
+        let src: Vec<u8> = (0..5000u32).map(|i| (i % 251) as u8).collect();
+        let map = map_of(5000);
+        let out = bubble_fill(&src, &map, &full_bitmap(map.n_segs));
+        assert_eq!(out, src);
+    }
+
+    #[test]
+    fn missing_segment_becomes_zeros() {
+        let src = vec![0xABu8; 4380]; // 3 segments
+        let map = map_of(4380);
+        let mut rec = full_bitmap(map.n_segs);
+        rec = {
+            let mut b = Bitmap::new(3);
+            b.set(0);
+            b.set(2);
+            let _ = rec;
+            b
+        };
+        let out = bubble_fill(&src, &map, &rec);
+        assert!(out[..1460].iter().all(|&b| b == 0xAB));
+        assert!(out[1460..2920].iter().all(|&b| b == 0));
+        assert!(out[2920..].iter().all(|&b| b == 0xAB));
+    }
+
+    #[test]
+    fn element_mask_matches_segments() {
+        let map = map_of(2920); // 2 segs × 365 floats
+        let mut rec = Bitmap::new(2);
+        rec.set(1);
+        let mask = element_mask(&map, &rec, 730);
+        assert!(mask[..365].iter().all(|&m| m == 0.0));
+        assert!(mask[365..].iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn bubbles_zero_whole_floats_only() {
+        // Fill src with a known pattern of floats; lose a segment; every
+        // reconstructed float must be either its original value or exactly
+        // 0.0 — never a bit-mangled hybrid (the Fig 8 property).
+        let numel = 1460 / 4 * 3;
+        let src_f: Vec<f32> = (0..numel).map(|i| (i as f32 + 0.5) * 1.25e-3).collect();
+        let src: Vec<u8> = src_f.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let map = map_of(src.len() as u64);
+        let mut rec = full_bitmap(map.n_segs);
+        let _ = rec.set(0); // make mutable use consistent
+        let mut partial = Bitmap::new(map.n_segs as usize);
+        partial.set(0);
+        partial.set(2);
+        let out = bubble_fill(&src, &map, &partial);
+        for (i, orig) in src_f.iter().enumerate() {
+            let v = f32::from_le_bytes(out[i * 4..i * 4 + 4].try_into().unwrap());
+            assert!(
+                v == *orig || v == 0.0,
+                "element {i} is a hybrid: {v} (orig {orig})"
+            );
+        }
+    }
+
+    #[test]
+    fn misalignment_demo_shows_corruption() {
+        let (aligned, corrupted) = misaligned_corruption_demo(1.0e10);
+        assert_eq!(aligned, 0.0);
+        assert_ne!(corrupted, 0.0);
+        assert_ne!(corrupted, 1.0e10);
+    }
+
+    #[test]
+    fn prop_bubble_fill_roundtrip_arbitrary_loss() {
+        check("bubble fill", |rng| {
+            let bytes = 400 + rng.gen_range(20_000);
+            let map = SegmentMap::new(bytes, 1460, vec![]);
+            let src: Vec<u8> = (0..bytes).map(|_| rng.next_u32() as u8).collect();
+            let mut rec = Bitmap::new(map.n_segs as usize);
+            for s in 0..map.n_segs as usize {
+                if rng.chance(0.7) {
+                    rec.set(s);
+                }
+            }
+            let out = bubble_fill(&src, &map, &rec);
+            assert_eq!(out.len() as u64, bytes);
+            for seg in 0..map.n_segs {
+                let (a, b) = map.byte_range(seg);
+                let (a, b) = (a as usize, b as usize);
+                if rec.get(seg as usize) {
+                    assert_eq!(&out[a..b], &src[a..b]);
+                } else {
+                    assert!(out[a..b].iter().all(|&x| x == 0));
+                }
+            }
+            // Mask agrees with bitmap at float granularity.
+            let numel = (bytes / 4) as usize;
+            let mask = element_mask(&map, &rec, numel);
+            for (i, &m) in mask.iter().enumerate() {
+                let seg = (i * 4) as u64 / map.seg_payload as u64;
+                assert_eq!(m == 1.0, rec.get(seg as usize), "elem {i} seg {seg}");
+            }
+        });
+    }
+}

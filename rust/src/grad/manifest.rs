@@ -1,0 +1,148 @@
+//! The tensor manifest: the model layout both ends of a DML flow share.
+//! It determines the message size, the float32-aligned segment payload
+//! (padding bubbles), and which segments are critical (tensor-boundary
+//! bytes, paper §III-E).
+
+use crate::proto::SegmentMap;
+
+/// Gradient element alignment in bytes (float32). Segment payloads are a
+/// multiple of this, so a lost packet can never split an element — the
+/// *padding bubble* rule of paper Fig 8(b).
+pub const ALIGN: u32 = 4;
+
+/// One named tensor of `numel` float32 elements.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub numel: usize,
+}
+
+/// Ordered tensor list; the flattened gradient is their concatenation.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub tensors: Vec<TensorSpec>,
+}
+
+impl Manifest {
+    pub fn new(tensors: Vec<(&str, usize)>) -> Manifest {
+        Manifest {
+            tensors: tensors
+                .into_iter()
+                .map(|(n, e)| TensorSpec { name: n.to_string(), numel: e })
+                .collect(),
+        }
+    }
+
+    /// A synthetic manifest of `total_bytes` split into roughly equal
+    /// "layers" — used for modeled workloads (ResNet50 = 98 MB, VGG16 =
+    /// 528 MB) where only the wire size matters.
+    pub fn synthetic(total_bytes: u64, n_layers: usize) -> Manifest {
+        let total_elems = (total_bytes / ALIGN as u64) as usize;
+        let per = total_elems / n_layers.max(1);
+        let mut tensors = Vec::new();
+        let mut left = total_elems;
+        for i in 0..n_layers {
+            let n = if i + 1 == n_layers { left } else { per };
+            tensors.push(TensorSpec { name: format!("layer{i}"), numel: n });
+            left -= n;
+        }
+        Manifest { tensors }
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_elems() as u64 * ALIGN as u64
+    }
+
+    /// Largest float32-aligned payload that fits in `mss` bytes.
+    pub fn aligned_payload(mss: u32) -> u32 {
+        (mss / ALIGN) * ALIGN
+    }
+
+    /// Byte offset where each tensor starts.
+    pub fn tensor_offsets(&self) -> Vec<u64> {
+        let mut offs = Vec::with_capacity(self.tensors.len());
+        let mut off = 0u64;
+        for t in &self.tensors {
+            offs.push(off);
+            off += t.numel as u64 * ALIGN as u64;
+        }
+        offs
+    }
+
+    /// Critical segment ids for a given segment payload: the first and last
+    /// segment of every tensor's byte range (the paper marks "several bytes
+    /// on the first and last part of the matrix bitstream" as critical).
+    pub fn critical_segments(&self, seg_payload: u32) -> Vec<u32> {
+        assert_eq!(seg_payload % ALIGN, 0, "segment payload must be f32-aligned");
+        let mut crit = Vec::new();
+        let mut off = 0u64;
+        for t in &self.tensors {
+            let bytes = t.numel as u64 * ALIGN as u64;
+            if bytes == 0 {
+                continue;
+            }
+            let first = off / seg_payload as u64;
+            let last = (off + bytes - 1) / seg_payload as u64;
+            crit.push(first as u32);
+            crit.push(last as u32);
+            off += bytes;
+        }
+        crit.sort_unstable();
+        crit.dedup();
+        crit
+    }
+
+    /// Build the transport segmentation for this manifest.
+    pub fn segment_map(&self, mss: u32) -> SegmentMap {
+        let payload = Self::aligned_payload(mss);
+        SegmentMap::new(self.total_bytes(), payload, self.critical_segments(payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_payload_is_multiple_of_four() {
+        assert_eq!(Manifest::aligned_payload(1463), 1460);
+        assert_eq!(Manifest::aligned_payload(1460), 1460);
+        assert_eq!(Manifest::aligned_payload(7), 4);
+    }
+
+    #[test]
+    fn synthetic_manifest_sizes() {
+        let m = Manifest::synthetic(98 * 1_000_000, 50);
+        assert_eq!(m.total_bytes(), 98 * 1_000_000);
+        assert_eq!(m.tensors.len(), 50);
+    }
+
+    #[test]
+    fn critical_segments_cover_tensor_boundaries() {
+        // Two tensors: 1000 and 500 elements = 4000 B + 2000 B.
+        let m = Manifest::new(vec![("a", 1000), ("b", 500)]);
+        let crit = m.critical_segments(1460);
+        // Tensor a: bytes [0,4000) → segs 0..=2; tensor b: [4000,6000) →
+        // segs 2..=4.
+        assert_eq!(crit, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn segment_map_matches_total() {
+        let m = Manifest::new(vec![("a", 730), ("b", 365)]);
+        let map = m.segment_map(1463);
+        assert_eq!(map.total_bytes(), m.total_bytes());
+        assert_eq!(map.seg_payload % ALIGN, 0);
+        assert!(map.is_critical(0));
+    }
+
+    #[test]
+    fn offsets_accumulate() {
+        let m = Manifest::new(vec![("a", 10), ("b", 20), ("c", 30)]);
+        assert_eq!(m.tensor_offsets(), vec![0, 40, 120]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Gradient plumbing between the model and the transport: the tensor
+//! manifest shared by workers and PS, float32-aligned packetization
+//! (*padding bubbles*, paper §III-C Fig 8), receiver-side zero filling
+//! (*packet bubbles*), per-element arrival masks for the PS aggregation
+//! kernel, and the gradient-sparsification reference algorithms (Random-k /
+//! Top-k, paper §II-C Fig 5) with optional error feedback.
+
+mod bubble;
+mod manifest;
+mod sparsify;
+
+pub use bubble::{bubble_fill, bubble_fill_into, element_mask, misaligned_corruption_demo};
+pub use manifest::{Manifest, TensorSpec, ALIGN};
+pub use sparsify::{random_k, top_k, ErrorFeedback};

@@ -1,0 +1,175 @@
+//! Gradient sparsification references (paper §II-C): Random-k and Top-k,
+//! plus error feedback (residual accumulation — the standard companion
+//! that keeps sparsified SGD convergent). These are the CPU references for
+//! the Fig 5 experiment; the L1 Pallas kernels implement the same math.
+
+use crate::util::Pcg64;
+
+/// Keep a random `k` fraction of elements (zero the rest). Returns the
+/// number of kept elements.
+pub fn random_k(grad: &mut [f32], k: f64, rng: &mut Pcg64) -> usize {
+    let n = grad.len();
+    let keep = ((n as f64 * k).round() as usize).min(n);
+    if keep == n {
+        return n;
+    }
+    // Zero everything, then restore a random subset: done in-place by
+    // sampling the keep-set and zeroing the complement via a mark pass.
+    let keep_idx = rng.sample_indices(n, keep);
+    let mut marks = vec![false; n];
+    for &i in &keep_idx {
+        marks[i] = true;
+    }
+    for (g, m) in grad.iter_mut().zip(&marks) {
+        if !m {
+            *g = 0.0;
+        }
+    }
+    keep
+}
+
+/// Keep the `k` fraction with the largest |value| (zero the rest). Returns
+/// the number of kept elements.
+pub fn top_k(grad: &mut [f32], k: f64) -> usize {
+    let n = grad.len();
+    let keep = ((n as f64 * k).round() as usize).min(n);
+    if keep == n || keep == 0 {
+        if keep == 0 {
+            grad.fill(0.0);
+        }
+        return keep;
+    }
+    // Threshold via select_nth on |g| (O(n) average).
+    let mut mags: Vec<f32> = grad.iter().map(|g| g.abs()).collect();
+    let nth = n - keep;
+    mags.select_nth_unstable_by(nth, |a, b| a.partial_cmp(b).unwrap());
+    let thresh = mags[nth];
+    // Keep strictly-above first, then fill ties up to `keep`.
+    let mut kept = grad.iter().filter(|g| g.abs() > thresh).count();
+    let mut ties_allowed = keep.saturating_sub(kept);
+    for g in grad.iter_mut() {
+        let a = g.abs();
+        if a > thresh {
+            continue;
+        }
+        if a == thresh && ties_allowed > 0 {
+            ties_allowed -= 1;
+            kept += 1;
+            continue;
+        }
+        *g = 0.0;
+    }
+    kept
+}
+
+/// Error feedback: carries the un-transmitted residual into the next
+/// iteration (`g ← g + residual; residual ← g − sparsified(g)`).
+#[derive(Debug, Clone)]
+pub struct ErrorFeedback {
+    residual: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(numel: usize) -> ErrorFeedback {
+        ErrorFeedback { residual: vec![0.0; numel] }
+    }
+
+    /// Add the carried residual into `grad` (call before sparsifying).
+    pub fn compensate(&self, grad: &mut [f32]) {
+        for (g, r) in grad.iter_mut().zip(&self.residual) {
+            *g += r;
+        }
+    }
+
+    /// Record what was dropped: `residual = pre_sparsify − post_sparsify`.
+    pub fn absorb(&mut self, pre: &[f32], post: &[f32]) {
+        for ((r, p), q) in self.residual.iter_mut().zip(pre).zip(post) {
+            *r = p - q;
+        }
+    }
+
+    pub fn residual_l2(&self) -> f64 {
+        self.residual.iter().map(|&r| (r as f64) * (r as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_k_keeps_expected_count() {
+        let mut rng = Pcg64::seeded(1);
+        let mut g: Vec<f32> = (1..=1000).map(|i| i as f32).collect();
+        let kept = random_k(&mut g, 0.3, &mut rng);
+        assert_eq!(kept, 300);
+        assert_eq!(g.iter().filter(|&&x| x != 0.0).count(), 300);
+    }
+
+    #[test]
+    fn random_k_full_keep_is_noop() {
+        let mut rng = Pcg64::seeded(2);
+        let mut g = vec![1.0f32; 64];
+        assert_eq!(random_k(&mut g, 1.0, &mut rng), 64);
+        assert!(g.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn top_k_keeps_largest_magnitudes() {
+        let mut g = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        let kept = top_k(&mut g, 0.5);
+        assert_eq!(kept, 3);
+        assert_eq!(g, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn top_k_handles_ties() {
+        let mut g = vec![1.0f32; 10];
+        let kept = top_k(&mut g, 0.4);
+        assert_eq!(kept, 4);
+        assert_eq!(g.iter().filter(|&&x| x != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn top_k_zero_keeps_nothing() {
+        let mut g = vec![1.0f32, 2.0];
+        assert_eq!(top_k(&mut g, 0.0), 0);
+        assert!(g.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn error_feedback_conserves_mass() {
+        // With error feedback, dropped gradient mass reappears next round.
+        let mut ef = ErrorFeedback::new(4);
+        let mut g = vec![1.0f32, 2.0, 3.0, 4.0];
+        let pre = g.clone();
+        top_k(&mut g, 0.5); // keeps 3.0, 4.0
+        ef.absorb(&pre, &g);
+        assert!((ef.residual_l2() - (1.0f64 + 4.0).sqrt()).abs() < 1e-6);
+        let mut g2 = vec![0.0f32; 4];
+        ef.compensate(&mut g2);
+        assert_eq!(g2, vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn prop_random_k_distribution_is_uniform() {
+        // Each index should be kept ≈ k of the time.
+        let mut rng = Pcg64::seeded(77);
+        let n = 200;
+        let trials = 2000;
+        let mut counts = vec![0u32; n];
+        for _ in 0..trials {
+            let mut g = vec![1.0f32; n];
+            random_k(&mut g, 0.25, &mut rng);
+            for (c, v) in counts.iter_mut().zip(&g) {
+                if *v != 0.0 {
+                    *c += 1;
+                }
+            }
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let rate = c as f64 / trials as f64;
+            assert!((rate - 0.25).abs() < 0.06, "index {i} kept at rate {rate}");
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! `ltp` — CLI entrypoint for the LTP reproduction.
+//!
+//! ```text
+//! ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick]
+//! ltp train [--preset tiny] [--workers 4] [--iters 50] [--loss 0.01]
+//!           [--proto ltp|bbr|cubic|reno]
+//! ltp bench-ltp [--bytes N] [--loss P]      one-flow protocol microbench
+//! ```
+//!
+//! (Hand-rolled argument parsing: the vendored dependency set has no clap.)
+
+use anyhow::{bail, Context, Result};
+use ltp::cc::CcAlgo;
+use ltp::ps::{run_with, Corpus, Proto, RealCompute, RealTraining, TrainingCfg, XlaAggregate};
+use ltp::simnet::LossModel;
+use ltp::{MS, SEC};
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                it.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn flag<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn proto_of(name: &str) -> Result<Proto> {
+    Ok(match name {
+        "ltp" => Proto::Ltp,
+        other => Proto::Tcp(other.parse::<CcAlgo>().map_err(|e| anyhow::anyhow!(e))?),
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let preset: String = args.flag("preset", "tiny".to_string())?;
+    let workers: usize = args.flag("workers", 4)?;
+    let iters: u64 = args.flag("iters", 50)?;
+    let loss: f64 = args.flag("loss", 0.0)?;
+    let lr: f32 = args.flag("lr", 0.08)?;
+    let proto = proto_of(&args.flag("proto", "ltp".to_string())?)?;
+
+    let rt = ltp::runtime::Runtime::cpu(ltp::runtime::default_artifacts_dir())
+        .context("PJRT CPU client")?;
+    println!("platform: {}", rt.platform());
+    let shared = RealTraining::new(&rt, &preset, lr)?;
+    println!(
+        "model: preset={} params={} ({} on the wire/iteration)",
+        preset,
+        shared.manifest.param_count,
+        ltp::util::fmt_bytes(shared.manifest.wire_bytes()),
+    );
+    let mut cfg = TrainingCfg::modeled(proto, ltp::config::Workload::Micro, workers);
+    cfg.model_bytes = shared.manifest.wire_bytes();
+    cfg.critical = shared
+        .manifest
+        .tensors
+        .critical_segments(ltp::grad::Manifest::aligned_payload(ltp::wire::LTP_MSS));
+    cfg.iters = iters;
+    cfg.compute_time = 50 * MS;
+    if loss > 0.0 {
+        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: loss });
+    }
+    cfg.horizon = 24 * 3600 * SEC;
+
+    let shared2 = shared.clone();
+    let t0 = std::time::Instant::now();
+    let report = run_with(
+        &cfg,
+        move |w, _| {
+            Box::new(RealCompute {
+                shared: shared2.clone(),
+                corpus: Corpus::new(shared2.manifest.vocab, 42 + w as u64),
+            })
+        },
+        Box::new(XlaAggregate { shared: shared.clone(), n_workers: workers }),
+    );
+    println!("\n iter |   loss | BST(ms) | delivered | sim t(s)");
+    for (i, it) in report.iters.iter().enumerate() {
+        println!(
+            " {:>4} | {:>6} | {:>7.2} | {:>8.1}% | {:>7.2}",
+            i,
+            it.loss.map(|l| format!("{l:.3}")).unwrap_or_else(|| "—".into()),
+            it.bst as f64 / MS as f64,
+            it.mean_delivered * 100.0,
+            it.end as f64 / SEC as f64,
+        );
+    }
+    println!(
+        "\ncompleted {}/{} iterations | proto={} | loss rate {:.2}% | wall {:.1}s",
+        report.iters.len(),
+        iters,
+        report.proto,
+        loss * 100.0,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_bench_ltp(args: &Args) -> Result<()> {
+    let bytes: u64 = args.flag("bytes", 10_000_000)?;
+    let loss: f64 = args.flag("loss", 0.01)?;
+    let cfg = ltp::simnet::LinkCfg::dcn(10, 50).with_loss(LossModel::Bernoulli { p: loss });
+    let ec = ltp::proto::EarlyCloseCfg { lt_threshold: 10 * MS, deadline: 100 * MS, pct: 0.8 };
+    let t0 = std::time::Instant::now();
+    let (s, r) = ltp::proto::run_single_flow(bytes, vec![0], cfg, ec, 1, 60 * SEC);
+    println!(
+        "flow {} over 10G/50µs @ {:.2}% loss: close={:?} pct={:.2}% elapsed={} pkts={} retx={} wall={:?}",
+        ltp::util::fmt_bytes(bytes),
+        loss * 100.0,
+        r.reason,
+        r.pct_at_close * 100.0,
+        ltp::util::fmt_nanos(r.elapsed),
+        s.pkts_sent,
+        s.retransmissions,
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    match args.positional.first().map(String::as_str) {
+        Some("figure") => {
+            let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+            ltp::figures::run(which, args.has("quick"))
+        }
+        Some("train") => cmd_train(&args),
+        Some("bench-ltp") => cmd_bench_ltp(&args),
+        _ => {
+            eprintln!(
+                "usage:\n  ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick]\n  \
+                 ltp train [--preset tiny] [--workers N] [--iters N] [--loss P] [--proto ltp|bbr|cubic|reno]\n  \
+                 ltp bench-ltp [--bytes N] [--loss P]"
+            );
+            bail!("missing or unknown subcommand");
+        }
+    }
+}

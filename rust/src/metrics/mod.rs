@@ -1,0 +1,106 @@
+//! Result presentation: markdown tables (the figure runners print the same
+//! rows/series the paper reports) and small series helpers.
+
+use std::fmt::Write as _;
+
+/// A simple markdown table builder.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |out: &mut String, cells: &[String]| {
+            out.push('|');
+            for i in 0..ncols {
+                let _ = write!(out, " {:>w$} |", cells[i], w = widths[i]);
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.header);
+        out.push('|');
+        for w in &widths {
+            let _ = write!(out, "{}|", "-".repeat(w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// Print to stdout and write to `results/<name>.md` (or
+    /// `$LTP_RESULTS_DIR/<name>.md`).
+    pub fn emit(&self, name: &str, title: &str) {
+        let md = format!("## {title}\n\n{}\n", self.to_markdown());
+        println!("{md}");
+        let dir = std::env::var("LTP_RESULTS_DIR").unwrap_or_else(|_| "results".into());
+        if std::fs::create_dir_all(&dir).is_ok() {
+            let _ = std::fs::write(format!("{dir}/{name}.md"), md);
+        }
+    }
+}
+
+/// Format a ratio like `1.26x`.
+pub fn ratio(a: f64, b: f64) -> String {
+    if b == 0.0 {
+        "inf".into()
+    } else {
+        format!("{:.2}x", a / b)
+    }
+}
+
+/// Format a percentage delta like `-48.58%` (paper Fig 4 style).
+pub fn pct_delta(value: f64, baseline: f64) -> String {
+    if baseline == 0.0 {
+        return "n/a".into();
+    }
+    format!("{:+.2}%", (value - baseline) / baseline * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(vec!["proto", "bst"]);
+        t.row(vec!["ltp", "1.0"]).row(vec!["cubic", "30.4"]);
+        let md = t.to_markdown();
+        assert!(md.contains("| proto |"));
+        assert!(md.contains("| cubic |"));
+        assert_eq!(md.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        Table::new(vec!["a", "b"]).row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn deltas() {
+        assert_eq!(pct_delta(51.42, 100.0), "-48.58%");
+        assert_eq!(ratio(30.0, 1.0), "30.00x");
+    }
+}

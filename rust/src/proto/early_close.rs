@@ -1,0 +1,162 @@
+//! Early Close thresholds (paper §III-B).
+//!
+//! Two time thresholds bound every loss-tolerant flow: before the
+//! **LT threshold** the receiver waits for 100 % of the data; between the
+//! LT threshold and the **deadline** it closes once the received fraction
+//! reaches `pct`; at the deadline it closes unconditionally.
+//!
+//! [`ThresholdTracker`] implements §III-B1's update rule: the LT threshold
+//! starts at `1.5·RTprop + ModelSize/BtlBw` for the first batch of an epoch
+//! and is thereafter the fastest observed 100 % transmission time of the
+//! epoch; the deadline is `max(LT thresholds over links) + C`.
+
+use crate::Nanos;
+
+/// Per-flow Early Close configuration (times relative to flow start).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EarlyCloseCfg {
+    /// Below this: wait for everything.
+    pub lt_threshold: Nanos,
+    /// At/after this: close unconditionally.
+    pub deadline: Nanos,
+    /// Fraction of data segments required to close within the window.
+    pub pct: f64,
+}
+
+impl EarlyCloseCfg {
+    /// A reliable flow: never close early (broadcast direction — §III-B2).
+    pub fn reliable() -> EarlyCloseCfg {
+        EarlyCloseCfg { lt_threshold: Nanos::MAX, deadline: Nanos::MAX, pct: 1.0 }
+    }
+
+    /// Is this config loss-tolerant at all?
+    pub fn is_loss_tolerant(&self) -> bool {
+        self.deadline != Nanos::MAX
+    }
+}
+
+/// Tracks per-link LT thresholds across batches and epochs (lives in the
+/// PS application, one tracker per receive direction).
+#[derive(Debug, Clone)]
+pub struct ThresholdTracker {
+    /// User constant C added to the max LT threshold for the deadline
+    /// (paper: 30 ms in DCN, 100 ms in WAN).
+    pub deadline_slack: Nanos,
+    /// Received-percentage threshold (e.g. 0.8).
+    pub pct: f64,
+    /// Current LT threshold per link.
+    lt: Vec<Nanos>,
+    /// Best (smallest) observed 100 %-transmission time per link, this
+    /// epoch.
+    best_full: Vec<Option<Nanos>>,
+}
+
+impl ThresholdTracker {
+    pub fn new(n_links: usize, deadline_slack: Nanos, pct: f64) -> ThresholdTracker {
+        ThresholdTracker {
+            deadline_slack,
+            pct,
+            lt: vec![Nanos::MAX; n_links],
+            best_full: vec![None; n_links],
+        }
+    }
+
+    /// Initialize link `i` for the first batch of an epoch:
+    /// `LT₀ = 1.5·RTprop + ModelSize/BtlBw` (paper §III-B1). Call with the
+    /// congestion-control estimates (or path knowledge) available.
+    pub fn init_link(&mut self, i: usize, rtprop: Nanos, model_bytes: u64, btlbw_bytes_per_sec: u64) {
+        let transfer = if btlbw_bytes_per_sec == 0 {
+            Nanos::MAX / 4
+        } else {
+            ((model_bytes as u128 * crate::SEC as u128) / btlbw_bytes_per_sec as u128) as Nanos
+        };
+        self.lt[i] = (3 * rtprop / 2).saturating_add(transfer);
+    }
+
+    /// Record a completed flow on link `i`: if it reached 100 % in
+    /// `elapsed`, it is a candidate for the epoch's fastest full
+    /// transmission.
+    pub fn record_flow(&mut self, i: usize, elapsed: Nanos, reached_full: bool) {
+        if reached_full {
+            let best = self.best_full[i].get_or_insert(elapsed);
+            if elapsed < *best {
+                *best = elapsed;
+            }
+        }
+    }
+
+    /// End of epoch: LT threshold ← fastest observed full transmission
+    /// (per link, where one was observed).
+    pub fn end_epoch(&mut self) {
+        for i in 0..self.lt.len() {
+            if let Some(best) = self.best_full[i].take() {
+                self.lt[i] = best;
+            }
+        }
+    }
+
+    /// Current LT threshold of link `i`.
+    pub fn lt_threshold(&self, i: usize) -> Nanos {
+        self.lt[i]
+    }
+
+    /// The shared deadline: `max(LT) + C` (paper: the deadline applies to
+    /// all receiving links of one receiver at the same time).
+    pub fn deadline(&self) -> Nanos {
+        let max_lt = self.lt.iter().copied().max().unwrap_or(0);
+        max_lt.saturating_add(self.deadline_slack)
+    }
+
+    /// Early Close config for a flow arriving on link `i`.
+    pub fn cfg(&self, i: usize) -> EarlyCloseCfg {
+        EarlyCloseCfg { lt_threshold: self.lt[i], deadline: self.deadline(), pct: self.pct }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::MS;
+
+    #[test]
+    fn init_formula() {
+        let mut t = ThresholdTracker::new(2, 30 * MS, 0.8);
+        // RTprop 2 ms, 98 MB at 1.25 GB/s (10 Gbps) → 78.4 ms transfer.
+        t.init_link(0, 2 * MS, 98 * 1_000_000, 1_250_000_000);
+        let lt = t.lt_threshold(0);
+        assert_eq!(lt, 3 * MS + 78_400_000);
+    }
+
+    #[test]
+    fn deadline_is_max_plus_slack() {
+        let mut t = ThresholdTracker::new(3, 30 * MS, 0.8);
+        for i in 0..3 {
+            t.init_link(i, MS, 1_000_000, 125_000_000);
+        }
+        t.record_flow(1, 100 * MS, true);
+        t.record_flow(2, 50 * MS, true);
+        t.end_epoch();
+        assert_eq!(t.lt_threshold(1), 100 * MS);
+        assert_eq!(t.lt_threshold(2), 50 * MS);
+        // link 0 saw no full transmission → keeps its init value (9.5 ms)
+        assert_eq!(t.deadline(), 100 * MS + 30 * MS);
+    }
+
+    #[test]
+    fn fastest_full_wins() {
+        let mut t = ThresholdTracker::new(1, 30 * MS, 0.8);
+        t.init_link(0, MS, 1_000_000, 125_000_000);
+        t.record_flow(0, 80 * MS, true);
+        t.record_flow(0, 40 * MS, true);
+        t.record_flow(0, 20 * MS, false); // partial: not a candidate
+        t.end_epoch();
+        assert_eq!(t.lt_threshold(0), 40 * MS);
+    }
+
+    #[test]
+    fn reliable_cfg_never_closes_early() {
+        let cfg = EarlyCloseCfg::reliable();
+        assert!(!cfg.is_loss_tolerant());
+        assert_eq!(cfg.pct, 1.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! The sans-IO LTP protocol core (paper §III).
+//!
+//! [`LtpSender`] and [`LtpReceiver`] are pure state machines: time comes in
+//! as a parameter, packets come in via `handle`, and outgoing packets are
+//! pulled with `poll_transmit` — the same surface whether the driver is the
+//! deterministic simulator ([`crate::simnet`]) or real UDP sockets
+//! ([`crate::udp`]).
+//!
+//! One **flow** is one direction of one synchronization round between one
+//! worker and the PS: a registration packet announcing the segment count,
+//! data segments (critical or normal), per-packet out-of-order ACKs, an
+//! `End` from the sender when it believes it is done, and a `Stop` from the
+//! receiver when the flow closes (possibly early — §III-B Early Close).
+
+mod early_close;
+pub mod node;
+mod receiver;
+mod sender;
+
+pub use early_close::{EarlyCloseCfg, ThresholdTracker};
+pub use node::{ltp_wire_size, run_single_flow, LtpReceiverNode, LtpSenderNode};
+pub use receiver::{CloseReason, LtpReceiver, ReceiverStats};
+pub use sender::{LtpSender, OutPkt, SenderStats};
+
+use crate::wire::LtpHeader;
+
+/// Sentinel sequence id for registration/end/stop control packets (the
+/// 24-bit all-ones value). Data segment ids must stay below this.
+pub const CTRL_SEQ: u32 = 0xFF_FFFF;
+
+/// Maximum number of data segments per flow.
+pub const MAX_SEGS: u32 = CTRL_SEQ;
+
+/// Segmentation of one message: `n_segs` segments of `seg_payload` bytes,
+/// except the last which carries `last_payload` bytes. `critical` lists
+/// segment ids that must be delivered reliably (paper §III-E: tensor
+/// boundary bytes and other metadata).
+#[derive(Debug, Clone)]
+pub struct SegmentMap {
+    pub n_segs: u32,
+    pub seg_payload: u32,
+    pub last_payload: u32,
+    /// Sorted, deduplicated critical segment ids.
+    pub critical: Vec<u32>,
+}
+
+impl SegmentMap {
+    /// Split `total_bytes` into MSS-sized segments with the given critical
+    /// set.
+    pub fn new(total_bytes: u64, seg_payload: u32, mut critical: Vec<u32>) -> SegmentMap {
+        assert!(total_bytes > 0 && seg_payload > 0);
+        let n_segs = total_bytes.div_ceil(seg_payload as u64);
+        assert!(n_segs <= MAX_SEGS as u64, "message needs {n_segs} segments > MAX_SEGS");
+        let n_segs = n_segs as u32;
+        let rem = (total_bytes % seg_payload as u64) as u32;
+        let last_payload = if rem == 0 { seg_payload } else { rem };
+        critical.sort_unstable();
+        critical.dedup();
+        critical.retain(|&s| s < n_segs);
+        SegmentMap { n_segs, seg_payload, last_payload, critical }
+    }
+
+    /// Payload bytes of segment `seg`.
+    pub fn payload_len(&self, seg: u32) -> u32 {
+        if seg + 1 == self.n_segs {
+            self.last_payload
+        } else {
+            self.seg_payload
+        }
+    }
+
+    /// Total message bytes.
+    pub fn total_bytes(&self) -> u64 {
+        (self.n_segs as u64 - 1) * self.seg_payload as u64 + self.last_payload as u64
+    }
+
+    /// Byte range `[start, end)` of segment `seg` within the message.
+    pub fn byte_range(&self, seg: u32) -> (u64, u64) {
+        let start = seg as u64 * self.seg_payload as u64;
+        (start, start + self.payload_len(seg) as u64)
+    }
+
+    pub fn is_critical(&self, seg: u32) -> bool {
+        self.critical.binary_search(&seg).is_ok()
+    }
+}
+
+/// An incoming LTP packet as seen by the state machines: the header plus
+/// the payload byte count (the simulator does not carry payload bytes; the
+/// UDP driver does, and passes them alongside).
+#[derive(Debug, Clone, Copy)]
+pub struct LtpEvent {
+    pub hdr: LtpHeader,
+    pub payload_len: u32,
+}
+
+/// Convenience constructor for a bare ACK event (benches, tests).
+pub fn ack_event(flow: u16, seq: u32) -> LtpEvent {
+    LtpEvent { hdr: LtpHeader::ack(flow, seq), payload_len: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_map_splits_exactly() {
+        let m = SegmentMap::new(10_000, 1463, vec![0, 99, 0, 3]);
+        assert_eq!(m.n_segs, 7); // ceil(10000/1463)
+        assert_eq!(m.payload_len(0), 1463);
+        assert_eq!(m.payload_len(6), 10_000 - 6 * 1463);
+        assert_eq!(m.total_bytes(), 10_000);
+        assert_eq!(m.critical, vec![0, 3]); // dedup + out-of-range dropped
+        assert!(m.is_critical(0));
+        assert!(!m.is_critical(1));
+    }
+
+    #[test]
+    fn exact_multiple_has_full_last_segment() {
+        let m = SegmentMap::new(1463 * 5, 1463, vec![]);
+        assert_eq!(m.n_segs, 5);
+        assert_eq!(m.payload_len(4), 1463);
+        assert_eq!(m.total_bytes(), 1463 * 5);
+    }
+
+    #[test]
+    fn byte_ranges_tile_the_message() {
+        let m = SegmentMap::new(5000, 1463, vec![]);
+        let mut covered = 0;
+        for s in 0..m.n_segs {
+            let (a, b) = m.byte_range(s);
+            assert_eq!(a, covered);
+            covered = b;
+        }
+        assert_eq!(covered, 5000);
+    }
+}

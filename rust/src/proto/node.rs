@@ -1,0 +1,252 @@
+//! Simulator adapters for single LTP flows (protocol-level experiments;
+//! the PS training system embeds senders/receivers directly).
+
+use super::{EarlyCloseCfg, LtpEvent, LtpReceiver, LtpSender, SegmentMap};
+use crate::simnet::{Ctx, EntityId, Node, Packet};
+use crate::wire::{LtpType, PacketKind, HDR_BYTES, UDP_IP_OVERHEAD};
+use crate::Nanos;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Wire size of an LTP packet carrying `payload_len` payload bytes.
+pub fn ltp_wire_size(payload_len: u32) -> u32 {
+    UDP_IP_OVERHEAD + HDR_BYTES as u32 + payload_len
+}
+
+/// Shared flow-completion log: (flow, elapsed, pct delivered at close).
+pub type LtpLog = Rc<RefCell<Vec<(u16, Nanos, f64)>>>;
+
+/// Drives one [`LtpSender`] toward a peer.
+pub struct LtpSenderNode {
+    pub sender: LtpSender,
+    peer: EntityId,
+    start_at: Nanos,
+    timer_gen: u64,
+    log: Option<LtpLog>,
+    logged: bool,
+    started: Option<Nanos>,
+}
+
+impl LtpSenderNode {
+    pub fn new(sender: LtpSender, peer: EntityId) -> LtpSenderNode {
+        LtpSenderNode {
+            sender,
+            peer,
+            start_at: 0,
+            timer_gen: 0,
+            log: None,
+            logged: false,
+            started: None,
+        }
+    }
+
+    pub fn with_start(mut self, at: Nanos) -> LtpSenderNode {
+        self.start_at = at;
+        self
+    }
+
+    pub fn with_log(mut self, log: LtpLog) -> LtpSenderNode {
+        self.log = Some(log);
+        self
+    }
+
+    fn drain(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        self.started.get_or_insert(now);
+        while let Some(out) = self.sender.poll_transmit(now) {
+            let size = ltp_wire_size(out.payload_len);
+            ctx.send(Packet::new(
+                ctx.me,
+                self.peer,
+                size,
+                self.sender.flow() as u64,
+                PacketKind::Ltp(out.hdr),
+            ));
+        }
+        if self.sender.is_complete() && !self.logged {
+            self.logged = true;
+            if let Some(log) = &self.log {
+                let done = self.sender.stats.completed_at.unwrap();
+                log.borrow_mut().push((
+                    self.sender.flow(),
+                    done - self.started.unwrap_or(0),
+                    self.sender.pct_acked(),
+                ));
+            }
+        }
+        self.timer_gen += 1;
+        if let Some(w) = self.sender.next_wakeup() {
+            // Strictly future: re-arming an already-due timer would livelock
+            // the event loop at one simulated instant.
+            ctx.set_timer(w.max(now + 1), self.timer_gen);
+        }
+    }
+}
+
+impl Node for LtpSenderNode {
+    fn as_any(&mut self) -> &mut dyn std::any::Any { self }
+    fn start(&mut self, ctx: &mut Ctx) {
+        if self.start_at > 0 {
+            self.timer_gen += 1;
+            ctx.set_timer(self.start_at, self.timer_gen);
+        } else {
+            self.drain(ctx);
+        }
+    }
+
+    fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {
+        if let PacketKind::Ltp(hdr) = pkt.kind {
+            self.sender.handle(ctx.now(), LtpEvent { hdr, payload_len: 0 });
+        }
+        self.drain(ctx);
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, token: u64) {
+        if token != self.timer_gen {
+            return;
+        }
+        self.sender.on_wakeup(ctx.now());
+        self.drain(ctx);
+    }
+}
+
+/// Drives one [`LtpReceiver`]; ACKs flow back to the sender entity.
+pub struct LtpReceiverNode {
+    pub receiver: LtpReceiver,
+    sender_entity: Option<EntityId>,
+    timer_gen: u64,
+}
+
+impl LtpReceiverNode {
+    pub fn new(receiver: LtpReceiver) -> LtpReceiverNode {
+        LtpReceiverNode { receiver, sender_entity: None, timer_gen: 0 }
+    }
+
+    fn drain(&mut self, ctx: &mut Ctx) {
+        if let Some(peer) = self.sender_entity {
+            while let Some(hdr) = self.receiver.poll_transmit() {
+                ctx.send(Packet::new(
+                    ctx.me,
+                    peer,
+                    ltp_wire_size(0),
+                    self.receiver.flow() as u64,
+                    PacketKind::Ltp(hdr),
+                ));
+            }
+        }
+        self.timer_gen += 1;
+        if let Some(w) = self.receiver.next_wakeup(ctx.now()) {
+            ctx.set_timer(w.max(ctx.now() + 1), self.timer_gen);
+        }
+    }
+}
+
+impl Node for LtpReceiverNode {
+    fn as_any(&mut self) -> &mut dyn std::any::Any { self }
+    fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {
+        if let PacketKind::Ltp(hdr) = pkt.kind {
+            if hdr.ty != LtpType::Ack {
+                self.sender_entity = Some(pkt.src);
+            }
+            let payload_len =
+                pkt.size.saturating_sub(UDP_IP_OVERHEAD + HDR_BYTES as u32);
+            self.receiver.handle(ctx.now(), LtpEvent { hdr, payload_len });
+        }
+        self.drain(ctx);
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, token: u64) {
+        if token != self.timer_gen {
+            return;
+        }
+        self.receiver.on_wakeup(ctx.now());
+        self.drain(ctx);
+    }
+}
+
+/// Convenience: run one LTP flow of `bytes` over a single duplex link,
+/// returning `(sender stats, receiver stats)`.
+pub fn run_single_flow(
+    bytes: u64,
+    critical: Vec<u32>,
+    cfg: crate::simnet::LinkCfg,
+    ec: EarlyCloseCfg,
+    seed: u64,
+    horizon: Nanos,
+) -> (super::SenderStats, super::ReceiverStats) {
+    use crate::simnet::Sim;
+    use crate::wire::LTP_MSS;
+
+    let mut sim = Sim::new(seed);
+    let map = SegmentMap::new(bytes, LTP_MSS, critical.clone());
+    let mut sender = LtpSender::new(1, map, crate::wire::MTU);
+    // Seed from link truth (as a prior epoch would have).
+    sender.seed_cc(2 * cfg.delay, cfg.rate_bps / 8);
+    let receiver = LtpReceiver::new(1, ec, critical);
+    let a = sim.add_host(Box::new(LtpSenderNode::new(sender, 1)));
+    let b = sim.add_host(Box::new(LtpReceiverNode::new(receiver)));
+    sim.add_duplex(a, b, cfg);
+    sim.run_until(horizon);
+    let s = sim.node_as::<LtpSenderNode>(a).sender.stats;
+    let r = sim.node_as::<LtpReceiverNode>(b).receiver.stats.clone();
+    (s, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::CloseReason;
+    use crate::simnet::{LinkCfg, LossModel};
+    use crate::{MS, SEC};
+
+    #[test]
+    fn clean_link_delivers_everything() {
+        let ec = EarlyCloseCfg { lt_threshold: 50 * MS, deadline: 500 * MS, pct: 0.8 };
+        let (s, r) = run_single_flow(1_000_000, vec![0, 100], LinkCfg::dcn(1, 50), ec, 1, 10 * SEC);
+        assert_eq!(r.reason, Some(CloseReason::Complete));
+        assert!((r.pct_at_close - 1.0).abs() < 1e-9);
+        assert!(s.completed_at.is_some(), "sender must learn about the close");
+        assert_eq!(s.segs_unacked_at_close, 0);
+    }
+
+    #[test]
+    fn lossy_link_early_closes_with_partial_data() {
+        // 5 % random loss; thresholds force an early close rather than a
+        // long retransmission tail.
+        let cfg = LinkCfg::dcn(1, 50).with_loss(LossModel::Bernoulli { p: 0.05 });
+        let ec = EarlyCloseCfg { lt_threshold: 10 * MS, deadline: 60 * MS, pct: 0.80 };
+        let (s, r) = run_single_flow(1_000_000, vec![0], cfg, ec, 3, 10 * SEC);
+        let reason = r.reason.expect("flow must close");
+        assert_ne!(reason, CloseReason::Deadline, "80 % should be reachable: {r:?}");
+        assert!(r.pct_at_close >= 0.8, "pct {}", r.pct_at_close);
+        assert!(r.criticals_ok);
+        assert!(s.completed_at.is_some());
+    }
+
+    #[test]
+    fn deadline_caps_a_terrible_link() {
+        // 40 % loss: pct threshold unreachable fast; deadline must fire.
+        let cfg = LinkCfg::dcn(1, 50).with_loss(LossModel::Bernoulli { p: 0.4 });
+        let ec = EarlyCloseCfg { lt_threshold: 10 * MS, deadline: 25 * MS, pct: 0.99 };
+        let (_s, r) = run_single_flow(2_000_000, vec![], cfg, ec, 7, 10 * SEC);
+        assert_eq!(r.reason, Some(CloseReason::Deadline));
+        assert!(r.elapsed <= 26 * MS, "elapsed {} must hug the deadline", r.elapsed);
+    }
+
+    #[test]
+    fn reliable_mode_completes_despite_loss() {
+        let cfg = LinkCfg::dcn(1, 50).with_loss(LossModel::Bernoulli { p: 0.05 });
+        let (s, r) =
+            run_single_flow(500_000, vec![], cfg, EarlyCloseCfg::reliable(), 5, 30 * SEC);
+        assert_eq!(r.reason, Some(CloseReason::Complete));
+        assert!((r.pct_at_close - 1.0).abs() < 1e-9, "receiver must have 100 %");
+        assert!(s.retransmissions > 0, "5 % loss must force retransmissions");
+        // The receiver closed with 100 %; the sender may still have a few
+        // segments whose ACKs were lost on the reverse path.
+        assert!(
+            s.segs_unacked_at_close <= 16,
+            "unacked at close: {}",
+            s.segs_unacked_at_close
+        );
+    }
+}

@@ -1,0 +1,410 @@
+//! The LTP receiver state machine (paper §III-A, §III-B).
+//!
+//! Per-packet out-of-order ACKs, an arrival bitmap over the flow's
+//! segments, and the Early Close double threshold: wait for 100 % before
+//! the LT threshold; close at `pct` received between LT threshold and
+//! deadline; close unconditionally at the deadline. On close the receiver
+//! broadcasts a `Stop` so the sender abandons retransmission.
+
+use super::{EarlyCloseCfg, LtpEvent, CTRL_SEQ};
+use crate::util::Bitmap;
+use crate::wire::{LtpHeader, LtpType};
+use crate::Nanos;
+use std::collections::VecDeque;
+
+/// Why a flow closed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloseReason {
+    /// 100 % of segments (and all expected criticals) arrived.
+    Complete,
+    /// Early Close: `pct` reached between LT threshold and deadline.
+    EarlyPct,
+    /// Deadline exceeded — closed with whatever arrived.
+    Deadline,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ReceiverStats {
+    pub data_pkts: u64,
+    pub dup_pkts: u64,
+    pub acks_sent: u64,
+    pub stops_sent: u64,
+    /// Time from first packet to close.
+    pub elapsed: Nanos,
+    pub pct_at_close: f64,
+    pub reason: Option<CloseReason>,
+    pub criticals_ok: bool,
+}
+
+/// How many duplicate Stop packets are emitted on close (Stop itself rides
+/// an unreliable datagram).
+const STOP_REDUNDANCY: u32 = 3;
+
+
+/// Sans-IO LTP receiver for one flow.
+pub struct LtpReceiver {
+    flow: u16,
+    cfg: EarlyCloseCfg,
+    /// Segment ids the application knows must arrive (from the shared
+    /// tensor manifest — both ends of a DML flow know the model layout).
+    expected_critical: Vec<u32>,
+    t0: Option<Nanos>,
+    total_segs: Option<u32>,
+    received: Bitmap,
+    critical_got: usize,
+    closed: Option<CloseReason>,
+    outgoing: VecDeque<LtpHeader>,
+    pub stats: ReceiverStats,
+}
+
+impl LtpReceiver {
+    pub fn new(flow: u16, cfg: EarlyCloseCfg, mut expected_critical: Vec<u32>) -> LtpReceiver {
+        expected_critical.sort_unstable();
+        expected_critical.dedup();
+        LtpReceiver {
+            flow,
+            cfg,
+            expected_critical,
+            t0: None,
+            total_segs: None,
+            received: Bitmap::new(0),
+            critical_got: 0,
+            closed: None,
+            outgoing: VecDeque::new(),
+            stats: ReceiverStats::default(),
+        }
+    }
+
+    pub fn flow(&self) -> u16 {
+        self.flow
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.is_some()
+    }
+
+    pub fn close_reason(&self) -> Option<CloseReason> {
+        self.closed
+    }
+
+    /// Arrival bitmap (index = segment id). Missing bits are the bubbles.
+    pub fn received_bitmap(&self) -> &Bitmap {
+        &self.received
+    }
+
+    pub fn total_segs(&self) -> Option<u32> {
+        self.total_segs
+    }
+
+    /// Fraction of data segments received (0 until registration arrives).
+    pub fn pct_received(&self) -> f64 {
+        match self.total_segs {
+            Some(n) if n > 0 => self.received.count_ones() as f64 / n as f64,
+            _ => 0.0,
+        }
+    }
+
+    fn criticals_ok(&self) -> bool {
+        self.critical_got == self.expected_critical.len()
+    }
+
+    /// Process one incoming packet.
+    pub fn handle(&mut self, now: Nanos, ev: LtpEvent) {
+        let t0 = *self.t0.get_or_insert(now);
+        let _ = t0;
+        match ev.hdr.ty {
+            LtpType::Registration => {
+                let n = ev.hdr.seq; // total segment count rides in seq
+                if self.total_segs.is_none() {
+                    self.total_segs = Some(n);
+                    self.received.grow(n as usize);
+                }
+                self.push_ack(CTRL_SEQ);
+            }
+            LtpType::Data => {
+                let seg = ev.hdr.seq;
+                self.stats.data_pkts += 1;
+                if self.closed.is_some() {
+                    // Late data after close: remind the sender to stop.
+                    // Never capped — under bursty loss every Stop of a batch
+                    // can vanish, and a silent receiver would strand the
+                    // sender in a retransmission loop (each late data packet
+                    // triggers at most one Stop, so this stays paced).
+                    self.push_stop();
+                    return;
+                }
+                self.received.grow(seg as usize + 1);
+                if self.received.set(seg as usize) {
+                    if self.expected_critical.binary_search(&seg).is_ok() {
+                        self.critical_got += 1;
+                    }
+                } else {
+                    self.stats.dup_pkts += 1;
+                }
+                // Per-packet ACK, duplicates included (the sender may have
+                // lost the first ACK).
+                self.push_ack(seg);
+            }
+            LtpType::End => {
+                // Sender believes everything is delivered. If our bitmap
+                // agrees (it must, for the End to have been sent), close.
+                if self.closed.is_none() {
+                    self.do_close(now, CloseReason::Complete);
+                } else {
+                    self.push_stop();
+                }
+            }
+            LtpType::Ack => {} // receivers ignore stray ACKs
+        }
+        self.evaluate_close(now);
+    }
+
+    /// Timer callback: Early Close threshold checks.
+    pub fn on_wakeup(&mut self, now: Nanos) {
+        self.evaluate_close(now);
+    }
+
+    /// The next *future* instant at which a close decision could change:
+    /// the LT threshold, then the deadline (relative to flow start).
+    pub fn next_wakeup(&self, now: Nanos) -> Option<Nanos> {
+        if self.closed.is_some() || !self.cfg.is_loss_tolerant() {
+            return None;
+        }
+        let t0 = self.t0?;
+        let lt = t0.saturating_add(self.cfg.lt_threshold);
+        let dl = t0.saturating_add(self.cfg.deadline);
+        if now < lt {
+            Some(lt)
+        } else if now < dl {
+            Some(dl)
+        } else {
+            None
+        }
+    }
+
+    fn evaluate_close(&mut self, now: Nanos) {
+        if self.closed.is_some() {
+            return;
+        }
+        let Some(t0) = self.t0 else { return };
+        // 100 % complete closes at any time.
+        if let Some(n) = self.total_segs {
+            if self.received.count_ones() as u32 == n && self.criticals_ok() {
+                self.do_close(now, CloseReason::Complete);
+                return;
+            }
+        }
+        if !self.cfg.is_loss_tolerant() {
+            return;
+        }
+        let elapsed = now - t0;
+        if elapsed >= self.cfg.deadline {
+            // Paper: "after the deadline, the receiver stops receiving data
+            // immediately no matter how much data is received".
+            self.do_close(now, CloseReason::Deadline);
+            return;
+        }
+        if elapsed >= self.cfg.lt_threshold
+            && self.total_segs.is_some()
+            && self.pct_received() >= self.cfg.pct
+            && self.criticals_ok()
+        {
+            self.do_close(now, CloseReason::EarlyPct);
+        }
+    }
+
+    fn do_close(&mut self, now: Nanos, reason: CloseReason) {
+        self.closed = Some(reason);
+        self.stats.reason = Some(reason);
+        self.stats.elapsed = now - self.t0.unwrap_or(now);
+        self.stats.pct_at_close = self.pct_received();
+        self.stats.criticals_ok = self.criticals_ok();
+        for _ in 0..STOP_REDUNDANCY {
+            self.push_stop();
+        }
+    }
+
+    fn push_ack(&mut self, seq: u32) {
+        self.stats.acks_sent += 1;
+        self.outgoing.push_back(LtpHeader::ack(self.flow, seq));
+    }
+
+    fn push_stop(&mut self) {
+        self.stats.stops_sent += 1;
+        self.outgoing.push_back(LtpHeader::end(self.flow));
+    }
+
+    /// Drain the next outgoing control packet (ACK or Stop).
+    pub fn poll_transmit(&mut self) -> Option<LtpHeader> {
+        self.outgoing.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::Importance;
+    use crate::{MS, SEC};
+
+    fn data(seq: u32) -> LtpEvent {
+        LtpEvent { hdr: LtpHeader::data(1, seq, Importance::Normal), payload_len: 1463 }
+    }
+
+    fn reg(n: u32) -> LtpEvent {
+        LtpEvent { hdr: LtpHeader::registration(1, n), payload_len: 4 }
+    }
+
+    fn lt_cfg() -> EarlyCloseCfg {
+        EarlyCloseCfg { lt_threshold: 100 * MS, deadline: 200 * MS, pct: 0.8 }
+    }
+
+    fn drain(r: &mut LtpReceiver) -> Vec<LtpHeader> {
+        std::iter::from_fn(|| r.poll_transmit()).collect()
+    }
+
+    #[test]
+    fn acks_every_packet_including_dups() {
+        let mut r = LtpReceiver::new(1, lt_cfg(), vec![]);
+        r.handle(0, reg(10));
+        r.handle(1, data(3));
+        r.handle(2, data(3));
+        let out = drain(&mut r);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].seq, CTRL_SEQ);
+        assert_eq!(out[1].seq, 3);
+        assert_eq!(out[2].seq, 3);
+        assert_eq!(r.stats.dup_pkts, 1);
+    }
+
+    #[test]
+    fn closes_complete_at_100pct() {
+        let mut r = LtpReceiver::new(1, lt_cfg(), vec![]);
+        r.handle(0, reg(3));
+        for s in 0..3 {
+            r.handle(s as u64 + 1, data(s));
+        }
+        assert_eq!(r.close_reason(), Some(CloseReason::Complete));
+        let stops = drain(&mut r).iter().filter(|h| h.ty == LtpType::End).count();
+        assert_eq!(stops, 3); // STOP_REDUNDANCY
+    }
+
+    #[test]
+    fn waits_for_100pct_before_lt_threshold() {
+        let mut r = LtpReceiver::new(1, lt_cfg(), vec![]);
+        r.handle(0, reg(10));
+        for s in 0..9 {
+            r.handle(s as u64 + 1, data(s)); // 90 % received
+        }
+        r.on_wakeup(50 * MS); // before LT threshold
+        assert!(!r.is_closed(), "must wait for 100% before the LT threshold");
+    }
+
+    #[test]
+    fn early_close_between_thresholds_when_pct_met() {
+        let mut r = LtpReceiver::new(1, lt_cfg(), vec![]);
+        r.handle(0, reg(10));
+        for s in 0..9 {
+            r.handle(s as u64 + 1, data(s));
+        }
+        r.on_wakeup(150 * MS); // between LT (100 ms) and deadline (200 ms)
+        assert_eq!(r.close_reason(), Some(CloseReason::EarlyPct));
+        assert!((r.stats.pct_at_close - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_early_close_below_pct() {
+        let mut r = LtpReceiver::new(1, lt_cfg(), vec![]);
+        r.handle(0, reg(10));
+        for s in 0..7 {
+            r.handle(s as u64 + 1, data(s)); // 70 % < 80 %
+        }
+        r.on_wakeup(150 * MS);
+        assert!(!r.is_closed());
+    }
+
+    #[test]
+    fn deadline_closes_unconditionally() {
+        let mut r = LtpReceiver::new(1, lt_cfg(), vec![]);
+        r.handle(0, reg(10));
+        r.handle(1, data(0)); // 10 %
+        r.on_wakeup(200 * MS);
+        assert_eq!(r.close_reason(), Some(CloseReason::Deadline));
+    }
+
+    #[test]
+    fn missing_critical_blocks_early_close_but_not_deadline() {
+        // Criticals 0 and 5 expected; 5 never arrives.
+        let mut r = LtpReceiver::new(1, lt_cfg(), vec![0, 5]);
+        r.handle(0, reg(10));
+        for s in 0..10 {
+            if s != 5 {
+                r.handle(s as u64 + 1, data(s));
+            }
+        }
+        r.on_wakeup(150 * MS);
+        assert!(!r.is_closed(), "90% but a critical is missing: no early close");
+        r.handle(160 * MS, data(5));
+        assert_eq!(r.close_reason(), Some(CloseReason::Complete));
+        assert!(r.stats.criticals_ok);
+    }
+
+    #[test]
+    fn reliable_cfg_only_closes_at_full() {
+        let mut r = LtpReceiver::new(1, EarlyCloseCfg::reliable(), vec![]);
+        r.handle(0, reg(4));
+        for s in 0..3 {
+            r.handle(s as u64 + 1, data(s));
+        }
+        r.on_wakeup(10 * SEC);
+        assert!(!r.is_closed());
+        r.handle(11 * SEC, data(3));
+        assert_eq!(r.close_reason(), Some(CloseReason::Complete));
+        assert!(r.next_wakeup(11 * SEC).is_none());
+    }
+
+    #[test]
+    fn late_data_after_close_triggers_stop() {
+        let mut r = LtpReceiver::new(1, lt_cfg(), vec![]);
+        r.handle(0, reg(2));
+        r.handle(1, data(0));
+        r.handle(2, data(1));
+        assert!(r.is_closed());
+        drain(&mut r);
+        r.handle(3, data(0));
+        let out = drain(&mut r);
+        assert!(out.iter().any(|h| h.ty == LtpType::End));
+    }
+
+    #[test]
+    fn bitmap_exposes_missing_segments() {
+        let mut r = LtpReceiver::new(1, lt_cfg(), vec![]);
+        r.handle(0, reg(5));
+        r.handle(1, data(0));
+        r.handle(2, data(2));
+        r.handle(3, data(4));
+        let missing: Vec<usize> = r.received_bitmap().iter_zeros().collect();
+        assert_eq!(missing, vec![1, 3]);
+    }
+
+    #[test]
+    fn wakeup_schedule_covers_thresholds() {
+        let mut r = LtpReceiver::new(1, lt_cfg(), vec![]);
+        assert!(r.next_wakeup(0).is_none(), "no wakeup before the flow starts");
+        r.handle(10 * MS, reg(10));
+        assert_eq!(r.next_wakeup(20 * MS), Some(10 * MS + 100 * MS));
+        // Past the LT threshold: the next decision point is the deadline.
+        assert_eq!(r.next_wakeup(150 * MS), Some(10 * MS + 200 * MS));
+        // Past the deadline: nothing left to wake for.
+        assert_eq!(r.next_wakeup(300 * MS), None);
+    }
+
+    #[test]
+    fn data_before_registration_is_buffered() {
+        let mut r = LtpReceiver::new(1, lt_cfg(), vec![]);
+        r.handle(0, data(7)); // registration lost/late
+        assert_eq!(r.pct_received(), 0.0); // unknown total
+        r.handle(1, reg(10));
+        assert!((r.pct_received() - 0.1).abs() < 1e-9);
+        assert!(r.received_bitmap().get(7));
+    }
+}

@@ -1,0 +1,707 @@
+//! The LTP sender state machine (paper §III-A, §III-D, §IV-B).
+//!
+//! Three queues order transmissions: the **Critical Queue** (CQ, reliable
+//! FIFO — registration, critical segments, and re-queued lost criticals),
+//! the **Normal Queue** (NQ — each normal segment exactly once), and the
+//! **Retransmission Queue** (RQ — normal segments detected lost, drained
+//! only after CQ and NQ are empty). Loss is detected by three out-of-order
+//! ACKs against the actual transmission order; a probe timeout covers tail
+//! loss. The BDP congestion controller caps packets in flight and paces
+//! bursts above 20 packets. Loss never shrinks the window (§III-D).
+
+use super::{LtpEvent, SegmentMap, CTRL_SEQ};
+use crate::cc::BdpCc;
+use crate::wire::{Importance, LtpHeader, LtpType};
+use crate::{Nanos, MS, SEC};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// Out-of-order ACK threshold for loss detection (paper: "three
+/// out-of-order ACKs").
+const REORDER_THRESHOLD: u64 = 3;
+/// Floor for the probe timeout.
+const MIN_PTO: Nanos = 1 * MS;
+/// Cap on End retransmissions before the sender self-completes (covers a
+/// receiver that closed and whose Stop packets were all lost).
+const MAX_END_PROBES: u32 = 10;
+
+/// Per-segment lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SegState {
+    /// Waiting in CQ/NQ/RQ.
+    Queued,
+    /// Exactly one transmission outstanding.
+    Inflight,
+    Acked,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Sent {
+    seg: u32,
+    sent_at: Nanos,
+    /// Snapshot of `delivered_bytes` when this packet left — for delivery-
+    /// rate samples (BBR-style rate estimation).
+    delivered_at_send: u64,
+    payload_len: u32,
+}
+
+/// A packet the driver should put on the wire.
+#[derive(Debug, Clone, Copy)]
+pub struct OutPkt {
+    pub hdr: LtpHeader,
+    /// Payload bytes carried (0 for control packets). The driver combines
+    /// this with the shared message buffer to build real datagrams.
+    pub payload_len: u32,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SenderStats {
+    pub pkts_sent: u64,
+    pub data_pkts_sent: u64,
+    pub retransmissions: u64,
+    pub acks_received: u64,
+    pub losses_detected: u64,
+    pub ptos_fired: u64,
+    pub bytes_sent: u64,
+    /// Set when the flow completed (Stop received or self-completed).
+    pub completed_at: Option<Nanos>,
+    /// Segments never acked when the flow completed (dropped by Early
+    /// Close).
+    pub segs_unacked_at_close: u32,
+}
+
+/// Sans-IO LTP sender for one flow.
+pub struct LtpSender {
+    flow: u16,
+    map: SegmentMap,
+    state: Vec<SegState>,
+    sent_once: Vec<bool>,
+    cq: VecDeque<u32>,
+    nq: VecDeque<u32>,
+    rq: VecDeque<u32>,
+    /// Registration bookkeeping (not a data segment).
+    reg_acked: bool,
+    reg_queued: bool,
+    /// End handshake.
+    end_inflight: bool,
+    end_probes: u32,
+    /// Outstanding transmissions by packet number (== send order).
+    outstanding: BTreeMap<u64, Sent>,
+    /// seg → its single outstanding packet number (CTRL_SEQ for reg/end).
+    tx_of_seg: HashMap<u32, u64>,
+    next_pktnum: u64,
+    largest_acked_pktnum: Option<u64>,
+    acked_segs: u32,
+    pub cc: BdpCc,
+    srtt: Nanos,
+    rttvar: Nanos,
+    delivered_bytes: u64,
+    /// Pacing token bucket (tokens are packets).
+    pace_tokens: f64,
+    pace_refill_at: Nanos,
+    /// PTO deadline (armed while anything is outstanding).
+    pto_at: Option<Nanos>,
+    started_at: Option<Nanos>,
+    stop_received: bool,
+    complete: bool,
+    pub stats: SenderStats,
+}
+
+impl LtpSender {
+    pub fn new(flow: u16, map: SegmentMap, mtu: u32) -> LtpSender {
+        let n = map.n_segs as usize;
+        let state = vec![SegState::Queued; n];
+        let mut cq = VecDeque::new();
+        let mut nq = VecDeque::with_capacity(n);
+        // Registration goes first (handled out of band), then criticals in
+        // CQ, then normals in NQ.
+        for &c in &map.critical {
+            cq.push_back(c);
+        }
+        for s in 0..map.n_segs {
+            if !map.is_critical(s) {
+                nq.push_back(s);
+            }
+        }
+        LtpSender {
+            flow,
+            map,
+            state,
+            sent_once: vec![false; n],
+            cq,
+            nq,
+            rq: VecDeque::new(),
+            reg_acked: false,
+            reg_queued: true,
+            end_inflight: false,
+            end_probes: 0,
+            outstanding: BTreeMap::new(),
+            tx_of_seg: HashMap::new(),
+            next_pktnum: 0,
+            largest_acked_pktnum: None,
+            acked_segs: 0,
+            cc: BdpCc::new(mtu),
+            srtt: 0,
+            rttvar: 0,
+            delivered_bytes: 0,
+            pace_tokens: crate::cc::bdp_burst() as f64,
+            pace_refill_at: 0,
+            pto_at: None,
+            started_at: None,
+            stop_received: false,
+            complete: false,
+            stats: SenderStats::default(),
+        }
+    }
+
+    /// Seed congestion estimates from path knowledge (previous epoch).
+    pub fn seed_cc(&mut self, rtprop: Nanos, btlbw_bytes_per_sec: u64) {
+        self.cc.seed(0, rtprop, btlbw_bytes_per_sec);
+        // A sane initial PTO (fresh per-round flows shouldn't wait the
+        // conservative 100 ms default to recover a lost registration).
+        if self.srtt == 0 && rtprop > 0 {
+            self.srtt = 2 * rtprop;
+            self.rttvar = rtprop;
+        }
+    }
+
+    pub fn flow(&self) -> u16 {
+        self.flow
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.complete
+    }
+
+    pub fn segment_map(&self) -> &SegmentMap {
+        &self.map
+    }
+
+    /// Fraction of segments acked.
+    pub fn pct_acked(&self) -> f64 {
+        self.acked_segs as f64 / self.map.n_segs as f64
+    }
+
+    fn all_data_acked(&self) -> bool {
+        self.acked_segs == self.map.n_segs
+    }
+
+    /// Smoothed RTT (0 until the first sample).
+    pub fn srtt(&self) -> Nanos {
+        self.srtt
+    }
+
+    fn pto_interval(&self) -> Nanos {
+        if self.srtt == 0 {
+            100 * MS // no sample yet: conservative initial PTO
+        } else {
+            (self.srtt + 4 * self.rttvar).max(MIN_PTO)
+        }
+    }
+
+    fn update_rtt(&mut self, rtt: Nanos) {
+        if self.srtt == 0 {
+            self.srtt = rtt;
+            self.rttvar = rtt / 2;
+        } else {
+            let diff = self.srtt.abs_diff(rtt);
+            self.rttvar = (3 * self.rttvar + diff) / 4;
+            self.srtt = (7 * self.srtt + rtt) / 8;
+        }
+    }
+
+    /// Process an incoming packet (ACK or Stop).
+    pub fn handle(&mut self, now: Nanos, ev: LtpEvent) {
+        if self.complete {
+            return;
+        }
+        match ev.hdr.ty {
+            LtpType::Ack => self.on_ack(now, ev.hdr.seq),
+            LtpType::End => {
+                // Receiver's Stop broadcast: flow is over; drop everything.
+                self.stop_received = true;
+                self.finish(now);
+            }
+            _ => {} // senders ignore stray data/registration
+        }
+    }
+
+    fn finish(&mut self, now: Nanos) {
+        if self.complete {
+            return;
+        }
+        self.complete = true;
+        self.stats.completed_at = Some(now);
+        self.stats.segs_unacked_at_close = self.map.n_segs - self.acked_segs;
+        self.cq.clear();
+        self.nq.clear();
+        self.rq.clear();
+        self.outstanding.clear();
+        self.tx_of_seg.clear();
+        self.pto_at = None;
+    }
+
+    fn on_ack(&mut self, now: Nanos, seq: u32) {
+        self.stats.acks_received += 1;
+        let is_ctrl = seq == CTRL_SEQ;
+        // Mark acked.
+        if is_ctrl {
+            if self.end_inflight {
+                // ACK of End — receiver saw it; completion comes via Stop,
+                // but an acked End with everything delivered is also final.
+                self.end_inflight = false;
+            }
+            self.reg_acked = true;
+        } else {
+            let seg = seq as usize;
+            if seg >= self.state.len() || self.state[seg] == SegState::Acked {
+                // Duplicate ACK for an already-acked segment.
+                return;
+            }
+            self.delivered_bytes += self.map.payload_len(seq) as u64;
+            self.state[seg] = SegState::Acked;
+            self.acked_segs += 1;
+        }
+        // Attribute to the outstanding transmission, if any.
+        if let Some(pktnum) = self.tx_of_seg.remove(&seq) {
+            if let Some(sent) = self.outstanding.remove(&pktnum) {
+                let rtt = now.saturating_sub(sent.sent_at).max(1);
+                self.update_rtt(rtt);
+                let dt = now.saturating_sub(sent.sent_at).max(1);
+                let dbytes = self.delivered_bytes.saturating_sub(sent.delivered_at_send);
+                let rate_bps = (dbytes as u128 * 8 * SEC as u128 / dt as u128) as u64;
+                self.cc.on_ack(now, rtt, if dbytes > 0 { Some(rate_bps) } else { None });
+                self.largest_acked_pktnum =
+                    Some(self.largest_acked_pktnum.map_or(pktnum, |l| l.max(pktnum)));
+            }
+        }
+        self.detect_losses();
+        self.rearm_pto(now);
+        // All data delivered?
+        if self.all_data_acked() && self.reg_acked && self.outstanding.is_empty() && !self.end_inflight
+        {
+            // Everything acked; End will be offered by poll_transmit.
+        }
+    }
+
+    /// Three-out-of-order-ACK loss detection against the actual send order.
+    fn detect_losses(&mut self) {
+        let Some(largest) = self.largest_acked_pktnum else { return };
+        let mut lost = Vec::new();
+        for (&pktnum, sent) in self.outstanding.iter() {
+            if pktnum + REORDER_THRESHOLD <= largest {
+                lost.push((pktnum, *sent));
+            } else {
+                break; // BTreeMap iterates in pktnum order
+            }
+        }
+        for (pktnum, sent) in lost {
+            self.outstanding.remove(&pktnum);
+            self.tx_of_seg.remove(&sent.seg);
+            self.stats.losses_detected += 1;
+            self.requeue_lost(sent.seg);
+        }
+    }
+
+    fn requeue_lost(&mut self, seg: u32) {
+        if seg == CTRL_SEQ {
+            // Registration or End lost.
+            if !self.reg_acked {
+                self.reg_queued = true;
+            }
+            // A lost End is re-offered by poll_transmit (end_inflight
+            // cleared).
+            self.end_inflight = false;
+            return;
+        }
+        let s = seg as usize;
+        if self.state[s] == SegState::Acked {
+            return;
+        }
+        self.state[s] = SegState::Queued;
+        if self.map.is_critical(seg) {
+            // Lost criticals return to the CQ (paper Fig 11a).
+            self.cq.push_back(seg);
+        } else {
+            // Lost normals go to the RQ, drained after CQ and NQ
+            // (paper Fig 11b).
+            self.rq.push_back(seg);
+        }
+    }
+
+    fn rearm_pto(&mut self, now: Nanos) {
+        self.pto_at = if self.outstanding.is_empty() && !self.end_inflight {
+            None
+        } else {
+            Some(now + self.pto_interval())
+        };
+    }
+
+    /// Probe timeout: declare everything outstanding lost and requeue.
+    /// (Covers tail loss, where no later ACKs can trigger the
+    /// three-out-of-order rule.)
+    fn fire_pto(&mut self, now: Nanos) {
+        self.stats.ptos_fired += 1;
+        let all: Vec<(u64, Sent)> = self.outstanding.iter().map(|(&k, &v)| (k, v)).collect();
+        for (pktnum, sent) in all {
+            self.outstanding.remove(&pktnum);
+            self.tx_of_seg.remove(&sent.seg);
+            self.requeue_lost(sent.seg);
+        }
+        if self.end_inflight {
+            self.end_inflight = false;
+        }
+        // LTP does *not* touch the congestion window on loss (§III-D).
+        self.rearm_pto(now);
+    }
+
+    /// Deadline the driver must call [`Self::on_wakeup`] at (if any):
+    /// pacing release or PTO, whichever is sooner.
+    pub fn next_wakeup(&self) -> Option<Nanos> {
+        if self.complete {
+            return None;
+        }
+        let pace = if self.pace_tokens < 1.0 && self.has_work() {
+            self.next_token_at()
+        } else {
+            None
+        };
+        match (pace, self.pto_at) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Called by the driver when `next_wakeup` expires.
+    pub fn on_wakeup(&mut self, now: Nanos) {
+        if let Some(pto) = self.pto_at {
+            if now >= pto {
+                self.fire_pto(now);
+            }
+        }
+        // Pacing tokens refill lazily in poll_transmit.
+    }
+
+    fn has_work(&self) -> bool {
+        self.reg_queued
+            || !self.cq.is_empty()
+            || !self.nq.is_empty()
+            || !self.rq.is_empty()
+            || (self.all_data_acked() && self.reg_acked && !self.end_inflight)
+    }
+
+    fn next_token_at(&self) -> Option<Nanos> {
+        let rate_bps = self.cc.pacing_rate_bps()?;
+        if rate_bps == 0 {
+            return None;
+        }
+        let need = 1.0 - self.pace_tokens;
+        let ns_per_pkt = (crate::wire::MTU as f64 * 8.0 * SEC as f64) / rate_bps as f64;
+        Some(self.pace_refill_at + (need * ns_per_pkt) as Nanos)
+    }
+
+    fn refill_tokens(&mut self, now: Nanos) {
+        let Some(rate_bps) = self.cc.pacing_rate_bps() else {
+            // No estimate yet: window-limited only.
+            self.pace_tokens = crate::cc::bdp_burst() as f64;
+            self.pace_refill_at = now;
+            return;
+        };
+        let dt = now.saturating_sub(self.pace_refill_at);
+        let pkts = (rate_bps as f64 / 8.0 / crate::wire::MTU as f64) * (dt as f64 / SEC as f64);
+        self.pace_tokens = (self.pace_tokens + pkts).min(crate::cc::bdp_burst() as f64);
+        self.pace_refill_at = now;
+    }
+
+    /// Next queued segment, skipping entries acked in the meantime.
+    fn pop_next_seg(&mut self) -> Option<u32> {
+        loop {
+            let seg = self
+                .cq
+                .pop_front()
+                .or_else(|| self.nq.pop_front())
+                .or_else(|| self.rq.pop_front())?;
+            if self.state[seg as usize] == SegState::Queued {
+                return Some(seg);
+            }
+            // Acked while queued (e.g. spurious retransmit) — skip.
+        }
+    }
+
+    /// Pull the next packet to put on the wire, if congestion control,
+    /// pacing, and the queues allow one.
+    pub fn poll_transmit(&mut self, now: Nanos) -> Option<OutPkt> {
+        if self.complete {
+            return None;
+        }
+        if self.started_at.is_none() {
+            self.started_at = Some(now);
+        }
+        // Window check.
+        if self.outstanding.len() as u64 >= self.cc.inflight_cap_pkts() {
+            return None;
+        }
+        // Pacing check (paper: bursts > 20 packets wait on the pacing rate).
+        self.refill_tokens(now);
+        if self.pace_tokens < 1.0 {
+            return None;
+        }
+
+        // 1. Registration first.
+        if self.reg_queued {
+            self.reg_queued = false;
+            let hdr = self.stamp(LtpHeader::registration(self.flow, self.map.n_segs));
+            self.record_tx(now, CTRL_SEQ, 4);
+            return Some(OutPkt { hdr, payload_len: 4 });
+        }
+        // 2. Data: CQ → NQ → RQ.
+        if let Some(seg) = self.pop_next_seg() {
+            let payload = self.map.payload_len(seg);
+            let importance =
+                if self.map.is_critical(seg) { Importance::Critical } else { Importance::Normal };
+            if self.sent_once[seg as usize] {
+                self.stats.retransmissions += 1;
+            } else {
+                self.sent_once[seg as usize] = true;
+            }
+            self.state[seg as usize] = SegState::Inflight;
+            let hdr = self.stamp(LtpHeader::data(self.flow, seg, importance));
+            self.record_tx(now, seg, payload);
+            self.stats.data_pkts_sent += 1;
+            return Some(OutPkt { hdr, payload_len: payload });
+        }
+        // 3. End probe once everything is acked.
+        if self.all_data_acked() && self.reg_acked && !self.end_inflight {
+            if self.end_probes >= MAX_END_PROBES {
+                // Receiver unreachable for the epilogue; everything was
+                // acked, so the flow is done.
+                self.finish(now);
+                return None;
+            }
+            self.end_probes += 1;
+            self.end_inflight = true;
+            let hdr = self.stamp(LtpHeader::end(self.flow));
+            self.record_tx(now, CTRL_SEQ, 0);
+            return Some(OutPkt { hdr, payload_len: 0 });
+        }
+        None
+    }
+
+    /// Stamp congestion-control telemetry into an outgoing header
+    /// (paper §IV-A: LTP sends RTprop/BtlBw to the receiver).
+    fn stamp(&self, mut hdr: LtpHeader) -> LtpHeader {
+        hdr.rtprop_us = (self.cc.rtprop_ns() / crate::US) as u32;
+        hdr.btlbw_mbps = (self.cc.btlbw_bytes_per_sec() * 8 / 1_000_000) as u32;
+        hdr
+    }
+
+    fn record_tx(&mut self, now: Nanos, seg: u32, payload_len: u32) {
+        let pktnum = self.next_pktnum;
+        self.next_pktnum += 1;
+        // Replace any stale transmission record for this seg.
+        if let Some(old) = self.tx_of_seg.insert(seg, pktnum) {
+            self.outstanding.remove(&old);
+        }
+        self.outstanding.insert(
+            pktnum,
+            Sent { seg, sent_at: now, delivered_at_send: self.delivered_bytes, payload_len },
+        );
+        self.pace_tokens -= 1.0;
+        self.stats.pkts_sent += 1;
+        self.stats.bytes_sent +=
+            (payload_len + crate::wire::UDP_IP_OVERHEAD + crate::wire::HDR_BYTES as u32) as u64;
+        self.rearm_pto(now);
+    }
+
+    /// Count of packets currently in flight.
+    pub fn inflight(&self) -> usize {
+        self.outstanding.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::LTP_MSS;
+
+    fn mk_sender(bytes: u64, critical: Vec<u32>) -> LtpSender {
+        let map = SegmentMap::new(bytes, LTP_MSS, critical);
+        let mut s = LtpSender::new(1, map, crate::wire::MTU);
+        s.seed_cc(MS, 125_000_000); // 1 Gbps, 1 ms
+        s
+    }
+
+    fn ack(seq: u32) -> LtpEvent {
+        LtpEvent { hdr: LtpHeader::ack(1, seq), payload_len: 0 }
+    }
+
+    #[test]
+    fn registration_goes_first_then_criticals() {
+        let mut s = mk_sender(LTP_MSS as u64 * 10, vec![3, 7]);
+        let p0 = s.poll_transmit(0).unwrap();
+        assert_eq!(p0.hdr.ty, LtpType::Registration);
+        assert_eq!(p0.hdr.seq, 10); // total segs rides in seq
+        let p1 = s.poll_transmit(1).unwrap();
+        assert_eq!(p1.hdr.ty, LtpType::Data);
+        assert_eq!(p1.hdr.seq, 3);
+        assert_eq!(p1.hdr.importance, Importance::Critical);
+        let p2 = s.poll_transmit(2).unwrap();
+        assert_eq!(p2.hdr.seq, 7);
+        let p3 = s.poll_transmit(3).unwrap();
+        assert_eq!(p3.hdr.seq, 0); // first normal
+        assert_eq!(p3.hdr.importance, Importance::Normal);
+    }
+
+    #[test]
+    fn window_caps_inflight() {
+        let mut s = mk_sender(LTP_MSS as u64 * 10_000, vec![]);
+        let cap = s.cc.inflight_cap_pkts();
+        let mut sent = 0;
+        while s.poll_transmit(0).is_some() {
+            sent += 1;
+            assert!(sent <= 10_000);
+        }
+        // Pacing burst or window, whichever is smaller, stops the loop.
+        assert!(sent as u64 <= cap.max(1));
+        assert!(sent > 0);
+    }
+
+    #[test]
+    fn three_out_of_order_acks_detect_loss() {
+        let mut s = mk_sender(LTP_MSS as u64 * 8, vec![]);
+        // Send reg + all 8 segments.
+        let mut pkts = vec![];
+        let mut now = 0;
+        loop {
+            s.refill_tokens(now);
+            match s.poll_transmit(now) {
+                Some(p) => pkts.push(p),
+                None => break,
+            }
+            now += 10_000;
+        }
+        assert!(pkts.len() >= 9);
+        // ACK registration, then segments 1,2,3 — seg 0 (pktnum 1) becomes
+        // 3 behind the largest acked pktnum (4) → lost.
+        s.handle(now, ack(CTRL_SEQ));
+        s.handle(now + 1, ack(1));
+        s.handle(now + 2, ack(2));
+        s.handle(now + 3, ack(3));
+        assert_eq!(s.stats.losses_detected, 1);
+        // Lost normal seg goes to RQ and is retransmitted after NQ drains.
+        let mut seen0 = false;
+        let mut t = now + 10;
+        for _ in 0..100 {
+            s.refill_tokens(t);
+            if let Some(p) = s.poll_transmit(t) {
+                if p.hdr.ty == LtpType::Data && p.hdr.seq == 0 {
+                    seen0 = true;
+                }
+            }
+            t += 10_000;
+        }
+        assert!(seen0, "lost segment 0 must be retransmitted via RQ");
+    }
+
+    #[test]
+    fn lost_critical_returns_to_cq_before_rq() {
+        let mut s = mk_sender(LTP_MSS as u64 * 6, vec![0]);
+        let mut now = 0;
+        // Drain: reg, crit 0, normals 1..5.
+        let mut order = vec![];
+        loop {
+            s.refill_tokens(now);
+            match s.poll_transmit(now) {
+                Some(p) => order.push((p.hdr.ty, p.hdr.seq)),
+                None => break,
+            }
+            now += 1000;
+        }
+        // Lose seg 0 (critical, pktnum 1) and seg 1 (normal, pktnum 2) via
+        // OOO acks on 2,3,4,5.
+        s.handle(now, ack(CTRL_SEQ));
+        for q in [2, 3, 4, 5] {
+            s.handle(now + q as u64, ack(q));
+        }
+        assert_eq!(s.stats.losses_detected, 2);
+        // Next transmissions: critical 0 (from CQ) then normal 1 (RQ).
+        s.refill_tokens(now + 100);
+        let a = s.poll_transmit(now + 100).unwrap();
+        assert_eq!((a.hdr.seq, a.hdr.importance), (0, Importance::Critical));
+        let b = s.poll_transmit(now + 200).unwrap();
+        assert_eq!((b.hdr.seq, b.hdr.importance), (1, Importance::Normal));
+    }
+
+    #[test]
+    fn pto_requeues_tail_loss() {
+        let mut s = mk_sender(LTP_MSS as u64 * 3, vec![]);
+        let mut now = 0;
+        while s.poll_transmit(now).is_some() {
+            now += 1000;
+        }
+        let wake = s.next_wakeup().expect("PTO armed");
+        s.on_wakeup(wake);
+        assert_eq!(s.stats.ptos_fired, 1);
+        assert_eq!(s.inflight(), 0);
+        // Everything requeued: reg + 3 segs come out again.
+        let mut resent = 0;
+        let mut t = wake;
+        while let Some(_p) = s.poll_transmit(t) {
+            resent += 1;
+            t += 1000;
+        }
+        assert_eq!(resent, 4);
+    }
+
+    #[test]
+    fn stop_completes_and_clears() {
+        let mut s = mk_sender(LTP_MSS as u64 * 100, vec![]);
+        let mut now = 0;
+        for _ in 0..20 {
+            s.refill_tokens(now);
+            let _ = s.poll_transmit(now);
+            now += 1000;
+        }
+        s.handle(now, LtpEvent { hdr: LtpHeader::end(1), payload_len: 0 });
+        assert!(s.is_complete());
+        assert!(s.poll_transmit(now + 1).is_none());
+        assert!(s.stats.segs_unacked_at_close > 0);
+        assert!(s.next_wakeup().is_none());
+    }
+
+    #[test]
+    fn full_ack_sequence_leads_to_end(){
+        let mut s = mk_sender(LTP_MSS as u64 * 5, vec![]);
+        let mut now = 0;
+        let mut outgoing = vec![];
+        loop {
+            s.refill_tokens(now);
+            match s.poll_transmit(now) {
+                Some(p) => outgoing.push(p),
+                None => break,
+            }
+            now += 1000;
+        }
+        // ACK everything.
+        s.handle(now, ack(CTRL_SEQ));
+        for i in 0..5 {
+            s.handle(now + i as u64 + 1, ack(i));
+        }
+        assert!(s.pct_acked() == 1.0);
+        // Next poll offers the End packet.
+        s.refill_tokens(now + 10);
+        let end = s.poll_transmit(now + 10).unwrap();
+        assert_eq!(end.hdr.ty, LtpType::End);
+        // Stop arrives → complete with zero unacked.
+        s.handle(now + 20, LtpEvent { hdr: LtpHeader::end(1), payload_len: 0 });
+        assert!(s.is_complete());
+        assert_eq!(s.stats.segs_unacked_at_close, 0);
+    }
+
+    #[test]
+    fn headers_carry_cc_telemetry() {
+        let mut s = mk_sender(LTP_MSS as u64 * 2, vec![]);
+        let p = s.poll_transmit(0).unwrap();
+        assert!(p.hdr.rtprop_us > 0);
+        assert!(p.hdr.btlbw_mbps > 0);
+    }
+}

@@ -1,0 +1,90 @@
+//! In-process data plane. The simulator moves *accounted* bytes, not
+//! payloads; actual gradient/parameter values move through this shared
+//! blackboard, gated by the transport's delivery bitmaps — so the numerics
+//! see exactly what a real wire would have delivered (bubbles included),
+//! without copying 100-MB-class buffers through every simulated packet.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Shared single-threaded store: worker gradients for the current
+/// iteration, and the global parameters.
+#[derive(Default)]
+pub struct Store {
+    /// (worker, iter) → flat gradient (padded).
+    pub grads: HashMap<(usize, u64), Rc<Vec<f32>>>,
+    /// Global flat parameters (updated by the PS, read by workers after a
+    /// completed reliable broadcast).
+    pub params: Rc<Vec<f32>>,
+    /// Momentum buffer (PS-owned, kept here for inspection by tests).
+    pub momentum: Rc<Vec<f32>>,
+}
+
+/// Cloneable handle.
+#[derive(Clone, Default)]
+pub struct Blackboard(Rc<RefCell<Store>>);
+
+impl Blackboard {
+    pub fn new(params: Vec<f32>) -> Blackboard {
+        let momentum = vec![0.0; params.len()];
+        Blackboard(Rc::new(RefCell::new(Store {
+            grads: HashMap::new(),
+            params: Rc::new(params),
+            momentum: Rc::new(momentum),
+        })))
+    }
+
+    pub fn put_grads(&self, worker: usize, iter: u64, grads: Vec<f32>) {
+        self.0.borrow_mut().grads.insert((worker, iter), Rc::new(grads));
+    }
+
+    pub fn take_grads(&self, worker: usize, iter: u64) -> Option<Rc<Vec<f32>>> {
+        self.0.borrow_mut().grads.remove(&(worker, iter))
+    }
+
+    pub fn params(&self) -> Rc<Vec<f32>> {
+        self.0.borrow().params.clone()
+    }
+
+    pub fn set_params(&self, params: Vec<f32>) {
+        self.0.borrow_mut().params = Rc::new(params);
+    }
+
+    pub fn momentum(&self) -> Rc<Vec<f32>> {
+        self.0.borrow().momentum.clone()
+    }
+
+    pub fn set_momentum(&self, v: Vec<f32>) {
+        self.0.borrow_mut().momentum = Rc::new(v);
+    }
+
+    /// Drop gradients older than `iter` (bounded memory across long runs).
+    pub fn gc(&self, iter: u64) {
+        self.0.borrow_mut().grads.retain(|&(_, i), _| i >= iter);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grads_roundtrip_and_gc() {
+        let bb = Blackboard::new(vec![1.0, 2.0]);
+        bb.put_grads(0, 5, vec![0.5]);
+        bb.put_grads(1, 6, vec![0.7]);
+        assert_eq!(bb.take_grads(0, 5).unwrap()[0], 0.5);
+        assert!(bb.take_grads(0, 5).is_none());
+        bb.gc(7);
+        assert!(bb.take_grads(1, 6).is_none());
+    }
+
+    #[test]
+    fn params_swap() {
+        let bb = Blackboard::new(vec![1.0]);
+        assert_eq!(bb.params()[0], 1.0);
+        bb.set_params(vec![2.0]);
+        assert_eq!(bb.params()[0], 2.0);
+    }
+}

@@ -1,0 +1,49 @@
+//! The Parameter-Server DML training system (paper Fig 1, §V-A2: "we
+//! design our own PS-based DML framework").
+//!
+//! One PS and `W` workers train under BSP: each iteration every worker
+//! computes a gradient (either *modeled* — a calibrated compute delay with
+//! the paper's message sizes — or *real* — a PJRT execution of the AOT
+//! transformer), **gathers** it to the PS over the configured transport
+//! (LTP loss-tolerant, or TCP with a chosen congestion control), the PS
+//! aggregates (masked-mean Pallas kernel for real compute) and
+//! **broadcasts** the new model reliably, and the next iteration begins.
+//!
+//! LTP specifics (paper §III-B): gather flows run under Early Close with
+//! per-link LT thresholds maintained by a [`crate::proto::ThresholdTracker`]
+//! (init `1.5·RTprop + Size/BtlBw`, per-epoch update to the fastest full
+//! transmission, deadline `max+C`); broadcast is always reliable.
+
+mod blackboard;
+mod data;
+mod runner;
+mod server;
+mod transport;
+mod worker;
+
+pub use blackboard::Blackboard;
+pub use data::Corpus;
+pub use runner::{
+    run_training, run_with, RealCompute, RealTraining, RunReport, TrainingCfg, XlaAggregate,
+};
+pub use server::{Aggregate, NullAggregate, PsNode};
+pub use transport::{GatherRx, GatherTx, Proto};
+pub use worker::{Compute, ModeledCompute, WorkerNode, WorkerStats};
+
+use crate::Nanos;
+
+/// Per-iteration record collected by the PS.
+#[derive(Debug, Clone, Default)]
+pub struct IterStats {
+    /// Batch synchronization time: gather start → last broadcast delivered.
+    pub bst: Nanos,
+    /// Gather phase only (incast direction).
+    pub gather_time: Nanos,
+    /// Mean fraction of gradient data delivered across workers (1.0 = no
+    /// loss-tolerant dropping).
+    pub mean_delivered: f64,
+    /// Training loss (real compute only).
+    pub loss: Option<f32>,
+    /// Wall-clock the iteration ended (sim time).
+    pub end: Nanos,
+}

@@ -1,0 +1,400 @@
+//! Training-run orchestration: build the star topology, attach PS and
+//! workers, run the BSP loop, and collect the report. Supports modeled
+//! compute (paper message sizes + calibrated compute times) and real
+//! compute (PJRT train_step + Pallas masked aggregation).
+
+use super::server::{Aggregate, NullAggregate, PsNode};
+use super::transport::Proto;
+use super::worker::{Compute, ModeledCompute, WorkerNode};
+use super::{Blackboard, Corpus, IterStats};
+use crate::config::ModelManifest;
+use crate::grad::{element_mask, Manifest};
+use crate::runtime::{literal_f32, literal_i32, to_f32, Artifact, Runtime};
+use crate::simnet::{LinkCfg, Sim};
+use crate::util::{Bitmap, Summary};
+use crate::wire::LTP_MSS;
+use crate::{Nanos, MS, SEC};
+use anyhow::Result;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// A training-run configuration.
+pub struct TrainingCfg {
+    pub proto: Proto,
+    pub n_workers: usize,
+    pub iters: u64,
+    pub model_bytes: u64,
+    /// Critical segments (from the tensor manifest) for LTP gathers.
+    pub critical: Vec<u32>,
+    pub compute_time: Nanos,
+    pub agg_time: Nanos,
+    pub link: LinkCfg,
+    pub switch_delay: Nanos,
+    /// Early Close data-percentage threshold (paper Fig 7: e.g. 0.8).
+    pub pct_threshold: f64,
+    /// Deadline slack C (30 ms DCN / 100 ms WAN).
+    pub deadline_slack: Nanos,
+    pub batches_per_epoch: u64,
+    pub seed: u64,
+    /// Wall-clock cap on the simulation.
+    pub horizon: Nanos,
+}
+
+impl TrainingCfg {
+    pub fn modeled(proto: Proto, workload: crate::config::Workload, n_workers: usize) -> TrainingCfg {
+        TrainingCfg {
+            proto,
+            n_workers,
+            iters: 10,
+            model_bytes: workload.model_bytes(),
+            critical: Manifest::synthetic(workload.model_bytes(), 50)
+                .critical_segments(Manifest::aligned_payload(LTP_MSS)),
+            compute_time: workload.compute_time(),
+            agg_time: 2 * MS,
+            link: crate::config::NetEnv::Rack.link(),
+            switch_delay: 500,
+            pct_threshold: 0.8,
+            deadline_slack: crate::config::NetEnv::Rack.deadline_slack(),
+            batches_per_epoch: 10,
+            seed: 1,
+            horizon: 3600 * SEC,
+        }
+    }
+}
+
+/// The outcome of a run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub proto: String,
+    pub iters: Vec<IterStats>,
+    pub total_time: Nanos,
+    /// Mean per-worker gather times (incast direction).
+    pub gather_summary: Summary,
+}
+
+impl RunReport {
+    /// Training throughput in images/sec given a per-worker batch size.
+    /// Excludes the first iteration (threshold/estimator bootstrapping)
+    /// when more than one completed — steady-state, like the paper's
+    /// measurements over whole epochs.
+    pub fn throughput(&self, n_workers: usize, batch_images: u64) -> f64 {
+        if self.iters.is_empty() || self.total_time == 0 {
+            return 0.0;
+        }
+        let (n, window) = if self.iters.len() > 1 {
+            (self.iters.len() - 1, self.total_time - self.iters[0].end)
+        } else {
+            (1, self.total_time)
+        };
+        let images = n as u64 * n_workers as u64 * batch_images;
+        images as f64 / (window.max(1) as f64 / SEC as f64)
+    }
+
+    pub fn mean_bst(&self) -> Nanos {
+        if self.iters.is_empty() {
+            return 0;
+        }
+        self.iters.iter().map(|i| i.bst).sum::<Nanos>() / self.iters.len() as u64
+    }
+
+    pub fn bst_values_ms(&self) -> Vec<f64> {
+        self.iters.iter().map(|i| i.bst as f64 / MS as f64).collect()
+    }
+
+    pub fn mean_delivered(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 1.0;
+        }
+        self.iters.iter().map(|i| i.mean_delivered).sum::<f64>() / self.iters.len() as f64
+    }
+}
+
+/// Run a modeled-compute training simulation (no PJRT involved).
+pub fn run_training(cfg: &TrainingCfg) -> RunReport {
+    run_with(cfg, |_, _| Box::new(ModeledCompute(cfg.compute_time)), Box::new(NullAggregate(cfg.agg_time)))
+}
+
+/// Run with custom compute/aggregation backends (real training uses this).
+pub fn run_with(
+    cfg: &TrainingCfg,
+    mut make_compute: impl FnMut(usize, &TrainingCfg) -> Box<dyn Compute>,
+    agg: Box<dyn Aggregate>,
+) -> RunReport {
+    let report: Rc<RefCell<Vec<IterStats>>> = Rc::new(RefCell::new(Vec::new()));
+    let mut sim = Sim::new(cfg.seed);
+    let sw = sim.add_switch(cfg.switch_delay);
+    // PS is entity 1 (first host), workers follow.
+    let tracker = crate::proto::ThresholdTracker::new(
+        cfg.n_workers,
+        cfg.deadline_slack,
+        cfg.pct_threshold,
+    );
+    let worker_ids: Vec<usize> = (0..cfg.n_workers).map(|w| 2 + w).collect();
+    let ps = PsNode::new(
+        worker_ids.clone(),
+        cfg.proto,
+        cfg.model_bytes,
+        cfg.critical.clone(),
+        agg,
+        tracker,
+        cfg.iters,
+        cfg.batches_per_epoch,
+        report.clone(),
+    );
+    let ps_id = sim.add_host(Box::new(ps));
+    let (ps_up, _) = sim.add_duplex(ps_id, sw, cfg.link);
+    sim.set_default_uplink(ps_id, ps_up);
+    for w in 0..cfg.n_workers {
+        let node = WorkerNode::new(
+            w,
+            ps_id,
+            cfg.n_workers,
+            cfg.proto,
+            cfg.model_bytes,
+            cfg.critical.clone(),
+            make_compute(w, cfg),
+            cfg.iters,
+        );
+        let id = sim.add_host(Box::new(node));
+        debug_assert_eq!(id, worker_ids[w]);
+        let (up, _) = sim.add_duplex(id, sw, cfg.link);
+        sim.set_default_uplink(id, up);
+    }
+    sim.run_until(cfg.horizon);
+    let total_time = report.borrow().last().map(|i| i.end).unwrap_or(sim.now());
+    let mut gathers = Vec::new();
+    for &w in &worker_ids {
+        let node = sim.node_as::<WorkerNode>(w);
+        gathers.extend(node.stats.gather_times.iter().map(|&t| t as f64 / MS as f64));
+    }
+    let iters = report.borrow().clone();
+    RunReport {
+        proto: cfg.proto.name(),
+        iters,
+        total_time,
+        gather_summary: Summary::of(&gathers),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real compute backends (PJRT).
+// ---------------------------------------------------------------------------
+
+/// Shared state for real training: runtime artifacts + blackboard.
+pub struct RealTraining {
+    pub manifest: ModelManifest,
+    pub blackboard: Blackboard,
+    train_step: Rc<Artifact>,
+    eval: Rc<Artifact>,
+    aggregate: Rc<Artifact>,
+    /// Simulated duration of one train_step / one aggregation.
+    pub sim_compute_time: Nanos,
+    pub sim_agg_time: Nanos,
+    pub lr: f32,
+    pub losses: Rc<RefCell<Vec<(u64, f32)>>>,
+}
+
+impl RealTraining {
+    pub fn new(rt: &Runtime, preset: &str, lr: f32) -> Result<Rc<RealTraining>> {
+        let manifest = ModelManifest::load(crate::runtime::default_artifacts_dir(), preset)?;
+        let init = rt.load(&format!("init_{preset}"))?;
+        let params = to_f32(&init.run(&[])?[0])?;
+        anyhow::ensure!(params.len() == manifest.padded_dim);
+        Ok(Rc::new(RealTraining {
+            manifest,
+            blackboard: Blackboard::new(params),
+            train_step: Rc::new(rt.load(&format!("train_step_{preset}"))?),
+            eval: Rc::new(rt.load(&format!("eval_{preset}"))?),
+            aggregate: Rc::new(rt.load(&format!("aggregate_{preset}"))?),
+            sim_compute_time: 50 * MS,
+            sim_agg_time: 5 * MS,
+            lr,
+            losses: Rc::new(RefCell::new(Vec::new())),
+        }))
+    }
+
+    pub fn eval_loss(&self, tokens: &[i32]) -> Result<f32> {
+        let cfg = &self.manifest;
+        let p = literal_f32(&self.blackboard.params(), &[cfg.padded_dim as i64])?;
+        let t = literal_i32(tokens, &[cfg.batch as i64, cfg.seq_len as i64 + 1])?;
+        let out = self.eval.run(&[p, t])?;
+        Ok(to_f32(&out[0])?[0])
+    }
+}
+
+/// Worker-side real compute: runs train_step via PJRT, deposits gradients.
+pub struct RealCompute {
+    pub shared: Rc<RealTraining>,
+    pub corpus: Corpus,
+}
+
+impl Compute for RealCompute {
+    fn compute(&mut self, worker: usize, iter: u64) -> Nanos {
+        let m = &self.shared.manifest;
+        let tokens = self.corpus.next_batch(m.batch, m.seq_len + 1);
+        let run = || -> Result<(Vec<f32>, f32)> {
+            let p = literal_f32(&self.shared.blackboard.params(), &[m.padded_dim as i64])?;
+            let t = literal_i32(&tokens, &[m.batch as i64, m.seq_len as i64 + 1])?;
+            let out = self.shared.train_step.run(&[p, t])?;
+            Ok((to_f32(&out[0])?, to_f32(&out[1])?[0]))
+        };
+        match run() {
+            Ok((grads, loss)) => {
+                self.shared.blackboard.put_grads(worker, iter, grads);
+                self.shared.losses.borrow_mut().push((iter, loss));
+            }
+            Err(e) => panic!("train_step failed for worker {worker}: {e:#}"),
+        }
+        self.shared.sim_compute_time
+    }
+}
+
+/// PS-side real aggregation: masked-mean Pallas kernel + momentum SGD.
+pub struct XlaAggregate {
+    pub shared: Rc<RealTraining>,
+    pub n_workers: usize,
+}
+
+impl Aggregate for XlaAggregate {
+    fn aggregate(&mut self, iter: u64, arrivals: &[Option<(Bitmap, u64)>]) -> Nanos {
+        let m = &self.shared.manifest;
+        let d = m.padded_dim;
+        let aw = m.agg_workers;
+        assert!(self.n_workers <= aw, "aggregate artifact supports ≤{aw} workers");
+        let mut g = vec![0.0f32; aw * d];
+        let mut mask = vec![0.0f32; aw * d];
+        let seg_map = crate::proto::SegmentMap::new(
+            d as u64 * 4,
+            Manifest::aligned_payload(LTP_MSS),
+            vec![],
+        );
+        for w in 0..self.n_workers {
+            let Some(grads) = self.shared.blackboard.take_grads(w, iter) else {
+                continue; // worker contributed nothing this round
+            };
+            let row_mask = match &arrivals[w] {
+                Some((bitmap, _)) => element_mask(&seg_map, bitmap, d),
+                None => vec![1.0f32; d], // TCP: everything arrived
+            };
+            // Bubble semantics: zero the lost elements of the gradient row.
+            for i in 0..d {
+                g[w * d + i] = grads[i] * row_mask[i];
+            }
+            mask[w * d..(w + 1) * d].copy_from_slice(&row_mask);
+        }
+        let run = || -> Result<()> {
+            let p = literal_f32(&self.shared.blackboard.params(), &[d as i64])?;
+            let v = literal_f32(&self.shared.blackboard.momentum(), &[d as i64])?;
+            let gl = literal_f32(&g, &[aw as i64, d as i64])?;
+            let ml = literal_f32(&mask, &[aw as i64, d as i64])?;
+            let lr = literal_f32(&[self.shared.lr], &[1])?;
+            let out = self.shared.aggregate.run(&[p, v, gl, ml, lr])?;
+            self.shared.blackboard.set_params(to_f32(&out[0])?);
+            self.shared.blackboard.set_momentum(to_f32(&out[1])?);
+            Ok(())
+        };
+        if let Err(e) = run() {
+            panic!("aggregation failed at iter {iter}: {e:#}");
+        }
+        self.shared.blackboard.gc(iter + 1);
+        self.shared.sim_agg_time
+    }
+
+    fn loss(&mut self, iter: u64) -> Option<f32> {
+        let losses = self.shared.losses.borrow();
+        let vals: Vec<f32> =
+            losses.iter().filter(|&&(i, _)| i == iter).map(|&(_, l)| l).collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f32>() / vals.len() as f32)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::CcAlgo;
+    use crate::config::Workload;
+    use crate::simnet::LossModel;
+
+    fn quick_cfg(proto: Proto) -> TrainingCfg {
+        let mut cfg = TrainingCfg::modeled(proto, Workload::Micro, 4);
+        cfg.iters = 3;
+        cfg
+    }
+
+    #[test]
+    fn modeled_ltp_completes_all_iterations() {
+        let report = run_training(&quick_cfg(Proto::Ltp));
+        assert_eq!(report.iters.len(), 3, "all iterations must finish");
+        assert!(report.mean_bst() > 0);
+        // Even a "clean" network drops packets under incast congestion;
+        // LTP legitimately early-closes those tails. Only a small fraction
+        // may be dropped.
+        assert!(
+            report.mean_delivered() > 0.88,
+            "delivered {}",
+            report.mean_delivered()
+        );
+    }
+
+    #[test]
+    fn modeled_tcp_completes_all_iterations() {
+        for cc in [CcAlgo::Cubic, CcAlgo::Bbr] {
+            let report = run_training(&quick_cfg(Proto::Tcp(cc)));
+            assert_eq!(report.iters.len(), 3, "{}", cc.name());
+        }
+    }
+
+    #[test]
+    fn ltp_delivers_partially_under_loss_but_tcp_fully() {
+        let mut cfg = quick_cfg(Proto::Ltp);
+        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.02 });
+        cfg.iters = 4;
+        let ltp = run_training(&cfg);
+        assert_eq!(ltp.iters.len(), 4);
+        assert!(
+            ltp.mean_delivered() < 1.0,
+            "2% loss should trigger early closes: {}",
+            ltp.mean_delivered()
+        );
+        assert!(ltp.mean_delivered() > 0.8);
+
+        let mut cfg = quick_cfg(Proto::Tcp(CcAlgo::Bbr));
+        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.02 });
+        cfg.iters = 2;
+        let tcp = run_training(&cfg);
+        assert_eq!(tcp.iters.len(), 2);
+        assert!((tcp.mean_delivered() - 1.0).abs() < 1e-9, "TCP always delivers 100%");
+    }
+
+    #[test]
+    fn ltp_beats_cubic_under_loss() {
+        let loss = LossModel::Bernoulli { p: 0.01 };
+        let mut l = quick_cfg(Proto::Ltp);
+        l.link = l.link.with_loss(loss);
+        l.iters = 4;
+        let mut c = quick_cfg(Proto::Tcp(CcAlgo::Cubic));
+        c.link = c.link.with_loss(loss);
+        c.iters = 4;
+        let ltp = run_training(&l);
+        let cubic = run_training(&c);
+        assert_eq!(ltp.iters.len(), 4);
+        assert_eq!(cubic.iters.len(), 4);
+        assert!(
+            ltp.mean_bst() < cubic.mean_bst(),
+            "LTP BST {} must beat cubic {}",
+            ltp.mean_bst(),
+            cubic.mean_bst()
+        );
+    }
+
+    #[test]
+    fn throughput_accounting() {
+        let report = run_training(&quick_cfg(Proto::Ltp));
+        let tp = report.throughput(4, 32);
+        assert!(tp > 0.0);
+    }
+}

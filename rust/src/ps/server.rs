@@ -1,0 +1,383 @@
+//! The Parameter Server node: accepts one gather flow per worker per
+//! iteration (loss-tolerant under Early Close for LTP), aggregates, and
+//! broadcasts the updated model reliably.
+//!
+//! BSP pipelining race: a fast worker can finish its broadcast and start
+//! the *next* gather while the PS is still broadcasting to stragglers.
+//! Those early packets are stashed and replayed when the iteration
+//! advances (a real PS would equally buffer them in its UDP socket).
+
+use super::transport::{GatherRx, GatherTx, Proto};
+use super::IterStats;
+use crate::proto::{EarlyCloseCfg, ThresholdTracker};
+use crate::simnet::{Ctx, EntityId, Node, Packet};
+use crate::util::Bitmap;
+use crate::wire::PacketKind;
+use crate::Nanos;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Aggregation backend. Called when all gathers of an iteration closed;
+/// returns the simulated aggregation duration.
+pub trait Aggregate {
+    /// `arrivals[w]` is `Some((bitmap, n_segs))` for LTP flows (which
+    /// segments arrived) and `None` for TCP (everything arrived).
+    fn aggregate(&mut self, iter: u64, arrivals: &[Option<(Bitmap, u64)>]) -> Nanos;
+    /// Mean worker training loss for this iteration, if known.
+    fn loss(&mut self, _iter: u64) -> Option<f32> {
+        None
+    }
+}
+
+/// No-op aggregation with a fixed modeled duration.
+pub struct NullAggregate(pub Nanos);
+
+impl Aggregate for NullAggregate {
+    fn aggregate(&mut self, _iter: u64, _arrivals: &[Option<(Bitmap, u64)>]) -> Nanos {
+        self.0
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Gathering,
+    Aggregating,
+    Broadcasting,
+    Done,
+}
+
+const TOK_AGG_DONE: u64 = 1 << 41;
+/// Cap on stashed ahead-of-iteration packets per worker.
+const MAX_STASH: usize = 8192;
+
+pub struct PsNode {
+    workers: Vec<EntityId>,
+    proto: Proto,
+    model_bytes: u64,
+    critical: Vec<u32>,
+    agg: Box<dyn Aggregate>,
+    pub tracker: ThresholdTracker,
+    iters: u64,
+    iter: u64,
+    phase: Phase,
+    /// Gather receiver per worker for the *current* iteration.
+    rx: Vec<Option<GatherRx>>,
+    /// Broadcast sender per worker.
+    tx: Vec<Option<GatherTx>>,
+    gather_done: Vec<bool>,
+    gather_started: Vec<Option<Nanos>>,
+    /// Early packets for the next iteration's gather flows.
+    stash: Vec<Vec<Packet>>,
+    gather_phase_done: Nanos,
+    bcast_started: Nanos,
+    batches_per_epoch: u64,
+    timer_gen: u64,
+    pub report: Rc<RefCell<Vec<IterStats>>>,
+    arrivals: Vec<Option<(Bitmap, u64)>>,
+    pub delivered_fractions: Vec<f64>,
+}
+
+impl PsNode {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        workers: Vec<EntityId>,
+        proto: Proto,
+        model_bytes: u64,
+        critical: Vec<u32>,
+        agg: Box<dyn Aggregate>,
+        tracker: ThresholdTracker,
+        iters: u64,
+        batches_per_epoch: u64,
+        report: Rc<RefCell<Vec<IterStats>>>,
+    ) -> PsNode {
+        let w = workers.len();
+        PsNode {
+            workers,
+            proto,
+            model_bytes,
+            critical,
+            agg,
+            tracker,
+            iters,
+            iter: 0,
+            phase: Phase::Gathering,
+            rx: (0..w).map(|_| None).collect(),
+            tx: (0..w).map(|_| None).collect(),
+            gather_done: vec![false; w],
+            gather_started: vec![None; w],
+            stash: vec![Vec::new(); w],
+            gather_phase_done: 0,
+            bcast_started: 0,
+            batches_per_epoch,
+            timer_gen: 0,
+            report,
+            arrivals: (0..w).map(|_| None).collect(),
+            delivered_fractions: vec![],
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn expected_gather_flow(&self, w: usize, iter: u64) -> u64 {
+        let f = iter * 2 * self.n() as u64 + w as u64;
+        match self.proto {
+            Proto::Ltp => f & 0xFFFF, // 16-bit on the LTP wire
+            Proto::Tcp(_) => f,
+        }
+    }
+
+    fn worker_of_flow(&self, flow: u64) -> (usize, bool) {
+        let per_iter = 2 * self.n() as u64;
+        let slot = flow % per_iter;
+        if slot < self.n() as u64 {
+            (slot as usize, true)
+        } else {
+            (slot as usize - self.n(), false)
+        }
+    }
+
+    fn ec_cfg(&self, w: usize) -> EarlyCloseCfg {
+        if !self.proto.is_loss_tolerant() {
+            return EarlyCloseCfg::reliable();
+        }
+        self.tracker.cfg(w)
+    }
+
+    /// Route one gather-direction packet: current-iteration flows go to the
+    /// (possibly new) receiver; next-iteration flows are stashed.
+    fn on_gather_packet(&mut self, ctx: &mut Ctx, w: usize, pkt: Packet) {
+        let now = ctx.now();
+        let me = ctx.me;
+        let cur = self.expected_gather_flow(w, self.iter);
+        let next = self.expected_gather_flow(w, self.iter + 1);
+        if pkt.flow == cur && self.phase == Phase::Gathering {
+            if self.rx[w].as_ref().map(|r| !r.flow_matches(pkt.flow)).unwrap_or(true) {
+                // First packet of this iteration's flow: init thresholds
+                // from the advertised estimates (paper §IV-A) and open the
+                // receiver under the current Early Close config.
+                if let PacketKind::Ltp(hdr) = &pkt.kind {
+                    if self.proto.is_loss_tolerant()
+                        && hdr.btlbw_mbps > 0
+                        && (self.iter % self.batches_per_epoch == 0
+                            || self.tracker.lt_threshold(w) == Nanos::MAX)
+                    {
+                        self.tracker.init_link(
+                            w,
+                            hdr.rtprop_us as Nanos * crate::US,
+                            self.model_bytes,
+                            hdr.btlbw_mbps as u64 * 1_000_000 / 8,
+                        );
+                    }
+                }
+                self.rx[w] = Some(GatherRx::new(
+                    self.proto,
+                    pkt.flow,
+                    self.model_bytes,
+                    self.ec_cfg(w),
+                    self.critical.clone(),
+                ));
+                self.gather_started[w] = Some(now);
+            }
+            let mut outgoing = Vec::new();
+            if let Some(rx) = &mut self.rx[w] {
+                rx.handle(now, &pkt, me, |p| outgoing.push(p));
+            }
+            for p in outgoing {
+                ctx.send(p);
+            }
+        } else if pkt.flow == next {
+            if self.stash[w].len() < MAX_STASH {
+                self.stash[w].push(pkt);
+            }
+        } else if pkt.flow == cur {
+            // Current flow while not gathering (late retransmissions after
+            // close): let the existing receiver re-issue its Stop.
+            let mut outgoing = Vec::new();
+            if let Some(rx) = &mut self.rx[w] {
+                if rx.flow_matches(pkt.flow) {
+                    rx.handle(now, &pkt, me, |p| outgoing.push(p));
+                }
+            }
+            for p in outgoing {
+                ctx.send(p);
+            }
+        }
+        // Anything else: a stale flow — drop.
+    }
+
+    fn check_progress(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        match self.phase {
+            Phase::Gathering => {
+                for w in 0..self.n() {
+                    if self.gather_done[w] {
+                        continue;
+                    }
+                    let done = self.rx[w].as_ref().map(|r| r.is_done()).unwrap_or(false);
+                    if done {
+                        self.gather_done[w] = true;
+                        let rx = self.rx[w].as_ref().unwrap();
+                        let started = self.gather_started[w].unwrap_or(now);
+                        self.tracker.record_flow(w, now - started, rx.reached_full());
+                        self.delivered_fractions.push(rx.delivered_fraction());
+                        self.arrivals[w] = rx.bitmap().map(|b| {
+                            (b.clone(), rx.segment_map().map(|m| m.n_segs as u64).unwrap_or(0))
+                        });
+                    }
+                }
+                if self.gather_done.iter().all(|&d| d) {
+                    self.gather_phase_done = now;
+                    self.phase = Phase::Aggregating;
+                    let dur = self.agg.aggregate(self.iter, &self.arrivals);
+                    ctx.set_timer(now + dur, TOK_AGG_DONE | self.iter);
+                }
+            }
+            Phase::Broadcasting => {
+                let all = (0..self.n())
+                    .all(|w| self.tx[w].as_ref().map(|t| t.is_complete()).unwrap_or(false));
+                if all {
+                    self.finish_iteration(ctx);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn begin_broadcast(&mut self, ctx: &mut Ctx) {
+        self.phase = Phase::Broadcasting;
+        self.bcast_started = ctx.now();
+        let per_iter = 2 * self.n() as u64;
+        for w in 0..self.n() {
+            let flow = self.iter * per_iter + self.n() as u64 + w as u64;
+            // Broadcast is reliable; the sender retransmits until the
+            // receiver confirms 100 % (no Early Close on this direction).
+            self.tx[w] = Some(GatherTx::new(self.proto, flow, self.model_bytes, vec![], 0, 0));
+        }
+        self.drain(ctx);
+    }
+
+    fn finish_iteration(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        let first_gather = self.gather_started.iter().flatten().min().copied().unwrap_or(now);
+        let n = self.n() as f64;
+        let recent: f64 = self.delivered_fractions.iter().rev().take(self.n()).sum::<f64>() / n;
+        let stats = IterStats {
+            bst: (self.gather_phase_done - first_gather) + (now - self.bcast_started),
+            gather_time: self.gather_phase_done - first_gather,
+            mean_delivered: recent,
+            loss: self.agg.loss(self.iter),
+            end: now,
+        };
+        self.report.borrow_mut().push(stats);
+        if self.proto.is_loss_tolerant() && (self.iter + 1) % self.batches_per_epoch == 0 {
+            self.tracker.end_epoch();
+        }
+        self.iter += 1;
+        for w in 0..self.n() {
+            self.rx[w] = None;
+            self.tx[w] = None;
+            self.gather_done[w] = false;
+            self.gather_started[w] = None;
+            self.arrivals[w] = None;
+        }
+        self.phase = if self.iter >= self.iters { Phase::Done } else { Phase::Gathering };
+        // Replay any gather packets that arrived ahead of the barrier.
+        if self.phase == Phase::Gathering {
+            let stashes: Vec<Vec<Packet>> =
+                self.stash.iter_mut().map(std::mem::take).collect();
+            for (w, pkts) in stashes.into_iter().enumerate() {
+                for pkt in pkts {
+                    self.on_gather_packet(ctx, w, pkt);
+                }
+            }
+        }
+    }
+
+    fn drain(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        for w in 0..self.n() {
+            if let Some(tx) = &mut self.tx[w] {
+                let me = ctx.me;
+                while let Some(pkt) = tx.poll(now, me, self.workers[w]) {
+                    ctx.send(pkt);
+                }
+            }
+        }
+        self.check_progress(ctx);
+        // Timers: receivers' early-close thresholds + senders' pacing/PTO.
+        self.timer_gen += 1;
+        let mut wake: Option<Nanos> = None;
+        for w in 0..self.n() {
+            let rxw = self.rx[w].as_ref().and_then(|r| r.next_wakeup(now));
+            let txw = self.tx[w].as_ref().and_then(|t| t.next_wakeup());
+            for cand in [rxw, txw].into_iter().flatten() {
+                wake = Some(wake.map_or(cand, |a: Nanos| a.min(cand)));
+            }
+        }
+        if let Some(at) = wake {
+            ctx.set_timer(at.max(now + 1), self.timer_gen);
+        }
+    }
+
+    pub fn iterations_done(&self) -> u64 {
+        self.iter
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+}
+
+impl Node for PsNode {
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {
+        let now = ctx.now();
+        let (w, is_gather) = self.worker_of_flow(pkt.flow);
+        if w >= self.n() {
+            return;
+        }
+        if is_gather {
+            self.on_gather_packet(ctx, w, pkt);
+        } else if let Some(tx) = &mut self.tx[w] {
+            // ACK/Stop for a broadcast flow.
+            if tx.flow_matches(pkt.flow) {
+                tx.handle(now, &pkt);
+            }
+        }
+        self.drain(ctx);
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, token: u64) {
+        if token & TOK_AGG_DONE != 0 {
+            if token & !TOK_AGG_DONE == self.iter && self.phase == Phase::Aggregating {
+                self.begin_broadcast(ctx);
+            }
+            return;
+        }
+        if token != self.timer_gen {
+            return;
+        }
+        let now = ctx.now();
+        let me = ctx.me;
+        let mut outgoing = Vec::new();
+        for w in 0..self.n() {
+            let peer = self.workers[w];
+            if let Some(rx) = &mut self.rx[w] {
+                rx.on_wakeup(now, me, |p| outgoing.push(p));
+                rx.drain(me, peer, |p| outgoing.push(p));
+            }
+            if let Some(tx) = &mut self.tx[w] {
+                tx.on_wakeup(now);
+            }
+        }
+        for p in outgoing {
+            ctx.send(p);
+        }
+        self.drain(ctx);
+    }
+}

@@ -1,0 +1,245 @@
+//! Protocol abstraction for the PS system: one gather/broadcast flow over
+//! either LTP or TCP-with-a-chosen-cc, with a uniform poll surface so
+//! [`super::PsNode`] and [`super::WorkerNode`] are protocol-agnostic.
+
+use crate::cc::CcAlgo;
+use crate::proto::{EarlyCloseCfg, LtpEvent, LtpReceiver, LtpSender, SegmentMap};
+use crate::simnet::Packet;
+use crate::tcp::{TcpReceiver, TcpSender};
+use crate::util::Bitmap;
+use crate::wire::{LtpType, PacketKind, HDR_BYTES, LTP_MSS, TCP_IP_OVERHEAD, TCP_MSS, UDP_IP_OVERHEAD};
+use crate::Nanos;
+
+/// Which transport a training run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Proto {
+    Ltp,
+    Tcp(CcAlgo),
+}
+
+impl Proto {
+    pub fn name(self) -> String {
+        match self {
+            Proto::Ltp => "ltp".to_string(),
+            Proto::Tcp(cc) => cc.name().to_string(),
+        }
+    }
+
+    pub fn is_loss_tolerant(self) -> bool {
+        matches!(self, Proto::Ltp)
+    }
+}
+
+/// Sending side of one flow (worker gather, or PS broadcast).
+pub enum GatherTx {
+    Ltp(LtpSender),
+    Tcp(TcpSender),
+}
+
+impl GatherTx {
+    /// Create a sender for `bytes` with the given critical segments (LTP)
+    /// or a plain byte stream (TCP). `seed_rtprop`/`seed_btlbw` prime LTP's
+    /// estimators from path knowledge (previous epochs share thresholds).
+    pub fn new(
+        proto: Proto,
+        flow: u64,
+        bytes: u64,
+        critical: Vec<u32>,
+        seed_rtprop: Nanos,
+        seed_btlbw_bytes: u64,
+    ) -> GatherTx {
+        match proto {
+            Proto::Ltp => {
+                let map = SegmentMap::new(bytes, crate::grad::Manifest::aligned_payload(LTP_MSS), critical);
+                let mut s = LtpSender::new(flow as u16, map, crate::wire::MTU);
+                if seed_btlbw_bytes > 0 {
+                    s.seed_cc(seed_rtprop, seed_btlbw_bytes);
+                }
+                GatherTx::Ltp(s)
+            }
+            Proto::Tcp(cc) => GatherTx::Tcp(TcpSender::new(flow, bytes, TCP_MSS, cc.build(TCP_MSS))),
+        }
+    }
+
+    pub fn handle(&mut self, now: Nanos, pkt: &Packet) {
+        match (self, &pkt.kind) {
+            (GatherTx::Ltp(s), PacketKind::Ltp(hdr)) => {
+                s.handle(now, LtpEvent { hdr: *hdr, payload_len: 0 })
+            }
+            (GatherTx::Tcp(s), PacketKind::Tcp(seg)) if seg.is_ack => s.on_ack(now, *seg),
+            _ => {}
+        }
+    }
+
+    /// Next packet to transmit toward `dst`, or None.
+    pub fn poll(&mut self, now: Nanos, me: usize, dst: usize) -> Option<Packet> {
+        match self {
+            GatherTx::Ltp(s) => s.poll_transmit(now).map(|out| {
+                let size = UDP_IP_OVERHEAD + HDR_BYTES as u32 + out.payload_len;
+                Packet::new(me, dst, size, s.flow() as u64, PacketKind::Ltp(out.hdr))
+            }),
+            GatherTx::Tcp(s) => s.poll_transmit(now).map(|seg| {
+                Packet::new(me, dst, seg.len + TCP_IP_OVERHEAD, s.flow, PacketKind::Tcp(seg))
+            }),
+        }
+    }
+
+    pub fn next_wakeup(&self) -> Option<Nanos> {
+        match self {
+            GatherTx::Ltp(s) => s.next_wakeup(),
+            GatherTx::Tcp(s) => s.next_wakeup(),
+        }
+    }
+
+    pub fn on_wakeup(&mut self, now: Nanos) {
+        match self {
+            GatherTx::Ltp(s) => s.on_wakeup(now),
+            GatherTx::Tcp(s) => s.on_wakeup(now),
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        match self {
+            GatherTx::Ltp(s) => s.is_complete(),
+            GatherTx::Tcp(s) => s.is_complete(),
+        }
+    }
+
+    /// LTP congestion estimates for seeding the next flow on this path.
+    pub fn path_estimates(&self) -> Option<(Nanos, u64)> {
+        match self {
+            GatherTx::Ltp(s) => Some((s.cc.rtprop_ns(), s.cc.btlbw_bytes_per_sec())),
+            GatherTx::Tcp(_) => None,
+        }
+    }
+}
+
+/// Receiving side of one flow.
+pub enum GatherRx {
+    Ltp { rx: LtpReceiver, total_bytes: u64 },
+    Tcp { rx: TcpReceiver, total_bytes: u64 },
+}
+
+impl GatherTx {
+    /// Does an incoming packet's flow tag belong to this sender? (LTP flow
+    /// ids are 16-bit on the wire.)
+    pub fn flow_matches(&self, f: u64) -> bool {
+        match self {
+            GatherTx::Ltp(s) => s.flow() as u64 == (f & 0xFFFF),
+            GatherTx::Tcp(s) => s.flow == f,
+        }
+    }
+}
+
+impl GatherRx {
+    pub fn new(proto: Proto, flow: u64, bytes: u64, ec: EarlyCloseCfg, critical: Vec<u32>) -> GatherRx {
+        match proto {
+            Proto::Ltp => {
+                GatherRx::Ltp { rx: LtpReceiver::new(flow as u16, ec, critical), total_bytes: bytes }
+            }
+            Proto::Tcp(_) => GatherRx::Tcp { rx: TcpReceiver::new(flow), total_bytes: bytes },
+        }
+    }
+
+    /// Does an incoming packet's flow tag belong to this receiver?
+    pub fn flow_matches(&self, f: u64) -> bool {
+        match self {
+            GatherRx::Ltp { rx, .. } => rx.flow() as u64 == (f & 0xFFFF),
+            GatherRx::Tcp { rx, .. } => rx.flow == f,
+        }
+    }
+
+    /// Handle an incoming data/control packet; pushes any responses
+    /// (ACKs/stops) through `out`.
+    pub fn handle(&mut self, now: Nanos, pkt: &Packet, me: usize, mut out: impl FnMut(Packet)) {
+        match (self, &pkt.kind) {
+            (GatherRx::Ltp { rx, .. }, PacketKind::Ltp(hdr)) => {
+                if hdr.ty == LtpType::Ack {
+                    return;
+                }
+                let payload_len = pkt.size.saturating_sub(UDP_IP_OVERHEAD + HDR_BYTES as u32);
+                rx.handle(now, LtpEvent { hdr: *hdr, payload_len });
+                while let Some(h) = rx.poll_transmit() {
+                    let size = UDP_IP_OVERHEAD + HDR_BYTES as u32;
+                    out(Packet::new(me, pkt.src, size, pkt.flow, PacketKind::Ltp(h)));
+                }
+            }
+            (GatherRx::Tcp { rx, .. }, PacketKind::Tcp(seg)) => {
+                if seg.is_ack {
+                    return;
+                }
+                let ack = rx.on_data(*seg, pkt.ecn_ce);
+                out(Packet::new(me, pkt.src, TCP_IP_OVERHEAD, pkt.flow, PacketKind::Tcp(ack)));
+            }
+            _ => {}
+        }
+    }
+
+    pub fn next_wakeup(&self, now: Nanos) -> Option<Nanos> {
+        match self {
+            GatherRx::Ltp { rx, .. } => rx.next_wakeup(now),
+            GatherRx::Tcp { .. } => None,
+        }
+    }
+
+    pub fn on_wakeup(&mut self, now: Nanos, me: usize, _out: impl FnMut(Packet)) {
+        if let GatherRx::Ltp { rx, .. } = self {
+            rx.on_wakeup(now);
+            let _ = me;
+        }
+    }
+
+    /// Drain pending control responses (after a wakeup-triggered close).
+    pub fn drain(&mut self, me: usize, peer: usize, mut out: impl FnMut(Packet)) {
+        if let GatherRx::Ltp { rx, .. } = self {
+            let flow = rx.flow() as u64;
+            while let Some(h) = rx.poll_transmit() {
+                let size = UDP_IP_OVERHEAD + HDR_BYTES as u32;
+                out(Packet::new(me, peer, size, flow, PacketKind::Ltp(h)));
+            }
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        match self {
+            GatherRx::Ltp { rx, .. } => rx.is_closed(),
+            GatherRx::Tcp { rx, total_bytes } => rx.bytes_received >= *total_bytes,
+        }
+    }
+
+    /// Fraction of the message delivered.
+    pub fn delivered_fraction(&self) -> f64 {
+        match self {
+            GatherRx::Ltp { rx, .. } => rx.pct_received(),
+            GatherRx::Tcp { rx, total_bytes } => {
+                (rx.bytes_received as f64 / *total_bytes as f64).min(1.0)
+            }
+        }
+    }
+
+    /// Did the receiver observe a complete (100 %) transmission? Used by
+    /// the LT-threshold epoch update rule.
+    pub fn reached_full(&self) -> bool {
+        self.delivered_fraction() >= 1.0 - 1e-12
+    }
+
+    /// Arrival bitmap (LTP) for bubble-filling; None for TCP (everything
+    /// arrived).
+    pub fn bitmap(&self) -> Option<&Bitmap> {
+        match self {
+            GatherRx::Ltp { rx, .. } => Some(rx.received_bitmap()),
+            GatherRx::Tcp { .. } => None,
+        }
+    }
+
+    pub fn segment_map(&self) -> Option<SegmentMap> {
+        match self {
+            GatherRx::Ltp { total_bytes, .. } => Some(SegmentMap::new(
+                *total_bytes,
+                crate::grad::Manifest::aligned_payload(LTP_MSS),
+                vec![],
+            )),
+            GatherRx::Tcp { .. } => None,
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Worker node: compute → gather (loss-tolerant) → wait for the reliable
+//! broadcast → next iteration (BSP).
+
+use super::transport::{GatherRx, GatherTx, Proto};
+use crate::proto::EarlyCloseCfg;
+use crate::simnet::{Ctx, EntityId, Node, Packet};
+use crate::Nanos;
+
+/// The local computation a worker performs each iteration. Returns the
+/// simulated duration; real implementations also deposit gradients into
+/// the [`Blackboard`].
+pub trait Compute {
+    fn compute(&mut self, worker: usize, iter: u64) -> Nanos;
+}
+
+/// Fixed-duration modeled compute (paper message-size experiments).
+pub struct ModeledCompute(pub Nanos);
+
+impl Compute for ModeledCompute {
+    fn compute(&mut self, _worker: usize, _iter: u64) -> Nanos {
+        self.0
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Computing,
+    Gathering,
+    WaitBroadcast,
+    Done,
+}
+
+const TOK_COMPUTE_DONE: u64 = 1 << 40;
+
+/// Per-worker statistics.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub gathers_completed: u64,
+    pub gather_times: Vec<Nanos>,
+    pub broadcast_times: Vec<Nanos>,
+}
+
+pub struct WorkerNode {
+    pub index: usize,
+    ps: EntityId,
+    n_workers: usize,
+    proto: Proto,
+    model_bytes: u64,
+    critical: Vec<u32>,
+    compute: Box<dyn Compute>,
+    iters: u64,
+    iter: u64,
+    phase: Phase,
+    tx: Option<GatherTx>,
+    rx: Option<GatherRx>,
+    /// Previous iteration's broadcast receiver, kept to answer straggler
+    /// retransmissions (its final ACKs/Stops may have been lost; a silent
+    /// worker would strand the PS's reliable broadcast sender).
+    rx_prev: Option<GatherRx>,
+    gather_started: Nanos,
+    bcast_started: Nanos,
+    /// LTP path estimates carried across flows (epoch threshold sharing).
+    path: Option<(Nanos, u64)>,
+    timer_gen: u64,
+    pub stats: WorkerStats,
+}
+
+impl WorkerNode {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        index: usize,
+        ps: EntityId,
+        n_workers: usize,
+        proto: Proto,
+        model_bytes: u64,
+        critical: Vec<u32>,
+        compute: Box<dyn Compute>,
+        iters: u64,
+    ) -> WorkerNode {
+        WorkerNode {
+            index,
+            ps,
+            n_workers,
+            proto,
+            model_bytes,
+            critical,
+            compute,
+            iters,
+            iter: 0,
+            phase: Phase::Computing,
+            tx: None,
+            rx: None,
+            rx_prev: None,
+            gather_started: 0,
+            bcast_started: 0,
+            path: None,
+            timer_gen: 0,
+            stats: WorkerStats::default(),
+        }
+    }
+
+    fn gather_flow(&self, iter: u64) -> u64 {
+        iter * (2 * self.n_workers as u64) + self.index as u64
+    }
+
+    fn bcast_flow(&self, iter: u64) -> u64 {
+        iter * (2 * self.n_workers as u64) + self.n_workers as u64 + self.index as u64
+    }
+
+    fn begin_compute(&mut self, ctx: &mut Ctx) {
+        self.phase = Phase::Computing;
+        let dur = self.compute.compute(self.index, self.iter);
+        // Keyed by iteration — `timer_gen` churns with protocol timers.
+        ctx.set_timer(ctx.now() + dur, TOK_COMPUTE_DONE | self.iter);
+    }
+
+    fn begin_gather(&mut self, ctx: &mut Ctx) {
+        self.phase = Phase::Gathering;
+        self.gather_started = ctx.now();
+        let (rt, bw) = self.path.unwrap_or((0, 0));
+        let tx = GatherTx::new(
+            self.proto,
+            self.gather_flow(self.iter),
+            self.model_bytes,
+            self.critical.clone(),
+            rt,
+            bw,
+        );
+        self.tx = Some(tx);
+        // Broadcast receiver for this iteration: always reliable.
+        self.rx = Some(GatherRx::new(
+            self.proto,
+            self.bcast_flow(self.iter),
+            self.model_bytes,
+            EarlyCloseCfg::reliable(),
+            vec![],
+        ));
+        self.drain(ctx);
+    }
+
+    fn drain(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        let me = ctx.me;
+        if let Some(tx) = &mut self.tx {
+            while let Some(pkt) = tx.poll(now, me, self.ps) {
+                ctx.send(pkt);
+            }
+            if tx.is_complete() && self.phase == Phase::Gathering {
+                self.phase = Phase::WaitBroadcast;
+                self.bcast_started = now;
+                self.stats.gathers_completed += 1;
+                self.stats.gather_times.push(now - self.gather_started);
+                self.path = tx.path_estimates().or(self.path);
+            }
+        }
+        // Broadcast completion check.
+        let rx_done = self.rx.as_ref().map(|r| r.is_done()).unwrap_or(false);
+        if rx_done && self.phase == Phase::WaitBroadcast {
+            self.stats.broadcast_times.push(now - self.bcast_started);
+            self.tx = None;
+            self.rx_prev = self.rx.take();
+            self.iter += 1;
+            if self.iter >= self.iters {
+                self.phase = Phase::Done;
+            } else {
+                self.begin_compute(ctx);
+                return;
+            }
+        }
+        // Re-arm protocol timers.
+        self.timer_gen += 1;
+        let tx_wake = self.tx.as_ref().and_then(|t| t.next_wakeup());
+        let rx_wake = self.rx.as_ref().and_then(|r| r.next_wakeup(now));
+        let wake = match (tx_wake, rx_wake) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        if let Some(w) = wake {
+            ctx.set_timer(w.max(now + 1), self.timer_gen);
+        }
+    }
+
+    pub fn iterations_done(&self) -> u64 {
+        self.iter
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+}
+
+impl Node for WorkerNode {
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn start(&mut self, ctx: &mut Ctx) {
+        self.begin_compute(ctx);
+    }
+
+    fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {
+        let now = ctx.now();
+        let me = ctx.me;
+        let per_iter = 2 * self.n_workers as u64;
+        let slot = pkt.flow % per_iter;
+        if slot < self.n_workers as u64 {
+            // ACK/Stop for our gather flow.
+            if let Some(tx) = &mut self.tx {
+                tx.handle(now, &pkt);
+            }
+        } else {
+            // Broadcast data from the PS — current flow, or a straggler
+            // retransmission of the previous iteration's flow.
+            let mut outgoing = Vec::new();
+            let cur = self.rx.as_ref().map(|r| r.flow_matches(pkt.flow)).unwrap_or(false);
+            if cur {
+                if let Some(rx) = &mut self.rx {
+                    rx.handle(now, &pkt, me, |p| outgoing.push(p));
+                }
+            } else if let Some(rx) = &mut self.rx_prev {
+                if rx.flow_matches(pkt.flow) {
+                    rx.handle(now, &pkt, me, |p| outgoing.push(p));
+                }
+            }
+            for p in outgoing {
+                ctx.send(p);
+            }
+        }
+        self.drain(ctx);
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, token: u64) {
+        if token & TOK_COMPUTE_DONE != 0 {
+            if token & !TOK_COMPUTE_DONE == self.iter && self.phase == Phase::Computing {
+                self.begin_gather(ctx);
+            }
+            return;
+        }
+        if token != self.timer_gen {
+            return;
+        }
+        let now = ctx.now();
+        if let Some(tx) = &mut self.tx {
+            tx.on_wakeup(now);
+        }
+        let me = ctx.me;
+        let mut outgoing = Vec::new();
+        if let Some(rx) = &mut self.rx {
+            rx.on_wakeup(now, me, |p| outgoing.push(p));
+        }
+        for p in outgoing {
+            ctx.send(p);
+        }
+        self.drain(ctx);
+    }
+}

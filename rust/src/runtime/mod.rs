@@ -1,0 +1,107 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them from the training hot path. Python never runs here.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes `HloModuleProto`s with
+//! 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids and round-trips cleanly (see
+//! `/opt/xla-example/README.md`).
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// A compiled executable plus bookkeeping.
+pub struct Artifact {
+    pub name: String,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    /// (All our artifacts are lowered with `return_tuple=True`.)
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let out = self.exe.execute::<Literal>(inputs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// A PJRT CPU client with an artifact cache.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// CPU client rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = PjRtClient::cpu()?;
+        Ok(Runtime { client, dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `<dir>/<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("loading HLO text {path:?} (run `make artifacts`)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        Ok(Artifact { name: name.to_string(), exe })
+    }
+
+    /// Does the artifact exist on disk? (Tests skip gracefully when the
+    /// Python AOT step has not run.)
+    pub fn available(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(numel as usize == data.len(), "shape/data mismatch");
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(numel as usize == data.len(), "shape/data mismatch");
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+/// Flatten a literal back to f32.
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Default artifacts directory: `$LTP_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("LTP_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(literal_f32(&[1.0; 3], &[2, 2]).is_err());
+    }
+
+    // Full load-and-execute coverage lives in rust/tests/runtime_e2e.rs and
+    // is skipped when `make artifacts` has not run.
+}

@@ -1,0 +1,234 @@
+//! Unidirectional link: serializer + drop-tail queue + propagation delay +
+//! non-congestion loss model + optional ECN marking.
+
+use super::{EntityId, Packet};
+use crate::util::Pcg64;
+use crate::Nanos;
+use std::collections::VecDeque;
+
+/// Non-congestion loss model applied to packets leaving the serializer.
+/// This models corruption-style loss (optics, wireless, microbursts on
+/// upstream devices) — orthogonal to drop-tail queue overflow, which the
+/// link also models.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LossModel {
+    None,
+    /// Independent per-packet drop with probability `p`.
+    Bernoulli { p: f64 },
+    /// Two-state Gilbert–Elliott bursty loss.
+    GilbertElliott {
+        /// P(good → bad) per packet.
+        p_gb: f64,
+        /// P(bad → good) per packet.
+        p_bg: f64,
+        /// Loss probability in the good state.
+        loss_good: f64,
+        /// Loss probability in the bad state.
+        loss_bad: f64,
+    },
+}
+
+impl LossModel {
+    /// Average loss rate implied by the model (steady state for GE).
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            LossModel::None => 0.0,
+            LossModel::Bernoulli { p } => p,
+            LossModel::GilbertElliott { p_gb, p_bg, loss_good, loss_bad } => {
+                if p_gb + p_bg == 0.0 {
+                    loss_good
+                } else {
+                    let frac_bad = p_gb / (p_gb + p_bg);
+                    loss_good * (1.0 - frac_bad) + loss_bad * frac_bad
+                }
+            }
+        }
+    }
+}
+
+/// Static link configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkCfg {
+    /// Serialization rate in bits per second.
+    pub rate_bps: u64,
+    /// One-way propagation delay.
+    pub delay: Nanos,
+    /// Drop-tail queue capacity in bytes (excludes the packet in
+    /// serialization).
+    pub queue_cap_bytes: u64,
+    /// ECN marking threshold in queued bytes (DCTCP-style step marking),
+    /// if enabled.
+    pub ecn_thresh_bytes: Option<u64>,
+    /// Non-congestion loss model.
+    pub loss: LossModel,
+}
+
+impl LinkCfg {
+    /// A typical data-center edge link: `rate_gbps` Gbps, `delay_us` µs,
+    /// 256 KiB of buffer, no ECN, no random loss.
+    pub fn dcn(rate_gbps: u64, delay_us: u64) -> LinkCfg {
+        LinkCfg {
+            rate_bps: rate_gbps * 1_000_000_000,
+            delay: delay_us * crate::US,
+            queue_cap_bytes: 256 * 1024,
+            ecn_thresh_bytes: None,
+            loss: LossModel::None,
+        }
+    }
+
+    /// A WAN-ish link: `rate_mbps` Mbps, `delay_ms` ms, deeper buffer.
+    pub fn wan(rate_mbps: u64, delay_ms: u64) -> LinkCfg {
+        LinkCfg {
+            rate_bps: rate_mbps * 1_000_000,
+            delay: delay_ms * crate::MS,
+            queue_cap_bytes: 2 * 1024 * 1024,
+            ecn_thresh_bytes: None,
+            loss: LossModel::None,
+        }
+    }
+
+    pub fn with_loss(mut self, loss: LossModel) -> LinkCfg {
+        self.loss = loss;
+        self
+    }
+
+    pub fn with_queue(mut self, cap_bytes: u64) -> LinkCfg {
+        self.queue_cap_bytes = cap_bytes;
+        self
+    }
+
+    pub fn with_ecn(mut self, thresh_bytes: u64) -> LinkCfg {
+        self.ecn_thresh_bytes = Some(thresh_bytes);
+        self
+    }
+
+    /// Time to serialize `bytes` onto this link.
+    #[inline]
+    pub fn ser_time(&self, bytes: u32) -> Nanos {
+        // bytes*8 bits / rate_bps seconds → ns. Use u128 to avoid overflow.
+        ((bytes as u128 * 8 * 1_000_000_000) / self.rate_bps as u128) as Nanos
+    }
+
+    /// Bandwidth-delay product of this link in bytes (one-way delay).
+    pub fn bdp_bytes(&self) -> u64 {
+        (self.rate_bps as u128 * self.delay as u128 / 8 / 1_000_000_000) as u64
+    }
+}
+
+/// Per-link counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LinkStats {
+    pub tx_pkts: u64,
+    pub tx_bytes: u64,
+    pub drops_queue: u64,
+    pub drops_random: u64,
+    pub ecn_marks: u64,
+    /// Total busy (serializing) time, for utilization measurements.
+    pub busy: Nanos,
+}
+
+/// Runtime state of a unidirectional link.
+#[derive(Debug)]
+pub struct Link {
+    pub cfg: LinkCfg,
+    pub src: EntityId,
+    pub dst: EntityId,
+    pub(crate) queue: VecDeque<Packet>,
+    pub(crate) queued_bytes: u64,
+    /// Whether the serializer currently holds a packet.
+    pub(crate) busy: bool,
+    pub stats: LinkStats,
+    /// Gilbert–Elliott state: true = bad.
+    pub(crate) ge_bad: bool,
+    pub(crate) rng: Pcg64,
+}
+
+impl Link {
+    pub fn new(cfg: LinkCfg, src: EntityId, dst: EntityId, rng: Pcg64) -> Link {
+        Link {
+            cfg,
+            src,
+            dst,
+            queue: VecDeque::new(),
+            queued_bytes: 0,
+            busy: false,
+            stats: LinkStats::default(),
+            ge_bad: false,
+            rng,
+        }
+    }
+
+    /// Current queue occupancy in bytes.
+    pub fn queue_bytes(&self) -> u64 {
+        self.queued_bytes
+    }
+
+    /// Decide whether the departing packet is lost to the wire.
+    pub(crate) fn wire_loss(&mut self) -> bool {
+        match self.cfg.loss {
+            LossModel::None => false,
+            LossModel::Bernoulli { p } => self.rng.chance(p),
+            LossModel::GilbertElliott { p_gb, p_bg, loss_good, loss_bad } => {
+                // Transition, then sample loss in the new state.
+                if self.ge_bad {
+                    if self.rng.chance(p_bg) {
+                        self.ge_bad = false;
+                    }
+                } else if self.rng.chance(p_gb) {
+                    self.ge_bad = true;
+                }
+                let p = if self.ge_bad { loss_bad } else { loss_good };
+                self.rng.chance(p)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ser_time_math() {
+        let cfg = LinkCfg::dcn(10, 1); // 10 Gbps
+        // 1500 B = 12000 bits @ 10 Gbps = 1.2 µs.
+        assert_eq!(cfg.ser_time(1500), 1200);
+        let g1 = LinkCfg::dcn(1, 1);
+        assert_eq!(g1.ser_time(1500), 12_000);
+    }
+
+    #[test]
+    fn bdp_math() {
+        // 1 Gbps * 40 ms = 5 MB.
+        let cfg = LinkCfg { delay: 40 * crate::MS, ..LinkCfg::dcn(1, 0) };
+        assert_eq!(cfg.bdp_bytes(), 5_000_000);
+    }
+
+    #[test]
+    fn bernoulli_loss_rate() {
+        let cfg = LinkCfg::dcn(10, 1).with_loss(LossModel::Bernoulli { p: 0.05 });
+        let mut link = Link::new(cfg, 0, 1, Pcg64::seeded(1));
+        let n = 100_000;
+        let losses = (0..n).filter(|_| link.wire_loss()).count();
+        let rate = losses as f64 / n as f64;
+        assert!((rate - 0.05).abs() < 0.005, "rate {rate}");
+    }
+
+    #[test]
+    fn gilbert_elliott_mean_rate() {
+        let loss = LossModel::GilbertElliott {
+            p_gb: 0.01,
+            p_bg: 0.1,
+            loss_good: 0.0,
+            loss_bad: 0.5,
+        };
+        // steady-state bad fraction = 0.01/0.11 ≈ 0.0909 → mean ≈ 0.0455
+        assert!((loss.mean_rate() - 0.0455).abs() < 0.001);
+        let cfg = LinkCfg::dcn(10, 1).with_loss(loss);
+        let mut link = Link::new(cfg, 0, 1, Pcg64::seeded(2));
+        let n = 200_000;
+        let losses = (0..n).filter(|_| link.wire_loss()).count();
+        let rate = losses as f64 / n as f64;
+        assert!((rate - loss.mean_rate()).abs() < 0.01, "rate {rate}");
+    }
+}

@@ -1,0 +1,41 @@
+//! Deterministic packet-level discrete-event network simulator.
+//!
+//! This is the testbed substrate standing in for the paper's 9-machine
+//! cluster (8 workers + 1 PS behind one ToR switch): unidirectional links
+//! with a serialization rate, propagation delay, a drop-tail queue with
+//! optional ECN marking, and a non-congestion loss model; switches that
+//! forward between links; and protocol endpoints attached as [`Node`]s.
+//!
+//! Everything is driven from a single binary-heap event queue keyed by
+//! `(time, seq)`, so runs are bit-reproducible for a given seed — the
+//! property the paper-figure benches rely on.
+
+mod link;
+mod sim;
+mod topo;
+
+pub use link::{Link, LinkCfg, LinkStats, LossModel};
+pub use sim::{Ctx, EntityId, Event, LinkId, Node, Sim};
+pub use topo::{star, StarTopology};
+
+use crate::wire::PacketKind;
+
+/// A packet on the wire. `size` is the total wire size in bytes (headers
+/// included); `kind` carries the protocol payload.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub src: EntityId,
+    pub dst: EntityId,
+    pub size: u32,
+    /// Flow tag for per-flow accounting (protocol-defined meaning).
+    pub flow: u64,
+    /// ECN Congestion-Experienced mark (set by queues past the threshold).
+    pub ecn_ce: bool,
+    pub kind: PacketKind,
+}
+
+impl Packet {
+    pub fn new(src: EntityId, dst: EntityId, size: u32, flow: u64, kind: PacketKind) -> Packet {
+        Packet { src, dst, size, flow, ecn_ce: false, kind }
+    }
+}

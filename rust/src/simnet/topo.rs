@@ -1,0 +1,88 @@
+//! Topology builders. The paper's testbed is a single-rack star: 8 workers
+//! and 1 PS behind one ToR switch.
+
+use super::{EntityId, LinkCfg, LinkId, Node, Sim};
+use crate::Nanos;
+
+/// A star topology built around one switch. `hosts[0]` is conventionally
+/// the PS in the training experiments.
+pub struct StarTopology {
+    pub switch: EntityId,
+    pub hosts: Vec<EntityId>,
+    /// `uplinks[i]`: host i → switch.
+    pub uplinks: Vec<LinkId>,
+    /// `downlinks[i]`: switch → host i.
+    pub downlinks: Vec<LinkId>,
+}
+
+/// Build a star of `nodes.len()` hosts around a switch, all edge links
+/// sharing `cfg`. The switch adds `fwd_delay` forwarding latency.
+pub fn star(sim: &mut Sim, nodes: Vec<Box<dyn Node>>, cfg: LinkCfg, fwd_delay: Nanos) -> StarTopology {
+    let switch = sim.add_switch(fwd_delay);
+    let mut hosts = Vec::new();
+    let mut uplinks = Vec::new();
+    let mut downlinks = Vec::new();
+    for node in nodes {
+        let h = sim.add_host(node);
+        let (up, down) = sim.add_duplex(h, switch, cfg);
+        sim.set_default_uplink(h, up);
+        hosts.push(h);
+        uplinks.push(up);
+        downlinks.push(down);
+    }
+    StarTopology { switch, hosts, uplinks, downlinks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::{Ctx, Packet};
+    use crate::wire::PacketKind;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    struct Echo {
+        seen: Rc<RefCell<usize>>,
+    }
+    impl Node for Echo {
+    fn as_any(&mut self) -> &mut dyn std::any::Any { self }
+        fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {
+            *self.seen.borrow_mut() += 1;
+            if let PacketKind::Raw(0) = pkt.kind {
+                // bounce back once
+                ctx.send(Packet::new(ctx.me, pkt.src, 100, 0, PacketKind::Raw(1)));
+            }
+        }
+    }
+    struct Pinger {
+        target: EntityId,
+        seen: Rc<RefCell<usize>>,
+    }
+    impl Node for Pinger {
+    fn as_any(&mut self) -> &mut dyn std::any::Any { self }
+        fn start(&mut self, ctx: &mut Ctx) {
+            ctx.send(Packet::new(ctx.me, self.target, 100, 0, PacketKind::Raw(0)));
+        }
+        fn on_packet(&mut self, _ctx: &mut Ctx, _pkt: Packet) {
+            *self.seen.borrow_mut() += 1;
+        }
+    }
+
+    #[test]
+    fn star_all_pairs_reachable() {
+        let pong = Rc::new(RefCell::new(0));
+        let echo_seen = Rc::new(RefCell::new(0));
+        let mut sim = Sim::new(1);
+        // hosts: 0 = echo target, 1..=4 pingers — ids assigned after switch.
+        let mut nodes: Vec<Box<dyn Node>> = vec![Box::new(Echo { seen: echo_seen.clone() })];
+        for _ in 0..4 {
+            nodes.push(Box::new(Pinger { target: 1, seen: pong.clone() }));
+        }
+        // NOTE: `star` adds the switch first, so hosts[0] has entity id 1.
+        let topo = star(&mut sim, nodes, LinkCfg::dcn(10, 2), 0);
+        assert_eq!(topo.hosts[0], 1);
+        sim.run();
+        assert_eq!(*echo_seen.borrow(), 4);
+        assert_eq!(*pong.borrow(), 4);
+    }
+}

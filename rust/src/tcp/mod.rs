@@ -1,0 +1,724 @@
+//! Sans-IO reliable, in-order byte-stream transport parameterized by a
+//! [`CongestionControl`] — the baseline the paper compares LTP against
+//! (kernel TCP with Cubic / New Reno / DCTCP, plus BBR).
+//!
+//! This models the dynamics that matter for the paper's experiments:
+//! cumulative ACKs with a SACK scoreboard (RFC 6675-style pipe accounting
+//! — kernel defaults have SACK on), 3-dup-ACK fast retransmit, RFC 6298
+//! RTO with a Linux-like 200 ms floor and exponential backoff (go-back-N
+//! after timeout), per-ACK delivery-rate samples for BBR, and ECN echo for
+//! DCTCP. It is not a wire-compatible TCP.
+
+mod node;
+pub use node::{FctLog, TcpReceiverNode, TcpSenderNode};
+
+use crate::cc::{AckSample, CongestionControl};
+use crate::wire::{TcpSeg, SACK_BLOCKS};
+use crate::{Nanos, MS, SEC};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Linux default minimum RTO.
+pub const DEFAULT_MIN_RTO: Nanos = 200 * MS;
+const MAX_RTO: Nanos = 60 * SEC;
+/// RFC 6675 duplicate threshold, in segments.
+const DUP_THRESH: u64 = 3;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TcpStats {
+    pub pkts_sent: u64,
+    pub bytes_sent: u64,
+    pub retransmissions: u64,
+    pub fast_retransmits: u64,
+    pub rtos: u64,
+    pub tlps: u64,
+    pub completed_at: Option<Nanos>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SentSeg {
+    len: u32,
+    sent_at: Nanos,
+    delivered_at_send: u64,
+    retransmitted: bool,
+    sacked: bool,
+    /// Marked lost by the scoreboard; not counted in pipe, queued for retx.
+    lost: bool,
+}
+
+/// Bulk-transfer TCP sender for one flow of `total` bytes.
+pub struct TcpSender {
+    pub flow: u64,
+    total: u64,
+    mss: u32,
+    pub cc: Box<dyn CongestionControl>,
+    snd_una: u64,
+    snd_nxt: u64,
+    outstanding: BTreeMap<u64, SentSeg>,
+    /// Unsacked, un-lost bytes in flight (RFC 6675 "pipe").
+    pipe_bytes: u64,
+    /// Highest byte covered by any SACK block seen.
+    highest_sacked: u64,
+    /// Segments marked lost, awaiting retransmission.
+    retx_queue: VecDeque<u64>,
+    dup_acks: u32,
+    in_recovery: bool,
+    recover: u64,
+    srtt: Nanos,
+    rttvar: Nanos,
+    rto: Nanos,
+    pub min_rto: Nanos,
+    rto_deadline: Option<Nanos>,
+    /// Tail-loss-probe deadline (kernel TLP: fires at ~2·srtt before the
+    /// RTO, retransmitting the last segment to draw SACK feedback).
+    tlp_deadline: Option<Nanos>,
+    tlp_armed: bool,
+    backoff: u32,
+    delivered: u64,
+    pace_tokens: f64,
+    pace_refill_at: Nanos,
+    started_at: Option<Nanos>,
+    pub stats: TcpStats,
+}
+
+impl TcpSender {
+    pub fn new(flow: u64, total: u64, mss: u32, cc: Box<dyn CongestionControl>) -> TcpSender {
+        TcpSender {
+            flow,
+            total,
+            mss,
+            cc,
+            snd_una: 0,
+            snd_nxt: 0,
+            outstanding: BTreeMap::new(),
+            pipe_bytes: 0,
+            highest_sacked: 0,
+            retx_queue: VecDeque::new(),
+            dup_acks: 0,
+            in_recovery: false,
+            recover: 0,
+            srtt: 0,
+            rttvar: 0,
+            rto: SEC, // RFC 6298 initial RTO
+            min_rto: DEFAULT_MIN_RTO,
+            rto_deadline: None,
+            tlp_deadline: None,
+            tlp_armed: true,
+            backoff: 0,
+            delivered: 0,
+            pace_tokens: 10.0,
+            pace_refill_at: 0,
+            started_at: None,
+            stats: TcpStats::default(),
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.stats.completed_at.is_some()
+    }
+
+    pub fn bytes_acked(&self) -> u64 {
+        self.snd_una
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total
+    }
+
+    /// RFC 6675 pipe: bytes believed in flight.
+    pub fn pipe(&self) -> u64 {
+        self.pipe_bytes
+    }
+
+    fn update_rtt(&mut self, rtt: Nanos) {
+        if self.srtt == 0 {
+            self.srtt = rtt;
+            self.rttvar = rtt / 2;
+        } else {
+            let diff = self.srtt.abs_diff(rtt);
+            self.rttvar = (3 * self.rttvar + diff) / 4;
+            self.srtt = (7 * self.srtt + rtt) / 8;
+        }
+        self.rto = (self.srtt + (4 * self.rttvar).max(MS)).clamp(self.min_rto, MAX_RTO);
+    }
+
+    fn arm_rto(&mut self, now: Nanos) {
+        if self.snd_nxt > self.snd_una {
+            self.rto_deadline = Some(now + (self.rto << self.backoff.min(6)));
+            self.tlp_deadline = if self.tlp_armed && self.srtt > 0 {
+                Some(now + 2 * self.srtt)
+            } else {
+                None
+            };
+        } else {
+            self.rto_deadline = None;
+            self.tlp_deadline = None;
+        }
+    }
+
+    /// Apply SACK blocks to the scoreboard; returns bytes newly sacked.
+    fn apply_sacks(&mut self, sack: &[(u64, u64); SACK_BLOCKS]) -> u64 {
+        let mut newly = 0;
+        for &(start, end) in sack {
+            if end <= start {
+                continue;
+            }
+            self.highest_sacked = self.highest_sacked.max(end);
+            let keys: Vec<u64> =
+                self.outstanding.range(start..end).map(|(&s, _)| s).collect();
+            for s in keys {
+                let seg = self.outstanding.get_mut(&s).unwrap();
+                if !seg.sacked && s + seg.len as u64 <= end {
+                    seg.sacked = true;
+                    if !seg.lost {
+                        self.pipe_bytes = self.pipe_bytes.saturating_sub(seg.len as u64);
+                    }
+                    newly += seg.len as u64;
+                }
+            }
+        }
+        newly
+    }
+
+    /// RFC 6675 loss marking: an unsacked segment with ≥ DUP_THRESH·mss of
+    /// SACKed bytes above it is lost. Marks and queues retransmissions.
+    /// RACK-style guard: a retransmitted copy gets one RTT in flight before
+    /// it can be re-marked lost (otherwise every ACK re-marks it and the
+    /// sender storms).
+    fn mark_losses(&mut self, now: Nanos) {
+        if self.highest_sacked < DUP_THRESH * self.mss as u64 {
+            return;
+        }
+        let limit = self.highest_sacked - DUP_THRESH * self.mss as u64;
+        let grace = self.srtt.max(MS) * 5 / 4;
+        let candidates: Vec<u64> = self
+            .outstanding
+            .range(..limit)
+            .filter(|(_, seg)| {
+                !seg.sacked
+                    && !seg.lost
+                    && (!seg.retransmitted || now > seg.sent_at + grace)
+            })
+            .map(|(&s, _)| s)
+            .collect();
+        for s in candidates {
+            let seg = self.outstanding.get_mut(&s).unwrap();
+            seg.lost = true;
+            self.pipe_bytes = self.pipe_bytes.saturating_sub(seg.len as u64);
+            self.retx_queue.push_back(s);
+        }
+    }
+
+    /// Process a (cumulative + SACK) ACK from the receiver.
+    pub fn on_ack(&mut self, now: Nanos, seg: TcpSeg) {
+        if self.is_complete() {
+            return;
+        }
+        let newly_sacked = self.apply_sacks(&seg.sack);
+        // SACKed bytes count as delivered the moment they are SACKed
+        // (Linux does the same); otherwise a hole-filling cumulative ACK
+        // credits megabytes to one RTT and poisons BBR's rate samples.
+        self.delivered += newly_sacked;
+        if seg.ack > self.snd_una {
+            let newly = seg.ack - self.snd_una;
+            self.snd_una = seg.ack;
+            // A late ACK (sent pre-timeout) can land after go-back-N reset
+            // snd_nxt; never let snd_nxt trail snd_una.
+            self.snd_nxt = self.snd_nxt.max(self.snd_una);
+            self.backoff = 0;
+            let mut rtt_sample: Option<Nanos> = None;
+            let mut rate_sample: Option<u64> = None;
+            let acked: Vec<u64> = self.outstanding.range(..seg.ack).map(|(&s, _)| s).collect();
+            for s in acked {
+                let info = self.outstanding.remove(&s).unwrap();
+                if !info.sacked && !info.lost {
+                    self.pipe_bytes = self.pipe_bytes.saturating_sub(info.len as u64);
+                }
+                if !info.sacked {
+                    // Not previously credited via a SACK block.
+                    self.delivered += info.len as u64;
+                }
+                if !info.retransmitted {
+                    let rtt = now.saturating_sub(info.sent_at).max(1);
+                    rtt_sample = Some(rtt);
+                    let dbytes = self.delivered - info.delivered_at_send;
+                    rate_sample = Some((dbytes as u128 * 8 * SEC as u128 / rtt as u128) as u64);
+                }
+            }
+            if let Some(rtt) = rtt_sample {
+                self.update_rtt(rtt);
+            }
+            if self.in_recovery && seg.ack >= self.recover {
+                self.in_recovery = false;
+                self.dup_acks = 0;
+            }
+            if !self.in_recovery {
+                self.dup_acks = 0;
+            }
+            self.cc.on_ack(AckSample {
+                now,
+                acked_bytes: newly,
+                rtt: rtt_sample.unwrap_or(self.srtt.max(MS)),
+                delivery_rate_bps: rate_sample,
+                ece: seg.ece,
+                inflight_bytes: self.pipe_bytes,
+            });
+            self.tlp_armed = true;
+            self.arm_rto(now);
+            if self.snd_una >= self.total {
+                self.stats.completed_at = Some(now);
+                self.rto_deadline = None;
+            }
+        } else if seg.ack == self.snd_una && self.snd_nxt > self.snd_una {
+            if newly_sacked > 0 {
+                self.dup_acks += 1;
+            }
+            if self.dup_acks >= 3 && !self.in_recovery {
+                self.in_recovery = true;
+                self.recover = self.snd_nxt;
+                self.cc.on_loss(now);
+                self.stats.fast_retransmits += 1;
+                // The segment at snd_una is lost by definition of 3 dupacks.
+                if let Some(info) = self.outstanding.get_mut(&self.snd_una) {
+                    if !info.lost {
+                        info.lost = true;
+                        if !info.sacked {
+                            self.pipe_bytes =
+                                self.pipe_bytes.saturating_sub(info.len as u64);
+                        }
+                        self.retx_queue.push_front(self.snd_una);
+                    }
+                }
+            }
+        }
+        self.mark_losses(now);
+    }
+
+    /// RTO / pacing deadline the driver must honor.
+    pub fn next_wakeup(&self) -> Option<Nanos> {
+        if self.is_complete() {
+            return None;
+        }
+        let pace = if self.pace_tokens < 1.0 && self.has_data_to_send() {
+            self.next_token_at()
+        } else {
+            None
+        };
+        let timer = match (self.tlp_deadline, self.rto_deadline) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        match (pace, timer) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    pub fn on_wakeup(&mut self, now: Nanos) {
+        if let Some(tlp) = self.tlp_deadline {
+            if now >= tlp {
+                // Tail loss probe: re-send the last outstanding segment to
+                // elicit SACKs; one probe per flight, then the RTO rules.
+                self.tlp_deadline = None;
+                self.tlp_armed = false;
+                self.stats.tlps += 1;
+                // Probe the highest unsacked, un-lost segment.
+                let probe = self
+                    .outstanding
+                    .iter()
+                    .rev()
+                    .find(|(_, seg)| !seg.sacked && !seg.lost)
+                    .map(|(&s, _)| s);
+                if let Some(seq) = probe {
+                    let sg = self.outstanding.get_mut(&seq).unwrap();
+                    sg.lost = true;
+                    self.pipe_bytes = self.pipe_bytes.saturating_sub(sg.len as u64);
+                    self.retx_queue.push_front(seq);
+                }
+            }
+        }
+        if let Some(dl) = self.rto_deadline {
+            if now >= dl {
+                // Timeout: go-back-N from snd_una.
+                self.stats.rtos += 1;
+                self.cc.on_timeout(now);
+                self.outstanding.clear();
+                self.retx_queue.clear();
+                self.pipe_bytes = 0;
+                self.highest_sacked = 0;
+                self.snd_nxt = self.snd_una;
+                self.dup_acks = 0;
+                self.in_recovery = false;
+                self.backoff += 1;
+                self.rto_deadline = None;
+                self.tlp_deadline = None;
+            }
+        }
+    }
+
+    fn has_data_to_send(&self) -> bool {
+        !self.retx_queue.is_empty() || self.snd_nxt < self.total
+    }
+
+    fn next_token_at(&self) -> Option<Nanos> {
+        let rate = self.cc.pacing_rate_bps()?;
+        if rate == 0 {
+            return None;
+        }
+        let need = 1.0 - self.pace_tokens;
+        let ns_per_pkt = (self.mss as f64 * 8.0 * SEC as f64) / rate as f64;
+        Some(self.pace_refill_at + (need * ns_per_pkt).ceil() as Nanos)
+    }
+
+    fn refill_tokens(&mut self, now: Nanos) {
+        let Some(rate) = self.cc.pacing_rate_bps() else {
+            self.pace_tokens = 10.0;
+            self.pace_refill_at = now;
+            return;
+        };
+        let dt = now.saturating_sub(self.pace_refill_at);
+        let pkts = (rate as f64 / 8.0 / self.mss as f64) * (dt as f64 / SEC as f64);
+        self.pace_tokens = (self.pace_tokens + pkts).min(10.0);
+        self.pace_refill_at = now;
+    }
+
+    /// Pull the next segment to transmit, if window/pacing allow.
+    pub fn poll_transmit(&mut self, now: Nanos) -> Option<TcpSeg> {
+        if self.is_complete() {
+            return None;
+        }
+        self.started_at.get_or_insert(now);
+        self.refill_tokens(now);
+        if self.pace_tokens < 1.0 {
+            return None;
+        }
+        // Retransmissions first (pipe-limited).
+        while let Some(&seq) = self.retx_queue.front() {
+            // Skip entries that were cumulatively acked or SACKed (a "lost"
+            // packet that in fact arrived late) in the meantime.
+            let stale = seq < self.snd_una
+                || self.outstanding.get(&seq).map(|s| s.sacked).unwrap_or(true);
+            if stale {
+                self.retx_queue.pop_front();
+                continue;
+            }
+            let len = self.outstanding[&seq].len;
+            if self.pipe_bytes + len as u64 > self.cc.cwnd_bytes() {
+                return None;
+            }
+            self.retx_queue.pop_front();
+            self.outstanding.insert(
+                seq,
+                SentSeg {
+                    len,
+                    sent_at: now,
+                    delivered_at_send: self.delivered,
+                    retransmitted: true,
+                    sacked: false,
+                    lost: false,
+                },
+            );
+            self.pipe_bytes += len as u64;
+            self.stats.retransmissions += 1;
+            self.note_sent(now, len);
+            return Some(TcpSeg::data(self.flow, seq, len));
+        }
+        // New data within the window.
+        if self.snd_nxt < self.total {
+            let len = self.seg_len_at(self.snd_nxt);
+            if self.pipe_bytes + len as u64 <= self.cc.cwnd_bytes() {
+                let seq = self.snd_nxt;
+                self.snd_nxt += len as u64;
+                self.outstanding.insert(
+                    seq,
+                    SentSeg {
+                        len,
+                        sent_at: now,
+                        delivered_at_send: self.delivered,
+                        retransmitted: false,
+                        sacked: false,
+                        lost: false,
+                    },
+                );
+                self.pipe_bytes += len as u64;
+                self.note_sent(now, len);
+                return Some(TcpSeg::data(self.flow, seq, len));
+            }
+        }
+        None
+    }
+
+    fn seg_len_at(&self, seq: u64) -> u32 {
+        ((self.total - seq).min(self.mss as u64)) as u32
+    }
+
+    fn note_sent(&mut self, now: Nanos, len: u32) {
+        self.pace_tokens -= 1.0;
+        self.stats.pkts_sent += 1;
+        self.stats.bytes_sent += len as u64 + crate::wire::TCP_IP_OVERHEAD as u64;
+        if self.rto_deadline.is_none() {
+            self.arm_rto(now);
+        }
+    }
+}
+
+/// TCP receiver: cumulative ACK + SACK-block generation from a merged
+/// out-of-order range set, with per-packet ECN echo.
+pub struct TcpReceiver {
+    pub flow: u64,
+    rcv_nxt: u64,
+    /// Merged out-of-order ranges start → end.
+    ooo: BTreeMap<u64, u64>,
+    pub bytes_received: u64,
+    pub dup_segs: u64,
+}
+
+impl TcpReceiver {
+    pub fn new(flow: u64) -> TcpReceiver {
+        TcpReceiver { flow, rcv_nxt: 0, ooo: BTreeMap::new(), bytes_received: 0, dup_segs: 0 }
+    }
+
+    pub fn next_expected(&self) -> u64 {
+        self.rcv_nxt
+    }
+
+    fn insert_ooo(&mut self, start: u64, end: u64) -> (u64, u64) {
+        // Merge [start, end) into the range set; returns the merged range.
+        let (mut s, mut e) = (start, end);
+        // Absorb a predecessor that overlaps/abuts.
+        if let Some((&ps, &pe)) = self.ooo.range(..=s).next_back() {
+            if pe >= s {
+                s = ps;
+                e = e.max(pe);
+                self.ooo.remove(&ps);
+            }
+        }
+        // Absorb successors.
+        while let Some((&ns, &ne)) = self.ooo.range(s..).next() {
+            if ns <= e {
+                e = e.max(ne);
+                self.ooo.remove(&ns);
+            } else {
+                break;
+            }
+        }
+        self.ooo.insert(s, e);
+        (s, e)
+    }
+
+    /// Process a data segment; returns the (SACK-bearing) ACK to send back.
+    pub fn on_data(&mut self, seg: TcpSeg, ecn_ce: bool) -> TcpSeg {
+        let mut first_block: Option<(u64, u64)> = None;
+        let end = seg.seq + seg.len as u64;
+        if seg.seq == self.rcv_nxt || (seg.seq < self.rcv_nxt && end > self.rcv_nxt) {
+            self.bytes_received += end - self.rcv_nxt;
+            self.rcv_nxt = end;
+            // Merge contiguous out-of-order ranges.
+            while let Some((&s, &e)) = self.ooo.first_key_value() {
+                if s <= self.rcv_nxt {
+                    self.ooo.pop_first();
+                    if e > self.rcv_nxt {
+                        self.bytes_received += e - self.rcv_nxt;
+                        self.rcv_nxt = e;
+                    }
+                } else {
+                    break;
+                }
+            }
+        } else if seg.seq > self.rcv_nxt {
+            let had = self.ooo.range(..=seg.seq).next_back().map(|(&s, &e)| (s, e));
+            let covered = had.map(|(_, e)| e >= end).unwrap_or(false);
+            if covered {
+                self.dup_segs += 1;
+                first_block = had;
+            } else {
+                first_block = Some(self.insert_ooo(seg.seq, end));
+            }
+        } else {
+            self.dup_segs += 1;
+        }
+        let mut ack = TcpSeg::ack(self.flow, self.rcv_nxt, ecn_ce);
+        // SACK blocks: the block containing this segment first, then others
+        // by sequence.
+        let mut n = 0;
+        if let Some(b) = first_block {
+            ack.sack[n] = b;
+            n += 1;
+        }
+        for (&s, &e) in self.ooo.iter() {
+            if n >= SACK_BLOCKS {
+                break;
+            }
+            if Some((s, e)) != first_block {
+                ack.sack[n] = (s, e);
+                n += 1;
+            }
+        }
+        ack
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::{CcAlgo, Reno};
+
+    fn pipe(total: u64) -> (TcpSender, TcpReceiver) {
+        (TcpSender::new(1, total, 1460, Box::new(Reno::new(1460))), TcpReceiver::new(1))
+    }
+
+    /// Drive sender→receiver with an optional per-index drop predicate;
+    /// returns completion time.
+    fn run_loss(total: u64, drop: impl Fn(u64) -> bool) -> (Nanos, TcpStats) {
+        let (mut snd, mut rcv) = pipe(total);
+        let mut now: Nanos = 0;
+        let rtt = 2 * MS;
+        let mut idx = 0;
+        for _ in 0..2_000_000u64 {
+            if snd.is_complete() {
+                break;
+            }
+            let mut progressed = false;
+            while let Some(seg) = snd.poll_transmit(now) {
+                progressed = true;
+                idx += 1;
+                if !drop(idx) {
+                    let ack = rcv.on_data(seg, false);
+                    snd.on_ack(now + rtt, ack);
+                }
+            }
+            if !progressed {
+                match snd.next_wakeup() {
+                    Some(w) => {
+                        now = w.max(now + 1);
+                        snd.on_wakeup(now);
+                    }
+                    None => now += MS,
+                }
+            } else {
+                now += rtt;
+            }
+        }
+        (snd.stats.completed_at.expect("flow must complete"), snd.stats)
+    }
+
+    #[test]
+    fn lossless_transfer_completes() {
+        let (t, stats) = run_loss(1_000_000, |_| false);
+        assert!(t > 0);
+        assert_eq!(stats.retransmissions, 0);
+        assert_eq!(stats.rtos, 0);
+    }
+
+    #[test]
+    fn single_loss_triggers_fast_retransmit() {
+        let (_t, stats) = run_loss(2_000_000, |i| i == 50);
+        assert!(stats.fast_retransmits >= 1, "expected a fast retransmit: {stats:?}");
+        assert_eq!(stats.rtos, 0, "single mid-window loss should not RTO: {stats:?}");
+    }
+
+    #[test]
+    fn heavy_loss_still_completes() {
+        let (_t, stats) = run_loss(500_000, |i| i % 20 == 7);
+        assert!(stats.retransmissions > 0);
+    }
+
+    #[test]
+    fn loss_slows_completion() {
+        let (t_clean, _) = run_loss(2_000_000, |_| false);
+        let (t_lossy, _) = run_loss(2_000_000, |i| i % 30 == 7);
+        assert!(t_lossy > t_clean, "loss must slow TCP down: {t_clean} vs {t_lossy}");
+    }
+
+    #[test]
+    fn sack_recovery_handles_many_holes_in_one_window() {
+        // Drop every 4th packet in a burst window; SACK recovery should
+        // retransmit holes in ~1 RTT each rather than one hole per RTT.
+        let (_t, stats) = run_loss(3_000_000, |i| (100..400).contains(&i) && i % 4 == 0);
+        assert!(stats.retransmissions >= 70, "holes must be retransmitted: {stats:?}");
+        assert_eq!(stats.rtos, 0, "SACK should avoid RTOs here: {stats:?}");
+    }
+
+    #[test]
+    fn receiver_reassembles_out_of_order() {
+        let mut rcv = TcpReceiver::new(1);
+        let a1 = rcv.on_data(TcpSeg::data(1, 1460, 1460), false);
+        assert_eq!(a1.ack, 0); // hole at 0
+        assert_eq!(a1.sack[0], (1460, 2920)); // the ooo block is SACKed
+        let a2 = rcv.on_data(TcpSeg::data(1, 0, 1460), false);
+        assert_eq!(a2.ack, 2920); // hole filled, merged
+        assert_eq!(rcv.bytes_received, 2920);
+    }
+
+    #[test]
+    fn receiver_merges_adjacent_ooo_ranges() {
+        let mut rcv = TcpReceiver::new(1);
+        rcv.on_data(TcpSeg::data(1, 2920, 1460), false);
+        let ack = rcv.on_data(TcpSeg::data(1, 1460, 1460), false);
+        // Blocks [1460,2920) and [2920,4380) merge into one.
+        assert_eq!(ack.sack[0], (1460, 4380));
+        assert_eq!(ack.sack[1], (0, 0));
+    }
+
+    #[test]
+    fn receiver_counts_duplicates() {
+        let mut rcv = TcpReceiver::new(1);
+        rcv.on_data(TcpSeg::data(1, 0, 1460), false);
+        rcv.on_data(TcpSeg::data(1, 0, 1460), false);
+        assert_eq!(rcv.dup_segs, 1);
+    }
+
+    #[test]
+    fn ecn_echo_propagates() {
+        let mut rcv = TcpReceiver::new(1);
+        let ack = rcv.on_data(TcpSeg::data(1, 0, 1460), true);
+        assert!(ack.ece);
+    }
+
+    #[test]
+    fn pipe_accounting_stays_consistent() {
+        let (mut snd, mut rcv) = pipe(1_000_000);
+        let mut now = 0;
+        let mut in_net: Vec<TcpSeg> = vec![];
+        let mut i = 0u64;
+        while !snd.is_complete() && now < 60 * SEC {
+            while let Some(seg) = snd.poll_transmit(now) {
+                i += 1;
+                if i % 7 != 0 {
+                    in_net.push(seg);
+                }
+            }
+            for seg in in_net.drain(..) {
+                let ack = rcv.on_data(seg, false);
+                snd.on_ack(now + MS, ack);
+            }
+            assert!(snd.pipe() <= 1_000_000 + 1460, "pipe ran away: {}", snd.pipe());
+            now += MS;
+            snd.on_wakeup(now);
+        }
+        assert!(snd.is_complete());
+        assert_eq!(snd.pipe(), 0, "pipe must drain to zero at completion");
+    }
+
+    #[test]
+    fn all_ccs_complete_a_transfer() {
+        for algo in CcAlgo::ALL {
+            let mut snd = TcpSender::new(1, 200_000, 1460, algo.build(1460));
+            let mut rcv = TcpReceiver::new(1);
+            let mut now = 0;
+            for _ in 0..100_000 {
+                if snd.is_complete() {
+                    break;
+                }
+                let mut sent_any = false;
+                while let Some(seg) = snd.poll_transmit(now) {
+                    sent_any = true;
+                    let ack = rcv.on_data(seg, false);
+                    snd.on_ack(now + MS, ack);
+                }
+                now += if sent_any { MS } else { 10 * MS };
+                snd.on_wakeup(now);
+            }
+            assert!(snd.is_complete(), "{} did not complete", algo.name());
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Fixed-capacity bitset used for per-segment bookkeeping (arrival bitmaps,
+//! ACK tracking). Hot path: `set`/`get` are O(1), `count_ones` is cached.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bitmap {
+    words: Vec<u64>,
+    len: usize,
+    ones: usize,
+}
+
+impl Bitmap {
+    pub fn new(len: usize) -> Bitmap {
+        Bitmap { words: vec![0; len.div_ceil(64)], len, ones: 0 }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Grow capacity to at least `len` (new bits are 0).
+    pub fn grow(&mut self, len: usize) {
+        if len > self.len {
+            self.len = len;
+            self.words.resize(len.div_ceil(64), 0);
+        }
+    }
+
+    /// Set bit `i`; returns true if it was previously clear.
+    #[inline]
+    pub fn set(&mut self, i: usize) -> bool {
+        assert!(i < self.len, "bit {i} out of range {}", self.len);
+        let (w, b) = (i / 64, i % 64);
+        let mask = 1u64 << b;
+        if self.words[w] & mask == 0 {
+            self.words[w] |= mask;
+            self.ones += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        if i >= self.len {
+            return false;
+        }
+        self.words[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    #[inline]
+    pub fn count_ones(&self) -> usize {
+        self.ones
+    }
+
+    pub fn all_set(&self) -> bool {
+        self.ones == self.len
+    }
+
+    /// Iterator over clear bit indices (the "missing segments").
+    pub fn iter_zeros(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.len).filter(move |&i| !self.get(i))
+    }
+
+    /// Iterator over set bit indices.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.len).filter(move |&i| self.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_count() {
+        let mut b = Bitmap::new(130);
+        assert!(b.set(0));
+        assert!(b.set(64));
+        assert!(b.set(129));
+        assert!(!b.set(64)); // already set
+        assert_eq!(b.count_ones(), 3);
+        assert!(b.get(129) && !b.get(128));
+        assert!(!b.all_set());
+    }
+
+    #[test]
+    fn all_set_detection() {
+        let mut b = Bitmap::new(5);
+        for i in 0..5 {
+            b.set(i);
+        }
+        assert!(b.all_set());
+    }
+
+    #[test]
+    fn grow_preserves_bits() {
+        let mut b = Bitmap::new(10);
+        b.set(7);
+        b.grow(100);
+        assert!(b.get(7));
+        assert_eq!(b.len(), 100);
+        assert_eq!(b.count_ones(), 1);
+    }
+
+    #[test]
+    fn zeros_iterator() {
+        let mut b = Bitmap::new(6);
+        b.set(1);
+        b.set(3);
+        assert_eq!(b.iter_zeros().collect::<Vec<_>>(), vec![0, 2, 4, 5]);
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn out_of_range_get_is_false() {
+        let b = Bitmap::new(4);
+        assert!(!b.get(1000));
+    }
+
+    #[test]
+    fn prop_count_matches_naive() {
+        crate::util::proptest::check("bitmap count", |rng| {
+            let n = 1 + rng.gen_range(300) as usize;
+            let mut b = Bitmap::new(n);
+            let mut naive = std::collections::HashSet::new();
+            for _ in 0..rng.gen_range(500) {
+                let i = rng.gen_range(n as u64) as usize;
+                b.set(i);
+                naive.insert(i);
+            }
+            assert_eq!(b.count_ones(), naive.len());
+        });
+    }
+}

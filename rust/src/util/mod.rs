@@ -1,0 +1,63 @@
+//! Small self-contained utilities: deterministic RNG, statistics helpers,
+//! and a tiny randomized-property-test harness.
+//!
+//! The crate builds fully offline against a vendored dependency set that
+//! does not include `rand`/`proptest`/`criterion`, so the pieces of those
+//! crates we actually need are implemented here (and unit-tested).
+
+pub mod bitmap;
+pub mod pcg;
+pub mod proptest;
+pub mod stats;
+
+pub use bitmap::Bitmap;
+pub use pcg::Pcg64;
+pub use stats::{jain_fairness, Histogram, Summary};
+
+/// Format a byte count in human units (`12.3 MB`).
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b >= K * K * K {
+        format!("{:.2} GiB", b / K / K / K)
+    } else if b >= K * K {
+        format!("{:.2} MiB", b / K / K)
+    } else if b >= K {
+        format!("{:.2} KiB", b / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Format nanoseconds in human units (`1.234 ms`).
+pub fn fmt_nanos(ns: crate::Nanos) -> String {
+    if ns >= crate::SEC {
+        format!("{:.3} s", ns as f64 / crate::SEC as f64)
+    } else if ns >= crate::MS {
+        format!("{:.3} ms", ns as f64 / crate::MS as f64)
+    } else if ns >= crate::US {
+        format!("{:.3} us", ns as f64 / crate::US as f64)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(98 * 1024 * 1024), "98.00 MiB");
+    }
+
+    #[test]
+    fn nanos_formatting() {
+        assert_eq!(fmt_nanos(10), "10 ns");
+        assert_eq!(fmt_nanos(1_500), "1.500 us");
+        assert_eq!(fmt_nanos(30_000_000), "30.000 ms");
+        assert_eq!(fmt_nanos(2_000_000_000), "2.000 s");
+    }
+}

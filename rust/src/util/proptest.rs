@@ -1,0 +1,62 @@
+//! A minimal randomized property-test harness (the vendored dependency set
+//! has no `proptest`). Properties run a fixed number of deterministic,
+//! seeded cases; on failure the failing seed is printed so the case can be
+//! replayed exactly.
+
+use super::pcg::Pcg64;
+
+/// Number of cases per property (overridable via `LTP_PROPTEST_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("LTP_PROPTEST_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(128)
+}
+
+/// Run `prop` against `default_cases()` seeded RNGs. The property should
+/// panic (e.g. via `assert!`) on violation. The failing case's seed is
+/// attached to the panic message via a wrapper panic.
+pub fn check<F: Fn(&mut Pcg64)>(name: &str, prop: F) {
+    check_seeded(name, 0xC0FFEE, prop)
+}
+
+/// Like [`check`] but with an explicit base seed (replay a failure by
+/// passing the printed seed and setting `LTP_PROPTEST_CASES=1`).
+pub fn check_seeded<F: Fn(&mut Pcg64)>(name: &str, base_seed: u64, prop: F) {
+    let cases = default_cases();
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Pcg64::new(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u32 roundtrip", |rng| {
+            let x = rng.next_u32();
+            let bytes = x.to_le_bytes();
+            assert_eq!(u32::from_le_bytes(bytes), x);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_reports_seed() {
+        check("always fails", |rng| {
+            let v = rng.gen_range(10);
+            assert!(v > 100, "v={v} is small");
+        });
+    }
+}

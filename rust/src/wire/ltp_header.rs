@@ -1,0 +1,247 @@
+//! The 9-byte LTP packet header (paper Fig 10): bit-packed encode/decode
+//! for the UDP driver plus the structured form used on the simulator hot
+//! path.
+
+/// Encoded header size in bytes (68 bits rounded up).
+pub const HDR_BYTES: usize = 9;
+
+/// Packet importance (2-bit field). The paper defines two levels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Importance {
+    /// 0b00 — droppable gradient payload.
+    Normal = 0b00,
+    /// 0b11 — must be delivered (registration, tensor-boundary bytes, end).
+    Critical = 0b11,
+}
+
+impl Importance {
+    pub fn from_bits(b: u8) -> Importance {
+        if b == 0b11 {
+            Importance::Critical
+        } else {
+            Importance::Normal
+        }
+    }
+}
+
+/// Packet type (2-bit field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum LtpType {
+    /// 0b00 — flow registration: payload carries the total segment count.
+    Registration = 0b00,
+    /// 0b01 — data segment.
+    Data = 0b01,
+    /// 0b10 — per-packet ACK (out-of-order).
+    Ack = 0b10,
+    /// 0b11 — end / stop. Sender→receiver: "all queues drained".
+    /// Receiver→sender: Early Close "stop" broadcast.
+    End = 0b11,
+}
+
+impl LtpType {
+    pub fn from_bits(b: u8) -> LtpType {
+        match b & 0b11 {
+            0b00 => LtpType::Registration,
+            0b01 => LtpType::Data,
+            0b10 => LtpType::Ack,
+            _ => LtpType::End,
+        }
+    }
+}
+
+/// Quantization granularity of the 12-bit RTprop field: 16 µs units give a
+/// 0–65.5 ms range covering both DCN and most WAN paths.
+pub const RTPROP_UNIT_US: u32 = 16;
+/// Quantization granularity of the 12-bit BtlBw field: 16 Mbps units give a
+/// 0–65.5 Gbps range.
+pub const BTLBW_UNIT_MBPS: u32 = 16;
+
+/// Structured LTP header. Field widths follow paper Fig 10; `payload_len`
+/// and `total_segs` describe the UDP payload that follows the header
+/// (registration packets carry `total_segs`, data packets carry
+/// `payload_len` bytes of gradient data).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LtpHeader {
+    /// 16-bit flow id. One synchronization round (per direction, per peer)
+    /// is one flow.
+    pub flow: u16,
+    /// 24-bit data-segment sequence id (also: the seq being ACKed for Ack
+    /// packets).
+    pub seq: u32,
+    pub importance: Importance,
+    pub ty: LtpType,
+    /// Sender's RTprop estimate in microseconds (quantized on the wire).
+    pub rtprop_us: u32,
+    /// Sender's BtlBw estimate in Mbps (quantized on the wire).
+    pub btlbw_mbps: u32,
+}
+
+impl LtpHeader {
+    pub fn data(flow: u16, seq: u32, importance: Importance) -> LtpHeader {
+        LtpHeader { flow, seq, importance, ty: LtpType::Data, rtprop_us: 0, btlbw_mbps: 0 }
+    }
+
+    pub fn ack(flow: u16, seq: u32) -> LtpHeader {
+        LtpHeader {
+            flow,
+            seq,
+            importance: Importance::Normal,
+            ty: LtpType::Ack,
+            rtprop_us: 0,
+            btlbw_mbps: 0,
+        }
+    }
+
+    pub fn registration(flow: u16, total_segs: u32) -> LtpHeader {
+        // Registration reuses the seq field for the segment count (the
+        // payload also carries it in full width for the UDP driver).
+        LtpHeader {
+            flow,
+            seq: total_segs,
+            importance: Importance::Critical,
+            ty: LtpType::Registration,
+            rtprop_us: 0,
+            btlbw_mbps: 0,
+        }
+    }
+
+    pub fn end(flow: u16) -> LtpHeader {
+        LtpHeader {
+            flow,
+            seq: 0,
+            importance: Importance::Critical,
+            ty: LtpType::End,
+            rtprop_us: 0,
+            btlbw_mbps: 0,
+        }
+    }
+
+    /// Pack into the 9-byte wire form.
+    ///
+    /// Layout (big-endian bit order):
+    /// `flow[16] | seq[24] | imp[2] | type[2] | rtprop[12] | btlbw[12] | pad[4]`.
+    pub fn encode(&self) -> [u8; HDR_BYTES] {
+        let rt = (self.rtprop_us / RTPROP_UNIT_US).min(0xFFF);
+        let bw = (self.btlbw_mbps / BTLBW_UNIT_MBPS).min(0xFFF);
+        debug_assert!(self.seq < (1 << 24), "seq exceeds 24-bit wire field");
+        let mut bits: u128 = 0;
+        bits |= (self.flow as u128) << (68 - 16);
+        bits |= ((self.seq & 0xFF_FFFF) as u128) << (68 - 40);
+        bits |= ((self.importance as u8 & 0b11) as u128) << (68 - 42);
+        bits |= ((self.ty as u8 & 0b11) as u128) << (68 - 44);
+        bits |= ((rt & 0xFFF) as u128) << (68 - 56);
+        bits |= ((bw & 0xFFF) as u128) << (68 - 68);
+        // Left-align the 68 bits in 72 (9 bytes).
+        bits <<= 4;
+        let mut out = [0u8; HDR_BYTES];
+        for (i, b) in out.iter_mut().enumerate() {
+            *b = ((bits >> (64 - 8 * i as u32)) & 0xFF) as u8;
+        }
+        out
+    }
+
+    /// Decode the 9-byte wire form. Quantized fields come back rounded down
+    /// to their unit.
+    pub fn decode(buf: &[u8]) -> Option<LtpHeader> {
+        if buf.len() < HDR_BYTES {
+            return None;
+        }
+        let mut bits: u128 = 0;
+        for (i, &b) in buf[..HDR_BYTES].iter().enumerate() {
+            bits |= (b as u128) << (64 - 8 * i as u32);
+        }
+        bits >>= 4; // drop the pad
+        let flow = ((bits >> (68 - 16)) & 0xFFFF) as u16;
+        let seq = ((bits >> (68 - 40)) & 0xFF_FFFF) as u32;
+        let imp = ((bits >> (68 - 42)) & 0b11) as u8;
+        let ty = ((bits >> (68 - 44)) & 0b11) as u8;
+        let rt = ((bits >> (68 - 56)) & 0xFFF) as u32;
+        let bw = (bits & 0xFFF) as u32;
+        Some(LtpHeader {
+            flow,
+            seq,
+            importance: Importance::from_bits(imp),
+            ty: LtpType::from_bits(ty),
+            rtprop_us: rt * RTPROP_UNIT_US,
+            btlbw_mbps: bw * BTLBW_UNIT_MBPS,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn roundtrip_basic() {
+        let h = LtpHeader {
+            flow: 0xBEEF,
+            seq: 0x123456,
+            importance: Importance::Critical,
+            ty: LtpType::Data,
+            rtprop_us: 400 * 16,
+            btlbw_mbps: 625 * 16,
+        };
+        let d = LtpHeader::decode(&h.encode()).unwrap();
+        assert_eq!(d, h);
+    }
+
+    #[test]
+    fn header_is_nine_bytes() {
+        assert_eq!(LtpHeader::ack(1, 2).encode().len(), 9);
+    }
+
+    #[test]
+    fn decode_short_buffer_is_none() {
+        assert!(LtpHeader::decode(&[0u8; 8]).is_none());
+    }
+
+    #[test]
+    fn quantization_rounds_down() {
+        let h = LtpHeader {
+            flow: 1,
+            seq: 1,
+            importance: Importance::Normal,
+            ty: LtpType::Ack,
+            rtprop_us: 100, // not a multiple of 16
+            btlbw_mbps: 9_999,
+        };
+        let d = LtpHeader::decode(&h.encode()).unwrap();
+        assert_eq!(d.rtprop_us, 96);
+        assert_eq!(d.btlbw_mbps, 9_984);
+    }
+
+    #[test]
+    fn saturating_fields() {
+        let h = LtpHeader {
+            flow: 1,
+            seq: 1,
+            importance: Importance::Normal,
+            ty: LtpType::Ack,
+            rtprop_us: 10_000_000,  // > 12-bit range
+            btlbw_mbps: 99_000_000, // > 12-bit range
+        };
+        let d = LtpHeader::decode(&h.encode()).unwrap();
+        assert_eq!(d.rtprop_us, 0xFFF * RTPROP_UNIT_US);
+        assert_eq!(d.btlbw_mbps, 0xFFF * BTLBW_UNIT_MBPS);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_headers() {
+        check("ltp header roundtrip", |rng| {
+            let h = LtpHeader {
+                flow: rng.gen_range(1 << 16) as u16,
+                seq: rng.gen_range(1 << 24) as u32,
+                importance: if rng.chance(0.5) { Importance::Critical } else { Importance::Normal },
+                ty: LtpType::from_bits(rng.gen_range(4) as u8),
+                rtprop_us: rng.gen_range(0xFFF) as u32 * RTPROP_UNIT_US,
+                btlbw_mbps: rng.gen_range(0xFFF) as u32 * BTLBW_UNIT_MBPS,
+            };
+            let d = LtpHeader::decode(&h.encode()).unwrap();
+            assert_eq!(d, h);
+        });
+    }
+}

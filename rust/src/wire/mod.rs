@@ -1,0 +1,75 @@
+//! LTP wire format (paper Fig 10) and the simulator's packet payload types.
+//!
+//! The LTP header is 68 bits ≈ 9 bytes on the wire, carried over UDP:
+//!
+//! ```text
+//!  bits  field
+//!  16    flow id        — one gather/broadcast round = one flow
+//!  24    sequence id    — index of the data segment ("jigsaw piece")
+//!   2    importance     — 0b11 critical, 0b00 normal
+//!   2    type           — 0b00 registration, 0b01 data, 0b10 ack, 0b11 end
+//!  12    rtprop         — sender's RTprop estimate, 16 µs units
+//!  12    btlbw          — sender's BtlBw estimate, 16 Mbps units
+//!  ────
+//!  68    total (padded to 9 bytes; top 4 bits of byte 8 reserved)
+//! ```
+//!
+//! The same structured form ([`LtpHeader`]) is used by the simulator
+//! (no byte packing on the hot path) and by the real-socket UDP driver
+//! (packed via [`LtpHeader::encode`] / [`LtpHeader::decode`]).
+
+mod ltp_header;
+mod tcp_seg;
+
+pub use ltp_header::{Importance, LtpHeader, LtpType, HDR_BYTES};
+pub use tcp_seg::{TcpSeg, SACK_BLOCKS};
+
+/// Maximum transmission unit used throughout (matches the paper's testbed).
+pub const MTU: u32 = 1500;
+/// UDP/IP overhead assumed for LTP packets (IPv4 20 B + UDP 8 B).
+pub const UDP_IP_OVERHEAD: u32 = 28;
+/// TCP/IP overhead assumed for baseline packets (IPv4 20 B + TCP 20 B).
+pub const TCP_IP_OVERHEAD: u32 = 40;
+/// Usable LTP payload per MTU-sized packet.
+pub const LTP_MSS: u32 = MTU - UDP_IP_OVERHEAD - HDR_BYTES as u32;
+/// Usable TCP payload per MTU-sized packet.
+pub const TCP_MSS: u32 = MTU - TCP_IP_OVERHEAD;
+
+/// Protocol payload of a simulated packet.
+#[derive(Debug, Clone)]
+pub enum PacketKind {
+    /// An LTP packet (header-only in the simulator; data segments carry
+    /// `payload_len` accounted bytes whose contents live app-side).
+    Ltp(LtpHeader),
+    /// A TCP segment for the baseline protocols.
+    Tcp(TcpSeg),
+    /// Opaque test payload.
+    Raw(u64),
+}
+
+impl PacketKind {
+    pub fn as_ltp(&self) -> Option<&LtpHeader> {
+        match self {
+            PacketKind::Ltp(h) => Some(h),
+            _ => None,
+        }
+    }
+
+    pub fn as_tcp(&self) -> Option<&TcpSeg> {
+        match self {
+            PacketKind::Tcp(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mss_accounting() {
+        assert_eq!(LTP_MSS, 1500 - 28 - 9);
+        assert_eq!(TCP_MSS, 1460);
+    }
+}

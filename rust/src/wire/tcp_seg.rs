@@ -1,0 +1,57 @@
+//! TCP segment representation for the baseline protocols (simulator-only;
+//! the baselines model kernel TCP behaviour, they are not a wire-compatible
+//! TCP implementation).
+
+/// Number of SACK blocks carried per ACK (like real TCP's option space).
+pub const SACK_BLOCKS: usize = 3;
+
+/// A TCP segment or ACK. Sequence numbers are byte offsets (no wraparound:
+/// 64-bit, flows in these experiments stay well below 2^64 bytes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TcpSeg {
+    /// Flow identifier (connection id).
+    pub flow: u64,
+    /// First payload byte carried by this segment.
+    pub seq: u64,
+    /// Payload length (0 for pure ACKs).
+    pub len: u32,
+    /// Cumulative ACK: next byte expected by the receiver.
+    pub ack: u64,
+    /// Set on ACK segments.
+    pub is_ack: bool,
+    /// ECN echo.
+    pub ece: bool,
+    /// FIN: sender finished.
+    pub fin: bool,
+    /// SACK blocks `[start, end)`; `(0, 0)` = unused. The block containing
+    /// the segment that triggered this ACK comes first (RFC 2018).
+    pub sack: [(u64, u64); SACK_BLOCKS],
+}
+
+impl TcpSeg {
+    pub fn data(flow: u64, seq: u64, len: u32) -> TcpSeg {
+        TcpSeg {
+            flow,
+            seq,
+            len,
+            ack: 0,
+            is_ack: false,
+            ece: false,
+            fin: false,
+            sack: [(0, 0); SACK_BLOCKS],
+        }
+    }
+
+    pub fn ack(flow: u64, ack: u64, ece: bool) -> TcpSeg {
+        TcpSeg {
+            flow,
+            seq: 0,
+            len: 0,
+            ack,
+            is_ack: true,
+            ece,
+            fin: false,
+            sack: [(0, 0); SACK_BLOCKS],
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Cross-module integration: LTP and TCP flows through multi-hop simulated
+//! topologies, incast barrels, and property checks on end-to-end invariants.
+
+use ltp::cc::CcAlgo;
+use ltp::config::Workload;
+use ltp::proto::{run_single_flow, CloseReason, EarlyCloseCfg};
+use ltp::ps::{run_training, Proto, TrainingCfg};
+use ltp::simnet::{LinkCfg, LossModel};
+use ltp::util::proptest::check;
+use ltp::{MS, SEC};
+
+#[test]
+fn ltp_incast_8_to_1_cuts_the_tail_vs_tcp() {
+    // The paper's core claim at protocol level: with 8 workers incasting,
+    // LTP's per-iteration sync beats TCP's because stragglers are cut.
+    let loss = LossModel::Bernoulli { p: 0.005 };
+    let mk = |proto| {
+        let mut cfg = TrainingCfg::modeled(proto, Workload::Micro, 8);
+        cfg.iters = 4;
+        cfg.link = cfg.link.with_loss(loss);
+        cfg
+    };
+    let ltp = run_training(&mk(Proto::Ltp));
+    let reno = run_training(&mk(Proto::Tcp(CcAlgo::Reno)));
+    assert_eq!(ltp.iters.len(), 4);
+    assert_eq!(reno.iters.len(), 4);
+    assert!(
+        ltp.mean_bst() < reno.mean_bst(),
+        "LTP {} must beat Reno {}",
+        ltp.mean_bst(),
+        reno.mean_bst()
+    );
+}
+
+#[test]
+fn early_close_never_loses_critical_segments() {
+    check("criticals survive", |rng| {
+        let p = 0.02 + rng.next_f64() * 0.08; // 2–10 % loss
+        let bytes = 200_000 + rng.gen_range(300_000);
+        let n_crit = 1 + rng.gen_range(5) as u32;
+        let critical: Vec<u32> = (0..n_crit).map(|i| i * 7).collect();
+        let cfg = LinkCfg::dcn(1, 50).with_loss(LossModel::Bernoulli { p });
+        let ec = EarlyCloseCfg { lt_threshold: 5 * MS, deadline: 500 * MS, pct: 0.7 };
+        let (_s, r) = run_single_flow(bytes, critical, cfg, ec, rng.next_u64(), 20 * SEC);
+        let reason = r.reason.expect("flow must close");
+        if reason != CloseReason::Deadline {
+            assert!(r.criticals_ok, "close reason {reason:?} without criticals");
+        }
+    });
+}
+
+#[test]
+fn delivered_fraction_respects_threshold() {
+    check("pct >= threshold on early close", |rng| {
+        let p = 0.01 + rng.next_f64() * 0.05;
+        let bytes = 300_000 + rng.gen_range(500_000);
+        let pct = 0.7 + rng.next_f64() * 0.25;
+        let cfg = LinkCfg::dcn(1, 50).with_loss(LossModel::Bernoulli { p });
+        let ec = EarlyCloseCfg { lt_threshold: 5 * MS, deadline: SEC, pct };
+        let (_s, r) = run_single_flow(bytes, vec![], cfg, ec, rng.next_u64(), 30 * SEC);
+        match r.reason.expect("flow must close") {
+            CloseReason::EarlyPct => {
+                assert!(r.pct_at_close >= pct, "{} < {pct}", r.pct_at_close)
+            }
+            CloseReason::Complete => assert!(r.pct_at_close >= 1.0 - 1e-9),
+            CloseReason::Deadline => {} // anything goes at the deadline
+        }
+    });
+}
+
+#[test]
+fn bsp_iterations_are_serialized() {
+    // BST per iteration must be positive and the iteration ends must be
+    // strictly increasing — the BSP barrier cannot interleave.
+    let mut cfg = TrainingCfg::modeled(Proto::Ltp, Workload::Micro, 4);
+    cfg.iters = 5;
+    let report = run_training(&cfg);
+    assert_eq!(report.iters.len(), 5);
+    for w in report.iters.windows(2) {
+        assert!(w[1].end > w[0].end);
+    }
+    for it in &report.iters {
+        assert!(it.bst > 0 && it.gather_time > 0);
+    }
+}
+
+#[test]
+fn wan_environment_also_converges() {
+    // 1 Gbps / 40 ms RTT with bursty (Gilbert–Elliott) loss.
+    let ge = LossModel::GilbertElliott { p_gb: 0.001, p_bg: 0.05, loss_good: 0.0, loss_bad: 0.2 };
+    let mut cfg = TrainingCfg::modeled(Proto::Ltp, Workload::Micro, 4);
+    cfg.link = ltp::config::NetEnv::Wan1g.link().with_loss(ge);
+    cfg.deadline_slack = ltp::config::NetEnv::Wan1g.deadline_slack();
+    cfg.iters = 3;
+    let report = run_training(&cfg);
+    assert_eq!(report.iters.len(), 3, "WAN run must complete");
+    assert!(report.mean_delivered() > 0.6);
+}
+
+#[test]
+fn dctcp_with_ecn_marking_keeps_queues_shorter() {
+    use ltp::simnet::Sim;
+    use ltp::tcp::{TcpReceiverNode, TcpSender, TcpSenderNode};
+    use ltp::wire::TCP_MSS;
+    // Same bulk flow over a link with DCTCP-style ECN marking vs cubic
+    // without: DCTCP should see ECN marks and retransmit less.
+    let run = |cc: CcAlgo, ecn: bool| {
+        let mut sim = Sim::new(3);
+        let link = if ecn {
+            LinkCfg::dcn(1, 100).with_ecn(30_000).with_queue(500_000)
+        } else {
+            LinkCfg::dcn(1, 100).with_queue(500_000)
+        };
+        let snd = TcpSender::new(1, 20_000_000, TCP_MSS, cc.build(TCP_MSS));
+        let a = sim.add_host(Box::new(TcpSenderNode::new(snd, 1)));
+        let b = sim.add_host(Box::new(TcpReceiverNode::new()));
+        sim.add_duplex(a, b, link);
+        sim.run_until(120 * SEC);
+        let drops = sim.link_stats(0).drops_queue;
+        let marks = sim.link_stats(0).ecn_marks;
+        (drops, marks)
+    };
+    let (drops_dctcp, marks) = run(CcAlgo::Dctcp, true);
+    let (drops_cubic, _) = run(CcAlgo::Cubic, false);
+    assert!(marks > 0, "ECN threshold must mark");
+    assert!(
+        drops_dctcp <= drops_cubic,
+        "DCTCP with ECN should not drop more than cubic: {drops_dctcp} vs {drops_cubic}"
+    );
+}
