@@ -119,6 +119,88 @@ mod tests {
     }
 
     #[test]
+    fn expiry_boundary_is_inclusive() {
+        // A sample exactly `window` old is still valid; one tick older is
+        // not (`now - t > window` expires).
+        let mut f = WindowedMax::new(100);
+        f.add(0, 9);
+        f.expire(100);
+        assert_eq!(f.get(), Some(9), "age == window must be kept");
+        f.expire(101);
+        assert_eq!(f.get(), None, "age > window must expire");
+
+        let mut m = WindowedMin::new(100);
+        m.add(0, 9);
+        m.expire(100);
+        assert_eq!(m.get(), Some(9));
+        m.expire(101);
+        assert_eq!(m.get(), None);
+    }
+
+    #[test]
+    fn empty_filters_return_none() {
+        assert_eq!(WindowedMax::new(10).get(), None);
+        assert_eq!(WindowedMin::new(10).get(), None);
+    }
+
+    #[test]
+    fn monotone_deque_keeps_later_smaller_samples() {
+        // After the max expires, the answer falls back to the best of the
+        // still-live (smaller, later) samples — they must not have been
+        // discarded with it.
+        let mut f = WindowedMax::new(100);
+        f.add(0, 50);
+        f.add(10, 40);
+        f.add(20, 30);
+        assert_eq!(f.get(), Some(50));
+        f.expire(105); // the 50 at t=0 ages out
+        assert_eq!(f.get(), Some(40));
+        f.expire(115);
+        assert_eq!(f.get(), Some(30));
+    }
+
+    #[test]
+    fn set_window_shrink_applies_on_next_touch() {
+        let mut f = WindowedMax::new(1000);
+        f.add(0, 7);
+        f.set_window(10);
+        f.expire(50);
+        assert_eq!(f.get(), None, "shrunk window must expire old samples");
+    }
+
+    #[test]
+    fn equal_values_refresh_timestamp() {
+        // add() pops back entries with back <= value, so re-adding the same
+        // value later must extend its lifetime.
+        let mut f = WindowedMax::new(100);
+        f.add(0, 5);
+        f.add(90, 5);
+        f.expire(150);
+        assert_eq!(f.get(), Some(5), "refreshed sample lives from t=90");
+        f.expire(191);
+        assert_eq!(f.get(), None);
+    }
+
+    #[test]
+    fn prop_min_filter_matches_naive() {
+        crate::util::proptest::check("windowed min == naive", |rng| {
+            let window = 50;
+            let mut f = WindowedMin::new(window);
+            let mut hist: Vec<(u64, u64)> = vec![];
+            let mut t = 0;
+            for _ in 0..200 {
+                t += rng.gen_range(10);
+                let v = rng.gen_range(1000);
+                f.add(t, v);
+                hist.push((t, v));
+                let naive =
+                    hist.iter().filter(|&&(ht, _)| t - ht <= window).map(|&(_, v)| v).min();
+                assert_eq!(f.get(), naive);
+            }
+        });
+    }
+
+    #[test]
     fn prop_max_filter_matches_naive() {
         crate::util::proptest::check("windowed max == naive", |rng| {
             let window = 50;

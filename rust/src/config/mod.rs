@@ -93,13 +93,17 @@ impl ModelManifest {
     }
 }
 
-/// Network environment presets used throughout the evaluation (paper §V).
+/// Network environment presets used throughout the evaluation (paper §V)
+/// and by the scenario engine's registry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NetEnv {
     /// In-rack DCN: 10 Gbps, ~1 ms RTT class. (Paper Fig 4 row 2.)
     Dcn10g,
     /// 1 Gbps / 40 ms WAN class. (Paper Fig 4 row 1.)
     Wan1g,
+    /// The WAN class with bursty Gilbert–Elliott loss baked in (federated /
+    /// edge training conditions; scenario `wan_bursty`).
+    WanBursty,
     /// The testbed rack: 10 Gbps edge links behind one ToR.
     Rack,
 }
@@ -118,6 +122,7 @@ impl NetEnv {
                 ecn_thresh_bytes: None,
                 loss: LossModel::None,
             },
+            NetEnv::WanBursty => NetEnv::Wan1g.link().with_loss(Self::bursty_loss()),
             // Testbed: 10 Gbps edge, ~0.6 ms kernel-stack RTT (the paper's
             // Fig 3 FCTs imply software RTTs well above the wire's);
             // 1 MiB switch buffer per port.
@@ -129,8 +134,15 @@ impl NetEnv {
     pub fn deadline_slack(self) -> Nanos {
         match self {
             NetEnv::Dcn10g | NetEnv::Rack => 30 * crate::MS,
-            NetEnv::Wan1g => 100 * crate::MS,
+            NetEnv::Wan1g | NetEnv::WanBursty => 100 * crate::MS,
         }
+    }
+
+    /// The bursty-WAN loss process: long good states with rare ~2-order
+    /// bursts (stationary mean rate ≈ 0.8 %), matching the
+    /// `wan_federated` example's regime.
+    pub fn bursty_loss() -> LossModel {
+        LossModel::GilbertElliott { p_gb: 0.002, p_bg: 0.05, loss_good: 0.0005, loss_bad: 0.2 }
     }
 }
 
@@ -224,6 +236,18 @@ block0.wq 200
             assert_eq!(m.padded_dim % m.tile_d, 0);
             assert!(m.param_count > 100_000);
         }
+    }
+
+    #[test]
+    fn wan_bursty_preset_is_wan_plus_ge_loss() {
+        let l = NetEnv::WanBursty.link();
+        assert_eq!(l.rate_bps, 1_000_000_000);
+        assert!(matches!(l.loss, LossModel::GilbertElliott { .. }));
+        // Mean loss rate of the burst process ≈ 0.8 %.
+        assert!((NetEnv::bursty_loss().mean_rate() - 0.0082).abs() < 0.002);
+        assert_eq!(NetEnv::WanBursty.deadline_slack(), 100 * crate::MS);
+        // The clean WAN preset is untouched.
+        assert_eq!(NetEnv::Wan1g.link().loss, LossModel::None);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! `ltp` — CLI entrypoint for the LTP reproduction.
 //!
 //! ```text
+//! ltp scenario <name|list|all> [--json] [--seed N] [--quick]
 //! ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick]
 //! ltp train [--preset tiny] [--workers 4] [--iters 50] [--loss 0.01]
 //!           [--proto ltp|bbr|cubic|reno]
@@ -148,9 +149,63 @@ fn cmd_bench_ltp(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_scenario(args: &Args) -> Result<()> {
+    use ltp::scenarios::{self, ScenarioParams};
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("list");
+    let params = ScenarioParams { seed: args.flag("seed", 1)?, quick: args.has("quick") };
+    let json = args.has("json");
+    let emit = |report: &ltp::scenarios::ScenarioReport| {
+        if json {
+            println!("{}", report.render_json());
+        } else {
+            report.print_table();
+        }
+    };
+    match which {
+        "list" => {
+            println!("registered scenarios (run with `ltp scenario <name|all> [--json]`):\n");
+            for s in scenarios::registry() {
+                println!(
+                    "  {:<18} {}{}",
+                    s.name,
+                    s.summary,
+                    if s.incast_class { "  [incast-class]" } else { "" }
+                );
+            }
+            Ok(())
+        }
+        "all" => {
+            if json {
+                // One well-formed JSON document: an array of reports.
+                let arr = ltp::metrics::Json::Arr(
+                    scenarios::registry().iter().map(|s| s.run(&params).to_json()).collect(),
+                );
+                println!("{}", arr.render_pretty());
+            } else {
+                for s in scenarios::registry() {
+                    emit(&s.run(&params));
+                }
+            }
+            Ok(())
+        }
+        name => match scenarios::find(name) {
+            Some(s) => {
+                emit(&s.run(&params));
+                Ok(())
+            }
+            None => {
+                let names: Vec<&str> =
+                    scenarios::registry().iter().map(|s| s.name).collect();
+                bail!("unknown scenario `{name}` (known: {})", names.join(", "));
+            }
+        },
+    }
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     match args.positional.first().map(String::as_str) {
+        Some("scenario") => cmd_scenario(&args),
         Some("figure") => {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
             ltp::figures::run(which, args.has("quick"))
@@ -159,7 +214,8 @@ fn main() -> Result<()> {
         Some("bench-ltp") => cmd_bench_ltp(&args),
         _ => {
             eprintln!(
-                "usage:\n  ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick]\n  \
+                "usage:\n  ltp scenario <name|list|all> [--json] [--seed N] [--quick]\n  \
+                 ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick]\n  \
                  ltp train [--preset tiny] [--workers N] [--iters N] [--loss P] [--proto ltp|bbr|cubic|reno]\n  \
                  ltp bench-ltp [--bytes N] [--loss P]"
             );

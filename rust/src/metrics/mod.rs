@@ -1,5 +1,10 @@
 //! Result presentation: markdown tables (the figure runners print the same
-//! rows/series the paper reports) and small series helpers.
+//! rows/series the paper reports), a deterministic JSON value for the
+//! scenario engine's machine-readable reports, and small series helpers.
+
+mod json;
+
+pub use json::Json;
 
 use std::fmt::Write as _;
 

@@ -24,13 +24,29 @@ mod worker;
 pub use blackboard::Blackboard;
 pub use data::Corpus;
 pub use runner::{
-    run_training, run_with, RealCompute, RealTraining, RunReport, TrainingCfg, XlaAggregate,
+    run_training, run_with, BgFlow, BgKind, NetTotals, RealCompute, RealTraining, RunReport,
+    Topo, TrainingCfg, XlaAggregate,
 };
 pub use server::{Aggregate, NullAggregate, PsNode};
 pub use transport::{GatherRx, GatherTx, Proto};
 pub use worker::{Compute, ModeledCompute, WorkerNode, WorkerStats};
 
+use crate::proto::CloseReason;
 use crate::Nanos;
+
+/// One gather-flow close observed by the PS (LTP flows only — TCP gathers
+/// always complete at 100 %). The scenario conformance tests assert the
+/// paper invariant on these records: every non-deadline close delivered
+/// all critical segments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GatherClose {
+    pub iter: u64,
+    pub worker: usize,
+    pub reason: CloseReason,
+    pub criticals_ok: bool,
+    /// Fraction of data segments delivered at close.
+    pub delivered: f64,
+}
 
 /// Per-iteration record collected by the PS.
 #[derive(Debug, Clone, Default)]

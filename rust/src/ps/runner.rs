@@ -1,22 +1,76 @@
-//! Training-run orchestration: build the star topology, attach PS and
-//! workers, run the BSP loop, and collect the report. Supports modeled
+//! Training-run orchestration: build the topology (single-rack star or an
+//! oversubscribed two-rack fabric), attach PS, workers, and any background
+//! flows, run the BSP loop, and collect the report. Supports modeled
 //! compute (paper message sizes + calibrated compute times) and real
 //! compute (PJRT train_step + Pallas masked aggregation).
 
 use super::server::{Aggregate, NullAggregate, PsNode};
 use super::transport::Proto;
 use super::worker::{Compute, ModeledCompute, WorkerNode};
-use super::{Blackboard, Corpus, IterStats};
+use super::{Blackboard, Corpus, GatherClose, IterStats};
+use crate::cc::CcAlgo;
 use crate::config::ModelManifest;
 use crate::grad::{element_mask, Manifest};
 use crate::runtime::{literal_f32, literal_i32, to_f32, Artifact, Runtime};
-use crate::simnet::{LinkCfg, Sim};
+use crate::simnet::{two_rack, CrossTraffic, EntityId, LinkCfg, Node, Sim};
+use crate::tcp::{TcpReceiverNode, TcpSender, TcpSenderNode};
 use crate::util::{Bitmap, Summary};
-use crate::wire::LTP_MSS;
+use crate::wire::{LTP_MSS, TCP_MSS};
 use crate::{Nanos, MS, SEC};
 use anyhow::Result;
 use std::cell::RefCell;
 use std::rc::Rc;
+
+/// Fabric-wide link counters (summed over every link in the topology).
+pub type NetTotals = crate::simnet::LinkStats;
+
+/// Which fabric a training run uses.
+#[derive(Debug, Clone, Copy)]
+pub enum Topo {
+    /// A single ToR star — the paper's testbed.
+    Star,
+    /// Two racks under one aggregation switch. The PS and the first
+    /// `rack0_workers` workers sit in rack 0, the remaining workers in
+    /// rack 1; cross-rack gathers funnel through the `trunk` links
+    /// (size `trunk` below the sum of edge rates for oversubscription).
+    TwoRack { rack0_workers: usize, trunk: LinkCfg },
+}
+
+/// A background flow sharing the fabric with the training job.
+#[derive(Debug, Clone, Copy)]
+pub enum BgKind {
+    /// A reliable TCP bulk transfer between two dedicated hosts.
+    TcpBulk { cc: CcAlgo, bytes: u64 },
+    /// Constant-rate unreliable datagram cross traffic aimed at the PS —
+    /// pure load on the incast-direction bottleneck (the PS ignores the
+    /// packets; the links do not).
+    UdpToPs { rate_bps: u64, pkt_size: u32, stop: Nanos },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BgFlow {
+    pub kind: BgKind,
+    /// Source / destination rack on a [`Topo::TwoRack`] fabric (ignored on
+    /// a star; `UdpToPs` uses only `src_rack`).
+    pub src_rack: usize,
+    pub dst_rack: usize,
+    pub start: Nanos,
+}
+
+impl BgFlow {
+    pub fn tcp_bulk(cc: CcAlgo, bytes: u64) -> BgFlow {
+        BgFlow { kind: BgKind::TcpBulk { cc, bytes }, src_rack: 1, dst_rack: 0, start: 0 }
+    }
+
+    pub fn udp_to_ps(rate_bps: u64, stop: Nanos) -> BgFlow {
+        BgFlow {
+            kind: BgKind::UdpToPs { rate_bps, pkt_size: 1500, stop },
+            src_rack: 1,
+            dst_rack: 0,
+            start: 0,
+        }
+    }
+}
 
 /// A training-run configuration.
 pub struct TrainingCfg {
@@ -38,6 +92,10 @@ pub struct TrainingCfg {
     pub seed: u64,
     /// Wall-clock cap on the simulation.
     pub horizon: Nanos,
+    /// Fabric topology (star unless a scenario says otherwise).
+    pub topo: Topo,
+    /// Background flows sharing the fabric.
+    pub bg: Vec<BgFlow>,
 }
 
 impl TrainingCfg {
@@ -58,6 +116,8 @@ impl TrainingCfg {
             batches_per_epoch: 10,
             seed: 1,
             horizon: 3600 * SEC,
+            topo: Topo::Star,
+            bg: vec![],
         }
     }
 }
@@ -70,6 +130,17 @@ pub struct RunReport {
     pub total_time: Nanos,
     /// Mean per-worker gather times (incast direction).
     pub gather_summary: Summary,
+    /// Fabric-wide link counters (drops, marks, bytes — every link summed).
+    pub net: NetTotals,
+    /// Gather-direction packets retransmitted, summed over workers.
+    pub retransmits: u64,
+    /// Gather-direction packets sent, summed over workers (denominator
+    /// for a cross-protocol retransmit rate).
+    pub gather_pkts: u64,
+    /// Per-flow LTP gather close records (empty for TCP runs).
+    pub closes: Vec<GatherClose>,
+    /// Per background flow: bytes delivered (TCP bulk) or injected (UDP).
+    pub bg_bytes: Vec<u64>,
 }
 
 impl RunReport {
@@ -114,6 +185,12 @@ pub fn run_training(cfg: &TrainingCfg) -> RunReport {
     run_with(cfg, |_, _| Box::new(ModeledCompute(cfg.compute_time)), Box::new(NullAggregate(cfg.agg_time)))
 }
 
+/// How a background flow is observed after the run.
+enum BgHandle {
+    Tcp { rx_host: EntityId, flow: u64 },
+    Udp { src_host: EntityId },
+}
+
 /// Run with custom compute/aggregation backends (real training uses this).
 pub fn run_with(
     cfg: &TrainingCfg,
@@ -122,14 +199,19 @@ pub fn run_with(
 ) -> RunReport {
     let report: Rc<RefCell<Vec<IterStats>>> = Rc::new(RefCell::new(Vec::new()));
     let mut sim = Sim::new(cfg.seed);
-    let sw = sim.add_switch(cfg.switch_delay);
-    // PS is entity 1 (first host), workers follow.
     let tracker = crate::proto::ThresholdTracker::new(
         cfg.n_workers,
         cfg.deadline_slack,
         cfg.pct_threshold,
     );
-    let worker_ids: Vec<usize> = (0..cfg.n_workers).map(|w| 2 + w).collect();
+    // Entity-id layout is deterministic per topology: switches first, then
+    // the PS, then workers in index order (background hosts come last).
+    let first_host = match cfg.topo {
+        Topo::Star => 1,            // switch 0
+        Topo::TwoRack { .. } => 3,  // agg 0, tor0 1, tor1 2
+    };
+    let ps_id: EntityId = first_host;
+    let worker_ids: Vec<usize> = (0..cfg.n_workers).map(|w| first_host + 1 + w).collect();
     let ps = PsNode::new(
         worker_ids.clone(),
         cfg.proto,
@@ -141,11 +223,9 @@ pub fn run_with(
         cfg.batches_per_epoch,
         report.clone(),
     );
-    let ps_id = sim.add_host(Box::new(ps));
-    let (ps_up, _) = sim.add_duplex(ps_id, sw, cfg.link);
-    sim.set_default_uplink(ps_id, ps_up);
+    let mut nodes: Vec<Box<dyn Node>> = vec![Box::new(ps)];
     for w in 0..cfg.n_workers {
-        let node = WorkerNode::new(
+        nodes.push(Box::new(WorkerNode::new(
             w,
             ps_id,
             cfg.n_workers,
@@ -154,25 +234,111 @@ pub fn run_with(
             cfg.critical.clone(),
             make_compute(w, cfg),
             cfg.iters,
-        );
-        let id = sim.add_host(Box::new(node));
-        debug_assert_eq!(id, worker_ids[w]);
-        let (up, _) = sim.add_duplex(id, sw, cfg.link);
-        sim.set_default_uplink(id, up);
+        )));
     }
-    sim.run_until(cfg.horizon);
+    // Build the fabric and remember how to attach late (background) hosts.
+    enum Fabric {
+        Star { sw: EntityId },
+        TwoRack(crate::simnet::TwoRackTopology),
+    }
+    let fabric = match cfg.topo {
+        Topo::Star => {
+            let topo = crate::simnet::star(&mut sim, nodes, cfg.link, cfg.switch_delay);
+            debug_assert_eq!(topo.hosts[0], ps_id);
+            Fabric::Star { sw: topo.switch }
+        }
+        Topo::TwoRack { rack0_workers, trunk } => {
+            let rack0_n = rack0_workers.min(cfg.n_workers);
+            let mut it = nodes.into_iter();
+            let rack0: Vec<Box<dyn Node>> = it.by_ref().take(1 + rack0_n).collect();
+            let rack1: Vec<Box<dyn Node>> = it.collect();
+            let topo = two_rack(&mut sim, [rack0, rack1], cfg.link, trunk, cfg.switch_delay);
+            debug_assert_eq!(topo.hosts[0], ps_id);
+            Fabric::TwoRack(topo)
+        }
+    };
+    debug_assert!(worker_ids.last().map(|&w| w < sim.entity_count()).unwrap_or(true));
+    // Attach one host for `node` in `rack` (rack ignored on a star).
+    let mut attach = |sim: &mut Sim, node: Box<dyn Node>, rack: usize| -> EntityId {
+        let h = sim.add_host(node);
+        match &fabric {
+            Fabric::Star { sw } => {
+                let (up, _) = sim.add_duplex(h, *sw, cfg.link);
+                sim.set_default_uplink(h, up);
+            }
+            Fabric::TwoRack(t) => {
+                let r = rack.min(1);
+                let (up, _) = sim.add_duplex(h, t.tors[r], cfg.link);
+                sim.set_default_uplink(h, up);
+                sim.set_route(t.agg, h, t.trunk_down[r]);
+            }
+        }
+        h
+    };
+    let mut bg_handles: Vec<BgHandle> = Vec::new();
+    for (i, bg) in cfg.bg.iter().enumerate() {
+        match bg.kind {
+            BgKind::TcpBulk { cc, bytes } => {
+                // Flow ids far above the training range (iters * 2W).
+                let flow = 1_000_000 + i as u64;
+                let rx_host = attach(&mut sim, Box::new(TcpReceiverNode::new()), bg.dst_rack);
+                let snd = TcpSender::new(flow, bytes, TCP_MSS, cc.build(TCP_MSS));
+                let snd_node = TcpSenderNode::new(snd, rx_host).with_start(bg.start);
+                attach(&mut sim, Box::new(snd_node), bg.src_rack);
+                bg_handles.push(BgHandle::Tcp { rx_host, flow });
+            }
+            BgKind::UdpToPs { rate_bps, pkt_size, stop } => {
+                let node = CrossTraffic::new(ps_id, rate_bps, pkt_size, stop)
+                    .with_start(bg.start);
+                let src_host = attach(&mut sim, Box::new(node), bg.src_rack);
+                bg_handles.push(BgHandle::Udp { src_host });
+            }
+        }
+    }
+    // Run in slices so the simulation stops as soon as training completes
+    // (long-lived background flows would otherwise keep the event queue
+    // busy until the horizon).
+    let slice = 100 * MS;
+    let mut until = slice;
+    loop {
+        sim.run_until(until.min(cfg.horizon));
+        let done = report.borrow().len() as u64 >= cfg.iters;
+        if done || sim.is_idle() || until >= cfg.horizon {
+            break;
+        }
+        until += slice;
+    }
     let total_time = report.borrow().last().map(|i| i.end).unwrap_or(sim.now());
     let mut gathers = Vec::new();
+    let mut retransmits = 0;
+    let mut gather_pkts = 0;
     for &w in &worker_ids {
         let node = sim.node_as::<WorkerNode>(w);
         gathers.extend(node.stats.gather_times.iter().map(|&t| t as f64 / MS as f64));
+        retransmits += node.stats.retransmissions;
+        gather_pkts += node.stats.pkts_sent;
     }
+    let closes = sim.node_as::<PsNode>(ps_id).closes.clone();
+    let bg_bytes: Vec<u64> = bg_handles
+        .iter()
+        .map(|h| match h {
+            BgHandle::Tcp { rx_host, flow } => {
+                sim.node_as::<TcpReceiverNode>(*rx_host).bytes_received(*flow)
+            }
+            BgHandle::Udp { src_host } => sim.node_as::<CrossTraffic>(*src_host).sent_bytes,
+        })
+        .collect();
     let iters = report.borrow().clone();
     RunReport {
         proto: cfg.proto.name(),
         iters,
         total_time,
         gather_summary: Summary::of(&gathers),
+        net: sim.total_link_stats(),
+        retransmits,
+        gather_pkts,
+        closes,
+        bg_bytes,
     }
 }
 
@@ -396,5 +562,64 @@ mod tests {
         let report = run_training(&quick_cfg(Proto::Ltp));
         let tp = report.throughput(4, 32);
         assert!(tp > 0.0);
+    }
+
+    #[test]
+    fn report_carries_net_totals_and_closes() {
+        let mut cfg = quick_cfg(Proto::Ltp);
+        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.02 });
+        let report = run_training(&cfg);
+        assert_eq!(report.iters.len(), 3);
+        assert!(report.net.tx_pkts > 0 && report.net.tx_bytes > 0);
+        assert!(report.net.drops_random > 0, "2% wire loss must drop packets");
+        // One close record per (worker, iteration) gather flow.
+        assert_eq!(report.closes.len(), 4 * 3, "closes: {:?}", report.closes);
+        assert!(report.retransmits > 0, "loss must force gather retransmissions");
+        // TCP runs produce no LTP close records.
+        let mut tcfg = quick_cfg(Proto::Tcp(CcAlgo::Reno));
+        tcfg.iters = 2;
+        assert!(run_training(&tcfg).closes.is_empty());
+    }
+
+    #[test]
+    fn two_rack_training_completes_over_oversubscribed_trunk() {
+        let mut cfg = quick_cfg(Proto::Ltp);
+        // 2 workers in rack 0 with the PS, 2 in rack 1; the trunk carries
+        // rack 1's gathers at the same rate as one edge (2:1 oversub).
+        cfg.topo = Topo::TwoRack { rack0_workers: 2, trunk: cfg.link };
+        let report = run_training(&cfg);
+        assert_eq!(report.iters.len(), 3, "two-rack BSP must complete");
+        assert!(report.mean_bst() > 0);
+        assert!(report.mean_delivered() > 0.8);
+    }
+
+    #[test]
+    fn udp_cross_traffic_slows_training_but_never_stalls_it() {
+        let base = quick_cfg(Proto::Ltp);
+        let clean = run_training(&base);
+
+        let mut cfg = quick_cfg(Proto::Ltp);
+        // 8 Gbps of background datagrams into the PS's 10 Gbps downlink.
+        cfg.bg = vec![BgFlow::udp_to_ps(8_000_000_000, 10 * SEC)];
+        let loaded = run_training(&cfg);
+        assert_eq!(loaded.iters.len(), 3, "training must survive cross traffic");
+        assert_eq!(loaded.bg_bytes.len(), 1);
+        assert!(loaded.bg_bytes[0] > 0, "cross traffic must have flowed");
+        assert!(
+            loaded.mean_bst() > clean.mean_bst(),
+            "background load must cost sync time: {} vs {}",
+            loaded.mean_bst(),
+            clean.mean_bst()
+        );
+    }
+
+    #[test]
+    fn tcp_bulk_background_flow_makes_progress() {
+        let mut cfg = quick_cfg(Proto::Ltp);
+        cfg.topo = Topo::TwoRack { rack0_workers: 2, trunk: cfg.link };
+        cfg.bg = vec![BgFlow::tcp_bulk(CcAlgo::Cubic, 50_000_000)];
+        let report = run_training(&cfg);
+        assert_eq!(report.iters.len(), 3);
+        assert!(report.bg_bytes[0] > 0, "bulk flow must deliver bytes");
     }
 }

@@ -8,7 +8,7 @@
 //! advances (a real PS would equally buffer them in its UDP socket).
 
 use super::transport::{GatherRx, GatherTx, Proto};
-use super::IterStats;
+use super::{GatherClose, IterStats};
 use crate::proto::{EarlyCloseCfg, ThresholdTracker};
 use crate::simnet::{Ctx, EntityId, Node, Packet};
 use crate::util::Bitmap;
@@ -75,6 +75,8 @@ pub struct PsNode {
     pub report: Rc<RefCell<Vec<IterStats>>>,
     arrivals: Vec<Option<(Bitmap, u64)>>,
     pub delivered_fractions: Vec<f64>,
+    /// Per-flow close records (LTP gathers only), across all iterations.
+    pub closes: Vec<GatherClose>,
 }
 
 impl PsNode {
@@ -113,6 +115,7 @@ impl PsNode {
             report,
             arrivals: (0..w).map(|_| None).collect(),
             delivered_fractions: vec![],
+            closes: vec![],
         }
     }
 
@@ -222,6 +225,15 @@ impl PsNode {
                         let started = self.gather_started[w].unwrap_or(now);
                         self.tracker.record_flow(w, now - started, rx.reached_full());
                         self.delivered_fractions.push(rx.delivered_fraction());
+                        if let Some((reason, criticals_ok, delivered)) = rx.close_info() {
+                            self.closes.push(GatherClose {
+                                iter: self.iter,
+                                worker: w,
+                                reason,
+                                criticals_ok,
+                                delivered,
+                            });
+                        }
                         self.arrivals[w] = rx.bitmap().map(|b| {
                             (b.clone(), rx.segment_map().map(|m| m.n_segs as u64).unwrap_or(0))
                         });
@@ -336,6 +348,9 @@ impl Node for PsNode {
     }
 
     fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {
+        if matches!(pkt.kind, PacketKind::Raw(_)) {
+            return; // background cross traffic: pure link load, no protocol
+        }
         let now = ctx.now();
         let (w, is_gather) = self.worker_of_flow(pkt.flow);
         if w >= self.n() {

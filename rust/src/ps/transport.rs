@@ -112,6 +112,22 @@ impl GatherTx {
             GatherTx::Tcp(_) => None,
         }
     }
+
+    /// Retransmitted packets so far on this flow (either transport).
+    pub fn retransmissions(&self) -> u64 {
+        match self {
+            GatherTx::Ltp(s) => s.stats.retransmissions,
+            GatherTx::Tcp(s) => s.stats.retransmissions,
+        }
+    }
+
+    /// Packets sent so far on this flow (either transport).
+    pub fn pkts_sent(&self) -> u64 {
+        match self {
+            GatherTx::Ltp(s) => s.stats.pkts_sent,
+            GatherTx::Tcp(s) => s.stats.pkts_sent,
+        }
+    }
 }
 
 /// Receiving side of one flow.
@@ -221,6 +237,17 @@ impl GatherRx {
     /// the LT-threshold epoch update rule.
     pub fn reached_full(&self) -> bool {
         self.delivered_fraction() >= 1.0 - 1e-12
+    }
+
+    /// LTP close record once the flow is done: `(reason, criticals_ok,
+    /// delivered fraction)`. `None` for TCP flows or before close.
+    pub fn close_info(&self) -> Option<(crate::proto::CloseReason, bool, f64)> {
+        match self {
+            GatherRx::Ltp { rx, .. } => {
+                rx.close_reason().map(|r| (r, rx.stats.criticals_ok, rx.pct_received()))
+            }
+            GatherRx::Tcp { .. } => None,
+        }
     }
 
     /// Arrival bitmap (LTP) for bubble-filling; None for TCP (everything

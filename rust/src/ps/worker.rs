@@ -4,6 +4,7 @@
 use super::transport::{GatherRx, GatherTx, Proto};
 use crate::proto::EarlyCloseCfg;
 use crate::simnet::{Ctx, EntityId, Node, Packet};
+use crate::wire::PacketKind;
 use crate::Nanos;
 
 /// The local computation a worker performs each iteration. Returns the
@@ -38,6 +39,10 @@ pub struct WorkerStats {
     pub gathers_completed: u64,
     pub gather_times: Vec<Nanos>,
     pub broadcast_times: Vec<Nanos>,
+    /// Packets retransmitted across all completed gather flows.
+    pub retransmissions: u64,
+    /// Packets sent across all completed gather flows.
+    pub pkts_sent: u64,
 }
 
 pub struct WorkerNode {
@@ -150,6 +155,8 @@ impl WorkerNode {
                 self.bcast_started = now;
                 self.stats.gathers_completed += 1;
                 self.stats.gather_times.push(now - self.gather_started);
+                self.stats.retransmissions += tx.retransmissions();
+                self.stats.pkts_sent += tx.pkts_sent();
                 self.path = tx.path_estimates().or(self.path);
             }
         }
@@ -199,6 +206,9 @@ impl Node for WorkerNode {
     }
 
     fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {
+        if matches!(pkt.kind, PacketKind::Raw(_)) {
+            return; // background cross traffic: pure link load, no protocol
+        }
         let now = ctx.now();
         let me = ctx.me;
         let per_iter = 2 * self.n_workers as u64;

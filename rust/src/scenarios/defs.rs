@@ -1,0 +1,154 @@
+//! Scenario builders: each assembles `TrainingCfg`s (topology, loss,
+//! background traffic, protocol matrix), runs them, and returns the
+//! distilled cases. All sizes have a `quick` variant so the CI conformance
+//! matrix stays interactive.
+//!
+//! Conventions: every incast-class scenario runs the same condition under
+//! LTP **and** TCP Reno (the kernel-default baseline the paper leads
+//! with), labeled `<proto>/w<degree>`, so the conformance test can pair
+//! them by worker count.
+
+use super::{CaseResult, ScenarioParams};
+use crate::cc::CcAlgo;
+use crate::config::{NetEnv, Workload};
+use crate::grad::Manifest;
+use crate::ps::{run_training, BgFlow, Proto, Topo, TrainingCfg};
+use crate::simnet::LossModel;
+use crate::wire::LTP_MSS;
+use crate::{Nanos, SEC};
+
+/// The two-protocol matrix every incast-class scenario runs.
+const MATRIX: [Proto; 2] = [Proto::Ltp, Proto::Tcp(CcAlgo::Reno)];
+
+/// A modeled config with scenario-appropriate sizing: `bytes` gradient
+/// bytes per worker per iteration, scenario-seeded, bounded horizon.
+fn base_cfg(proto: Proto, workers: usize, bytes: u64, p: &ScenarioParams) -> TrainingCfg {
+    let mut cfg = TrainingCfg::modeled(proto, Workload::Micro, workers);
+    cfg.seed = p.seed;
+    // ≥3 iterations so the means are not dominated by iteration 0, where
+    // LTP's thresholds are still bootstrapping (reliable-mode gathers).
+    cfg.iters = if p.quick { 3 } else { 4 };
+    cfg.model_bytes = bytes;
+    cfg.critical =
+        Manifest::synthetic(bytes, 20).critical_segments(Manifest::aligned_payload(LTP_MSS));
+    cfg.batches_per_epoch = 2; // exercise one epoch-threshold update
+    cfg.horizon = 600 * SEC;
+    cfg
+}
+
+/// Total incast volume per iteration, split across the workers — keeps the
+/// degree sweep's cost flat as the degree grows.
+fn per_worker_bytes(workers: usize, p: &ScenarioParams) -> u64 {
+    let total: u64 = if p.quick { 8_000_000 } else { 32_000_000 };
+    (total / workers as u64).max(64 * 1024)
+}
+
+fn run_case(label: String, workers: usize, cfg: &TrainingCfg) -> CaseResult {
+    CaseResult::from_report(label, workers, &run_training(cfg))
+}
+
+/// `incast_sweep`: N→1 incast at degrees 2..64 under 0.5 % wire loss.
+pub(super) fn incast_sweep(p: &ScenarioParams) -> Vec<CaseResult> {
+    let degrees: &[usize] = if p.quick { &[2, 8, 32] } else { &[2, 4, 8, 16, 32, 64] };
+    let mut out = Vec::new();
+    for &w in degrees {
+        for proto in MATRIX {
+            let mut cfg = base_cfg(proto, w, per_worker_bytes(w, p), p);
+            cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.005 });
+            out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+        }
+    }
+    out
+}
+
+/// `incast_heavy_loss`: the paper's headline regime — 8→1 incast with 2 %
+/// non-congestion loss, where loss-based TCP collapses.
+pub(super) fn incast_heavy_loss(p: &ScenarioParams) -> Vec<CaseResult> {
+    let w = 8;
+    let mut out = Vec::new();
+    for proto in MATRIX {
+        let mut cfg = base_cfg(proto, w, per_worker_bytes(w, p), p);
+        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.02 });
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+    }
+    out
+}
+
+/// `rack_oversub`: 8 workers split across two racks behind an aggregation
+/// switch whose trunk carries rack 1's four edges at 1× edge rate (4:1
+/// oversubscription), plus light wire loss.
+pub(super) fn rack_oversub(p: &ScenarioParams) -> Vec<CaseResult> {
+    let w = 8;
+    let mut out = Vec::new();
+    for proto in MATRIX {
+        let mut cfg = base_cfg(proto, w, per_worker_bytes(w, p), p);
+        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.002 });
+        // Trunk: same rate as one edge, deeper buffer (a real agg port).
+        let trunk = cfg.link.with_queue(2 * 1024 * 1024);
+        cfg.topo = Topo::TwoRack { rack0_workers: 4, trunk };
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+    }
+    out
+}
+
+/// `wan_bursty`: 4 edge workers on a 1 Gbps / 40 ms RTT WAN with
+/// Gilbert–Elliott loss bursts (the federated-learning regime).
+pub(super) fn wan_bursty(p: &ScenarioParams) -> Vec<CaseResult> {
+    let w = 4;
+    let bytes: u64 = if p.quick { 1_000_000 } else { 2_000_000 };
+    let mut out = Vec::new();
+    for proto in MATRIX {
+        let mut cfg = base_cfg(proto, w, bytes, p);
+        cfg.link = NetEnv::WanBursty.link();
+        cfg.deadline_slack = NetEnv::WanBursty.deadline_slack();
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+    }
+    out
+}
+
+/// `cross_traffic`: 8→1 incast on a clean fabric whose PS downlink also
+/// carries 4 Gbps of background datagrams — congestion-only pressure.
+pub(super) fn cross_traffic(p: &ScenarioParams) -> Vec<CaseResult> {
+    let w = 8;
+    const BG_RATE: u64 = 4_000_000_000; // 40 % of the 10 Gbps bottleneck
+    const BG_STOP: Nanos = 30 * SEC;
+    let mut out = Vec::new();
+    for proto in MATRIX {
+        let mut cfg = base_cfg(proto, w, per_worker_bytes(w, p), p);
+        cfg.bg = vec![BgFlow::udp_to_ps(BG_RATE, BG_STOP)];
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+    }
+    out
+}
+
+/// `coexist_ltp_tcp`: training shares an oversubscribed two-rack trunk
+/// with a cubic bulk transfer — the mixed-protocol datacenter case.
+pub(super) fn coexist_ltp_tcp(p: &ScenarioParams) -> Vec<CaseResult> {
+    let w = 8;
+    let bulk_bytes: u64 = if p.quick { 50_000_000 } else { 200_000_000 };
+    let mut out = Vec::new();
+    for proto in MATRIX {
+        let mut cfg = base_cfg(proto, w, per_worker_bytes(w, p), p);
+        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.002 });
+        let trunk = cfg.link.with_queue(2 * 1024 * 1024);
+        cfg.topo = Topo::TwoRack { rack0_workers: 4, trunk };
+        cfg.bg = vec![BgFlow::tcp_bulk(CcAlgo::Cubic, bulk_bytes)];
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+    }
+    out
+}
+
+/// `wan_clean`: lossless 1 Gbps WAN calibration — no invariant asserted,
+/// this pins the baseline the lossy WAN scenarios are read against.
+pub(super) fn wan_clean(p: &ScenarioParams) -> Vec<CaseResult> {
+    let w = 4;
+    let bytes: u64 = if p.quick { 1_000_000 } else { 2_000_000 };
+    let mut out = Vec::new();
+    for proto in MATRIX {
+        let mut cfg = base_cfg(proto, w, bytes, p);
+        cfg.link = NetEnv::Wan1g.link();
+        cfg.deadline_slack = NetEnv::Wan1g.deadline_slack();
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+    }
+    out
+}

@@ -1,0 +1,322 @@
+//! The **scenario engine**: a registry of named, config-driven end-to-end
+//! experiments over the LTP training stack (DESIGN.md §4.3).
+//!
+//! Each registered [`Scenario`] assembles a topology ([`crate::simnet`]),
+//! a protocol matrix ([`crate::ps::Proto`]), loss/traffic conditions
+//! ([`crate::config`], [`crate::ps::BgFlow`]), runs the BSP training loop,
+//! and distills every run into a [`CaseResult`]. The whole report is
+//! seed-reproducible down to the serialized bytes: the same
+//! [`ScenarioParams::seed`] yields a byte-identical JSON report
+//! ([`ScenarioReport::render_json`]).
+//!
+//! The registry doubles as a **conformance matrix**: the integration test
+//! `rust/tests/scenarios.rs` iterates [`registry`] and asserts the paper's
+//! invariants per scenario —
+//!
+//! * on incast-class scenarios, LTP's mean batch-synchronization time is
+//!   no worse than the TCP baseline's (the paper's headline claim), and
+//! * every non-deadline Early Close delivered all critical segments
+//!   (paper §III-E).
+//!
+//! Adding a network condition is one registry entry (plus its builder in
+//! [`defs`]); the conformance test picks it up automatically, so protocol
+//! regressions surface as named scenario failures rather than silent
+//! figure drift.
+
+mod defs;
+
+use crate::metrics::{Json, Table};
+use crate::proto::CloseReason;
+use crate::ps::RunReport;
+use crate::util::Summary;
+use crate::MS;
+
+/// Engine-wide run parameters (everything else is per-scenario config).
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioParams {
+    /// Master seed: every simulation in the scenario derives from it.
+    pub seed: u64,
+    /// Shrink message sizes / sweep points for interactive & CI runs.
+    pub quick: bool,
+}
+
+impl Default for ScenarioParams {
+    fn default() -> ScenarioParams {
+        ScenarioParams { seed: 1, quick: false }
+    }
+}
+
+/// A named, registered scenario.
+pub struct Scenario {
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// Incast-class scenarios must satisfy the paper invariant
+    /// "LTP mean BST ≤ the TCP baseline's" (asserted by the conformance
+    /// test); calibration scenarios opt out.
+    pub incast_class: bool,
+    cases: fn(&ScenarioParams) -> Vec<CaseResult>,
+}
+
+impl Scenario {
+    pub fn run(&self, p: &ScenarioParams) -> ScenarioReport {
+        ScenarioReport {
+            name: self.name.to_string(),
+            seed: p.seed,
+            quick: p.quick,
+            incast_class: self.incast_class,
+            cases: (self.cases)(p),
+        }
+    }
+}
+
+/// The scenario registry. Append entries here (and their builders in
+/// `defs.rs`); everything else — CLI, JSON, conformance tests — follows.
+pub const REGISTRY: &[Scenario] = &[
+    Scenario {
+        name: "incast_sweep",
+        summary: "N→1 incast degree sweep (2..64 workers) under light wire loss, LTP vs Reno",
+        incast_class: true,
+        cases: defs::incast_sweep,
+    },
+    Scenario {
+        name: "incast_heavy_loss",
+        summary: "8→1 incast at 2% non-congestion loss — the paper's headline regime",
+        incast_class: true,
+        cases: defs::incast_heavy_loss,
+    },
+    Scenario {
+        name: "rack_oversub",
+        summary: "two racks under one aggregation switch, 4:1 oversubscribed trunk",
+        incast_class: true,
+        cases: defs::rack_oversub,
+    },
+    Scenario {
+        name: "wan_bursty",
+        summary: "1 Gbps / 40 ms WAN with Gilbert–Elliott loss bursts (federated edge)",
+        incast_class: true,
+        cases: defs::wan_bursty,
+    },
+    Scenario {
+        name: "cross_traffic",
+        summary: "incast sharing the PS bottleneck with constant-rate background datagrams",
+        incast_class: true,
+        cases: defs::cross_traffic,
+    },
+    Scenario {
+        name: "coexist_ltp_tcp",
+        summary: "LTP training and a TCP bulk flow coexisting on an oversubscribed trunk",
+        incast_class: true,
+        cases: defs::coexist_ltp_tcp,
+    },
+    Scenario {
+        name: "wan_clean",
+        summary: "clean 1 Gbps WAN calibration run (no loss; no invariant asserted)",
+        incast_class: false,
+        cases: defs::wan_clean,
+    },
+];
+
+/// The registry (function form, for iteration symmetry with `find`).
+pub fn registry() -> &'static [Scenario] {
+    REGISTRY
+}
+
+/// Look a scenario up by name.
+pub fn find(name: &str) -> Option<&'static Scenario> {
+    REGISTRY.iter().find(|s| s.name == name)
+}
+
+/// One (topology, protocol, degree) run distilled for the report.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    /// E.g. `ltp/w8`.
+    pub label: String,
+    pub proto: String,
+    pub workers: usize,
+    /// BSP iterations completed within the horizon.
+    pub iters: usize,
+    pub mean_bst_ms: f64,
+    pub p50_bst_ms: f64,
+    pub p99_bst_ms: f64,
+    /// Mean fraction of gradient data delivered (1.0 = lossless).
+    pub mean_delivered: f64,
+    pub drops_queue: u64,
+    pub drops_random: u64,
+    /// Gather-direction retransmitted packets, all workers.
+    pub retransmits: u64,
+    /// Gather-direction packets sent, all workers (retransmit-rate
+    /// denominator).
+    pub gather_pkts: u64,
+    /// LTP gather closes that were not deadline-forced.
+    pub nondeadline_closes: u64,
+    pub deadline_closes: u64,
+    /// True iff every non-deadline close delivered all critical segments
+    /// (vacuously true for TCP).
+    pub criticals_ok: bool,
+    /// Bytes moved by background flows during the run (0 if none).
+    pub bg_bytes: u64,
+    pub total_time_ms: f64,
+}
+
+impl CaseResult {
+    /// Distill a finished training run.
+    pub fn from_report(label: impl Into<String>, workers: usize, r: &RunReport) -> CaseResult {
+        let bst = Summary::of(&r.bst_values_ms());
+        let nondeadline =
+            r.closes.iter().filter(|c| c.reason != CloseReason::Deadline).count() as u64;
+        let deadline = r.closes.len() as u64 - nondeadline;
+        let criticals_ok = r
+            .closes
+            .iter()
+            .filter(|c| c.reason != CloseReason::Deadline)
+            .all(|c| c.criticals_ok);
+        CaseResult {
+            label: label.into(),
+            proto: r.proto.clone(),
+            workers,
+            iters: r.iters.len(),
+            mean_bst_ms: bst.mean,
+            p50_bst_ms: bst.p50,
+            p99_bst_ms: bst.p99,
+            mean_delivered: r.mean_delivered(),
+            drops_queue: r.net.drops_queue,
+            drops_random: r.net.drops_random,
+            retransmits: r.retransmits,
+            gather_pkts: r.gather_pkts,
+            nondeadline_closes: nondeadline,
+            deadline_closes: deadline,
+            criticals_ok,
+            bg_bytes: r.bg_bytes.iter().sum(),
+            total_time_ms: r.total_time as f64 / MS as f64,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", self.label.as_str().into()),
+            ("proto", self.proto.as_str().into()),
+            ("workers", self.workers.into()),
+            ("iters", self.iters.into()),
+            ("mean_bst_ms", self.mean_bst_ms.into()),
+            ("p50_bst_ms", self.p50_bst_ms.into()),
+            ("p99_bst_ms", self.p99_bst_ms.into()),
+            ("mean_delivered", self.mean_delivered.into()),
+            ("drops_queue", self.drops_queue.into()),
+            ("drops_random", self.drops_random.into()),
+            ("retransmits", self.retransmits.into()),
+            ("gather_pkts", self.gather_pkts.into()),
+            ("nondeadline_closes", self.nondeadline_closes.into()),
+            ("deadline_closes", self.deadline_closes.into()),
+            ("criticals_ok", self.criticals_ok.into()),
+            ("bg_bytes", self.bg_bytes.into()),
+            ("total_time_ms", self.total_time_ms.into()),
+        ])
+    }
+}
+
+/// A scenario's full, deterministic result.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub seed: u64,
+    pub quick: bool,
+    pub incast_class: bool,
+    pub cases: Vec<CaseResult>,
+}
+
+impl ScenarioReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", self.name.as_str().into()),
+            ("seed", self.seed.into()),
+            ("quick", self.quick.into()),
+            ("incast_class", self.incast_class.into()),
+            ("cases", Json::Arr(self.cases.iter().map(|c| c.to_json()).collect())),
+        ])
+    }
+
+    /// Pretty JSON; byte-identical across runs with the same seed.
+    pub fn render_json(&self) -> String {
+        self.to_json().render_pretty()
+    }
+
+    /// `(ltp, baseline)` case pairs matched by worker count — the unit the
+    /// incast-class invariant is checked over.
+    pub fn invariant_pairs(&self) -> Vec<(&CaseResult, &CaseResult)> {
+        let mut out = Vec::new();
+        for l in self.cases.iter().filter(|c| c.proto == "ltp") {
+            if let Some(b) =
+                self.cases.iter().find(|c| c.proto != "ltp" && c.workers == l.workers)
+            {
+                out.push((l, b));
+            }
+        }
+        out
+    }
+
+    /// Human-readable table (mirrors the JSON fields that matter).
+    pub fn print_table(&self) {
+        let mut t = Table::new(vec![
+            "case",
+            "iters",
+            "mean BST(ms)",
+            "p99 BST(ms)",
+            "delivered",
+            "drops q/r",
+            "retx",
+            "criticals",
+        ]);
+        for c in &self.cases {
+            t.row(vec![
+                c.label.clone(),
+                c.iters.to_string(),
+                format!("{:.2}", c.mean_bst_ms),
+                format!("{:.2}", c.p99_bst_ms),
+                format!("{:.1}%", c.mean_delivered * 100.0),
+                format!("{}/{}", c.drops_queue, c.drops_random),
+                c.retransmits.to_string(),
+                if c.criticals_ok { "ok".to_string() } else { "LOST".to_string() },
+            ]);
+        }
+        t.emit(
+            &format!("scenario_{}", self.name),
+            &format!("Scenario `{}` (seed {})", self.name, self.seed),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_well_formed() {
+        assert!(REGISTRY.len() >= 6, "need ≥6 scenarios, have {}", REGISTRY.len());
+        let mut names: Vec<&str> = REGISTRY.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), REGISTRY.len(), "scenario names must be unique");
+        assert!(find("incast_sweep").is_some());
+        assert!(find("no_such_scenario").is_none());
+    }
+
+    #[test]
+    fn case_result_distills_report() {
+        use crate::config::Workload;
+        use crate::ps::{run_training, Proto, TrainingCfg};
+        use crate::simnet::LossModel;
+        let mut cfg = TrainingCfg::modeled(Proto::Ltp, Workload::Micro, 2);
+        cfg.iters = 2;
+        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.01 });
+        let r = run_training(&cfg);
+        let c = CaseResult::from_report("ltp/w2", 2, &r);
+        assert_eq!(c.proto, "ltp");
+        assert_eq!(c.iters, 2);
+        assert!(c.mean_bst_ms > 0.0);
+        assert_eq!(c.nondeadline_closes + c.deadline_closes, r.closes.len() as u64);
+        // JSON carries the same numbers.
+        let json = c.to_json().render();
+        assert!(json.contains("\"label\":\"ltp/w2\""), "{json}");
+        assert!(json.contains("\"workers\":2"), "{json}");
+    }
+}

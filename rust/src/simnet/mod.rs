@@ -16,7 +16,7 @@ mod topo;
 
 pub use link::{Link, LinkCfg, LinkStats, LossModel};
 pub use sim::{Ctx, EntityId, Event, LinkId, Node, Sim};
-pub use topo::{star, StarTopology};
+pub use topo::{star, two_rack, CountingSink, CrossTraffic, StarTopology, TwoRackTopology};
 
 use crate::wire::PacketKind;
 

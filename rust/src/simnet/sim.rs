@@ -298,6 +298,25 @@ impl Sim {
         &self.net.links[link]
     }
 
+    /// True when no events remain — nothing can ever happen again.
+    pub fn is_idle(&self) -> bool {
+        self.net.heap.is_empty()
+    }
+
+    /// Sum of every link's counters (fabric-wide totals for reports).
+    pub fn total_link_stats(&self) -> super::LinkStats {
+        let mut t = super::LinkStats::default();
+        for l in &self.net.links {
+            t.tx_pkts += l.stats.tx_pkts;
+            t.tx_bytes += l.stats.tx_bytes;
+            t.drops_queue += l.stats.drops_queue;
+            t.drops_random += l.stats.drops_random;
+            t.ecn_marks += l.stats.ecn_marks;
+            t.busy += l.stats.busy;
+        }
+        t
+    }
+
     /// Number of entities (hosts + switches).
     pub fn entity_count(&self) -> usize {
         self.net.entities.len()

@@ -1,7 +1,12 @@
-//! Topology builders. The paper's testbed is a single-rack star: 8 workers
-//! and 1 PS behind one ToR switch.
+//! Topology builders and traffic-generator nodes.
+//!
+//! The paper's testbed is a single-rack star (8 workers + 1 PS behind one
+//! ToR switch); the scenario engine additionally needs an oversubscribed
+//! two-rack fabric with an aggregation switch, plus background-traffic
+//! generators that share a bottleneck with the training job.
 
-use super::{EntityId, LinkCfg, LinkId, Node, Sim};
+use super::{Ctx, EntityId, LinkCfg, LinkId, Node, Packet, Sim};
+use crate::wire::PacketKind;
 use crate::Nanos;
 
 /// A star topology built around one switch. `hosts[0]` is conventionally
@@ -33,11 +38,183 @@ pub fn star(sim: &mut Sim, nodes: Vec<Box<dyn Node>>, cfg: LinkCfg, fwd_delay: N
     StarTopology { switch, hosts, uplinks, downlinks }
 }
 
+/// A two-rack topology: two ToR switches under one aggregation switch.
+/// Cross-rack traffic funnels through the (typically oversubscribed)
+/// ToR↔agg links; in-rack traffic stays under its ToR.
+pub struct TwoRackTopology {
+    pub agg: EntityId,
+    /// `tors[r]` is rack r's ToR switch.
+    pub tors: [EntityId; 2],
+    /// All hosts in creation order (rack 0 first).
+    pub hosts: Vec<EntityId>,
+    /// `rack_of[i]` is the rack of `hosts[i]`.
+    pub rack_of: Vec<usize>,
+    /// `trunk_up[r]`: tor r → agg; `trunk_down[r]`: agg → tor r.
+    pub trunk_up: [LinkId; 2],
+    pub trunk_down: [LinkId; 2],
+}
+
+/// Build a two-rack fabric: `racks[r]` holds rack r's host nodes, every
+/// edge link uses `edge`, both ToR↔agg trunks use `trunk` (make
+/// `trunk.rate_bps` smaller than the sum of edge rates for an
+/// oversubscribed fabric). Switches add `fwd_delay` forwarding latency.
+///
+/// Entity-id layout (deterministic): agg, tor0, tor1, then the hosts of
+/// rack 0, then the hosts of rack 1.
+pub fn two_rack(
+    sim: &mut Sim,
+    racks: [Vec<Box<dyn Node>>; 2],
+    edge: LinkCfg,
+    trunk: LinkCfg,
+    fwd_delay: Nanos,
+) -> TwoRackTopology {
+    let agg = sim.add_switch(fwd_delay);
+    let tors = [sim.add_switch(fwd_delay), sim.add_switch(fwd_delay)];
+    let mut trunk_up = [0; 2];
+    let mut trunk_down = [0; 2];
+    for r in 0..2 {
+        let (up, down) = sim.add_duplex(tors[r], agg, trunk);
+        trunk_up[r] = up;
+        trunk_down[r] = down;
+        // Cross-rack traffic leaves the ToR via its trunk by default.
+        sim.set_default_uplink(tors[r], up);
+    }
+    let mut hosts = Vec::new();
+    let mut rack_of = Vec::new();
+    for (r, nodes) in racks.into_iter().enumerate() {
+        for node in nodes {
+            let h = sim.add_host(node);
+            let (up, _down) = sim.add_duplex(h, tors[r], edge);
+            sim.set_default_uplink(h, up);
+            // The agg switch reaches h through rack r's trunk; the ToR's
+            // own (tor → h) exact route was installed by add_duplex.
+            sim.set_route(agg, h, trunk_down[r]);
+            hosts.push(h);
+            rack_of.push(r);
+        }
+    }
+    TwoRackTopology { agg, tors, hosts, rack_of, trunk_up, trunk_down }
+}
+
+/// A constant-rate background datagram source (cross traffic). Emits
+/// `pkt_size`-byte [`PacketKind::Raw`] packets toward `sink` at `rate_bps`
+/// from `start` until `stop`, with optional exponential (Poisson-process)
+/// spacing jitter drawn from the node's deterministic RNG stream.
+///
+/// The packets are fire-and-forget: no ACKs, no retransmission — pure load
+/// on every link of the path, which is exactly what "background cross
+/// traffic sharing the bottleneck" needs. Protocol endpoints ignore
+/// `Raw` packets, so a training PS can itself be the sink (loading the
+/// incast-direction bottleneck link).
+pub struct CrossTraffic {
+    pub sink: EntityId,
+    pub rate_bps: u64,
+    pub pkt_size: u32,
+    pub start: Nanos,
+    pub stop: Nanos,
+    pub jitter: bool,
+    /// Packets emitted so far.
+    pub sent_pkts: u64,
+    pub sent_bytes: u64,
+}
+
+impl CrossTraffic {
+    pub fn new(sink: EntityId, rate_bps: u64, pkt_size: u32, stop: Nanos) -> CrossTraffic {
+        assert!(rate_bps > 0 && pkt_size > 0);
+        CrossTraffic {
+            sink,
+            rate_bps,
+            pkt_size,
+            start: 0,
+            stop,
+            jitter: true,
+            sent_pkts: 0,
+            sent_bytes: 0,
+        }
+    }
+
+    pub fn with_start(mut self, at: Nanos) -> CrossTraffic {
+        self.start = at;
+        self
+    }
+
+    pub fn with_jitter(mut self, jitter: bool) -> CrossTraffic {
+        self.jitter = jitter;
+        self
+    }
+
+    /// Mean inter-packet gap at the configured rate.
+    fn mean_gap(&self) -> Nanos {
+        ((self.pkt_size as u128 * 8 * crate::SEC as u128) / self.rate_bps as u128).max(1) as Nanos
+    }
+
+    fn schedule_next(&mut self, ctx: &mut Ctx) {
+        let gap = if self.jitter {
+            let mean = self.mean_gap() as f64;
+            (ctx.rng().exp(mean) as Nanos).max(1)
+        } else {
+            self.mean_gap()
+        };
+        let at = ctx.now() + gap;
+        if at < self.stop {
+            ctx.set_timer(at, 0);
+        }
+    }
+}
+
+impl Node for CrossTraffic {
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn start(&mut self, ctx: &mut Ctx) {
+        if self.start < self.stop {
+            ctx.set_timer(self.start.max(1), 0);
+        }
+    }
+
+    fn on_packet(&mut self, _ctx: &mut Ctx, _pkt: Packet) {}
+
+    fn on_timer(&mut self, ctx: &mut Ctx, _token: u64) {
+        if ctx.now() >= self.stop {
+            return;
+        }
+        self.sent_pkts += 1;
+        self.sent_bytes += self.pkt_size as u64;
+        let pkt = Packet::new(ctx.me, self.sink, self.pkt_size, u64::MAX, PacketKind::Raw(0));
+        ctx.send(pkt);
+        self.schedule_next(ctx);
+    }
+}
+
+/// A host that counts everything it receives (background-flow sink,
+/// reachability probes).
+#[derive(Default)]
+pub struct CountingSink {
+    pub pkts: u64,
+    pub bytes: u64,
+    /// Arrival time of the most recent packet.
+    pub last_arrival: Nanos,
+}
+
+impl Node for CountingSink {
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {
+        self.pkts += 1;
+        self.bytes += pkt.size as u64;
+        self.last_arrival = ctx.now();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::simnet::{Ctx, Packet};
     use crate::wire::PacketKind;
+    use crate::{MS, SEC};
     use std::cell::RefCell;
     use std::rc::Rc;
 
@@ -84,5 +261,109 @@ mod tests {
         sim.run();
         assert_eq!(*echo_seen.borrow(), 4);
         assert_eq!(*pong.borrow(), 4);
+    }
+
+    #[test]
+    fn two_rack_cross_and_in_rack_reachable() {
+        let echo_seen = Rc::new(RefCell::new(0));
+        let pong = Rc::new(RefCell::new(0));
+        let mut sim = Sim::new(2);
+        // Rack 0: the echo target + one in-rack pinger; rack 1: two
+        // cross-rack pingers. Entity ids: agg 0, tor0 1, tor1 2, hosts 3…
+        let rack0: Vec<Box<dyn Node>> = vec![
+            Box::new(Echo { seen: echo_seen.clone() }),
+            Box::new(Pinger { target: 3, seen: pong.clone() }),
+        ];
+        let rack1: Vec<Box<dyn Node>> = vec![
+            Box::new(Pinger { target: 3, seen: pong.clone() }),
+            Box::new(Pinger { target: 3, seen: pong.clone() }),
+        ];
+        let edge = LinkCfg::dcn(10, 2);
+        let trunk = LinkCfg::dcn(10, 5);
+        let topo = two_rack(&mut sim, [rack0, rack1], edge, trunk, 0);
+        assert_eq!(topo.hosts[0], 3);
+        assert_eq!(topo.rack_of, vec![0, 0, 1, 1]);
+        sim.run();
+        // All three pingers reach the echo host; all get their pong back.
+        assert_eq!(*echo_seen.borrow(), 3);
+        assert_eq!(*pong.borrow(), 3);
+        // Cross-rack traffic used the trunks; in-rack did not need to.
+        assert!(sim.link_stats(topo.trunk_up[1]).tx_pkts >= 2, "rack1 pings cross the trunk");
+        assert!(sim.link_stats(topo.trunk_down[1]).tx_pkts >= 2, "pongs return over the trunk");
+    }
+
+    #[test]
+    fn two_rack_trunk_oversubscription_queues_or_drops() {
+        // 4 rack-1 blasters sending to one rack-0 sink through a trunk with
+        // a quarter of the aggregate edge rate: the trunk must saturate.
+        let mut sim = Sim::new(3);
+        let rack0: Vec<Box<dyn Node>> = vec![Box::new(CountingSink::default())];
+        let mut rack1: Vec<Box<dyn Node>> = Vec::new();
+        for _ in 0..4 {
+            // CrossTraffic at each host's full edge rate toward the sink.
+            rack1.push(Box::new(CrossTraffic::new(3, 10_000_000_000, 1500, 20 * MS)));
+        }
+        let edge = LinkCfg::dcn(10, 2);
+        let trunk = LinkCfg::dcn(10, 5).with_queue(64 * 1024);
+        let topo = two_rack(&mut sim, [rack0, rack1], edge, trunk, 0);
+        sim.run();
+        let up = sim.link_stats(topo.trunk_up[1]);
+        assert!(up.tx_pkts > 0);
+        assert!(
+            up.drops_queue > 0,
+            "4:1 oversubscription at full edge rate must overflow the trunk queue: {up:?}"
+        );
+        let sink = sim.node_as::<CountingSink>(topo.hosts[0]);
+        assert!(sink.pkts > 0, "some cross traffic must get through");
+    }
+
+    #[test]
+    fn cross_traffic_rate_is_calibrated() {
+        // 100 Mbps of 1500 B packets for 1 s ≈ 8333 packets (±10 % with
+        // exponential jitter on a fixed seed).
+        let mut sim = Sim::new(7);
+        let nodes: Vec<Box<dyn Node>> = vec![
+            Box::new(CountingSink::default()),
+            Box::new(CrossTraffic::new(1, 100_000_000, 1500, SEC)),
+        ];
+        let topo = star(&mut sim, nodes, LinkCfg::dcn(10, 2), 0);
+        sim.run();
+        let sink = sim.node_as::<CountingSink>(topo.hosts[0]);
+        let expect = 100_000_000.0 / (1500.0 * 8.0);
+        let got = sink.pkts as f64;
+        assert!(
+            (got - expect).abs() < expect * 0.1,
+            "rate off: got {got} pkts, expected ≈{expect}"
+        );
+    }
+
+    #[test]
+    fn cross_traffic_stops_at_stop_time() {
+        let mut sim = Sim::new(8);
+        let nodes: Vec<Box<dyn Node>> = vec![
+            Box::new(CountingSink::default()),
+            Box::new(CrossTraffic::new(1, 1_000_000_000, 1500, 10 * MS).with_jitter(false)),
+        ];
+        star(&mut sim, nodes, LinkCfg::dcn(10, 2), 0);
+        let end = sim.run();
+        // The last event is the final packet's arrival shortly after stop.
+        assert!(end < 11 * MS, "sim must quiesce right after stop: ended at {end}");
+    }
+
+    #[test]
+    fn cross_traffic_is_deterministic_per_seed() {
+        let run = |seed| {
+            let mut sim = Sim::new(seed);
+            let nodes: Vec<Box<dyn Node>> = vec![
+                Box::new(CountingSink::default()),
+                Box::new(CrossTraffic::new(1, 500_000_000, 1200, 50 * MS)),
+            ];
+            let topo = star(&mut sim, nodes, LinkCfg::dcn(10, 2), 0);
+            sim.run();
+            let sink = sim.node_as::<CountingSink>(topo.hosts[0]);
+            (sink.pkts, sink.last_arrival)
+        };
+        assert_eq!(run(11), run(11));
+        assert_ne!(run(11), run(12));
     }
 }

@@ -124,6 +124,70 @@ mod tests {
     }
 
     #[test]
+    fn empty_bitmap_edge_cases() {
+        let b = Bitmap::new(0);
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+        assert_eq!(b.count_ones(), 0);
+        // Vacuously full: zero of zero bits are set.
+        assert!(b.all_set());
+        assert_eq!(b.iter_zeros().count(), 0);
+        assert_eq!(b.iter_ones().count(), 0);
+        assert!(!b.get(0));
+    }
+
+    #[test]
+    fn word_boundary_last_word_masks() {
+        // Lengths straddling the 64-bit word edges: the last word is
+        // partially used and its mask must not leak phantom bits.
+        for len in [63usize, 64, 65, 127, 128, 129] {
+            let mut b = Bitmap::new(len);
+            for i in 0..len {
+                assert!(b.set(i), "bit {i} of {len} set twice");
+            }
+            assert!(b.all_set(), "len {len} must report full");
+            assert_eq!(b.count_ones(), len);
+            assert_eq!(b.iter_zeros().count(), 0, "len {len} has phantom zeros");
+            // Bits just past the end read as clear, never as set.
+            assert!(!b.get(len));
+            assert!(!b.get(len + 63));
+        }
+    }
+
+    #[test]
+    fn boundary_bits_are_independent() {
+        let mut b = Bitmap::new(130);
+        b.set(63);
+        b.set(64);
+        assert!(b.get(63) && b.get(64));
+        assert!(!b.get(62) && !b.get(65));
+        assert_eq!(b.count_ones(), 2);
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), vec![63, 64]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn set_out_of_range_panics() {
+        Bitmap::new(10).set(10);
+    }
+
+    #[test]
+    fn grow_across_word_boundary_keeps_count() {
+        let mut b = Bitmap::new(64);
+        for i in 0..64 {
+            b.set(i);
+        }
+        assert!(b.all_set());
+        b.grow(65);
+        assert!(!b.all_set(), "growing a full map must unfill it");
+        assert_eq!(b.count_ones(), 64);
+        assert_eq!(b.iter_zeros().collect::<Vec<_>>(), vec![64]);
+        // Growing to a smaller/equal length is a no-op.
+        b.grow(10);
+        assert_eq!(b.len(), 65);
+    }
+
+    #[test]
     fn prop_count_matches_naive() {
         crate::util::proptest::check("bitmap count", |rng| {
             let n = 1 + rng.gen_range(300) as usize;

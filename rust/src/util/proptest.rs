@@ -1,7 +1,21 @@
 //! A minimal randomized property-test harness (the vendored dependency set
 //! has no `proptest`). Properties run a fixed number of deterministic,
-//! seeded cases; on failure the failing seed is printed so the case can be
-//! replayed exactly.
+//! seeded cases; on failure the failing case's **seed and iteration** are
+//! printed to stderr *and* embedded in the panic message, together with the
+//! exact environment variables that replay just that case — so a property
+//! failure in a CI log is reproducible locally with one command.
+//!
+//! Environment knobs:
+//!
+//! * `LTP_PROPTEST_CASES=N` — cases per property (default 128).
+//! * `LTP_PROPTEST_BASE_SEED=0xHEX|N` — override the base seed for every
+//!   property (shift the whole exploration).
+//! * `LTP_PROPTEST_REPLAY=<seed>:<case>` — run exactly one case with the
+//!   given derived seed and case index (what a failure report tells you to
+//!   set).
+//! * `LTP_PROPTEST_REPLAY_NAME=<property>` — scope the replay to one
+//!   property; all others run their normal case sweep (set this when the
+//!   test binary hosts several properties, as the failure report does).
 
 use super::pcg::Pcg64;
 
@@ -10,31 +24,74 @@ pub fn default_cases() -> u64 {
     std::env::var("LTP_PROPTEST_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(128)
 }
 
-/// Run `prop` against `default_cases()` seeded RNGs. The property should
-/// panic (e.g. via `assert!`) on violation. The failing case's seed is
-/// attached to the panic message via a wrapper panic.
-pub fn check<F: Fn(&mut Pcg64)>(name: &str, prop: F) {
-    check_seeded(name, 0xC0FFEE, prop)
+/// Parse a decimal or `0x`-prefixed hex u64.
+fn parse_u64(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
 }
 
-/// Like [`check`] but with an explicit base seed (replay a failure by
-/// passing the printed seed and setting `LTP_PROPTEST_CASES=1`).
+/// `LTP_PROPTEST_REPLAY=<seed>:<case>` — a single (seed, case) to replay.
+fn replay_target() -> Option<(u64, u64)> {
+    let v = std::env::var("LTP_PROPTEST_REPLAY").ok()?;
+    let (seed, case) = v.split_once(':')?;
+    Some((parse_u64(seed)?, parse_u64(case)?))
+}
+
+/// Run `prop` against `default_cases()` seeded RNGs. The property should
+/// panic (e.g. via `assert!`) on violation; the failing case's seed and
+/// iteration are reported on stderr and in the wrapping panic.
+pub fn check<F: Fn(&mut Pcg64)>(name: &str, prop: F) {
+    let base = std::env::var("LTP_PROPTEST_BASE_SEED")
+        .ok()
+        .and_then(|s| parse_u64(&s))
+        .unwrap_or(0xC0FFEE);
+    check_seeded(name, base, prop)
+}
+
+/// Like [`check`] but with an explicit base seed.
 pub fn check_seeded<F: Fn(&mut Pcg64)>(name: &str, base_seed: u64, prop: F) {
+    let replay_applies = match std::env::var("LTP_PROPTEST_REPLAY_NAME") {
+        Ok(target) => target == name,
+        Err(_) => true, // unscoped replay applies everywhere
+    };
+    if replay_applies {
+        if let Some((seed, case)) = replay_target() {
+            eprintln!("proptest `{name}`: replaying case {case} (seed {seed:#x})");
+            run_case(name, &prop, seed, case);
+            return;
+        }
+    }
     let cases = default_cases();
     for case in 0..cases {
         let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
-        let mut rng = Pcg64::new(seed, case);
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            prop(&mut rng);
-        }));
-        if let Err(e) = result {
-            let msg = e
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".to_string());
-            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
-        }
+        run_case(name, &prop, seed, case);
+    }
+}
+
+fn run_case<F: Fn(&mut Pcg64)>(name: &str, prop: &F, seed: u64, case: u64) {
+    let mut rng = Pcg64::new(seed, case);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        prop(&mut rng);
+    }));
+    if let Err(e) = result {
+        let msg = e
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string panic>".to_string());
+        // The CI-log breadcrumb: everything needed to replay this exact
+        // case, independent of the (possibly truncated) panic message.
+        eprintln!(
+            "\nproptest FAILED: property `{name}` at case {case} (seed {seed:#x})\n\
+             replay with: LTP_PROPTEST_REPLAY={seed:#x}:{case} \
+             LTP_PROPTEST_REPLAY_NAME='{name}' cargo test\n\
+             assertion: {msg}\n"
+        );
+        panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
     }
 }
 
@@ -58,5 +115,34 @@ mod tests {
             let v = rng.gen_range(10);
             assert!(v > 100, "v={v} is small");
         });
+    }
+
+    #[test]
+    fn failure_message_carries_seed_and_case() {
+        let result = std::panic::catch_unwind(|| {
+            check_seeded("seeded failure", 0xABCD, |rng| {
+                let _ = rng.next_u32();
+                panic!("boom");
+            })
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Case 0: derived seed == base seed.
+        assert!(msg.contains("case 0"), "{msg}");
+        assert!(msg.contains("seed 0xabcd"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn derived_seed_is_replayable() {
+        // The seed printed for case N must reproduce that case's RNG stream
+        // via Pcg64::new(seed, N) — the exact recipe run_case uses.
+        let base = 0xC0FFEEu64;
+        let case = 5u64;
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut a = Pcg64::new(seed, case);
+        let mut b = Pcg64::new(seed, case);
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 }

@@ -143,7 +143,9 @@ impl LtpHeader {
     }
 
     /// Decode the 9-byte wire form. Quantized fields come back rounded down
-    /// to their unit.
+    /// to their unit. Returns `None` for malformed input: a buffer shorter
+    /// than [`HDR_BYTES`], or nonzero reserved pad bits (the encoder always
+    /// zeroes them, so a set pad bit means corruption or a foreign packet).
     pub fn decode(buf: &[u8]) -> Option<LtpHeader> {
         if buf.len() < HDR_BYTES {
             return None;
@@ -151,6 +153,9 @@ impl LtpHeader {
         let mut bits: u128 = 0;
         for (i, &b) in buf[..HDR_BYTES].iter().enumerate() {
             bits |= (b as u128) << (64 - 8 * i as u32);
+        }
+        if bits & 0xF != 0 {
+            return None; // reserved pad bits must be zero
         }
         bits >>= 4; // drop the pad
         let flow = ((bits >> (68 - 16)) & 0xFFFF) as u16;
@@ -227,6 +232,32 @@ mod tests {
         let d = LtpHeader::decode(&h.encode()).unwrap();
         assert_eq!(d.rtprop_us, 0xFFF * RTPROP_UNIT_US);
         assert_eq!(d.btlbw_mbps, 0xFFF * BTLBW_UNIT_MBPS);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_input() {
+        // Empty and truncated buffers.
+        assert!(LtpHeader::decode(&[]).is_none());
+        for n in 1..HDR_BYTES {
+            assert!(LtpHeader::decode(&vec![0xFFu8; n]).is_none(), "len {n} must be rejected");
+        }
+        // Nonzero reserved pad bits (low 4 bits of the last byte).
+        let mut buf = LtpHeader::ack(7, 9).encode();
+        assert!(LtpHeader::decode(&buf).is_some());
+        buf[HDR_BYTES - 1] |= 0x01;
+        assert!(LtpHeader::decode(&buf).is_none(), "set pad bit must be rejected");
+        buf[HDR_BYTES - 1] |= 0x0F;
+        assert!(LtpHeader::decode(&buf).is_none());
+    }
+
+    #[test]
+    fn decode_ignores_trailing_payload_bytes() {
+        // A real datagram is header + payload; decode must read exactly the
+        // first HDR_BYTES and not be confused by what follows.
+        let h = LtpHeader::data(3, 1234, Importance::Critical);
+        let mut datagram = h.encode().to_vec();
+        datagram.extend_from_slice(&[0xAB; 100]);
+        assert_eq!(LtpHeader::decode(&datagram).unwrap(), h);
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Offline stub of the `xla` PJRT binding used by `ltp::runtime`.
+//!
+//! The real binding links libxla and executes AOT-compiled HLO; this build
+//! environment has no network and no libxla, so this crate provides the
+//! same API surface with:
+//!
+//! * **working host-side literals** ([`Literal::vec1`] / [`Literal::reshape`]
+//!   / [`Literal::to_vec`]) — enough for the runtime's literal plumbing and
+//!   its unit tests, and
+//! * **unavailable execution**: [`PjRtClient::cpu`] and friends return a
+//!   descriptive [`Error`], so every modeled-compute path (the scenario
+//!   engine, figures 2–4/12/14/15, protocol benches) runs normally while
+//!   real-compute paths fail fast with an actionable message.
+//!
+//! Swapping in a real PJRT backend is a one-line change in
+//! `rust/Cargo.toml` (point the `xla` path dependency elsewhere).
+
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error` so `?` converts into
+/// `anyhow::Error` at the call sites).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the XLA/PJRT backend is not vendored in this offline build \
+         (modeled-compute paths — `ltp scenario`, `ltp bench-ltp`, figures \
+         2/3/4/12/14/15 — run without it)"
+    ))
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Element types the stub [`Literal`] can hold.
+pub trait NativeType: Copy + sealed::Sealed {
+    fn literal(data: Vec<Self>) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn literal(data: Vec<Self>) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal::F32 { data, dims }
+    }
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn literal(data: Vec<Self>) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal::I32 { data, dims }
+    }
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not i32: {other:?}"))),
+        }
+    }
+}
+
+/// A host-side literal: flat data plus a shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::literal(data.to_vec())
+    }
+
+    /// Reshape without moving data; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        match self {
+            Literal::F32 { data, .. } => {
+                if data.len() as i64 != numel {
+                    return Err(Error(format!(
+                        "reshape: {} elements do not fit {dims:?}",
+                        data.len()
+                    )));
+                }
+                Ok(Literal::F32 { data: data.clone(), dims: dims.to_vec() })
+            }
+            Literal::I32 { data, .. } => {
+                if data.len() as i64 != numel {
+                    return Err(Error(format!(
+                        "reshape: {} elements do not fit {dims:?}",
+                        data.len()
+                    )));
+                }
+                Ok(Literal::I32 { data: data.clone(), dims: dims.to_vec() })
+            }
+            Literal::Tuple(_) => Err(Error("cannot reshape a tuple literal".to_string())),
+        }
+    }
+
+    /// Flatten back to a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Destructure a tuple literal; a non-tuple is returned as a singleton
+    /// (matching the lenient behavior the runtime relies on).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(v) => Ok(v),
+            other => Ok(vec![other]),
+        }
+    }
+
+    /// The literal's shape.
+    pub fn dims(&self) -> &[i64] {
+        match self {
+            Literal::F32 { dims, .. } | Literal::I32 { dims, .. } => dims,
+            Literal::Tuple(_) => &[],
+        }
+    }
+}
+
+/// Stub PJRT client: construction reports the backend as unavailable.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stub compiled executable (unreachable through the stub client).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub device buffer (unreachable through the stub client).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub HLO module handle.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error(format!(
+            "cannot load HLO text {path:?}: XLA backend not vendored in this offline build"
+        )))
+    }
+}
+
+/// Stub computation handle.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = Literal::vec1(&[5i32, 6, 7]).reshape(&[3, 1]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5, 6, 7]);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn reshape_rejects_bad_shape() {
+        assert!(Literal::vec1(&[1.0f32; 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_destructures() {
+        let t = Literal::Tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+        assert_eq!(Literal::vec1(&[1.0f32]).to_tuple().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn execution_is_unavailable_with_clear_message() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("not vendored"), "{e}");
+    }
+}
