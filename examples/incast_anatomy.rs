@@ -12,7 +12,7 @@ use ltp::MS;
 
 fn main() {
     println!("== Fig 3: the FCT tail under incast (TCP Reno) ==");
-    let (summary, _) = ltp::figures::fig3(true);
+    let (summary, _) = ltp::figures::fig3(true, 1);
     println!("straggler factor (max/p50): {:.2}x\n", summary.max / summary.p50.max(1e-9));
 
     println!("== The same incast as a training workload, per protocol ==");

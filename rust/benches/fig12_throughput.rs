@@ -4,6 +4,7 @@ use std::time::Instant;
 
 fn main() {
     let t0 = Instant::now();
-    let points = ltp::figures::fig12(true);
+    // jobs = 0: auto-shard the sweep across all cores (runtime::pool).
+    let points = ltp::figures::fig12(true, 0);
     println!("fig12: {} points in {:?}", points.len(), t0.elapsed());
 }

@@ -5,9 +5,10 @@ use std::time::Instant;
 
 fn main() {
     let t0 = Instant::now();
-    ltp::figures::fig2(true);
-    ltp::figures::fig3(true);
-    let rows = ltp::figures::fig14(true);
+    // jobs = 0: auto-shard each sweep across all cores (runtime::pool).
+    ltp::figures::fig2(true, 0);
+    ltp::figures::fig3(true, 0);
+    let rows = ltp::figures::fig14(true, 0);
     ltp::figures::fig15(true);
     println!("fig2+3+14+15: {} fig14 rows in {:?}", rows.len(), t0.elapsed());
 }

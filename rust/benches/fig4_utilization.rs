@@ -5,6 +5,7 @@ use std::time::Instant;
 
 fn main() {
     let t0 = Instant::now();
-    let cells = ltp::figures::fig4(true);
+    // jobs = 0: auto-shard the grid across all cores (runtime::pool).
+    let cells = ltp::figures::fig4(true, 0);
     println!("fig4: {} cells in {:?}", cells.len(), t0.elapsed());
 }

@@ -7,6 +7,7 @@ use crate::cc::CcAlgo;
 use crate::config::Workload;
 use crate::metrics::{ratio, Table};
 use crate::ps::{run_training, Proto, RunReport, TrainingCfg};
+use crate::runtime::pool;
 use crate::simnet::LossModel;
 use crate::util::Summary;
 
@@ -62,7 +63,7 @@ fn one_run(
 }
 
 /// Fig 12: images/sec for every (workload, protocol, loss-rate).
-pub fn fig12(quick: bool) -> Vec<Fig12Point> {
+pub fn fig12(quick: bool, jobs: usize) -> Vec<Fig12Point> {
     let workers = 8;
     let loss_rates: &[f64] = if quick { &[0.0, 0.001, 0.01] } else { &super::LOSS_RATES };
     let workloads: &[(Workload, u64)] = if quick {
@@ -70,32 +71,37 @@ pub fn fig12(quick: bool) -> Vec<Fig12Point> {
     } else {
         &[(Workload::Resnet50, 5), (Workload::Vgg16, 3)]
     };
-    let mut points = Vec::new();
+    // One job per (workload, proto, loss) sweep point, row-major so the
+    // merged vector reads back in table order.
+    let mut sweep: Vec<(Workload, u64, Proto, f64)> = Vec::new();
     for &(workload, iters) in workloads {
+        for &proto in &PROTOS {
+            for &loss in loss_rates {
+                sweep.push((workload, iters, proto, loss));
+            }
+        }
+    }
+    let points = pool::run_jobs(jobs, sweep, |_, (workload, iters, proto, loss)| {
+        one_run(workload, proto, loss, iters, workers, quick)
+    });
+    let n_loss = loss_rates.len();
+    for (wi, &(workload, _)) in workloads.iter().enumerate() {
         let mut table = Table::new(
             std::iter::once("proto".to_string())
                 .chain(loss_rates.iter().map(|l| format!("{:.2}%", l * 100.0)))
                 .chain(std::iter::once("vs cubic@max-loss".to_string()))
                 .collect::<Vec<_>>(),
         );
-        let mut by_proto: Vec<Vec<f64>> = Vec::new();
-        for &proto in &PROTOS {
-            let mut tps = Vec::new();
-            for &loss in loss_rates {
-                let p = one_run(workload, proto, loss, iters, workers, quick);
-                tps.push(p.throughput);
-                points.push(p);
-            }
-            by_proto.push(tps);
-        }
-        for (i, &proto) in PROTOS.iter().enumerate() {
+        let base = wi * PROTOS.len() * n_loss;
+        let tp = |pi: usize, li: usize| points[base + pi * n_loss + li].throughput;
+        for (pi, &proto) in PROTOS.iter().enumerate() {
             let mut row = vec![proto.name()];
-            for &tp in &by_proto[i] {
-                row.push(format!("{tp:.1}"));
+            for li in 0..n_loss {
+                row.push(format!("{:.1}", tp(pi, li)));
             }
             // Headline ratio: this proto vs cubic at the worst loss rate.
-            let cubic_worst = by_proto[2].last().copied().unwrap_or(0.0);
-            row.push(ratio(*by_proto[i].last().unwrap(), cubic_worst));
+            let cubic_worst = tp(2, n_loss - 1);
+            row.push(ratio(tp(pi, n_loss - 1), cubic_worst));
             table.row(row);
         }
         table.emit(
@@ -112,33 +118,43 @@ pub fn fig12(quick: bool) -> Vec<Fig12Point> {
 
 /// Fig 14: BST distributions normalized to LTP's mean, per loss rate
 /// (paper shows box plots; we print the five-number summaries).
-pub fn fig14(quick: bool) -> Vec<(f64, String, Summary)> {
+pub fn fig14(quick: bool, jobs: usize) -> Vec<(f64, String, Summary)> {
     let workers = 8;
     let iters = if quick { 3 } else { 6 };
     let loss_rates: &[f64] = if quick { &[0.0, 0.01] } else { &[0.0, 0.0001, 0.001, 0.005, 0.01] };
+    // One job per (loss, proto) point, loss-major with LTP leading each
+    // group so the normalizer is available when its group renders —
+    // enforce the ordering the merge loop depends on.
+    assert_eq!(PROTOS[0], Proto::Ltp, "fig14 normalizer expects LTP first in PROTOS");
+    let mut sweep: Vec<(f64, Proto)> = Vec::new();
+    for &loss in loss_rates {
+        for &proto in &PROTOS {
+            sweep.push((loss, proto));
+        }
+    }
+    let runs = pool::run_jobs(jobs, sweep, |_, (loss, proto)| {
+        let p = one_run(Workload::Resnet50, proto, loss, iters, workers, quick);
+        (loss, proto, Summary::of(&p.report.bst_values_ms()))
+    });
     let mut out = Vec::new();
     let mut table = Table::new(vec![
         "loss", "proto", "p25/ltp", "p50/ltp", "p75/ltp", "max/ltp", "mean(ms)",
     ]);
-    for &loss in loss_rates {
-        let mut ltp_mean = 1.0;
-        for &proto in &PROTOS {
-            let p = one_run(Workload::Resnet50, proto, loss, iters, workers, quick);
-            let bst = Summary::of(&p.report.bst_values_ms());
-            if proto == Proto::Ltp {
-                ltp_mean = bst.mean.max(1e-9);
-            }
-            table.row(vec![
-                format!("{:.2}%", loss * 100.0),
-                proto.name(),
-                format!("{:.2}", bst.p25 / ltp_mean),
-                format!("{:.2}", bst.p50 / ltp_mean),
-                format!("{:.2}", bst.p75 / ltp_mean),
-                format!("{:.2}", bst.max / ltp_mean),
-                format!("{:.1}", bst.mean),
-            ]);
-            out.push((loss, proto.name(), bst));
+    let mut ltp_mean = 1.0;
+    for (loss, proto, bst) in runs {
+        if proto == Proto::Ltp {
+            ltp_mean = bst.mean.max(1e-9);
         }
+        table.row(vec![
+            format!("{:.2}%", loss * 100.0),
+            proto.name(),
+            format!("{:.2}", bst.p25 / ltp_mean),
+            format!("{:.2}", bst.p50 / ltp_mean),
+            format!("{:.2}", bst.p75 / ltp_mean),
+            format!("{:.2}", bst.max / ltp_mean),
+            format!("{:.1}", bst.mean),
+        ]);
+        out.push((loss, proto.name(), bst));
     }
     table.emit("fig14", "Fig 14 — BST distribution normalized to LTP (ResNet50, 8 workers)");
     out
@@ -151,7 +167,7 @@ mod tests {
     /// The paper's headline shapes, on the quick configuration.
     #[test]
     fn fig12_ltp_wins_under_loss() {
-        let points = fig12(true);
+        let points = fig12(true, 2);
         let tp = |proto: &str, loss: f64| -> f64 {
             points
                 .iter()

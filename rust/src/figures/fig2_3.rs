@@ -4,6 +4,7 @@
 use crate::config::Workload;
 use crate::metrics::Table;
 use crate::ps::{run_training, Proto, TrainingCfg};
+use crate::runtime::pool;
 use crate::simnet::{LinkCfg, Sim};
 use crate::tcp::{FctLog, TcpReceiverNode, TcpSender, TcpSenderNode};
 use crate::util::{Histogram, Summary};
@@ -22,17 +23,10 @@ pub struct Fig2Row {
 /// Fig 2: ResNet50-sized training on 1/2/4/8 workers over kernel-default
 /// TCP. Epoch time per worker shrinks, but the communication share grows —
 /// the scalability problem motivating LTP.
-pub fn fig2(quick: bool) -> Vec<Fig2Row> {
+pub fn fig2(quick: bool, jobs: usize) -> Vec<Fig2Row> {
     let iters = if quick { 2 } else { 5 };
-    let mut rows = Vec::new();
-    let mut table = Table::new(vec![
-        "workers",
-        "iter time (ms)",
-        "compute (ms)",
-        "comm share",
-        "samples/s (total)",
-    ]);
-    for &w in &[1usize, 2, 4, 8] {
+    // One job per worker-count sweep point; rendering happens post-merge.
+    let points = pool::run_jobs(jobs, vec![1usize, 2, 4, 8], |_, w| {
         let mut cfg = TrainingCfg::modeled(
             Proto::Tcp(crate::cc::CcAlgo::Cubic),
             Workload::Resnet50,
@@ -44,12 +38,24 @@ pub fn fig2(quick: bool) -> Vec<Fig2Row> {
             report.total_time as f64 / report.iters.len().max(1) as f64 / MS as f64;
         let comp_ms = cfg.compute_time as f64 / MS as f64;
         let comm_ratio = (iter_time - comp_ms).max(0.0) / iter_time.max(1e-9);
+        let samples = report.throughput(w, Workload::Resnet50.batch_images());
+        (w, iter_time, comp_ms, comm_ratio, samples)
+    });
+    let mut rows = Vec::new();
+    let mut table = Table::new(vec![
+        "workers",
+        "iter time (ms)",
+        "compute (ms)",
+        "comm share",
+        "samples/s (total)",
+    ]);
+    for (w, iter_time, comp_ms, comm_ratio, samples) in points {
         table.row(vec![
             w.to_string(),
             format!("{iter_time:.1}"),
             format!("{comp_ms:.1}"),
             format!("{:.1}%", comm_ratio * 100.0),
-            format!("{:.1}", report.throughput(w, Workload::Resnet50.batch_images())),
+            format!("{samples:.1}"),
         ]);
         rows.push(Fig2Row { workers: w, iter_time_ms: iter_time, comm_ratio });
     }
@@ -60,11 +66,11 @@ pub fn fig2(quick: bool) -> Vec<Fig2Row> {
 /// Fig 3: FCT probability density of an 8→1 incast with fixed-size
 /// messages under TCP — most flows bunch together, stragglers form the
 /// long tail that stalls BSP.
-pub fn fig3(quick: bool) -> (Summary, Histogram) {
+pub fn fig3(quick: bool, jobs: usize) -> (Summary, Histogram) {
     let bytes: u64 = 10_000_000;
     let rounds = if quick { 3 } else { 10 };
-    let mut fcts_ms: Vec<f64> = Vec::new();
-    for round in 0..rounds {
+    // One job per incast round; each round is an independent seeded sim.
+    let per_round: Vec<Vec<f64>> = pool::run_jobs(jobs, (0..rounds).collect(), |_, round| {
         let log: FctLog = Rc::new(RefCell::new(vec![]));
         let mut sim = Sim::new(100 + round);
         let sw = sim.add_switch(500);
@@ -83,7 +89,11 @@ pub fn fig3(quick: bool) -> (Summary, Histogram) {
             sim.set_default_uplink(h, up);
         }
         sim.run_until(120 * SEC);
-        fcts_ms.extend(log.borrow().iter().map(|&(_, t, _)| t as f64 / MS as f64));
+        log.borrow().iter().map(|&(_, t, _)| t as f64 / MS as f64).collect::<Vec<f64>>()
+    });
+    let mut fcts_ms: Vec<f64> = Vec::new();
+    for round in per_round {
+        fcts_ms.extend(round);
     }
     let summary = Summary::of(&fcts_ms);
     let mut hist = Histogram::new(0.0, summary.max * 1.05 + 1e-9, 20);
@@ -112,7 +122,7 @@ mod tests {
 
     #[test]
     fn fig2_comm_share_grows_with_workers() {
-        let rows = fig2(true);
+        let rows = fig2(true, 2);
         assert_eq!(rows.len(), 4);
         // The defining shape: more workers → larger communication share.
         assert!(
@@ -124,7 +134,7 @@ mod tests {
 
     #[test]
     fn fig3_has_a_long_tail() {
-        let (s, _h) = fig3(true);
+        let (s, _h) = fig3(true, 2);
         assert_eq!(s.count, 24);
         assert!(s.max > 1.05 * s.p50, "incast must produce stragglers: max {} p50 {}", s.max, s.p50);
     }

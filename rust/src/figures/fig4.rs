@@ -5,6 +5,7 @@
 
 use crate::cc::CcAlgo;
 use crate::metrics::{pct_delta, Table};
+use crate::runtime::pool;
 use crate::simnet::{LinkCfg, LossModel, Sim};
 use crate::tcp::{FctLog, TcpReceiverNode, TcpSender, TcpSenderNode};
 use crate::wire::TCP_MSS;
@@ -42,9 +43,13 @@ fn one_flow(cc: CcAlgo, bytes: u64, link: LinkCfg, seed: u64, horizon: Nanos) ->
 }
 
 /// Run the Fig 4 sweep; returns the full grid.
-pub fn fig4(quick: bool) -> Vec<Fig4Cell> {
+pub fn fig4(quick: bool, jobs: usize) -> Vec<Fig4Cell> {
     let loss_rates: &[f64] =
         if quick { &[0.0, 0.001, 0.01, 0.05] } else { &super::FIG4_LOSS_RATES };
+    // The loss==0 grid point doubles as the clean baseline every other
+    // point in its (env, cc) row is normalized against — enforce in
+    // release too, or a reordered loss table silently skews every cell.
+    assert_eq!(loss_rates[0], 0.0, "fig4 loss sweep must start at the clean baseline");
     let envs: [(&'static str, LinkCfg, u64, Nanos); 2] = [
         (
             "1Gbps/40ms",
@@ -59,23 +64,36 @@ pub fn fig4(quick: bool) -> Vec<Fig4Cell> {
             if quick { 60 * SEC } else { 120 * SEC },
         ),
     ];
+    // One job per (env, cc, loss) grid point, enumerated row-major so the
+    // merged slice reads back in table order.
+    let mut grid: Vec<(usize, CcAlgo, f64)> = Vec::new();
+    for env_idx in 0..envs.len() {
+        for cc in CcAlgo::ALL {
+            for &p in loss_rates {
+                grid.push((env_idx, cc, p));
+            }
+        }
+    }
+    let goodputs = pool::run_jobs(jobs, grid, |_, (env_idx, cc, p)| {
+        let (_, link, bytes, horizon) = envs[env_idx];
+        let cfg = if p == 0.0 { link } else { link.with_loss(LossModel::Bernoulli { p }) };
+        one_flow(cc, bytes, cfg, 42, horizon)
+    });
+    let n_loss = loss_rates.len();
     let mut cells = Vec::new();
-    for (env, link, bytes, horizon) in envs {
+    let mut at = 0;
+    for (env, _, _, _) in envs {
         let mut table = Table::new(
             std::iter::once("cc".to_string())
                 .chain(loss_rates.iter().map(|l| format!("{:.2}%", l * 100.0)))
                 .collect::<Vec<_>>(),
         );
         for cc in CcAlgo::ALL {
-            let clean = one_flow(cc, bytes, link, 42, horizon);
+            let row_goodputs = &goodputs[at..at + n_loss];
+            let clean = row_goodputs[0];
             let mut row = vec![cc.name().to_string()];
-            for &p in loss_rates {
-                let cfg = if p == 0.0 {
-                    link
-                } else {
-                    link.with_loss(LossModel::Bernoulli { p })
-                };
-                let goodput = one_flow(cc, bytes, cfg, 42, horizon);
+            for (li, &p) in loss_rates.iter().enumerate() {
+                let goodput = row_goodputs[li];
                 row.push(pct_delta(goodput, clean));
                 cells.push(Fig4Cell {
                     env,
@@ -85,6 +103,7 @@ pub fn fig4(quick: bool) -> Vec<Fig4Cell> {
                     reduction: (goodput - clean) / clean,
                 });
             }
+            at += n_loss;
             table.row(row);
         }
         table.emit(
@@ -101,7 +120,7 @@ mod tests {
 
     #[test]
     fn fig4_shapes_match_paper() {
-        let cells = fig4(true);
+        let cells = fig4(true, 2);
         let get = |env: &str, cc: CcAlgo, loss: f64| -> f64 {
             cells
                 .iter()

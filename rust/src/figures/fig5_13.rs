@@ -12,20 +12,47 @@ use crate::metrics::Table;
 use crate::ps::{
     run_with, Corpus, Proto, RealCompute, RealTraining, TrainingCfg, XlaAggregate,
 };
-use crate::runtime::{default_artifacts_dir, literal_f32, to_f32, Runtime};
+use crate::runtime::{default_artifacts_dir, literal_f32, pool, to_f32, Runtime};
 use crate::simnet::LossModel;
 use crate::util::Pcg64;
 use crate::{MS, SEC};
 use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::time::Instant;
 
-fn require_runtime() -> Result<Runtime> {
-    let dir = default_artifacts_dir();
+/// Cheap artifacts-presence check (no PJRT client) for fail-fast paths.
+fn ensure_artifacts() -> Result<()> {
     anyhow::ensure!(
-        dir.join("manifest_tiny.txt").exists(),
+        default_artifacts_dir().join("manifest_tiny.txt").exists(),
         "artifacts missing — run `make artifacts` first"
     );
-    Runtime::cpu(dir).context("PJRT CPU client")
+    Ok(())
+}
+
+fn require_runtime() -> Result<Runtime> {
+    ensure_artifacts()?;
+    Runtime::cpu(default_artifacts_dir()).context("PJRT CPU client")
+}
+
+thread_local! {
+    /// One PJRT runtime per thread. Serial sweeps (`--jobs 1`) reuse a
+    /// single client across every point; parallel sweeps get one client
+    /// per pool worker (PJRT clients are not assumed thread-safe). Worker
+    /// threads are scoped per figure, so caches drop with them.
+    static THREAD_RT: RefCell<Option<Rc<Runtime>>> = const { RefCell::new(None) };
+}
+
+/// Run `f` against this thread's cached runtime, creating it on first use.
+fn with_runtime<T>(f: impl FnOnce(&Runtime) -> Result<T>) -> Result<T> {
+    let rt = THREAD_RT.with(|cell| -> Result<Rc<Runtime>> {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(Rc::new(require_runtime()?));
+        }
+        Ok(slot.as_ref().expect("just initialized").clone())
+    })?;
+    f(&rt)
 }
 
 /// One sparsified training run: every worker gradient is pushed through
@@ -64,14 +91,11 @@ fn sparsified_run(
     Ok((last_loss, sparsify_secs))
 }
 
-/// Fig 5: Random-k vs Top-k across k ∈ {5..40} %.
-pub fn fig5(quick: bool) -> Result<()> {
-    let rt = require_runtime()?;
-    let iters = if quick { 6 } else { 20 };
-    let ks: &[u32] = if quick { &[5, 20, 40] } else { &[5, 10, 15, 20, 25, 30, 35, 40] };
-    let mut table =
-        Table::new(vec!["k%", "random-k loss", "top-k loss", "randk cost(s)", "topk cost(s)", "throughput gain"]);
-    for &k in ks {
+/// One Fig-5 sweep point: `(randk_loss, topk_loss, randk_secs, topk_secs)`
+/// at keep fraction `k`% — self-contained, so the pool can run points on
+/// any thread.
+fn fig5_point(k: u32, iters: u64) -> Result<(f32, f32, f64, f64)> {
+    with_runtime(|rt| {
         // Random-k: the keep mask is drawn host-side (cheap) and applied by
         // the randk Pallas kernel.
         let randk = |rt: &Runtime, grads: &mut Vec<f32>, rng: &mut Pcg64| -> Result<f64> {
@@ -104,10 +128,26 @@ pub fn fig5(quick: bool) -> Result<()> {
             *grads = to_f32(&out[0])?;
             Ok(t0.elapsed().as_secs_f64())
         };
-        let (loss_r, cost_r) = sparsified_run(&rt, iters, &randk)?;
-        let (loss_t, cost_t) = sparsified_run(&rt, iters, &topk)?;
+        let (loss_r, cost_r) = sparsified_run(rt, iters, &randk)?;
+        let (loss_t, cost_t) = sparsified_run(rt, iters, &topk)?;
+        Ok((loss_r, loss_t, cost_r, cost_t))
+    })
+}
+
+/// Fig 5: Random-k vs Top-k across k ∈ {5..40} %.
+pub fn fig5(quick: bool, jobs: usize) -> Result<()> {
+    ensure_artifacts()?; // fail fast before spawning jobs (no client built here)
+    let iters = if quick { 6 } else { 20 };
+    let ks: &[u32] = if quick { &[5, 20, 40] } else { &[5, 10, 15, 20, 25, 30, 35, 40] };
+    // One job per k; serial runs share this thread's cached runtime,
+    // parallel runs get one runtime per worker thread.
+    let rows = pool::run_jobs(jobs, ks.to_vec(), |_, k| fig5_point(k, iters));
+    let mut table =
+        Table::new(vec!["k%", "random-k loss", "top-k loss", "randk cost(s)", "topk cost(s)", "throughput gain"]);
+    for (&k, row) in ks.iter().zip(rows) {
+        let (loss_r, loss_t, cost_r, cost_t) = row?;
         table.row(vec![
-            format!("{k}"),
+            k.to_string(),
             format!("{loss_r:.3}"),
             format!("{loss_t:.3}"),
             format!("{cost_r:.3}"),
@@ -121,8 +161,8 @@ pub fn fig5(quick: bool) -> Result<()> {
 
 /// Fig 13: sim-time to reach a target training loss, per protocol × loss
 /// rate, with real gradients and real (bubble-filled) aggregation.
-pub fn fig13(quick: bool) -> Result<()> {
-    let rt = require_runtime()?;
+pub fn fig13(quick: bool, jobs: usize) -> Result<()> {
+    ensure_artifacts()?; // fail fast before spawning jobs (no client built here)
     let workers = 4;
     let target = 4.8f32;
     let max_iters = if quick { 20 } else { 60 };
@@ -137,12 +177,19 @@ pub fn fig13(quick: bool) -> Result<()> {
         ]
     };
     let loss_rates: &[f64] = if quick { &[0.0, 0.01] } else { &[0.0, 0.001, 0.01] };
-    let mut table = Table::new(vec!["proto", "net loss", "TTA (sim s)", "final loss", "delivered"]);
+    // One job per (proto, loss) point; each job owns its model state and
+    // corpora (runtime cached per thread), so runs stay independent and
+    // seed-deterministic.
+    let mut sweep: Vec<(Proto, f64)> = Vec::new();
     for &proto in protos {
         for &p in loss_rates {
-            let shared = RealTraining::new(&rt, "tiny", 0.08)?;
-            let mut cfg =
-                TrainingCfg::modeled(proto, crate::config::Workload::Micro, workers);
+            sweep.push((proto, p));
+        }
+    }
+    let rows = pool::run_jobs(jobs, sweep, |_, (proto, p)| -> Result<Vec<String>> {
+        with_runtime(|rt| {
+            let shared = RealTraining::new(rt, "tiny", 0.08)?;
+            let mut cfg = TrainingCfg::modeled(proto, crate::config::Workload::Micro, workers);
             cfg.model_bytes = shared.manifest.wire_bytes();
             cfg.critical = shared.manifest.tensors.critical_segments(
                 crate::grad::Manifest::aligned_payload(crate::wire::LTP_MSS),
@@ -177,14 +224,18 @@ pub fn fig13(quick: bool) -> Result<()> {
                 .find_map(|i| i.loss)
                 .map(|l| format!("{l:.3}"))
                 .unwrap_or_else(|| "—".into());
-            table.row(vec![
+            Ok(vec![
                 proto.name(),
                 format!("{:.2}%", p * 100.0),
                 tta,
                 final_loss,
                 format!("{:.1}%", report.mean_delivered() * 100.0),
-            ]);
-        }
+            ])
+        })
+    });
+    let mut table = Table::new(vec!["proto", "net loss", "TTA (sim s)", "final loss", "delivered"]);
+    for row in rows {
+        table.row(row?);
     }
     table.emit("fig13", &format!("Fig 13 — time to loss ≤ {target} (real training, {workers} workers)"));
     Ok(())

@@ -24,38 +24,46 @@ pub const LOSS_RATES: [f64; 5] = [0.0, 0.0001, 0.001, 0.005, 0.01];
 pub const FIG4_LOSS_RATES: [f64; 7] = [0.0, 0.0001, 0.001, 0.005, 0.01, 0.03, 0.05];
 
 /// Run a figure by name ("fig2" … "fig15", or "all").
-pub fn run(name: &str, quick: bool) -> anyhow::Result<()> {
+///
+/// `jobs` shards each figure's independent sweep points (incast degree,
+/// loss rate, worker count, …) across worker threads via
+/// [`crate::runtime::pool`]; results merge in sweep order, so the printed
+/// tables of the simulation-driven figures (fig2/3/4/12/14/15) are
+/// byte-identical for any job count (0 = auto, 1 = serial). fig5/fig13
+/// tables embed wall-clock kernel-cost columns that vary run to run —
+/// they are outside the byte-identity contract regardless of `--jobs`.
+pub fn run(name: &str, quick: bool, jobs: usize) -> anyhow::Result<()> {
     match name {
         "fig2" => {
-            fig2(quick);
+            fig2(quick, jobs);
         }
         "fig3" => {
-            fig3(quick);
+            fig3(quick, jobs);
         }
         "fig4" => {
-            fig4(quick);
+            fig4(quick, jobs);
         }
-        "fig5" => fig5(quick)?,
+        "fig5" => fig5(quick, jobs)?,
         "fig12" => {
-            fig12(quick);
+            fig12(quick, jobs);
         }
-        "fig13" => fig13(quick)?,
+        "fig13" => fig13(quick, jobs)?,
         "fig14" => {
-            fig14(quick);
+            fig14(quick, jobs);
         }
         "fig15" => {
             fig15(quick);
         }
         "all" => {
-            fig2(quick);
-            fig3(quick);
-            fig4(quick);
-            fig12(quick);
-            fig14(quick);
+            fig2(quick, jobs);
+            fig3(quick, jobs);
+            fig4(quick, jobs);
+            fig12(quick, jobs);
+            fig14(quick, jobs);
             fig15(quick);
             // Real-compute figures last (need artifacts).
-            fig5(quick)?;
-            fig13(quick)?;
+            fig5(quick, jobs)?;
+            fig13(quick, jobs)?;
         }
         other => anyhow::bail!("unknown figure `{other}` (fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all)"),
     }

@@ -1,8 +1,9 @@
 //! `ltp` — CLI entrypoint for the LTP reproduction.
 //!
 //! ```text
-//! ltp scenario <name|list|all> [--json] [--seed N] [--quick]
-//! ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick]
+//! ltp scenario <name|list|all> [--json] [--seed N | --seeds A..B] [--quick]
+//!              [--jobs N] [--out FILE] [--bench [FILE]]
+//! ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]
 //! ltp train [--preset tiny] [--workers 4] [--iters 50] [--loss 0.01]
 //!           [--proto ltp|bbr|cubic|reno]
 //! ltp bench-ltp [--bytes N] [--loss P]      one-flow protocol microbench
@@ -149,57 +150,106 @@ fn cmd_bench_ltp(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Seeds to sweep: `--seeds A..B` (inclusive; `A..=B` also accepted) or a
+/// single `--seed N` (default 1).
+fn parse_seeds(args: &Args) -> Result<Vec<u64>> {
+    match args.flags.get("seeds") {
+        None => Ok(vec![args.flag("seed", 1)?]),
+        Some(spec) => {
+            anyhow::ensure!(
+                !args.has("seed"),
+                "--seed conflicts with --seeds {spec}; pass exactly one"
+            );
+            let (a, b) = match spec.split_once("..") {
+                Some((a, b)) => (a, b.strip_prefix('=').unwrap_or(b)),
+                None => (spec.as_str(), spec.as_str()),
+            };
+            let lo: u64 =
+                a.trim().parse().map_err(|e| anyhow::anyhow!("--seeds {spec}: {e}"))?;
+            let hi: u64 =
+                b.trim().parse().map_err(|e| anyhow::anyhow!("--seeds {spec}: {e}"))?;
+            anyhow::ensure!(lo <= hi, "--seeds {spec}: empty range (need A <= B)");
+            anyhow::ensure!(hi - lo < 4096, "--seeds {spec}: range too large (max 4096)");
+            Ok((lo..=hi).collect())
+        }
+    }
+}
+
 fn cmd_scenario(args: &Args) -> Result<()> {
-    use ltp::scenarios::{self, ScenarioParams};
+    use ltp::scenarios::{self, sweep};
     let which = args.positional.get(1).map(String::as_str).unwrap_or("list");
-    let params = ScenarioParams { seed: args.flag("seed", 1)?, quick: args.has("quick") };
+    // Validate the report/bench flags up front — a flag mistake must fail
+    // instantly, not after a multi-minute sweep (and a bare `--bench`
+    // placed before the scenario name must not swallow it silently).
     let json = args.has("json");
-    let emit = |report: &ltp::scenarios::ScenarioReport| {
-        if json {
-            println!("{}", report.render_json());
-        } else {
-            report.print_table();
-        }
+    let out_path = args.flags.get("out").cloned();
+    if let Some(p) = &out_path {
+        // The hand-rolled parser maps a bare flag to "true" — reject it
+        // rather than write the report to a file literally named `true`.
+        anyhow::ensure!(p != "true", "--out requires a file path");
+        anyhow::ensure!(json, "--out writes the machine-readable report; pass --json too");
+    }
+    let bench_path = match args.flags.get("bench") {
+        None => None,
+        // Bare `--bench` picks the conventional artifact name.
+        Some(v) if v == "true" => Some("BENCH_scenarios.json".to_string()),
+        Some(v) if v.ends_with(".json") => Some(v.clone()),
+        Some(v) => bail!(
+            "--bench {v}: expected a .json path (bare --bench writes BENCH_scenarios.json)"
+        ),
     };
-    match which {
-        "list" => {
-            println!("registered scenarios (run with `ltp scenario <name|all> [--json]`):\n");
-            for s in scenarios::registry() {
-                println!(
-                    "  {:<18} {}{}",
-                    s.name,
-                    s.summary,
-                    if s.incast_class { "  [incast-class]" } else { "" }
-                );
-            }
-            Ok(())
+    if which == "list" {
+        println!("registered scenarios (run with `ltp scenario <name|all> [--json]`):\n");
+        for s in scenarios::registry() {
+            println!(
+                "  {:<18} {}{}",
+                s.name,
+                s.summary,
+                if s.incast_class { "  [incast-class]" } else { "" }
+            );
         }
-        "all" => {
-            if json {
-                // One well-formed JSON document: an array of reports.
-                let arr = ltp::metrics::Json::Arr(
-                    scenarios::registry().iter().map(|s| s.run(&params).to_json()).collect(),
-                );
-                println!("{}", arr.render_pretty());
-            } else {
-                for s in scenarios::registry() {
-                    emit(&s.run(&params));
-                }
-            }
-            Ok(())
-        }
-        name => match scenarios::find(name) {
-            Some(s) => {
-                emit(&s.run(&params));
-                Ok(())
-            }
+        return Ok(());
+    }
+    let n_jobs: usize = args.flag("jobs", 1)?;
+    let seeds = parse_seeds(args)?;
+    let indices: Vec<usize> = if which == "all" {
+        (0..scenarios::registry().len()).collect()
+    } else {
+        match scenarios::registry().iter().position(|s| s.name == which) {
+            Some(i) => vec![i],
             None => {
                 let names: Vec<&str> =
                     scenarios::registry().iter().map(|s| s.name).collect();
-                bail!("unknown scenario `{name}` (known: {})", names.join(", "));
+                bail!("unknown scenario `{which}` (known: {})", names.join(", "));
             }
-        },
+        }
+    };
+    let jobs = sweep::sweep_jobs(&indices, &seeds, args.has("quick"));
+    let result = sweep::run_sweep(jobs, n_jobs);
+    if let Some(path) = &out_path {
+        std::fs::write(path, result.render_json())
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path} ({} report(s))", result.reports.len());
+    } else if json {
+        println!("{}", result.render_json());
+    } else {
+        for r in &result.reports {
+            r.print_table();
+        }
     }
+    if let Some(path) = &bench_path {
+        std::fs::write(path, result.bench.render_json())
+            .with_context(|| format!("writing {path}"))?;
+        let b = &result.bench;
+        eprintln!(
+            "bench: {} job(s) on {} worker(s) in {:.2}s ({:.1}x vs serial) -> {path}",
+            b.per_job.len(),
+            b.n_jobs,
+            b.wall_secs,
+            if b.wall_secs > 0.0 { b.cpu_secs / b.wall_secs } else { 1.0 },
+        );
+    }
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -208,14 +258,15 @@ fn main() -> Result<()> {
         Some("scenario") => cmd_scenario(&args),
         Some("figure") => {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
-            ltp::figures::run(which, args.has("quick"))
+            ltp::figures::run(which, args.has("quick"), args.flag("jobs", 1)?)
         }
         Some("train") => cmd_train(&args),
         Some("bench-ltp") => cmd_bench_ltp(&args),
         _ => {
             eprintln!(
-                "usage:\n  ltp scenario <name|list|all> [--json] [--seed N] [--quick]\n  \
-                 ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick]\n  \
+                "usage:\n  ltp scenario <name|list|all> [--json] [--seed N | --seeds A..B] [--quick]\n  \
+                 \x20            [--jobs N] [--out FILE] [--bench [FILE]]\n  \
+                 ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]\n  \
                  ltp train [--preset tiny] [--workers N] [--iters N] [--loss P] [--proto ltp|bbr|cubic|reno]\n  \
                  ltp bench-ltp [--bytes N] [--loss P]"
             );

@@ -141,6 +141,9 @@ pub struct RunReport {
     pub closes: Vec<GatherClose>,
     /// Per background flow: bytes delivered (TCP bulk) or injected (UDP).
     pub bg_bytes: Vec<u64>,
+    /// Discrete events the simulator processed for this run — the
+    /// deterministic work unit behind the bench reports' events/sec.
+    pub sim_events: u64,
 }
 
 impl RunReport {
@@ -339,6 +342,7 @@ pub fn run_with(
         gather_pkts,
         closes,
         bg_bytes,
+        sim_events: sim.events_processed(),
     }
 }
 
@@ -571,6 +575,7 @@ mod tests {
         let report = run_training(&cfg);
         assert_eq!(report.iters.len(), 3);
         assert!(report.net.tx_pkts > 0 && report.net.tx_bytes > 0);
+        assert!(report.sim_events > report.net.tx_pkts, "every tx is ≥1 event");
         assert!(report.net.drops_random > 0, "2% wire loss must drop packets");
         // One close record per (worker, iteration) gather flow.
         assert_eq!(report.closes.len(), 4 * 3, "closes: {:?}", report.closes);

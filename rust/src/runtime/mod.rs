@@ -7,6 +7,8 @@
 //! the text parser reassigns ids and round-trips cleanly (see
 //! `/opt/xla-example/README.md`).
 
+pub mod pool;
+
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};

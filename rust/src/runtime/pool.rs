@@ -1,0 +1,182 @@
+//! A deterministic job pool for sharding independent simulation runs
+//! across cores (DESIGN.md §4.4).
+//!
+//! The experiment surface — `ltp scenario all`, the figure sweeps, the
+//! seed sweeps — is embarrassingly parallel: every (scenario, seed) pair
+//! and every figure grid point is an independent, self-contained
+//! simulation whose determinism comes from its own seeded RNG streams.
+//! [`run_jobs`] exploits that: jobs are enumerated up front, worker
+//! threads pull them from a shared queue, and results are merged back **in
+//! job order**, so the output of `--jobs N` is byte-identical to
+//! `--jobs 1` for any N.
+//!
+//! Design constraints (and why it looks the way it does):
+//!
+//! * **No new dependencies.** `std::thread::scope` + `std::sync::mpsc`
+//!   only; no rayon, no crossbeam. Scoped threads let jobs borrow the
+//!   caller's environment (figure configs, the scenario registry) without
+//!   `'static` gymnastics.
+//! * **Deterministic merge.** Results are slotted by job index, never by
+//!   completion order. Nothing in this module inspects wall-clock time to
+//!   decide *what* to compute.
+//! * **Panic propagation.** A panicking job poisons the queue (remaining
+//!   jobs are abandoned), and the original panic payload is re-raised on
+//!   the calling thread once every worker has drained — so `cargo test`
+//!   failures point at the job that died, not at a channel hangup.
+//! * **Jobs must not print.** Stdout interleaving would break the
+//!   byte-identity contract; all rendering happens after the merge, on the
+//!   calling thread. (The scenario/figure code upholds this: simulations
+//!   are silent, tables and JSON are emitted post-merge.)
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Mutex};
+
+/// The machine's available parallelism (≥ 1). This is what `--jobs 0`
+/// resolves to.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a requested job count against the amount of work: `0` means
+/// "auto" ([`default_jobs`]), and there is never a reason to spawn more
+/// workers than jobs. Public so bench reports can record the worker count
+/// actually used.
+pub fn effective_jobs(requested: usize, n_inputs: usize) -> usize {
+    let want = if requested == 0 { default_jobs() } else { requested };
+    want.min(n_inputs.max(1))
+}
+
+/// Run `f` over every input on up to `jobs` worker threads and return the
+/// outputs **in input order**.
+///
+/// * `jobs == 0` uses [`default_jobs`]; `jobs == 1` runs inline on the
+///   calling thread (no threads spawned, no synchronization).
+/// * `f` receives `(job_index, input)`. It must be self-contained: own
+///   RNG/state per job, no printing, no shared mutable statics — the whole
+///   repo's simulation stack satisfies this (state lives in `Sim`, RNGs
+///   are per-run `Pcg64` streams).
+/// * If any job panics, the first panic (lowest job index) is re-raised
+///   here after the pool drains; queued jobs that had not started are
+///   dropped.
+pub fn run_jobs<I, O, F>(jobs: usize, inputs: Vec<I>, f: F) -> Vec<O>
+where
+    I: Send,
+    O: Send,
+    F: Fn(usize, I) -> O + Sync,
+{
+    let n = inputs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if effective_jobs(jobs, n) <= 1 {
+        return inputs.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let workers = effective_jobs(jobs, n);
+    let queue: Mutex<VecDeque<(usize, I)>> =
+        Mutex::new(inputs.into_iter().enumerate().collect());
+    let poisoned = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<O>)>();
+    let mut slots: Vec<Option<O>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    // Lowest-index panic wins, so the re-raised error is deterministic even
+    // when several jobs die in one run.
+    let mut first_panic: Option<(usize, Box<dyn std::any::Any + Send>)> = None;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let queue = &queue;
+            let poisoned = &poisoned;
+            let f = &f;
+            s.spawn(move || loop {
+                if poisoned.load(Ordering::Relaxed) {
+                    break;
+                }
+                let job = queue
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .pop_front();
+                let Some((idx, input)) = job else { break };
+                let out = catch_unwind(AssertUnwindSafe(|| f(idx, input)));
+                if out.is_err() {
+                    poisoned.store(true, Ordering::Relaxed);
+                }
+                if tx.send((idx, out)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        // Receives until every worker has exited (all senders dropped).
+        for (idx, res) in rx {
+            match res {
+                Ok(out) => slots[idx] = Some(out),
+                Err(payload) => {
+                    if first_panic.as_ref().map(|(i, _)| idx < *i).unwrap_or(true) {
+                        first_panic = Some((idx, payload));
+                    }
+                }
+            }
+        }
+    });
+    if let Some((_, payload)) = first_panic {
+        resume_unwind(payload);
+    }
+    slots
+        .into_iter()
+        .map(|o| o.expect("job pool lost a result (worker exited without reporting)"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_follow_input_order() {
+        let out = run_jobs(4, (0u64..40).collect(), |i, x| {
+            assert_eq!(i as u64, x);
+            x * 10
+        });
+        assert_eq!(out, (0u64..40).map(|x| x * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_parallel_and_auto_agree() {
+        let inputs: Vec<u64> = (0..23).collect();
+        let serial = run_jobs(1, inputs.clone(), |i, x| (i, x * x));
+        let auto = run_jobs(0, inputs.clone(), |i, x| (i, x * x));
+        let wide = run_jobs(128, inputs, |i, x| (i, x * x));
+        assert_eq!(serial, auto);
+        assert_eq!(serial, wide);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let out: Vec<u32> = run_jobs(8, Vec::<u32>::new(), |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn jobs_may_borrow_the_environment() {
+        let base = vec![100u64, 200, 300];
+        let out = run_jobs(3, vec![0usize, 1, 2], |_, i| base[i] + 1);
+        assert_eq!(out, vec![101, 201, 301]);
+    }
+
+    #[test]
+    fn panic_payload_is_preserved() {
+        let caught = std::panic::catch_unwind(|| {
+            run_jobs(4, (0u32..16).collect(), |_, x| {
+                if x == 5 {
+                    panic!("boom at five");
+                }
+                x
+            })
+        });
+        let payload = caught.expect_err("pool must re-raise the job panic");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("boom at five"), "unexpected payload: {msg:?}");
+    }
+}

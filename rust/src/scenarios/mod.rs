@@ -24,6 +24,7 @@
 //! figure drift.
 
 mod defs;
+pub mod sweep;
 
 use crate::metrics::{Json, Table};
 use crate::proto::CloseReason;
@@ -156,6 +157,9 @@ pub struct CaseResult {
     /// Bytes moved by background flows during the run (0 if none).
     pub bg_bytes: u64,
     pub total_time_ms: f64,
+    /// Simulator events processed by this run (deterministic; the bench
+    /// report divides these by wall-clock for events/sec).
+    pub sim_events: u64,
 }
 
 impl CaseResult {
@@ -188,6 +192,7 @@ impl CaseResult {
             criticals_ok,
             bg_bytes: r.bg_bytes.iter().sum(),
             total_time_ms: r.total_time as f64 / MS as f64,
+            sim_events: r.sim_events,
         }
     }
 
@@ -210,6 +215,7 @@ impl CaseResult {
             ("criticals_ok", self.criticals_ok.into()),
             ("bg_bytes", self.bg_bytes.into()),
             ("total_time_ms", self.total_time_ms.into()),
+            ("sim_events", self.sim_events.into()),
         ])
     }
 }

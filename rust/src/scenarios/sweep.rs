@@ -1,0 +1,223 @@
+//! The parallel experiment driver: enumerate (scenario × seed) jobs, shard
+//! them over the [`crate::runtime::pool`], merge deterministically, and
+//! distill a machine-readable bench report (`BENCH_scenarios.json`).
+//!
+//! **Determinism contract.** A [`SweepJob`] is a pure function of
+//! `(scenario_index, seed, quick)`: every simulation owns its `Sim`, whose
+//! RNG streams derive from the job's seed, and nothing is shared between
+//! jobs. Results are merged in job order, so the report list — and its
+//! serialized bytes — are identical for any `--jobs N`. Wall-clock timing
+//! is measured per job but confined to the [`BenchReport`], which is
+//! explicitly *not* part of the deterministic surface.
+//!
+//! Job order is seed-major (`for seed { for scenario }`), which keeps the
+//! single-seed `ltp scenario all` output ordering identical to the old
+//! serial loop.
+
+use super::{registry, ScenarioParams, ScenarioReport};
+use crate::metrics::Json;
+use crate::runtime::pool;
+
+/// One enumerable unit of sweep work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SweepJob {
+    /// Index into [`registry`].
+    pub scenario_index: usize,
+    pub seed: u64,
+    pub quick: bool,
+}
+
+/// Enumerate the (seed-major) job list for a set of registry indices.
+pub fn sweep_jobs(indices: &[usize], seeds: &[u64], quick: bool) -> Vec<SweepJob> {
+    let mut out = Vec::with_capacity(indices.len() * seeds.len());
+    for &seed in seeds {
+        for &scenario_index in indices {
+            debug_assert!(scenario_index < registry().len());
+            out.push(SweepJob { scenario_index, seed, quick });
+        }
+    }
+    out
+}
+
+/// Per-job bench record (wall-clock fields are non-deterministic).
+#[derive(Debug, Clone)]
+pub struct BenchJob {
+    pub scenario: String,
+    pub seed: u64,
+    pub cases: usize,
+    /// BSP iterations completed, summed over the scenario's cases.
+    pub iters: usize,
+    /// Mean of the cases' mean BSTs (ms) — the per-scenario perf headline.
+    pub mean_bst_ms: f64,
+    pub mean_delivered: f64,
+    pub sim_events: u64,
+    pub wall_secs: f64,
+    pub events_per_sec: f64,
+}
+
+impl BenchJob {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", self.scenario.as_str().into()),
+            ("seed", self.seed.into()),
+            ("cases", self.cases.into()),
+            ("iters", self.iters.into()),
+            ("mean_bst_ms", self.mean_bst_ms.into()),
+            ("mean_delivered", self.mean_delivered.into()),
+            ("sim_events", self.sim_events.into()),
+            ("wall_secs", self.wall_secs.into()),
+            ("events_per_sec", self.events_per_sec.into()),
+        ])
+    }
+}
+
+/// The aggregate report behind `BENCH_scenarios.json` — the repo's
+/// machine-readable perf trajectory. Schema is documented in
+/// EXPERIMENTS.md (§Parallel driver).
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// Worker threads requested (0 = auto).
+    pub jobs_requested: usize,
+    pub n_jobs: usize,
+    /// Wall-clock of the whole sweep (merge included).
+    pub wall_secs: f64,
+    /// Sum of per-job wall-clock — the serial-equivalent cost.
+    pub cpu_secs: f64,
+    pub sim_events: u64,
+    pub per_job: Vec<BenchJob>,
+}
+
+impl BenchReport {
+    pub fn to_json(&self) -> Json {
+        let events_per_sec =
+            if self.wall_secs > 0.0 { self.sim_events as f64 / self.wall_secs } else { 0.0 };
+        let speedup = if self.wall_secs > 0.0 { self.cpu_secs / self.wall_secs } else { 1.0 };
+        Json::obj(vec![
+            ("schema", "ltp-bench-v1".into()),
+            ("jobs_requested", self.jobs_requested.into()),
+            ("n_jobs", self.n_jobs.into()),
+            ("wall_secs", self.wall_secs.into()),
+            ("cpu_secs", self.cpu_secs.into()),
+            ("speedup", speedup.into()),
+            ("sim_events", self.sim_events.into()),
+            ("events_per_sec", events_per_sec.into()),
+            ("runs", Json::Arr(self.per_job.iter().map(|j| j.to_json()).collect())),
+        ])
+    }
+
+    pub fn render_json(&self) -> String {
+        self.to_json().render_pretty()
+    }
+}
+
+/// A finished sweep: reports in job order plus the bench distillation.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub reports: Vec<ScenarioReport>,
+    pub bench: BenchReport,
+}
+
+impl SweepResult {
+    /// The deterministic JSON document for the whole sweep: one object for
+    /// a single job, else an array in job order. `--jobs N` must render
+    /// byte-identically to `--jobs 1` — the CI perf-smoke diff enforces it.
+    pub fn render_json(&self) -> String {
+        if self.reports.len() == 1 {
+            self.reports[0].render_json()
+        } else {
+            Json::Arr(self.reports.iter().map(|r| r.to_json()).collect()).render_pretty()
+        }
+    }
+}
+
+/// Run a job list on `n_jobs` workers (0 = auto, 1 = inline serial).
+pub fn run_sweep(jobs: Vec<SweepJob>, n_jobs: usize) -> SweepResult {
+    let n_workers = pool::effective_jobs(n_jobs, jobs.len());
+    let t0 = std::time::Instant::now();
+    let outcomes = pool::run_jobs(n_jobs, jobs, |_, job| {
+        let scenario = &registry()[job.scenario_index];
+        let jt = std::time::Instant::now();
+        let report = scenario.run(&ScenarioParams { seed: job.seed, quick: job.quick });
+        (report, jt.elapsed().as_secs_f64())
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let mut reports = Vec::with_capacity(outcomes.len());
+    let mut per_job = Vec::with_capacity(outcomes.len());
+    let mut cpu_secs = 0.0;
+    let mut total_events = 0u64;
+    for (report, job_secs) in outcomes {
+        let events: u64 = report.cases.iter().map(|c| c.sim_events).sum();
+        let ncases = report.cases.len().max(1);
+        per_job.push(BenchJob {
+            scenario: report.name.clone(),
+            seed: report.seed,
+            cases: report.cases.len(),
+            iters: report.cases.iter().map(|c| c.iters).sum(),
+            mean_bst_ms: report.cases.iter().map(|c| c.mean_bst_ms).sum::<f64>()
+                / ncases as f64,
+            mean_delivered: report.cases.iter().map(|c| c.mean_delivered).sum::<f64>()
+                / ncases as f64,
+            sim_events: events,
+            wall_secs: job_secs,
+            events_per_sec: if job_secs > 0.0 { events as f64 / job_secs } else { 0.0 },
+        });
+        cpu_secs += job_secs;
+        total_events += events;
+        reports.push(report);
+    }
+    SweepResult {
+        reports,
+        bench: BenchReport {
+            jobs_requested: n_jobs,
+            n_jobs: n_workers,
+            wall_secs,
+            cpu_secs,
+            sim_events: total_events,
+            per_job,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn index_of(name: &str) -> usize {
+        registry().iter().position(|s| s.name == name).expect("scenario registered")
+    }
+
+    #[test]
+    fn job_enumeration_is_seed_major() {
+        let jobs = sweep_jobs(&[0, 1], &[5, 6], true);
+        let key: Vec<(u64, usize)> = jobs.iter().map(|j| (j.seed, j.scenario_index)).collect();
+        assert_eq!(key, vec![(5, 0), (5, 1), (6, 0), (6, 1)]);
+    }
+
+    #[test]
+    fn bench_report_carries_perf_fields() {
+        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true);
+        let result = run_sweep(jobs, 2);
+        assert_eq!(result.reports.len(), 1);
+        assert_eq!(result.bench.per_job.len(), 1);
+        let j = &result.bench.per_job[0];
+        assert_eq!(j.scenario, "wan_clean");
+        assert_eq!(j.seed, 3);
+        assert!(j.sim_events > 0, "a simulation processes events");
+        assert!(j.mean_bst_ms > 0.0);
+        let json = result.bench.to_json().render();
+        for key in ["\"schema\":\"ltp-bench-v1\"", "\"runs\":[", "\"events_per_sec\":", "\"speedup\":"]
+        {
+            assert!(json.contains(key), "missing `{key}` in {json}");
+        }
+    }
+
+    #[test]
+    fn single_report_renders_as_object_many_as_array() {
+        let one = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1], true), 1);
+        assert!(one.render_json().starts_with('{'));
+        let two = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1, 2], true), 2);
+        assert!(two.render_json().starts_with('['));
+        assert_eq!(two.reports[0].seed, 1);
+        assert_eq!(two.reports[1].seed, 2);
+    }
+}

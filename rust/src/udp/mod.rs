@@ -23,6 +23,35 @@ impl Clock {
     }
 }
 
+/// First idle-poll sleep. Short enough that a datacenter-RTT ACK burst is
+/// picked up promptly after a quiet socket.
+const IDLE_BACKOFF_MIN: Duration = Duration::from_micros(20);
+/// Idle-poll ceiling: bounds wakeup latency (retransmit/Early-Close timers
+/// still fire within one RTO-scale tick) while keeping a stalled peer from
+/// costing a spinning core.
+const IDLE_BACKOFF_MAX: Duration = Duration::from_micros(500);
+
+/// Bounded exponential backoff for the nonblocking-socket poll loops:
+/// sleeps double from [`IDLE_BACKOFF_MIN`] to [`IDLE_BACKOFF_MAX`] across
+/// consecutive idle polls and reset to the minimum as soon as any packet
+/// moves.
+struct IdleBackoff(Duration);
+
+impl IdleBackoff {
+    fn fresh() -> IdleBackoff {
+        IdleBackoff(IDLE_BACKOFF_MIN)
+    }
+
+    fn reset(&mut self) {
+        self.0 = IDLE_BACKOFF_MIN;
+    }
+
+    fn sleep(&mut self) {
+        std::thread::sleep(self.0);
+        self.0 = (self.0 * 2).min(IDLE_BACKOFF_MAX);
+    }
+}
+
 /// Send one message over UDP with LTP; blocks until the flow completes or
 /// `timeout` passes. Returns the sender stats.
 pub fn send_message(
@@ -42,6 +71,7 @@ pub fn send_message(
     socket.set_nonblocking(true)?;
     let mut buf = [0u8; 65536];
     let mut out = Vec::with_capacity(HDR_BYTES + map.seg_payload as usize);
+    let mut backoff = IdleBackoff::fresh();
     while !sender.is_complete() {
         if clock.0.elapsed() > timeout {
             anyhow::bail!("LTP send timed out ({:?})", timeout);
@@ -66,7 +96,9 @@ pub fn send_message(
         }
         sender.on_wakeup(clock.now());
         if idle && !sender.is_complete() {
-            std::thread::sleep(Duration::from_micros(200));
+            backoff.sleep();
+        } else {
+            backoff.reset();
         }
     }
     Ok(sender.stats)
@@ -91,6 +123,7 @@ pub fn recv_message(
     let mut peer: Option<std::net::SocketAddr> = None;
     // Segment payload bytes arrive over the wire; stash by seq.
     let mut segments: Vec<(u32, Vec<u8>)> = Vec::new();
+    let mut backoff = IdleBackoff::fresh();
     loop {
         if clock.0.elapsed() > timeout {
             anyhow::bail!("LTP receive timed out");
@@ -124,7 +157,9 @@ pub fn recv_message(
             break;
         }
         if idle {
-            std::thread::sleep(Duration::from_micros(200));
+            backoff.sleep();
+        } else {
+            backoff.reset();
         }
     }
     // Reassemble with packet bubbles (zeros) for the missing segments.

@@ -1,0 +1,80 @@
+//! Determinism and failure-mode contract of the parallel experiment
+//! driver (`runtime::pool` + `scenarios::sweep`):
+//!
+//! * the scenario-all JSON document is **byte-identical** between a serial
+//!   run and a `--jobs 4` run, across multiple seeds (the property CI's
+//!   perf-smoke diff enforces end-to-end through the binary);
+//! * a panicking job surfaces as a panic on the caller with the original
+//!   payload, not as a hang or a truncated report;
+//! * zero-jobs (auto) and one-job (inline serial) edge cases agree with
+//!   the parallel path.
+
+use ltp::runtime::pool::run_jobs;
+use ltp::scenarios::registry;
+use ltp::scenarios::sweep::{run_sweep, sweep_jobs};
+
+/// Serial vs `--jobs 4`, two seeds, the whole registry: same bytes.
+#[test]
+fn scenario_all_json_is_byte_identical_across_job_counts() {
+    let indices: Vec<usize> = (0..registry().len()).collect();
+    let jobs = sweep_jobs(&indices, &[7, 8], true);
+    let serial = run_sweep(jobs.clone(), 1);
+    let parallel = run_sweep(jobs, 4);
+    assert_eq!(serial.reports.len(), registry().len() * 2);
+    assert_eq!(
+        serial.render_json(),
+        parallel.render_json(),
+        "merge order or per-job state leaked into the report"
+    );
+    // The bench side carries one record per job either way.
+    assert_eq!(serial.bench.per_job.len(), parallel.bench.per_job.len());
+    // ...and the deterministic bench fields agree too (wall-clock may not).
+    for (a, b) in serial.bench.per_job.iter().zip(&parallel.bench.per_job) {
+        assert_eq!((a.scenario.as_str(), a.seed), (b.scenario.as_str(), b.seed));
+        assert_eq!(a.sim_events, b.sim_events, "{}: events depend on sharding", a.scenario);
+        assert_eq!(a.mean_bst_ms, b.mean_bst_ms, "{}: BST depends on sharding", a.scenario);
+    }
+}
+
+/// A panic inside one job propagates to the caller with its payload.
+#[test]
+fn pool_propagates_job_panics() {
+    let caught = std::panic::catch_unwind(|| {
+        run_jobs(4, (0u32..32).collect(), |_, x| {
+            if x == 9 {
+                panic!("job nine exploded");
+            }
+            x * 2
+        })
+    });
+    let payload = caught.expect_err("the pool must re-raise the job panic");
+    let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+    assert!(msg.contains("job nine exploded"), "payload lost: {msg:?}");
+}
+
+/// `jobs == 0` (auto) and `jobs == 1` (inline) match any parallel width,
+/// and empty input is a no-op.
+#[test]
+fn pool_zero_and_one_job_edge_cases() {
+    let empty: Vec<u32> = run_jobs(0, Vec::new(), |_, x: u32| x);
+    assert!(empty.is_empty());
+
+    let inputs: Vec<u64> = (0..17).collect();
+    let inline = run_jobs(1, inputs.clone(), |i, x| (i, x * 3));
+    let auto = run_jobs(0, inputs.clone(), |i, x| (i, x * 3));
+    let wide = run_jobs(64, inputs, |i, x| (i, x * 3));
+    assert_eq!(inline, auto);
+    assert_eq!(inline, wide);
+    assert_eq!(inline[5], (5, 15));
+}
+
+/// Results land in job order even when later jobs finish first.
+#[test]
+fn pool_merges_in_job_order_despite_skewed_durations() {
+    let out = run_jobs(8, (0u64..24).collect(), |_, x| {
+        // Earlier jobs sleep longer, so completion order inverts job order.
+        std::thread::sleep(std::time::Duration::from_millis((24 - x) % 5));
+        x
+    });
+    assert_eq!(out, (0u64..24).collect::<Vec<_>>());
+}
