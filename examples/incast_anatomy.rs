@@ -4,9 +4,8 @@
 //!
 //! Run: `cargo run --release --example incast_anatomy`
 
-use ltp::cc::CcAlgo;
 use ltp::config::Workload;
-use ltp::ps::{run_training, Proto, TrainingCfg};
+use ltp::ps::{parse_proto, RunBuilder};
 use ltp::simnet::LossModel;
 use ltp::MS;
 
@@ -17,13 +16,13 @@ fn main() {
 
     println!("== The same incast as a training workload, per protocol ==");
     for loss in [0.0, 0.005] {
-        for proto in [Proto::Ltp, Proto::Tcp(CcAlgo::Bbr), Proto::Tcp(CcAlgo::Reno)] {
-            let mut cfg = TrainingCfg::modeled(proto, Workload::Micro, 8);
-            cfg.iters = 4;
+        for spec in ["ltp", "bbr", "reno"] {
+            let mut b = RunBuilder::modeled(parse_proto(spec).unwrap(), Workload::Micro, 8)
+                .iters(4);
             if loss > 0.0 {
-                cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: loss });
+                b = b.loss(LossModel::Bernoulli { p: loss });
             }
-            let r = run_training(&cfg);
+            let r = b.run().unwrap();
             println!(
                 "loss {:>5.2}% | {:>5} | mean BST {:>8.2} ms | delivered {:>6.2}%",
                 loss * 100.0,

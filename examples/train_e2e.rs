@@ -6,7 +6,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example train_e2e [iters] [preset]`
 
-use ltp::ps::{run_with, Corpus, Proto, RealCompute, RealTraining, TrainingCfg, XlaAggregate};
+use ltp::ps::{parse_proto, run_with, Corpus, RealCompute, RealTraining, RunBuilder, XlaAggregate};
 use ltp::runtime::{default_artifacts_dir, Runtime};
 use ltp::simnet::LossModel;
 use ltp::{MS, SEC};
@@ -14,18 +14,21 @@ use ltp::{MS, SEC};
 fn run(preset: &str, iters: u64, loss: f64, workers: usize) -> anyhow::Result<Vec<f32>> {
     let rt = Runtime::cpu(default_artifacts_dir())?;
     let shared = RealTraining::new(&rt, preset, 0.08)?;
-    let mut cfg = TrainingCfg::modeled(Proto::Ltp, ltp::config::Workload::Micro, workers);
-    cfg.model_bytes = shared.manifest.wire_bytes();
-    cfg.critical = shared
-        .manifest
-        .tensors
-        .critical_segments(ltp::grad::Manifest::aligned_payload(ltp::wire::LTP_MSS));
-    cfg.iters = iters;
-    cfg.compute_time = 50 * MS;
+    let mut b = RunBuilder::modeled(parse_proto("ltp")?, ltp::config::Workload::Micro, workers)
+        .model_bytes(shared.manifest.wire_bytes())
+        .critical(
+            shared
+                .manifest
+                .tensors
+                .critical_segments(ltp::grad::Manifest::aligned_payload(ltp::wire::LTP_MSS)),
+        )
+        .iters(iters)
+        .compute_time(50 * MS)
+        .horizon(24 * 3600 * SEC);
     if loss > 0.0 {
-        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: loss });
+        b = b.loss(LossModel::Bernoulli { p: loss });
     }
-    cfg.horizon = 24 * 3600 * SEC;
+    let cfg = b.build()?;
     let shared2 = shared.clone();
     let report = run_with(
         &cfg,

@@ -5,9 +5,8 @@
 //!
 //! Run: `cargo run --release --example wan_federated`
 
-use ltp::cc::CcAlgo;
 use ltp::config::{NetEnv, Workload};
-use ltp::ps::{run_training, Proto, TrainingCfg};
+use ltp::ps::{parse_proto, RunBuilder};
 use ltp::simnet::LossModel;
 use ltp::MS;
 
@@ -18,12 +17,15 @@ fn main() {
         loss_good: 0.0005,
         loss_bad: 0.15,
     };
-    for proto in [Proto::Ltp, Proto::Tcp(CcAlgo::Bbr), Proto::Tcp(CcAlgo::Cubic)] {
-        let mut cfg = TrainingCfg::modeled(proto, Workload::Micro, 8);
-        cfg.link = NetEnv::Wan1g.link().with_loss(ge);
-        cfg.deadline_slack = NetEnv::Wan1g.deadline_slack();
-        cfg.iters = 4;
-        let r = run_training(&cfg);
+    // Protocols are registry specs — try `ltp proto list` for the grammar
+    // (e.g. swap in "ltp-adaptive" or "ltp:pct=0.9,slack=200ms").
+    for spec in ["ltp", "bbr", "cubic"] {
+        let r = RunBuilder::modeled(parse_proto(spec).unwrap(), Workload::Micro, 8)
+            .net_env(NetEnv::Wan1g)
+            .loss(ge)
+            .iters(4)
+            .run()
+            .unwrap();
         println!(
             "{:>5} | iters {} | mean BST {:>9.1} ms | gather p50/p99 {:>7.1}/{:>7.1} ms | delivered {:>6.2}%",
             r.proto,

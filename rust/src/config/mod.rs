@@ -35,23 +35,35 @@ impl ModelManifest {
 
     pub fn parse(preset: &str, text: &str) -> Result<ModelManifest> {
         let mut kv = std::collections::HashMap::new();
-        let mut tensors = Vec::new();
+        let mut tensors: Vec<(String, usize)> = Vec::new();
         let mut in_tensors = false;
-        for line in text.lines() {
-            let line = line.trim();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = raw.trim();
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
             if line == "tensors:" {
+                if in_tensors {
+                    bail!("manifest line {lineno}: duplicate `tensors:` section");
+                }
                 in_tensors = true;
                 continue;
             }
-            let (key, val) = line.rsplit_once(' ').context("malformed manifest line")?;
-            let val: usize = val.parse().with_context(|| format!("bad value in `{line}`"))?;
+            let (key, val) = line.rsplit_once(' ').with_context(|| {
+                format!("manifest line {lineno}: malformed line `{line}` (expected `<key> <value>`)")
+            })?;
+            let key = key.trim_end();
+            let val: usize = val
+                .parse()
+                .with_context(|| format!("manifest line {lineno}: bad value in `{line}`"))?;
             if in_tensors {
+                if tensors.iter().any(|(name, _)| name == key) {
+                    bail!("manifest line {lineno}: duplicate tensor `{key}`");
+                }
                 tensors.push((key.to_string(), val));
-            } else {
-                kv.insert(key.to_string(), val);
+            } else if kv.insert(key.to_string(), val).is_some() {
+                bail!("manifest line {lineno}: duplicate key `{key}`");
             }
         }
         let get = |k: &str| -> Result<usize> {
@@ -226,6 +238,37 @@ block0.wq 200
     fn rejects_inconsistent_counts() {
         let bad = SAMPLE.replace("param_count 300", "param_count 999");
         assert!(ModelManifest::parse("tiny", &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_keys_with_line_number() {
+        // A repeated header key (line 4 after the injection).
+        let bad = SAMPLE.replace("d_model 128", "d_model 128\nvocab 1024");
+        let err = format!("{:#}", ModelManifest::parse("tiny", &bad).unwrap_err());
+        assert!(err.contains("duplicate key `vocab`"), "{err}");
+        assert!(err.contains("line 4"), "must name the offending line: {err}");
+        // A repeated tensor name (line 15 after the injection).
+        let dup_tensor = SAMPLE.replace("block0.wq 200", "block0.wq 100\ntok_embed 100");
+        let err = format!("{:#}", ModelManifest::parse("tiny", &dup_tensor).unwrap_err());
+        assert!(err.contains("duplicate tensor `tok_embed`"), "{err}");
+        assert!(err.contains("line 15"), "{err}");
+    }
+
+    #[test]
+    fn reports_line_numbers_for_malformed_lines() {
+        let bad = SAMPLE.replace("seq_len 64", "seq_len=64");
+        let err = format!("{:#}", ModelManifest::parse("tiny", &bad).unwrap_err());
+        assert!(err.contains("line 6"), "must name the offending line: {err}");
+        assert!(err.contains("malformed line"), "{err}");
+
+        let bad = SAMPLE.replace("batch 8", "batch eight");
+        let err = format!("{:#}", ModelManifest::parse("tiny", &bad).unwrap_err());
+        assert!(err.contains("line 7"), "must name the offending line: {err}");
+        assert!(err.contains("bad value"), "{err}");
+
+        let bad = format!("{SAMPLE}tensors:\n");
+        let err = format!("{:#}", ModelManifest::parse("tiny", &bad).unwrap_err());
+        assert!(err.contains("line 15") && err.contains("duplicate `tensors:`"), "{err}");
     }
 
     #[test]

@@ -3,20 +3,21 @@
 //! Fig 14 (per-batch synchronization time distributions, normalized to
 //! LTP).
 
-use crate::cc::CcAlgo;
 use crate::config::Workload;
 use crate::metrics::{ratio, Table};
-use crate::ps::{run_training, Proto, RunReport, TrainingCfg};
+use crate::ps::{parse_proto, ProtoSpec, RunBuilder, RunReport};
 use crate::runtime::pool;
 use crate::simnet::LossModel;
 use crate::util::Summary;
 
-pub const PROTOS: [Proto; 4] = [
-    Proto::Ltp,
-    Proto::Tcp(CcAlgo::Bbr),
-    Proto::Tcp(CcAlgo::Cubic),
-    Proto::Tcp(CcAlgo::Reno),
-];
+/// The four-protocol sweep the paper's throughput figures compare, as
+/// registry specs (LTP leads — fig14's normalizer depends on it).
+pub fn protos() -> Vec<ProtoSpec> {
+    ["ltp", "bbr", "cubic", "reno"]
+        .iter()
+        .map(|s| parse_proto(s).expect("registered spec"))
+        .collect()
+}
 
 #[derive(Debug, Clone)]
 pub struct Fig12Point {
@@ -29,37 +30,37 @@ pub struct Fig12Point {
 
 fn one_run(
     workload: Workload,
-    proto: Proto,
+    proto: ProtoSpec,
     loss: f64,
     iters: u64,
     workers: usize,
     quick: bool,
 ) -> Fig12Point {
-    let mut cfg = TrainingCfg::modeled(proto, workload, workers);
-    cfg.iters = iters;
-    cfg.batches_per_epoch = iters.max(2) / 2; // exercise one epoch update
+    let name = proto.name().to_string();
+    let mut b = RunBuilder::modeled(proto, workload, workers)
+        .iters(iters)
+        .batches_per_epoch(iters.max(2) / 2) // exercise one epoch update
+        // TCP under heavy loss can crawl: cap the horizon so a point costs
+        // bounded time; throughput then reflects completed iterations.
+        .horizon(if quick { 120 * crate::SEC } else { 900 * crate::SEC });
     if quick {
         // 1/8-scale messages (and proportionally shorter compute) keep the
         // quick sweep interactive; protocol ordering is preserved.
-        cfg.model_bytes /= 8;
-        cfg.compute_time /= 8;
-        cfg.critical = crate::grad::Manifest::synthetic(cfg.model_bytes, 50)
-            .critical_segments(crate::grad::Manifest::aligned_payload(crate::wire::LTP_MSS));
+        b = b
+            .model_bytes(workload.model_bytes() / 8)
+            .compute_time(workload.compute_time() / 8);
     }
     if loss > 0.0 {
-        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: loss });
+        b = b.loss(LossModel::Bernoulli { p: loss });
     }
-    // TCP under heavy loss can crawl: cap the horizon so a point costs
-    // bounded time; throughput then reflects completed iterations.
-    cfg.horizon = if quick { 120 * crate::SEC } else { 900 * crate::SEC };
-    let report = run_training(&cfg);
+    let report = b.run().expect("fig12 sweep points are valid configurations");
     let tp = if report.iters.is_empty() {
         // Nothing finished within the horizon — effectively zero.
         report.iters.len() as f64
     } else {
         report.throughput(workers, workload.batch_images())
     };
-    Fig12Point { workload, proto: proto.name(), loss, throughput: tp, report }
+    Fig12Point { workload, proto: name, loss, throughput: tp, report }
 }
 
 /// Fig 12: images/sec for every (workload, protocol, loss-rate).
@@ -71,13 +72,14 @@ pub fn fig12(quick: bool, jobs: usize) -> Vec<Fig12Point> {
     } else {
         &[(Workload::Resnet50, 5), (Workload::Vgg16, 3)]
     };
+    let protos = protos();
     // One job per (workload, proto, loss) sweep point, row-major so the
     // merged vector reads back in table order.
-    let mut sweep: Vec<(Workload, u64, Proto, f64)> = Vec::new();
+    let mut sweep: Vec<(Workload, u64, ProtoSpec, f64)> = Vec::new();
     for &(workload, iters) in workloads {
-        for &proto in &PROTOS {
+        for proto in &protos {
             for &loss in loss_rates {
-                sweep.push((workload, iters, proto, loss));
+                sweep.push((workload, iters, proto.clone(), loss));
             }
         }
     }
@@ -92,10 +94,10 @@ pub fn fig12(quick: bool, jobs: usize) -> Vec<Fig12Point> {
                 .chain(std::iter::once("vs cubic@max-loss".to_string()))
                 .collect::<Vec<_>>(),
         );
-        let base = wi * PROTOS.len() * n_loss;
+        let base = wi * protos.len() * n_loss;
         let tp = |pi: usize, li: usize| points[base + pi * n_loss + li].throughput;
-        for (pi, &proto) in PROTOS.iter().enumerate() {
-            let mut row = vec![proto.name()];
+        for (pi, proto) in protos.iter().enumerate() {
+            let mut row = vec![proto.name().to_string()];
             for li in 0..n_loss {
                 row.push(format!("{:.1}", tp(pi, li)));
             }
@@ -125,15 +127,19 @@ pub fn fig14(quick: bool, jobs: usize) -> Vec<(f64, String, Summary)> {
     // One job per (loss, proto) point, loss-major with LTP leading each
     // group so the normalizer is available when its group renders —
     // enforce the ordering the merge loop depends on.
-    assert_eq!(PROTOS[0], Proto::Ltp, "fig14 normalizer expects LTP first in PROTOS");
-    let mut sweep: Vec<(f64, Proto)> = Vec::new();
+    let protos = protos();
+    assert!(
+        protos[0].is_loss_tolerant(),
+        "fig14 normalizer expects the loss-tolerant protocol first"
+    );
+    let mut sweep: Vec<(f64, ProtoSpec)> = Vec::new();
     for &loss in loss_rates {
-        for &proto in &PROTOS {
-            sweep.push((loss, proto));
+        for proto in &protos {
+            sweep.push((loss, proto.clone()));
         }
     }
     let runs = pool::run_jobs(jobs, sweep, |_, (loss, proto)| {
-        let p = one_run(Workload::Resnet50, proto, loss, iters, workers, quick);
+        let p = one_run(Workload::Resnet50, proto.clone(), loss, iters, workers, quick);
         (loss, proto, Summary::of(&p.report.bst_values_ms()))
     });
     let mut out = Vec::new();
@@ -142,19 +148,19 @@ pub fn fig14(quick: bool, jobs: usize) -> Vec<(f64, String, Summary)> {
     ]);
     let mut ltp_mean = 1.0;
     for (loss, proto, bst) in runs {
-        if proto == Proto::Ltp {
+        if proto.is_loss_tolerant() {
             ltp_mean = bst.mean.max(1e-9);
         }
         table.row(vec![
             format!("{:.2}%", loss * 100.0),
-            proto.name(),
+            proto.name().to_string(),
             format!("{:.2}", bst.p25 / ltp_mean),
             format!("{:.2}", bst.p50 / ltp_mean),
             format!("{:.2}", bst.p75 / ltp_mean),
             format!("{:.2}", bst.max / ltp_mean),
             format!("{:.1}", bst.mean),
         ]);
-        out.push((loss, proto.name(), bst));
+        out.push((loss, proto.name().to_string(), bst));
     }
     table.emit("fig14", "Fig 14 — BST distribution normalized to LTP (ResNet50, 8 workers)");
     out

@@ -3,7 +3,7 @@
 
 use crate::config::Workload;
 use crate::metrics::Table;
-use crate::ps::{run_training, Proto, TrainingCfg};
+use crate::ps::{parse_proto, RunBuilder};
 use crate::runtime::pool;
 use crate::simnet::{LinkCfg, Sim};
 use crate::tcp::{FctLog, TcpReceiverNode, TcpSender, TcpSenderNode};
@@ -27,16 +27,17 @@ pub fn fig2(quick: bool, jobs: usize) -> Vec<Fig2Row> {
     let iters = if quick { 2 } else { 5 };
     // One job per worker-count sweep point; rendering happens post-merge.
     let points = pool::run_jobs(jobs, vec![1usize, 2, 4, 8], |_, w| {
-        let mut cfg = TrainingCfg::modeled(
-            Proto::Tcp(crate::cc::CcAlgo::Cubic),
+        let report = RunBuilder::modeled(
+            parse_proto("cubic").expect("registered spec"),
             Workload::Resnet50,
             w,
-        );
-        cfg.iters = iters;
-        let report = run_training(&cfg);
+        )
+        .iters(iters)
+        .run()
+        .expect("fig2 configurations are valid");
         let iter_time =
             report.total_time as f64 / report.iters.len().max(1) as f64 / MS as f64;
-        let comp_ms = cfg.compute_time as f64 / MS as f64;
+        let comp_ms = Workload::Resnet50.compute_time() as f64 / MS as f64;
         let comm_ratio = (iter_time - comp_ms).max(0.0) / iter_time.max(1e-9);
         let samples = report.throughput(w, Workload::Resnet50.batch_images());
         (w, iter_time, comp_ms, comm_ratio, samples)

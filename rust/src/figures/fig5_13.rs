@@ -10,7 +10,8 @@
 
 use crate::metrics::Table;
 use crate::ps::{
-    run_with, Corpus, Proto, RealCompute, RealTraining, TrainingCfg, XlaAggregate,
+    parse_proto, run_with, Corpus, ProtoSpec, RealCompute, RealTraining, RunBuilder,
+    XlaAggregate,
 };
 use crate::runtime::{default_artifacts_dir, literal_f32, pool, to_f32, Runtime};
 use crate::simnet::LossModel;
@@ -166,40 +167,37 @@ pub fn fig13(quick: bool, jobs: usize) -> Result<()> {
     let workers = 4;
     let target = 4.8f32;
     let max_iters = if quick { 20 } else { 60 };
-    let protos: &[Proto] = if quick {
-        &[Proto::Ltp, Proto::Tcp(crate::cc::CcAlgo::Cubic)]
-    } else {
-        &[
-            Proto::Ltp,
-            Proto::Tcp(crate::cc::CcAlgo::Bbr),
-            Proto::Tcp(crate::cc::CcAlgo::Cubic),
-            Proto::Tcp(crate::cc::CcAlgo::Reno),
-        ]
-    };
+    let specs: &[&str] =
+        if quick { &["ltp", "cubic"] } else { &["ltp", "bbr", "cubic", "reno"] };
+    let protos: Vec<ProtoSpec> =
+        specs.iter().map(|s| parse_proto(s).expect("registered spec")).collect();
     let loss_rates: &[f64] = if quick { &[0.0, 0.01] } else { &[0.0, 0.001, 0.01] };
     // One job per (proto, loss) point; each job owns its model state and
     // corpora (runtime cached per thread), so runs stay independent and
     // seed-deterministic.
-    let mut sweep: Vec<(Proto, f64)> = Vec::new();
-    for &proto in protos {
+    let mut sweep: Vec<(ProtoSpec, f64)> = Vec::new();
+    for proto in &protos {
         for &p in loss_rates {
-            sweep.push((proto, p));
+            sweep.push((proto.clone(), p));
         }
     }
     let rows = pool::run_jobs(jobs, sweep, |_, (proto, p)| -> Result<Vec<String>> {
         with_runtime(|rt| {
             let shared = RealTraining::new(rt, "tiny", 0.08)?;
-            let mut cfg = TrainingCfg::modeled(proto, crate::config::Workload::Micro, workers);
-            cfg.model_bytes = shared.manifest.wire_bytes();
-            cfg.critical = shared.manifest.tensors.critical_segments(
-                crate::grad::Manifest::aligned_payload(crate::wire::LTP_MSS),
-            );
-            cfg.iters = max_iters;
-            cfg.compute_time = 50 * MS;
+            let name = proto.name().to_string();
+            let mut b =
+                RunBuilder::modeled(proto, crate::config::Workload::Micro, workers)
+                    .model_bytes(shared.manifest.wire_bytes())
+                    .critical(shared.manifest.tensors.critical_segments(
+                        crate::grad::Manifest::aligned_payload(crate::wire::LTP_MSS),
+                    ))
+                    .iters(max_iters)
+                    .compute_time(50 * MS)
+                    .horizon(3600 * SEC);
             if p > 0.0 {
-                cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p });
+                b = b.loss(LossModel::Bernoulli { p });
             }
-            cfg.horizon = 3600 * SEC;
+            let cfg = b.build()?;
             let shared2 = shared.clone();
             let report = run_with(
                 &cfg,
@@ -225,7 +223,7 @@ pub fn fig13(quick: bool, jobs: usize) -> Result<()> {
                 .map(|l| format!("{l:.3}"))
                 .unwrap_or_else(|| "—".into());
             Ok(vec![
-                proto.name(),
+                name,
                 format!("{:.2}%", p * 100.0),
                 tta,
                 final_loss,

@@ -2,29 +2,37 @@
 //!
 //! ```text
 //! ltp scenario <name|list|all> [--json] [--seed N | --seeds A..B] [--quick]
-//!              [--jobs N] [--out FILE] [--bench [FILE]]
+//!              [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]...
 //! ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]
+//! ltp proto <list|parse SPEC>               protocol registry / spec grammar
 //! ltp train [--preset tiny] [--workers 4] [--iters 50] [--loss 0.01]
-//!           [--proto ltp|bbr|cubic|reno]
+//!           [--proto SPEC]
 //! ltp bench-ltp [--bytes N] [--loss P]      one-flow protocol microbench
 //! ```
+//!
+//! Protocol specs follow the registry grammar (`ltp proto list`):
+//! `ltp`, `ltp:pct=0.9,slack=100ms`, `ltp-adaptive`, `tcp:cc=cubic`, …
 //!
 //! (Hand-rolled argument parsing: the vendored dependency set has no clap.)
 
 use anyhow::{bail, Context, Result};
-use ltp::cc::CcAlgo;
-use ltp::ps::{run_with, Corpus, Proto, RealCompute, RealTraining, TrainingCfg, XlaAggregate};
+use ltp::ps::{
+    parse_proto, proto_registry, run_with, Corpus, ProtoSpec, RealCompute, RealTraining,
+    RunBuilder, XlaAggregate,
+};
 use ltp::simnet::LossModel;
 use ltp::{MS, SEC};
 
 struct Args {
     positional: Vec<String>,
-    flags: std::collections::HashMap<String, String>,
+    /// Flags in command-line order; repeatable flags (`--proto`) keep every
+    /// occurrence, single-valued lookups take the last.
+    flags: Vec<(String, String)>,
 }
 
 fn parse_args() -> Args {
     let mut positional = Vec::new();
-    let mut flags = std::collections::HashMap::new();
+    let mut flags = Vec::new();
     let mut it = std::env::args().skip(1).peekable();
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
@@ -33,7 +41,7 @@ fn parse_args() -> Args {
             } else {
                 "true".to_string()
             };
-            flags.insert(name.to_string(), val);
+            flags.push((name.to_string(), val));
         } else {
             positional.push(a);
         }
@@ -42,26 +50,44 @@ fn parse_args() -> Args {
 }
 
 impl Args {
+    /// Last occurrence of `--name`, if any.
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Every occurrence of `--name`, in order.
+    fn all(&self, name: &str) -> Vec<&str> {
+        self.flags.iter().filter(|(n, _)| n == name).map(|(_, v)| v.as_str()).collect()
+    }
+
     fn flag<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
     where
         T::Err: std::fmt::Display,
     {
-        match self.flags.get(name) {
+        match self.get(name) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
         }
     }
 
     fn has(&self, name: &str) -> bool {
-        self.flags.contains_key(name)
+        self.flags.iter().any(|(n, _)| n == name)
     }
-}
 
-fn proto_of(name: &str) -> Result<Proto> {
-    Ok(match name {
-        "ltp" => Proto::Ltp,
-        other => Proto::Tcp(other.parse::<CcAlgo>().map_err(|e| anyhow::anyhow!(e))?),
-    })
+    /// Parse every `--proto SPEC` against the protocol registry; `None`
+    /// when the flag was not given.
+    fn protos(&self) -> Result<Option<Vec<ProtoSpec>>> {
+        let specs = self.all("proto");
+        if specs.is_empty() {
+            return Ok(None);
+        }
+        let mut out = Vec::with_capacity(specs.len());
+        for s in specs {
+            anyhow::ensure!(s != "true", "--proto requires a spec (see `ltp proto list`)");
+            out.push(parse_proto(s).with_context(|| format!("--proto {s}"))?);
+        }
+        Ok(Some(out))
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -70,7 +96,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let iters: u64 = args.flag("iters", 50)?;
     let loss: f64 = args.flag("loss", 0.0)?;
     let lr: f32 = args.flag("lr", 0.08)?;
-    let proto = proto_of(&args.flag("proto", "ltp".to_string())?)?;
+    let proto = parse_proto(&args.flag("proto", "ltp".to_string())?)?;
 
     let rt = ltp::runtime::Runtime::cpu(ltp::runtime::default_artifacts_dir())
         .context("PJRT CPU client")?;
@@ -82,18 +108,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         shared.manifest.param_count,
         ltp::util::fmt_bytes(shared.manifest.wire_bytes()),
     );
-    let mut cfg = TrainingCfg::modeled(proto, ltp::config::Workload::Micro, workers);
-    cfg.model_bytes = shared.manifest.wire_bytes();
-    cfg.critical = shared
-        .manifest
-        .tensors
-        .critical_segments(ltp::grad::Manifest::aligned_payload(ltp::wire::LTP_MSS));
-    cfg.iters = iters;
-    cfg.compute_time = 50 * MS;
+    let mut b = RunBuilder::modeled(proto, ltp::config::Workload::Micro, workers)
+        .model_bytes(shared.manifest.wire_bytes())
+        .critical(shared.manifest.tensors.critical_segments(
+            ltp::grad::Manifest::aligned_payload(ltp::wire::LTP_MSS),
+        ))
+        .iters(iters)
+        .compute_time(50 * MS)
+        .horizon(24 * 3600 * SEC);
     if loss > 0.0 {
-        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: loss });
+        b = b.loss(LossModel::Bernoulli { p: loss });
     }
-    cfg.horizon = 24 * 3600 * SEC;
+    let cfg = b.build()?;
 
     let shared2 = shared.clone();
     let t0 = std::time::Instant::now();
@@ -153,7 +179,7 @@ fn cmd_bench_ltp(args: &Args) -> Result<()> {
 /// Seeds to sweep: `--seeds A..B` (inclusive; `A..=B` also accepted) or a
 /// single `--seed N` (default 1).
 fn parse_seeds(args: &Args) -> Result<Vec<u64>> {
-    match args.flags.get("seeds") {
+    match args.get("seeds") {
         None => Ok(vec![args.flag("seed", 1)?]),
         Some(spec) => {
             anyhow::ensure!(
@@ -162,7 +188,7 @@ fn parse_seeds(args: &Args) -> Result<Vec<u64>> {
             );
             let (a, b) = match spec.split_once("..") {
                 Some((a, b)) => (a, b.strip_prefix('=').unwrap_or(b)),
-                None => (spec.as_str(), spec.as_str()),
+                None => (spec, spec),
             };
             let lo: u64 =
                 a.trim().parse().map_err(|e| anyhow::anyhow!("--seeds {spec}: {e}"))?;
@@ -182,22 +208,24 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     // instantly, not after a multi-minute sweep (and a bare `--bench`
     // placed before the scenario name must not swallow it silently).
     let json = args.has("json");
-    let out_path = args.flags.get("out").cloned();
+    let out_path = args.get("out").map(str::to_string);
     if let Some(p) = &out_path {
         // The hand-rolled parser maps a bare flag to "true" — reject it
         // rather than write the report to a file literally named `true`.
         anyhow::ensure!(p != "true", "--out requires a file path");
         anyhow::ensure!(json, "--out writes the machine-readable report; pass --json too");
     }
-    let bench_path = match args.flags.get("bench") {
+    let bench_path = match args.get("bench") {
         None => None,
         // Bare `--bench` picks the conventional artifact name.
-        Some(v) if v == "true" => Some("BENCH_scenarios.json".to_string()),
-        Some(v) if v.ends_with(".json") => Some(v.clone()),
+        Some("true") => Some("BENCH_scenarios.json".to_string()),
+        Some(v) if v.ends_with(".json") => Some(v.to_string()),
         Some(v) => bail!(
             "--bench {v}: expected a .json path (bare --bench writes BENCH_scenarios.json)"
         ),
     };
+    // Protocol specs fail fast too, before any simulation runs.
+    let protos = args.protos()?;
     if which == "list" {
         println!("registered scenarios (run with `ltp scenario <name|all> [--json]`):\n");
         for s in scenarios::registry() {
@@ -224,7 +252,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             }
         }
     };
-    let jobs = sweep::sweep_jobs(&indices, &seeds, args.has("quick"));
+    let jobs = sweep::sweep_jobs(&indices, &seeds, args.has("quick"), protos);
     let result = sweep::run_sweep(jobs, n_jobs);
     if let Some(path) = &out_path {
         std::fs::write(path, result.render_json())
@@ -252,6 +280,41 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ltp proto list` — the registry; `ltp proto parse <spec>` — echo a
+/// spec's canonical form (handy for checking what a `--proto` flag means).
+fn cmd_proto(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str).unwrap_or("list") {
+        "list" => {
+            println!(
+                "registered protocols (use with `--proto <key>[:name=value,...]`):\n"
+            );
+            for d in proto_registry() {
+                println!("  {:<14} {}", d.key, d.summary);
+                if !d.params.is_empty() {
+                    println!("  {:<14}   params: {}", "", d.params);
+                }
+            }
+            println!("\nthe `proto_matrix` scenario sweeps every matrix-flagged protocol.");
+            Ok(())
+        }
+        "parse" => {
+            let spec = args
+                .positional
+                .get(2)
+                .context("usage: ltp proto parse <spec>")?;
+            let p = parse_proto(spec)?;
+            println!(
+                "{} -> canonical `{}` ({})",
+                spec,
+                p.name(),
+                if p.is_loss_tolerant() { "loss-tolerant" } else { "reliable" }
+            );
+            Ok(())
+        }
+        other => bail!("unknown proto subcommand `{other}` (list|parse)"),
+    }
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     match args.positional.first().map(String::as_str) {
@@ -260,14 +323,16 @@ fn main() -> Result<()> {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
             ltp::figures::run(which, args.has("quick"), args.flag("jobs", 1)?)
         }
+        Some("proto") => cmd_proto(&args),
         Some("train") => cmd_train(&args),
         Some("bench-ltp") => cmd_bench_ltp(&args),
         _ => {
             eprintln!(
                 "usage:\n  ltp scenario <name|list|all> [--json] [--seed N | --seeds A..B] [--quick]\n  \
-                 \x20            [--jobs N] [--out FILE] [--bench [FILE]]\n  \
+                 \x20            [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]...\n  \
                  ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]\n  \
-                 ltp train [--preset tiny] [--workers N] [--iters N] [--loss P] [--proto ltp|bbr|cubic|reno]\n  \
+                 ltp proto <list|parse SPEC>\n  \
+                 ltp train [--preset tiny] [--workers N] [--iters N] [--loss P] [--proto SPEC]\n  \
                  ltp bench-ltp [--bytes N] [--loss P]"
             );
             bail!("missing or unknown subcommand");

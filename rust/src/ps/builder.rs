@@ -1,0 +1,347 @@
+//! [`RunBuilder`] — the validated, fluent constructor for training runs.
+//!
+//! Replaces the bare 15-field [`TrainingCfg`] struct-literal plumbing:
+//! defaults come from [`Workload`] / [`NetEnv`] presets, call sites
+//! override only what their experiment varies, and [`RunBuilder::build`]
+//! fails fast on inconsistent combinations (a rack holding more workers
+//! than the run has, an Early Close threshold outside `(0, 1]`, a message
+//! too large for LTP's 24-bit segment space, …) instead of letting them
+//! surface as silent mis-simulations.
+
+use super::runner::{BgFlow, RunReport, Topo, TrainingCfg};
+use super::spec::ProtoSpec;
+use crate::config::{NetEnv, Workload};
+use crate::grad::Manifest;
+use crate::proto::MAX_SEGS;
+use crate::simnet::{LinkCfg, LossModel};
+use crate::wire::LTP_MSS;
+use crate::{Nanos, MS, SEC};
+use anyhow::{ensure, Result};
+
+/// How the critical segment set is derived at [`RunBuilder::build`] time.
+#[derive(Debug, Clone)]
+enum Critical {
+    /// A synthetic tensor manifest with `n` tensors over the final message
+    /// size (the modeled-compute default).
+    Synthetic(usize),
+    /// An explicit segment list (real manifests, protocol tests).
+    Explicit(Vec<u32>),
+}
+
+/// Fluent, validated builder for a [`TrainingCfg`].
+///
+/// ```no_run
+/// use ltp::ps::{parse_proto, RunBuilder};
+/// use ltp::config::{NetEnv, Workload};
+/// use ltp::simnet::LossModel;
+///
+/// let report = RunBuilder::modeled(parse_proto("ltp")?, Workload::Micro, 8)
+///     .iters(4)
+///     .net_env(NetEnv::WanBursty)
+///     .loss(LossModel::Bernoulli { p: 0.01 })
+///     .run()?;
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct RunBuilder {
+    proto: ProtoSpec,
+    workers: usize,
+    iters: u64,
+    model_bytes: u64,
+    critical: Critical,
+    compute_time: Nanos,
+    agg_time: Nanos,
+    link: LinkCfg,
+    switch_delay: Nanos,
+    pct_threshold: f64,
+    deadline_slack: Nanos,
+    batches_per_epoch: u64,
+    seed: u64,
+    horizon: Nanos,
+    topo: Topo,
+    bg: Vec<BgFlow>,
+}
+
+impl RunBuilder {
+    /// A modeled-compute run with the workload's message size and
+    /// calibrated compute time on the testbed rack — the same defaults
+    /// [`TrainingCfg::modeled`] has always produced.
+    pub fn modeled(proto: ProtoSpec, workload: Workload, workers: usize) -> RunBuilder {
+        RunBuilder {
+            proto,
+            workers,
+            iters: 10,
+            model_bytes: workload.model_bytes(),
+            critical: Critical::Synthetic(50),
+            compute_time: workload.compute_time(),
+            agg_time: 2 * MS,
+            link: NetEnv::Rack.link(),
+            switch_delay: 500,
+            pct_threshold: 0.8,
+            deadline_slack: NetEnv::Rack.deadline_slack(),
+            batches_per_epoch: 10,
+            seed: 1,
+            horizon: 3600 * SEC,
+            topo: Topo::Star,
+            bg: vec![],
+        }
+    }
+
+    pub fn iters(mut self, iters: u64) -> RunBuilder {
+        self.iters = iters;
+        self
+    }
+
+    /// Gradient bytes per worker per iteration. The synthetic critical set
+    /// follows the new size; an [`RunBuilder::critical`] override does not.
+    pub fn model_bytes(mut self, bytes: u64) -> RunBuilder {
+        self.model_bytes = bytes;
+        self
+    }
+
+    /// Derive criticals from a synthetic manifest with `n` tensors (the
+    /// default uses 50).
+    pub fn critical_tensors(mut self, n: usize) -> RunBuilder {
+        self.critical = Critical::Synthetic(n);
+        self
+    }
+
+    /// Explicit critical segment ids (e.g. from a real model manifest).
+    pub fn critical(mut self, segments: Vec<u32>) -> RunBuilder {
+        self.critical = Critical::Explicit(segments);
+        self
+    }
+
+    pub fn compute_time(mut self, t: Nanos) -> RunBuilder {
+        self.compute_time = t;
+        self
+    }
+
+    pub fn agg_time(mut self, t: Nanos) -> RunBuilder {
+        self.agg_time = t;
+        self
+    }
+
+    /// Replace the edge-link configuration (drops any loss set earlier —
+    /// call [`RunBuilder::loss`] after).
+    pub fn link(mut self, link: LinkCfg) -> RunBuilder {
+        self.link = link;
+        self
+    }
+
+    /// Apply a network-environment preset: edge link *and* deadline slack.
+    pub fn net_env(mut self, env: NetEnv) -> RunBuilder {
+        self.link = env.link();
+        self.deadline_slack = env.deadline_slack();
+        self
+    }
+
+    /// Impose a loss model on the current edge link.
+    pub fn loss(mut self, loss: LossModel) -> RunBuilder {
+        self.link = self.link.with_loss(loss);
+        self
+    }
+
+    /// The edge link as configured so far — for deriving related links
+    /// (e.g. a trunk with a deeper queue).
+    pub fn link_cfg(&self) -> LinkCfg {
+        self.link
+    }
+
+    pub fn switch_delay(mut self, d: Nanos) -> RunBuilder {
+        self.switch_delay = d;
+        self
+    }
+
+    /// Early Close data-percentage threshold (paper Fig 7).
+    pub fn pct_threshold(mut self, pct: f64) -> RunBuilder {
+        self.pct_threshold = pct;
+        self
+    }
+
+    /// Deadline slack C (paper §III-B1: 30 ms DCN / 100 ms WAN).
+    pub fn deadline_slack(mut self, slack: Nanos) -> RunBuilder {
+        self.deadline_slack = slack;
+        self
+    }
+
+    pub fn batches_per_epoch(mut self, n: u64) -> RunBuilder {
+        self.batches_per_epoch = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> RunBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// Wall-clock cap on the simulation.
+    pub fn horizon(mut self, horizon: Nanos) -> RunBuilder {
+        self.horizon = horizon;
+        self
+    }
+
+    /// Two racks under one aggregation switch: the PS and `rack0_workers`
+    /// workers in rack 0, the rest in rack 1 behind `trunk`.
+    pub fn two_rack(mut self, rack0_workers: usize, trunk: LinkCfg) -> RunBuilder {
+        self.topo = Topo::TwoRack { rack0_workers, trunk };
+        self
+    }
+
+    /// Add a background flow sharing the fabric.
+    pub fn bg(mut self, flow: BgFlow) -> RunBuilder {
+        self.bg.push(flow);
+        self
+    }
+
+    /// Validate and produce the run configuration.
+    pub fn build(self) -> Result<TrainingCfg> {
+        ensure!(self.workers >= 1, "a training run needs at least one worker");
+        ensure!(self.iters >= 1, "a training run needs at least one iteration");
+        ensure!(self.model_bytes > 0, "model_bytes must be positive");
+        ensure!(self.batches_per_epoch >= 1, "batches_per_epoch must be at least 1");
+        ensure!(
+            self.pct_threshold > 0.0 && self.pct_threshold <= 1.0,
+            "pct_threshold {} outside (0, 1]",
+            self.pct_threshold
+        );
+        ensure!(self.horizon > 0, "the simulation horizon must be positive");
+        validate_loss(&self.link.loss)?;
+        if let Topo::TwoRack { rack0_workers, trunk } = &self.topo {
+            ensure!(
+                *rack0_workers <= self.workers,
+                "rack 0 holds {rack0_workers} workers but the run has only {}",
+                self.workers
+            );
+            validate_loss(&trunk.loss)?;
+        }
+        if self.proto.is_loss_tolerant() {
+            let seg = Manifest::aligned_payload(LTP_MSS) as u64;
+            let n_segs = self.model_bytes.div_ceil(seg);
+            ensure!(
+                n_segs <= MAX_SEGS as u64,
+                "{} bytes need {n_segs} segments — beyond LTP's 24-bit segment space",
+                self.model_bytes
+            );
+        }
+        let critical = match self.critical {
+            Critical::Explicit(segments) => segments,
+            Critical::Synthetic(n) => Manifest::synthetic(self.model_bytes, n)
+                .critical_segments(Manifest::aligned_payload(LTP_MSS)),
+        };
+        Ok(TrainingCfg {
+            proto: self.proto,
+            n_workers: self.workers,
+            iters: self.iters,
+            model_bytes: self.model_bytes,
+            critical,
+            compute_time: self.compute_time,
+            agg_time: self.agg_time,
+            link: self.link,
+            switch_delay: self.switch_delay,
+            pct_threshold: self.pct_threshold,
+            deadline_slack: self.deadline_slack,
+            batches_per_epoch: self.batches_per_epoch,
+            seed: self.seed,
+            horizon: self.horizon,
+            topo: self.topo,
+            bg: self.bg,
+        })
+    }
+
+    /// Build and run a modeled-compute training simulation.
+    pub fn run(self) -> Result<RunReport> {
+        Ok(super::runner::run_training(&self.build()?))
+    }
+}
+
+fn validate_loss(loss: &LossModel) -> Result<()> {
+    let frac = |name: &str, x: f64| -> Result<()> {
+        ensure!((0.0..1.0).contains(&x), "loss model {name} {x} outside [0, 1)");
+        Ok(())
+    };
+    match *loss {
+        LossModel::None => Ok(()),
+        LossModel::Bernoulli { p } => frac("p", p),
+        LossModel::GilbertElliott { p_gb, p_bg, loss_good, loss_bad } => {
+            frac("p_gb", p_gb)?;
+            frac("p_bg", p_bg)?;
+            frac("loss_good", loss_good)?;
+            frac("loss_bad", loss_bad)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::parse_proto;
+
+    fn ltp() -> ProtoSpec {
+        parse_proto("ltp").unwrap()
+    }
+
+    #[test]
+    fn modeled_builder_matches_legacy_defaults() {
+        let cfg = RunBuilder::modeled(ltp(), Workload::Micro, 4).build().unwrap();
+        let legacy = TrainingCfg::modeled(ltp(), Workload::Micro, 4);
+        assert_eq!(cfg.n_workers, legacy.n_workers);
+        assert_eq!(cfg.iters, legacy.iters);
+        assert_eq!(cfg.model_bytes, legacy.model_bytes);
+        assert_eq!(cfg.critical, legacy.critical);
+        assert_eq!(cfg.compute_time, legacy.compute_time);
+        assert_eq!(cfg.agg_time, legacy.agg_time);
+        assert_eq!(cfg.pct_threshold, legacy.pct_threshold);
+        assert_eq!(cfg.deadline_slack, legacy.deadline_slack);
+        assert_eq!(cfg.batches_per_epoch, legacy.batches_per_epoch);
+        assert_eq!(cfg.seed, legacy.seed);
+        assert_eq!(cfg.horizon, legacy.horizon);
+    }
+
+    #[test]
+    fn synthetic_criticals_follow_the_final_message_size() {
+        let small = RunBuilder::modeled(ltp(), Workload::Micro, 4)
+            .model_bytes(1_000_000)
+            .build()
+            .unwrap();
+        let expected = Manifest::synthetic(1_000_000, 50)
+            .critical_segments(Manifest::aligned_payload(LTP_MSS));
+        assert_eq!(small.critical, expected);
+        // …while an explicit set is preserved verbatim.
+        let explicit = RunBuilder::modeled(ltp(), Workload::Micro, 4)
+            .critical(vec![1, 5])
+            .model_bytes(1_000_000)
+            .build()
+            .unwrap();
+        assert_eq!(explicit.critical, vec![1, 5]);
+    }
+
+    #[test]
+    fn inconsistent_combos_fail_fast() {
+        let b = || RunBuilder::modeled(ltp(), Workload::Micro, 4);
+        assert!(RunBuilder::modeled(ltp(), Workload::Micro, 0).build().is_err());
+        assert!(b().iters(0).build().is_err());
+        assert!(b().model_bytes(0).build().is_err());
+        assert!(b().pct_threshold(0.0).build().is_err());
+        assert!(b().pct_threshold(1.2).build().is_err());
+        assert!(b().batches_per_epoch(0).build().is_err());
+        assert!(b().horizon(0).build().is_err());
+        assert!(b().loss(LossModel::Bernoulli { p: 1.5 }).build().is_err());
+        // More workers in rack 0 than the run has.
+        let trunk = b().link_cfg();
+        assert!(b().two_rack(9, trunk).build().is_err());
+        assert!(b().two_rack(2, trunk).build().is_ok());
+        // A message beyond LTP's 24-bit segment space.
+        assert!(b().model_bytes(30_000_000_000_000).build().is_err());
+    }
+
+    #[test]
+    fn net_env_sets_link_and_slack_together() {
+        let cfg = RunBuilder::modeled(ltp(), Workload::Micro, 4)
+            .net_env(NetEnv::WanBursty)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.link.rate_bps, NetEnv::WanBursty.link().rate_bps);
+        assert_eq!(cfg.deadline_slack, NetEnv::WanBursty.deadline_slack());
+    }
+}

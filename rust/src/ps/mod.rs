@@ -13,22 +13,36 @@
 //! per-link LT thresholds maintained by a [`crate::proto::ThresholdTracker`]
 //! (init `1.5·RTprop + Size/BtlBw`, per-epoch update to the fastest full
 //! transmission, deadline `max+C`); broadcast is always reliable.
+//!
+//! The transport underneath is **pluggable** (DESIGN.md §Transport API):
+//! both nodes drive boxed [`FlowTx`]/[`FlowRx`] endpoints produced by a
+//! [`Transport`] factory, protocols are registered under string keys
+//! ([`proto_registry`]) and instantiated from specs like `ltp`,
+//! `ltp:pct=0.9,slack=100ms`, or `tcp:cc=cubic` ([`parse_proto`]), and runs
+//! are assembled through the validated [`RunBuilder`].
 
 mod blackboard;
+mod builder;
 mod data;
 mod runner;
 mod server;
+mod spec;
 mod transport;
 mod worker;
 
 pub use blackboard::Blackboard;
+pub use builder::RunBuilder;
 pub use data::Corpus;
 pub use runner::{
     run_training, run_with, BgFlow, BgKind, NetTotals, RealCompute, RealTraining, RunReport,
     Topo, TrainingCfg, XlaAggregate,
 };
 pub use server::{Aggregate, NullAggregate, PsNode};
-pub use transport::{GatherRx, GatherTx, Proto};
+pub use spec::{
+    baseline_matrix, parse_proto, proto_registry, registry_matrix, ProtoDef, ProtoSpec,
+    PROTO_REGISTRY,
+};
+pub use transport::{FlowRx, FlowTx, RxCfg, Transport, TransportTuning, TxCfg};
 pub use worker::{Compute, ModeledCompute, WorkerNode, WorkerStats};
 
 use crate::proto::CloseReason;

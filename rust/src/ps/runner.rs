@@ -5,7 +5,7 @@
 //! compute (PJRT train_step + Pallas masked aggregation).
 
 use super::server::{Aggregate, NullAggregate, PsNode};
-use super::transport::Proto;
+use super::spec::ProtoSpec;
 use super::worker::{Compute, ModeledCompute, WorkerNode};
 use super::{Blackboard, Corpus, GatherClose, IterStats};
 use crate::cc::CcAlgo;
@@ -72,9 +72,11 @@ impl BgFlow {
     }
 }
 
-/// A training-run configuration.
+/// A training-run configuration. Prefer assembling one through
+/// [`super::RunBuilder`], which fills these fields from workload/network
+/// presets and validates the combination.
 pub struct TrainingCfg {
-    pub proto: Proto,
+    pub proto: ProtoSpec,
     pub n_workers: usize,
     pub iters: u64,
     pub model_bytes: u64,
@@ -99,26 +101,16 @@ pub struct TrainingCfg {
 }
 
 impl TrainingCfg {
-    pub fn modeled(proto: Proto, workload: crate::config::Workload, n_workers: usize) -> TrainingCfg {
-        TrainingCfg {
-            proto,
-            n_workers,
-            iters: 10,
-            model_bytes: workload.model_bytes(),
-            critical: Manifest::synthetic(workload.model_bytes(), 50)
-                .critical_segments(Manifest::aligned_payload(LTP_MSS)),
-            compute_time: workload.compute_time(),
-            agg_time: 2 * MS,
-            link: crate::config::NetEnv::Rack.link(),
-            switch_delay: 500,
-            pct_threshold: 0.8,
-            deadline_slack: crate::config::NetEnv::Rack.deadline_slack(),
-            batches_per_epoch: 10,
-            seed: 1,
-            horizon: 3600 * SEC,
-            topo: Topo::Star,
-            bg: vec![],
-        }
+    /// Modeled-compute defaults for a workload — shorthand for
+    /// [`super::RunBuilder::modeled`] with no overrides.
+    pub fn modeled(
+        proto: ProtoSpec,
+        workload: crate::config::Workload,
+        n_workers: usize,
+    ) -> TrainingCfg {
+        super::RunBuilder::modeled(proto, workload, n_workers)
+            .build()
+            .expect("modeled defaults are a valid configuration")
     }
 }
 
@@ -185,7 +177,11 @@ impl RunReport {
 
 /// Run a modeled-compute training simulation (no PJRT involved).
 pub fn run_training(cfg: &TrainingCfg) -> RunReport {
-    run_with(cfg, |_, _| Box::new(ModeledCompute(cfg.compute_time)), Box::new(NullAggregate(cfg.agg_time)))
+    run_with(
+        cfg,
+        |_, _| Box::new(ModeledCompute(cfg.compute_time)),
+        Box::new(NullAggregate(cfg.agg_time)),
+    )
 }
 
 /// How a background flow is observed after the run.
@@ -202,10 +198,13 @@ pub fn run_with(
 ) -> RunReport {
     let report: Rc<RefCell<Vec<IterStats>>> = Rc::new(RefCell::new(Vec::new()));
     let mut sim = Sim::new(cfg.seed);
+    // Spec-level knobs (e.g. `ltp:pct=0.9,slack=100ms`) take precedence
+    // over the run configuration; default specs override nothing.
+    let tuning = cfg.proto.tuning();
     let tracker = crate::proto::ThresholdTracker::new(
         cfg.n_workers,
-        cfg.deadline_slack,
-        cfg.pct_threshold,
+        tuning.deadline_slack.unwrap_or(cfg.deadline_slack),
+        tuning.pct_threshold.unwrap_or(cfg.pct_threshold),
     );
     // Entity-id layout is deterministic per topology: switches first, then
     // the PS, then workers in index order (background hosts come last).
@@ -217,7 +216,7 @@ pub fn run_with(
     let worker_ids: Vec<usize> = (0..cfg.n_workers).map(|w| first_host + 1 + w).collect();
     let ps = PsNode::new(
         worker_ids.clone(),
-        cfg.proto,
+        cfg.proto.clone(),
         cfg.model_bytes,
         cfg.critical.clone(),
         agg,
@@ -232,7 +231,7 @@ pub fn run_with(
             w,
             ps_id,
             cfg.n_workers,
-            cfg.proto,
+            cfg.proto.clone(),
             cfg.model_bytes,
             cfg.critical.clone(),
             make_compute(w, cfg),
@@ -333,7 +332,7 @@ pub fn run_with(
         .collect();
     let iters = report.borrow().clone();
     RunReport {
-        proto: cfg.proto.name(),
+        proto: cfg.proto.name().to_string(),
         iters,
         total_time,
         gather_summary: Summary::of(&gathers),
@@ -485,11 +484,15 @@ impl Aggregate for XlaAggregate {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cc::CcAlgo;
     use crate::config::Workload;
+    use crate::ps::parse_proto;
     use crate::simnet::LossModel;
 
-    fn quick_cfg(proto: Proto) -> TrainingCfg {
+    fn proto(spec: &str) -> ProtoSpec {
+        parse_proto(spec).unwrap()
+    }
+
+    fn quick_cfg(proto: ProtoSpec) -> TrainingCfg {
         let mut cfg = TrainingCfg::modeled(proto, Workload::Micro, 4);
         cfg.iters = 3;
         cfg
@@ -497,7 +500,7 @@ mod tests {
 
     #[test]
     fn modeled_ltp_completes_all_iterations() {
-        let report = run_training(&quick_cfg(Proto::Ltp));
+        let report = run_training(&quick_cfg(proto("ltp")));
         assert_eq!(report.iters.len(), 3, "all iterations must finish");
         assert!(report.mean_bst() > 0);
         // Even a "clean" network drops packets under incast congestion;
@@ -512,15 +515,15 @@ mod tests {
 
     #[test]
     fn modeled_tcp_completes_all_iterations() {
-        for cc in [CcAlgo::Cubic, CcAlgo::Bbr] {
-            let report = run_training(&quick_cfg(Proto::Tcp(cc)));
-            assert_eq!(report.iters.len(), 3, "{}", cc.name());
+        for cc in ["cubic", "bbr"] {
+            let report = run_training(&quick_cfg(proto(cc)));
+            assert_eq!(report.iters.len(), 3, "{cc}");
         }
     }
 
     #[test]
     fn ltp_delivers_partially_under_loss_but_tcp_fully() {
-        let mut cfg = quick_cfg(Proto::Ltp);
+        let mut cfg = quick_cfg(proto("ltp"));
         cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.02 });
         cfg.iters = 4;
         let ltp = run_training(&cfg);
@@ -532,7 +535,7 @@ mod tests {
         );
         assert!(ltp.mean_delivered() > 0.8);
 
-        let mut cfg = quick_cfg(Proto::Tcp(CcAlgo::Bbr));
+        let mut cfg = quick_cfg(proto("bbr"));
         cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.02 });
         cfg.iters = 2;
         let tcp = run_training(&cfg);
@@ -543,10 +546,10 @@ mod tests {
     #[test]
     fn ltp_beats_cubic_under_loss() {
         let loss = LossModel::Bernoulli { p: 0.01 };
-        let mut l = quick_cfg(Proto::Ltp);
+        let mut l = quick_cfg(proto("ltp"));
         l.link = l.link.with_loss(loss);
         l.iters = 4;
-        let mut c = quick_cfg(Proto::Tcp(CcAlgo::Cubic));
+        let mut c = quick_cfg(proto("cubic"));
         c.link = c.link.with_loss(loss);
         c.iters = 4;
         let ltp = run_training(&l);
@@ -563,14 +566,14 @@ mod tests {
 
     #[test]
     fn throughput_accounting() {
-        let report = run_training(&quick_cfg(Proto::Ltp));
+        let report = run_training(&quick_cfg(proto("ltp")));
         let tp = report.throughput(4, 32);
         assert!(tp > 0.0);
     }
 
     #[test]
     fn report_carries_net_totals_and_closes() {
-        let mut cfg = quick_cfg(Proto::Ltp);
+        let mut cfg = quick_cfg(proto("ltp"));
         cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.02 });
         let report = run_training(&cfg);
         assert_eq!(report.iters.len(), 3);
@@ -581,14 +584,14 @@ mod tests {
         assert_eq!(report.closes.len(), 4 * 3, "closes: {:?}", report.closes);
         assert!(report.retransmits > 0, "loss must force gather retransmissions");
         // TCP runs produce no LTP close records.
-        let mut tcfg = quick_cfg(Proto::Tcp(CcAlgo::Reno));
+        let mut tcfg = quick_cfg(proto("reno"));
         tcfg.iters = 2;
         assert!(run_training(&tcfg).closes.is_empty());
     }
 
     #[test]
     fn two_rack_training_completes_over_oversubscribed_trunk() {
-        let mut cfg = quick_cfg(Proto::Ltp);
+        let mut cfg = quick_cfg(proto("ltp"));
         // 2 workers in rack 0 with the PS, 2 in rack 1; the trunk carries
         // rack 1's gathers at the same rate as one edge (2:1 oversub).
         cfg.topo = Topo::TwoRack { rack0_workers: 2, trunk: cfg.link };
@@ -600,10 +603,10 @@ mod tests {
 
     #[test]
     fn udp_cross_traffic_slows_training_but_never_stalls_it() {
-        let base = quick_cfg(Proto::Ltp);
+        let base = quick_cfg(proto("ltp"));
         let clean = run_training(&base);
 
-        let mut cfg = quick_cfg(Proto::Ltp);
+        let mut cfg = quick_cfg(proto("ltp"));
         // 8 Gbps of background datagrams into the PS's 10 Gbps downlink.
         cfg.bg = vec![BgFlow::udp_to_ps(8_000_000_000, 10 * SEC)];
         let loaded = run_training(&cfg);
@@ -620,9 +623,9 @@ mod tests {
 
     #[test]
     fn tcp_bulk_background_flow_makes_progress() {
-        let mut cfg = quick_cfg(Proto::Ltp);
+        let mut cfg = quick_cfg(proto("ltp"));
         cfg.topo = Topo::TwoRack { rack0_workers: 2, trunk: cfg.link };
-        cfg.bg = vec![BgFlow::tcp_bulk(CcAlgo::Cubic, 50_000_000)];
+        cfg.bg = vec![BgFlow::tcp_bulk(crate::cc::CcAlgo::Cubic, 50_000_000)];
         let report = run_training(&cfg);
         assert_eq!(report.iters.len(), 3);
         assert!(report.bg_bytes[0] > 0, "bulk flow must deliver bytes");

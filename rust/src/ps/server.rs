@@ -7,7 +7,8 @@
 //! Those early packets are stashed and replayed when the iteration
 //! advances (a real PS would equally buffer them in its UDP socket).
 
-use super::transport::{GatherRx, GatherTx, Proto};
+use super::spec::ProtoSpec;
+use super::transport::{FlowRx, FlowTx, RxCfg, TxCfg};
 use super::{GatherClose, IterStats};
 use crate::proto::{EarlyCloseCfg, ThresholdTracker};
 use crate::simnet::{Ctx, EntityId, Node, Packet};
@@ -52,7 +53,7 @@ const MAX_STASH: usize = 8192;
 
 pub struct PsNode {
     workers: Vec<EntityId>,
-    proto: Proto,
+    proto: ProtoSpec,
     model_bytes: u64,
     critical: Vec<u32>,
     agg: Box<dyn Aggregate>,
@@ -61,9 +62,9 @@ pub struct PsNode {
     iter: u64,
     phase: Phase,
     /// Gather receiver per worker for the *current* iteration.
-    rx: Vec<Option<GatherRx>>,
+    rx: Vec<Option<Box<dyn FlowRx>>>,
     /// Broadcast sender per worker.
-    tx: Vec<Option<GatherTx>>,
+    tx: Vec<Option<Box<dyn FlowTx>>>,
     gather_done: Vec<bool>,
     gather_started: Vec<Option<Nanos>>,
     /// Early packets for the next iteration's gather flows.
@@ -83,7 +84,7 @@ impl PsNode {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         workers: Vec<EntityId>,
-        proto: Proto,
+        proto: ProtoSpec,
         model_bytes: u64,
         critical: Vec<u32>,
         agg: Box<dyn Aggregate>,
@@ -124,11 +125,7 @@ impl PsNode {
     }
 
     fn expected_gather_flow(&self, w: usize, iter: u64) -> u64 {
-        let f = iter * 2 * self.n() as u64 + w as u64;
-        match self.proto {
-            Proto::Ltp => f & 0xFFFF, // 16-bit on the LTP wire
-            Proto::Tcp(_) => f,
-        }
+        self.proto.wire_flow(iter * 2 * self.n() as u64 + w as u64)
     }
 
     fn worker_of_flow(&self, flow: u64) -> (usize, bool) {
@@ -174,18 +171,18 @@ impl PsNode {
                         );
                     }
                 }
-                self.rx[w] = Some(GatherRx::new(
-                    self.proto,
-                    pkt.flow,
-                    self.model_bytes,
-                    self.ec_cfg(w),
-                    self.critical.clone(),
-                ));
+                self.rx[w] = Some(self.proto.make_rx(RxCfg {
+                    flow: pkt.flow,
+                    bytes: self.model_bytes,
+                    ec: self.ec_cfg(w),
+                    critical: self.critical.clone(),
+                    iter: self.iter,
+                }));
                 self.gather_started[w] = Some(now);
             }
             let mut outgoing = Vec::new();
             if let Some(rx) = &mut self.rx[w] {
-                rx.handle(now, &pkt, me, |p| outgoing.push(p));
+                rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
             }
             for p in outgoing {
                 ctx.send(p);
@@ -200,7 +197,7 @@ impl PsNode {
             let mut outgoing = Vec::new();
             if let Some(rx) = &mut self.rx[w] {
                 if rx.flow_matches(pkt.flow) {
-                    rx.handle(now, &pkt, me, |p| outgoing.push(p));
+                    rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
                 }
             }
             for p in outgoing {
@@ -265,7 +262,13 @@ impl PsNode {
             let flow = self.iter * per_iter + self.n() as u64 + w as u64;
             // Broadcast is reliable; the sender retransmits until the
             // receiver confirms 100 % (no Early Close on this direction).
-            self.tx[w] = Some(GatherTx::new(self.proto, flow, self.model_bytes, vec![], 0, 0));
+            self.tx[w] = Some(self.proto.make_tx(TxCfg {
+                flow,
+                bytes: self.model_bytes,
+                critical: vec![],
+                seed_rtprop: 0,
+                seed_btlbw_bytes: 0,
+            }));
         }
         self.drain(ctx);
     }
@@ -383,8 +386,8 @@ impl Node for PsNode {
         for w in 0..self.n() {
             let peer = self.workers[w];
             if let Some(rx) = &mut self.rx[w] {
-                rx.on_wakeup(now, me, |p| outgoing.push(p));
-                rx.drain(me, peer, |p| outgoing.push(p));
+                rx.on_wakeup(now);
+                rx.drain(me, peer, &mut |p| outgoing.push(p));
             }
             if let Some(tx) = &mut self.tx[w] {
                 tx.on_wakeup(now);

@@ -1,0 +1,498 @@
+//! The **protocol registry** and spec grammar (DESIGN.md §Transport API):
+//! protocols are data, not code. A spec string names a registered protocol
+//! and optionally tunes it —
+//!
+//! ```text
+//! spec   := key [':' param (',' param)*]
+//! param  := name '=' value          e.g.  ltp:pct=0.9,slack=100ms
+//! ```
+//!
+//! [`parse_proto`] resolves a spec against [`proto_registry`] (modeled on
+//! the scenario registry) and returns a [`ProtoSpec`] — a cheap, cloneable,
+//! thread-shareable handle to a [`Transport`] whose [`ProtoSpec::name`] is
+//! the *canonical* spec string: parameters render in a fixed order and the
+//! `tcp:cc=<name>` form normalizes to the bare cc name, so the default
+//! matrix's labels (`ltp`, `reno`, …) are stable across the CLI, scenario
+//! JSON, and bench reports.
+
+use super::transport::{LtpAdaptiveTransport, LtpTransport, TcpTransport, Transport};
+use crate::cc::CcAlgo;
+use crate::{Nanos, MS, SEC, US};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// A parsed, validated protocol spec: the handle stored in run
+/// configurations and carried across worker threads by the sweep driver.
+/// Clones share the underlying [`Transport`].
+#[derive(Clone)]
+pub struct ProtoSpec(Arc<dyn Transport>);
+
+impl ProtoSpec {
+    /// Canonical spec string — the protocol's name everywhere (labels,
+    /// JSON reports, bench records). Borrowed; no per-call allocation.
+    pub fn name(&self) -> &str {
+        self.0.name()
+    }
+}
+
+impl std::ops::Deref for ProtoSpec {
+    type Target = dyn Transport;
+
+    fn deref(&self) -> &(dyn Transport + 'static) {
+        &*self.0
+    }
+}
+
+impl std::fmt::Display for ProtoSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::fmt::Debug for ProtoSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ProtoSpec({})", self.name())
+    }
+}
+
+/// Two specs are equal iff their canonical names are (`tcp:cc=reno` thus
+/// equals `reno`).
+impl PartialEq for ProtoSpec {
+    fn eq(&self, other: &ProtoSpec) -> bool {
+        self.name() == other.name()
+    }
+}
+
+impl std::str::FromStr for ProtoSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ProtoSpec> {
+        parse_proto(s)
+    }
+}
+
+/// One registered protocol family.
+pub struct ProtoDef {
+    /// Spec key (`--proto <key>[:params]`).
+    pub key: &'static str,
+    pub summary: &'static str,
+    /// Accepted `name=value` parameters, for `ltp proto list`.
+    pub params: &'static str,
+    /// Run (at default parameters) in the `proto_matrix` scenario sweep.
+    pub in_matrix: bool,
+    build: fn(&[(String, String)]) -> Result<ProtoSpec>,
+}
+
+/// The protocol registry. Append entries here (and their transports in
+/// `ps/transport.rs`); the CLI, the `proto_matrix` scenario, and the
+/// transport conformance test (`rust/tests/transport.rs`) follow.
+pub const PROTO_REGISTRY: &[ProtoDef] = &[
+    ProtoDef {
+        key: "ltp",
+        summary: "loss-tolerant transmission protocol (paper §III)",
+        params: "pct=<0..1>, slack=<duration>",
+        in_matrix: true,
+        build: build_ltp,
+    },
+    ProtoDef {
+        key: "ltp-adaptive",
+        summary: "phase-aware LTP: Early-Close pct anneals start→end over the first `over` iterations",
+        params: "start=<0..1>, end=<0..1>, over=<iters>, slack=<duration>",
+        in_matrix: true,
+        build: build_ltp_adaptive,
+    },
+    ProtoDef {
+        key: "tcp",
+        summary: "reliable byte stream with a chosen congestion control (canonical name = the cc)",
+        params: "cc=<reno|cubic|dctcp|bbr> (required)",
+        in_matrix: false, // the per-cc keys below cover the matrix
+        build: build_tcp,
+    },
+    ProtoDef {
+        key: "reno",
+        summary: "TCP New Reno (kernel loss-based default) — alias of tcp:cc=reno",
+        params: "",
+        in_matrix: true,
+        build: |p| build_tcp_named(CcAlgo::Reno, p),
+    },
+    ProtoDef {
+        key: "cubic",
+        summary: "TCP Cubic — alias of tcp:cc=cubic",
+        params: "",
+        in_matrix: true,
+        build: |p| build_tcp_named(CcAlgo::Cubic, p),
+    },
+    ProtoDef {
+        key: "dctcp",
+        summary: "DCTCP (ECN-proportional backoff) — alias of tcp:cc=dctcp",
+        params: "",
+        in_matrix: true,
+        build: |p| build_tcp_named(CcAlgo::Dctcp, p),
+    },
+    ProtoDef {
+        key: "bbr",
+        summary: "TCP BBR (model-based) — alias of tcp:cc=bbr",
+        params: "",
+        in_matrix: true,
+        build: |p| build_tcp_named(CcAlgo::Bbr, p),
+    },
+];
+
+/// The registry (function form, for iteration symmetry with the scenario
+/// engine).
+pub fn proto_registry() -> &'static [ProtoDef] {
+    PROTO_REGISTRY
+}
+
+/// Parse a protocol spec (`ltp`, `ltp:pct=0.9,slack=100ms`, `tcp:cc=cubic`)
+/// against the registry.
+pub fn parse_proto(spec: &str) -> Result<ProtoSpec> {
+    let spec = spec.trim();
+    let (key, rest) = match spec.split_once(':') {
+        Some((k, r)) => (k, Some(r)),
+        None => (spec, None),
+    };
+    let key = key.to_ascii_lowercase();
+    // Historical spellings accepted by the pre-registry CLI.
+    let key = match key.as_str() {
+        "newreno" | "new-reno" => "reno".to_string(),
+        _ => key,
+    };
+    let Some(def) = PROTO_REGISTRY.iter().find(|d| d.key == key) else {
+        let known: Vec<&str> = PROTO_REGISTRY.iter().map(|d| d.key).collect();
+        bail!("unknown protocol `{key}` in spec `{spec}` (known: {})", known.join(", "));
+    };
+    let params = parse_params(rest).with_context(|| format!("in protocol spec `{spec}`"))?;
+    (def.build)(&params).with_context(|| format!("in protocol spec `{spec}`"))
+}
+
+/// The paper's default two-protocol matrix: LTP vs the kernel-default
+/// loss-based baseline (Reno).
+pub fn baseline_matrix() -> Vec<ProtoSpec> {
+    vec![
+        parse_proto("ltp").expect("registry default"),
+        parse_proto("reno").expect("registry default"),
+    ]
+}
+
+/// Every matrix-flagged registry protocol at default parameters, in
+/// registry order — the `proto_matrix` scenario's sweep set.
+pub fn registry_matrix() -> Vec<ProtoSpec> {
+    PROTO_REGISTRY
+        .iter()
+        .filter(|d| d.in_matrix)
+        .map(|d| parse_proto(d.key).expect("registry defaults must parse"))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Grammar helpers.
+// ---------------------------------------------------------------------------
+
+fn parse_params(rest: Option<&str>) -> Result<Vec<(String, String)>> {
+    let Some(rest) = rest else { return Ok(Vec::new()) };
+    if rest.trim().is_empty() {
+        bail!("empty parameter list after `:`");
+    }
+    let mut out = Vec::new();
+    for kv in rest.split(',') {
+        let Some((k, v)) = kv.split_once('=') else {
+            bail!("malformed parameter `{kv}` (expected `name=value`)");
+        };
+        let (k, v) = (k.trim().to_ascii_lowercase(), v.trim().to_string());
+        if v.is_empty() {
+            bail!("empty value for parameter `{k}`");
+        }
+        if out.iter().any(|(seen, _)| *seen == k) {
+            bail!("duplicate parameter `{k}`");
+        }
+        out.push((k, v));
+    }
+    Ok(out)
+}
+
+/// Parse a duration literal: `100ms`, `30s`, `500us`, `250000ns`.
+fn parse_duration(v: &str) -> Result<Nanos> {
+    // Longest suffixes first: a bare `s` also terminates `ms`/`us`/`ns`.
+    for (suffix, unit) in [("ms", MS), ("us", US), ("ns", 1), ("s", SEC)] {
+        if let Some(num) = v.strip_suffix(suffix) {
+            let n: u64 = num
+                .parse()
+                .with_context(|| format!("bad duration `{v}` (expected e.g. `100ms`)"))?;
+            return n
+                .checked_mul(unit)
+                .with_context(|| format!("duration `{v}` overflows the nanosecond clock"));
+        }
+    }
+    bail!("bad duration `{v}` (expected an integer with a ns/us/ms/s suffix)")
+}
+
+/// Render a duration in the largest unit that divides it evenly — the
+/// canonical inverse of [`parse_duration`].
+fn fmt_duration(n: Nanos) -> String {
+    for (suffix, unit) in [("s", SEC), ("ms", MS), ("us", US)] {
+        if n >= unit && n % unit == 0 {
+            return format!("{}{suffix}", n / unit);
+        }
+    }
+    format!("{n}ns")
+}
+
+fn parse_fraction(k: &str, v: &str) -> Result<f64> {
+    let x: f64 = v.parse().with_context(|| format!("bad value for `{k}`: `{v}`"))?;
+    if !(x > 0.0 && x <= 1.0) {
+        bail!("`{k}={v}` out of range (need 0 < {k} <= 1)");
+    }
+    Ok(x)
+}
+
+fn unknown_param(key: &str, k: &str, accepted: &str) -> anyhow::Error {
+    anyhow::anyhow!("unknown parameter `{k}` for `{key}` (accepted: {accepted})")
+}
+
+/// Canonical spec string: `key` alone, or `key:` + the given params.
+fn canonical(key: &str, parts: &[String]) -> String {
+    if parts.is_empty() {
+        key.to_string()
+    } else {
+        format!("{key}:{}", parts.join(","))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-protocol builders.
+// ---------------------------------------------------------------------------
+
+fn build_ltp(params: &[(String, String)]) -> Result<ProtoSpec> {
+    let mut pct = None;
+    let mut slack = None;
+    for (k, v) in params {
+        match k.as_str() {
+            "pct" => pct = Some(parse_fraction(k, v)?),
+            "slack" => slack = Some(parse_duration(v).with_context(|| format!("parameter `{k}`"))?),
+            _ => return Err(unknown_param("ltp", k, "pct, slack")),
+        }
+    }
+    // Canonical order: pct, slack.
+    let mut parts = Vec::new();
+    if let Some(p) = pct {
+        parts.push(format!("pct={p}"));
+    }
+    if let Some(s) = slack {
+        parts.push(format!("slack={}", fmt_duration(s)));
+    }
+    Ok(ProtoSpec(Arc::new(LtpTransport { pct, slack, spec: canonical("ltp", &parts) })))
+}
+
+/// `ltp-adaptive` annealing defaults: tolerate 30 % loss while gradients
+/// are coarse, tighten to 5 % as training refines.
+const ADAPT_START: f64 = 0.7;
+const ADAPT_END: f64 = 0.95;
+const ADAPT_OVER: u64 = 16;
+
+fn build_ltp_adaptive(params: &[(String, String)]) -> Result<ProtoSpec> {
+    let (mut start, mut end, mut over, mut slack) = (None, None, None, None);
+    for (k, v) in params {
+        match k.as_str() {
+            "start" => start = Some(parse_fraction(k, v)?),
+            "end" => end = Some(parse_fraction(k, v)?),
+            "over" => {
+                let n: u64 = v.parse().with_context(|| format!("bad value for `over`: `{v}`"))?;
+                if n == 0 {
+                    bail!("`over=0`: the anneal window needs at least one iteration");
+                }
+                over = Some(n);
+            }
+            "slack" => slack = Some(parse_duration(v).with_context(|| format!("parameter `{k}`"))?),
+            _ => return Err(unknown_param("ltp-adaptive", k, "start, end, over, slack")),
+        }
+    }
+    // Canonical order: start, end, over, slack.
+    let mut parts = Vec::new();
+    if let Some(x) = start {
+        parts.push(format!("start={x}"));
+    }
+    if let Some(x) = end {
+        parts.push(format!("end={x}"));
+    }
+    if let Some(x) = over {
+        parts.push(format!("over={x}"));
+    }
+    if let Some(s) = slack {
+        parts.push(format!("slack={}", fmt_duration(s)));
+    }
+    Ok(ProtoSpec(Arc::new(LtpAdaptiveTransport {
+        start: start.unwrap_or(ADAPT_START),
+        end: end.unwrap_or(ADAPT_END),
+        over: over.unwrap_or(ADAPT_OVER),
+        slack,
+        spec: canonical("ltp-adaptive", &parts),
+    })))
+}
+
+fn build_tcp(params: &[(String, String)]) -> Result<ProtoSpec> {
+    let mut cc = None;
+    for (k, v) in params {
+        match k.as_str() {
+            "cc" => cc = Some(v.parse::<CcAlgo>().map_err(anyhow::Error::msg)?),
+            _ => return Err(unknown_param("tcp", k, "cc")),
+        }
+    }
+    let Some(cc) = cc else {
+        bail!("`tcp` needs a congestion control: tcp:cc=<reno|cubic|dctcp|bbr>");
+    };
+    Ok(tcp_spec(cc))
+}
+
+fn build_tcp_named(cc: CcAlgo, params: &[(String, String)]) -> Result<ProtoSpec> {
+    if let Some((k, _)) = params.first() {
+        return Err(unknown_param(cc.name(), k, "none"));
+    }
+    Ok(tcp_spec(cc))
+}
+
+/// The canonical name of every TCP variant is the bare cc name, whichever
+/// spelling built it — so `tcp:cc=reno` and `reno` label reports
+/// identically.
+fn tcp_spec(cc: CcAlgo) -> ProtoSpec {
+    ProtoSpec(Arc::new(TcpTransport { cc, spec: cc.name().to_string() }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::EarlyCloseCfg;
+
+    #[test]
+    fn defaults_parse_with_canonical_names() {
+        for (spec, canon, lt) in [
+            ("ltp", "ltp", true),
+            ("ltp-adaptive", "ltp-adaptive", true),
+            ("reno", "reno", false),
+            ("cubic", "cubic", false),
+            ("dctcp", "dctcp", false),
+            ("bbr", "bbr", false),
+            ("tcp:cc=reno", "reno", false),
+            ("tcp:cc=cubic", "cubic", false),
+            ("TCP:cc=BBR", "bbr", false),
+            // Historical CLI spellings keep working, normalized to `reno`.
+            ("newreno", "reno", false),
+            ("new-reno", "reno", false),
+        ] {
+            let p = parse_proto(spec).unwrap_or_else(|e| panic!("{spec}: {e:#}"));
+            assert_eq!(p.name(), canon, "{spec}");
+            assert_eq!(p.is_loss_tolerant(), lt, "{spec}");
+        }
+    }
+
+    #[test]
+    fn canonical_names_roundtrip() {
+        for spec in [
+            "ltp",
+            "ltp:pct=0.9",
+            "ltp:pct=0.9,slack=100ms",
+            "ltp:slack=2s",
+            "ltp-adaptive:start=0.6,end=0.9,over=8",
+            "reno",
+        ] {
+            let once = parse_proto(spec).unwrap();
+            let twice = parse_proto(once.name()).unwrap();
+            assert_eq!(once.name(), twice.name(), "canonical form must be a fixed point");
+        }
+        // Parameter order normalizes.
+        let p = parse_proto("ltp:slack=100ms,pct=0.9").unwrap();
+        assert_eq!(p.name(), "ltp:pct=0.9,slack=100ms");
+    }
+
+    #[test]
+    fn spec_equality_is_canonical() {
+        assert_eq!(parse_proto("tcp:cc=reno").unwrap(), parse_proto("reno").unwrap());
+        assert_ne!(parse_proto("ltp").unwrap(), parse_proto("ltp:pct=0.9").unwrap());
+    }
+
+    #[test]
+    fn tuning_overrides_flow_from_params() {
+        let p = parse_proto("ltp:pct=0.9,slack=100ms").unwrap();
+        let t = p.tuning();
+        assert_eq!(t.pct_threshold, Some(0.9));
+        assert_eq!(t.deadline_slack, Some(100 * crate::MS));
+        // Defaults stay inert so default runs are byte-identical.
+        let d = parse_proto("ltp").unwrap().tuning();
+        assert_eq!(d.pct_threshold, None);
+        assert_eq!(d.deadline_slack, None);
+    }
+
+    #[test]
+    fn adaptive_params_reach_the_receiver() {
+        use crate::simnet::Packet;
+        use crate::wire::{Importance, LtpHeader, PacketKind, HDR_BYTES, UDP_IP_OVERHEAD};
+        let p = parse_proto("ltp-adaptive:start=0.6,end=0.6,over=1").unwrap();
+        // With start == end the annealed pct is a constant 0.6 — lower than
+        // the caller-supplied 0.99 — so a loss-tolerant receiver must
+        // early-close at 60 % once past the LT threshold.
+        let mut rx = p.make_rx(crate::ps::RxCfg {
+            flow: 1,
+            bytes: 10 * 1463,
+            ec: EarlyCloseCfg { lt_threshold: crate::MS, deadline: crate::SEC, pct: 0.99 },
+            critical: vec![],
+            iter: 0,
+        });
+        let size = UDP_IP_OVERHEAD + HDR_BYTES as u32 + 1463;
+        let mut sink = |_p: Packet| {};
+        let pkt = |hdr| Packet::new(0, 1, size, 1, PacketKind::Ltp(hdr));
+        rx.handle(0, &pkt(LtpHeader::registration(1, 10)), 1, &mut sink);
+        for seq in 0..6 {
+            rx.handle(1, &pkt(LtpHeader::data(1, seq, Importance::Normal)), 1, &mut sink);
+        }
+        assert!(!rx.is_done(), "60% before the LT threshold must wait");
+        rx.on_wakeup(2 * crate::MS);
+        assert!(rx.is_done(), "annealed pct=0.6 must early-close at 60%");
+        assert!((rx.delivered_fraction() - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "nope",
+            "ltp:",
+            "ltp:pct",
+            "ltp:pct=",
+            "ltp:pct=1.5",
+            "ltp:pct=0.9,pct=0.8",
+            "ltp:slack=fast",
+            "ltp:window=3",
+            "ltp-adaptive:over=0",
+            "ltp:slack=99999999999999s", // would overflow the ns clock
+            "tcp",
+            "tcp:cc=vegas",
+            "reno:cc=reno",
+        ] {
+            assert!(parse_proto(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn duration_grammar_roundtrips() {
+        assert_eq!(parse_duration("100ms").unwrap(), 100 * MS);
+        assert_eq!(parse_duration("2s").unwrap(), 2 * SEC);
+        assert_eq!(parse_duration("500us").unwrap(), 500 * US);
+        assert_eq!(parse_duration("7ns").unwrap(), 7);
+        for n in [100 * MS, 2 * SEC, 500 * US, 7, 1500 * US] {
+            assert_eq!(parse_duration(&fmt_duration(n)).unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn registry_matrix_covers_the_acceptance_set() {
+        let names: Vec<String> =
+            registry_matrix().iter().map(|p| p.name().to_string()).collect();
+        for want in ["ltp", "ltp-adaptive", "reno", "cubic", "dctcp", "bbr"] {
+            assert!(names.iter().any(|n| n == want), "matrix missing `{want}`: {names:?}");
+        }
+        assert!(names.len() >= 6);
+        // The default matrix stays the paper's two-protocol baseline.
+        let base: Vec<String> =
+            baseline_matrix().iter().map(|p| p.name().to_string()).collect();
+        assert_eq!(base, ["ltp", "reno"]);
+    }
+}

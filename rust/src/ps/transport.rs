@@ -1,272 +1,590 @@
-//! Protocol abstraction for the PS system: one gather/broadcast flow over
-//! either LTP or TCP-with-a-chosen-cc, with a uniform poll surface so
-//! [`super::PsNode`] and [`super::WorkerNode`] are protocol-agnostic.
+//! The pluggable transport layer of the PS system (DESIGN.md §Transport
+//! API).
+//!
+//! A [`Transport`] is a named factory: it stamps out boxed [`FlowTx`] /
+//! [`FlowRx`] endpoints with the uniform on-packet / poll / close surface
+//! that [`super::PsNode`] and [`super::WorkerNode`] drive, so the training
+//! runtime is protocol-agnostic and new protocols plug in without touching
+//! PS or worker code. Concrete transports live here — LTP, TCP with a
+//! chosen congestion control, and `ltp-adaptive`, a phase-aware LTP variant
+//! that anneals the Early-Close percentage threshold over BSP iterations.
+//! The string-keyed registry and the `key:param=value,...` spec grammar
+//! that instantiate them live in [`super::spec`].
 
 use crate::cc::CcAlgo;
-use crate::proto::{EarlyCloseCfg, LtpEvent, LtpReceiver, LtpSender, SegmentMap};
+use crate::proto::{CloseReason, EarlyCloseCfg, LtpEvent, LtpReceiver, LtpSender, SegmentMap};
 use crate::simnet::Packet;
 use crate::tcp::{TcpReceiver, TcpSender};
 use crate::util::Bitmap;
-use crate::wire::{LtpType, PacketKind, HDR_BYTES, LTP_MSS, TCP_IP_OVERHEAD, TCP_MSS, UDP_IP_OVERHEAD};
+use crate::wire::{
+    LtpType, PacketKind, HDR_BYTES, LTP_MSS, TCP_IP_OVERHEAD, TCP_MSS, UDP_IP_OVERHEAD,
+};
 use crate::Nanos;
 
-/// Which transport a training run uses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Proto {
-    Ltp,
-    Tcp(CcAlgo),
+/// Everything a transport needs to open the sending side of one flow
+/// (worker gather, or PS broadcast).
+#[derive(Debug, Clone)]
+pub struct TxCfg {
+    /// Training-layer flow id (the transport may truncate it on the wire —
+    /// see [`Transport::wire_flow`]).
+    pub flow: u64,
+    /// Message size in bytes.
+    pub bytes: u64,
+    /// Critical segment ids (loss-tolerant transports deliver these
+    /// reliably; reliable transports deliver everything anyway).
+    pub critical: Vec<u32>,
+    /// Path RTprop estimate from a previous flow on this path (0 = none).
+    pub seed_rtprop: Nanos,
+    /// Path bottleneck-bandwidth estimate in bytes/sec (0 = none).
+    pub seed_btlbw_bytes: u64,
 }
 
-impl Proto {
-    pub fn name(self) -> String {
-        match self {
-            Proto::Ltp => "ltp".to_string(),
-            Proto::Tcp(cc) => cc.name().to_string(),
-        }
-    }
-
-    pub fn is_loss_tolerant(self) -> bool {
-        matches!(self, Proto::Ltp)
-    }
+/// Everything a transport needs to open the receiving side of one flow.
+#[derive(Debug, Clone)]
+pub struct RxCfg {
+    /// Wire-visible flow id of the incoming flow.
+    pub flow: u64,
+    /// Expected message size in bytes.
+    pub bytes: u64,
+    /// Early Close configuration supplied by the application (the PS's
+    /// [`crate::proto::ThresholdTracker`], or
+    /// [`EarlyCloseCfg::reliable`] for the broadcast direction). Adaptive
+    /// transports may refine it (`ltp-adaptive` anneals `ec.pct`).
+    pub ec: EarlyCloseCfg,
+    /// Critical segment ids expected on this flow.
+    pub critical: Vec<u32>,
+    /// BSP iteration this flow belongs to — phase-aware transports adapt
+    /// their loss tolerance to the training phase.
+    pub iter: u64,
 }
 
-/// Sending side of one flow (worker gather, or PS broadcast).
-pub enum GatherTx {
-    Ltp(LtpSender),
-    Tcp(TcpSender),
+/// Application-level knobs a protocol spec may override (e.g.
+/// `ltp:pct=0.9,slack=100ms`). `None` means "use the run configuration's
+/// value", so default specs leave behavior bit-for-bit unchanged.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TransportTuning {
+    /// Early Close data-percentage threshold override.
+    pub pct_threshold: Option<f64>,
+    /// Deadline slack C override.
+    pub deadline_slack: Option<Nanos>,
 }
 
-impl GatherTx {
-    /// Create a sender for `bytes` with the given critical segments (LTP)
-    /// or a plain byte stream (TCP). `seed_rtprop`/`seed_btlbw` prime LTP's
-    /// estimators from path knowledge (previous epochs share thresholds).
-    pub fn new(
-        proto: Proto,
-        flow: u64,
-        bytes: u64,
-        critical: Vec<u32>,
-        seed_rtprop: Nanos,
-        seed_btlbw_bytes: u64,
-    ) -> GatherTx {
-        match proto {
-            Proto::Ltp => {
-                let map = SegmentMap::new(bytes, crate::grad::Manifest::aligned_payload(LTP_MSS), critical);
-                let mut s = LtpSender::new(flow as u16, map, crate::wire::MTU);
-                if seed_btlbw_bytes > 0 {
-                    s.seed_cc(seed_rtprop, seed_btlbw_bytes);
-                }
-                GatherTx::Ltp(s)
-            }
-            Proto::Tcp(cc) => GatherTx::Tcp(TcpSender::new(flow, bytes, TCP_MSS, cc.build(TCP_MSS))),
-        }
+/// Sending side of one flow: the uniform surface the PS and worker nodes
+/// drive, whatever the protocol underneath.
+pub trait FlowTx {
+    /// Does an incoming packet's flow tag belong to this sender?
+    fn flow_matches(&self, f: u64) -> bool;
+
+    /// Feed an incoming control packet (ACK/Stop) to the sender.
+    fn handle(&mut self, now: Nanos, pkt: &Packet);
+
+    /// Next packet to transmit toward `dst`, or `None`.
+    fn poll(&mut self, now: Nanos, me: usize, dst: usize) -> Option<Packet>;
+
+    /// Next instant the sender needs a timer callback, if any.
+    fn next_wakeup(&self) -> Option<Nanos>;
+
+    fn on_wakeup(&mut self, now: Nanos);
+
+    /// The flow is over from the sender's point of view (fully acked, or
+    /// stopped by the receiver).
+    fn is_complete(&self) -> bool;
+
+    /// Path congestion estimates `(rtprop, btlbw_bytes_per_sec)` for
+    /// seeding the next flow on this path (loss-tolerant transports share
+    /// thresholds across epochs). `None` if the transport has none.
+    fn path_estimates(&self) -> Option<(Nanos, u64)> {
+        None
     }
 
-    pub fn handle(&mut self, now: Nanos, pkt: &Packet) {
-        match (self, &pkt.kind) {
-            (GatherTx::Ltp(s), PacketKind::Ltp(hdr)) => {
-                s.handle(now, LtpEvent { hdr: *hdr, payload_len: 0 })
-            }
-            (GatherTx::Tcp(s), PacketKind::Tcp(seg)) if seg.is_ack => s.on_ack(now, *seg),
-            _ => {}
-        }
-    }
+    /// Packets retransmitted so far on this flow.
+    fn retransmissions(&self) -> u64;
 
-    /// Next packet to transmit toward `dst`, or None.
-    pub fn poll(&mut self, now: Nanos, me: usize, dst: usize) -> Option<Packet> {
-        match self {
-            GatherTx::Ltp(s) => s.poll_transmit(now).map(|out| {
-                let size = UDP_IP_OVERHEAD + HDR_BYTES as u32 + out.payload_len;
-                Packet::new(me, dst, size, s.flow() as u64, PacketKind::Ltp(out.hdr))
-            }),
-            GatherTx::Tcp(s) => s.poll_transmit(now).map(|seg| {
-                Packet::new(me, dst, seg.len + TCP_IP_OVERHEAD, s.flow, PacketKind::Tcp(seg))
-            }),
-        }
-    }
-
-    pub fn next_wakeup(&self) -> Option<Nanos> {
-        match self {
-            GatherTx::Ltp(s) => s.next_wakeup(),
-            GatherTx::Tcp(s) => s.next_wakeup(),
-        }
-    }
-
-    pub fn on_wakeup(&mut self, now: Nanos) {
-        match self {
-            GatherTx::Ltp(s) => s.on_wakeup(now),
-            GatherTx::Tcp(s) => s.on_wakeup(now),
-        }
-    }
-
-    pub fn is_complete(&self) -> bool {
-        match self {
-            GatherTx::Ltp(s) => s.is_complete(),
-            GatherTx::Tcp(s) => s.is_complete(),
-        }
-    }
-
-    /// LTP congestion estimates for seeding the next flow on this path.
-    pub fn path_estimates(&self) -> Option<(Nanos, u64)> {
-        match self {
-            GatherTx::Ltp(s) => Some((s.cc.rtprop_ns(), s.cc.btlbw_bytes_per_sec())),
-            GatherTx::Tcp(_) => None,
-        }
-    }
-
-    /// Retransmitted packets so far on this flow (either transport).
-    pub fn retransmissions(&self) -> u64 {
-        match self {
-            GatherTx::Ltp(s) => s.stats.retransmissions,
-            GatherTx::Tcp(s) => s.stats.retransmissions,
-        }
-    }
-
-    /// Packets sent so far on this flow (either transport).
-    pub fn pkts_sent(&self) -> u64 {
-        match self {
-            GatherTx::Ltp(s) => s.stats.pkts_sent,
-            GatherTx::Tcp(s) => s.stats.pkts_sent,
-        }
-    }
+    /// Packets sent so far on this flow.
+    fn pkts_sent(&self) -> u64;
 }
 
 /// Receiving side of one flow.
-pub enum GatherRx {
-    Ltp { rx: LtpReceiver, total_bytes: u64 },
-    Tcp { rx: TcpReceiver, total_bytes: u64 },
-}
-
-impl GatherTx {
-    /// Does an incoming packet's flow tag belong to this sender? (LTP flow
-    /// ids are 16-bit on the wire.)
-    pub fn flow_matches(&self, f: u64) -> bool {
-        match self {
-            GatherTx::Ltp(s) => s.flow() as u64 == (f & 0xFFFF),
-            GatherTx::Tcp(s) => s.flow == f,
-        }
-    }
-}
-
-impl GatherRx {
-    pub fn new(proto: Proto, flow: u64, bytes: u64, ec: EarlyCloseCfg, critical: Vec<u32>) -> GatherRx {
-        match proto {
-            Proto::Ltp => {
-                GatherRx::Ltp { rx: LtpReceiver::new(flow as u16, ec, critical), total_bytes: bytes }
-            }
-            Proto::Tcp(_) => GatherRx::Tcp { rx: TcpReceiver::new(flow), total_bytes: bytes },
-        }
-    }
-
+pub trait FlowRx {
     /// Does an incoming packet's flow tag belong to this receiver?
-    pub fn flow_matches(&self, f: u64) -> bool {
-        match self {
-            GatherRx::Ltp { rx, .. } => rx.flow() as u64 == (f & 0xFFFF),
-            GatherRx::Tcp { rx, .. } => rx.flow == f,
-        }
-    }
+    fn flow_matches(&self, f: u64) -> bool;
 
     /// Handle an incoming data/control packet; pushes any responses
     /// (ACKs/stops) through `out`.
-    pub fn handle(&mut self, now: Nanos, pkt: &Packet, me: usize, mut out: impl FnMut(Packet)) {
-        match (self, &pkt.kind) {
-            (GatherRx::Ltp { rx, .. }, PacketKind::Ltp(hdr)) => {
-                if hdr.ty == LtpType::Ack {
-                    return;
-                }
-                let payload_len = pkt.size.saturating_sub(UDP_IP_OVERHEAD + HDR_BYTES as u32);
-                rx.handle(now, LtpEvent { hdr: *hdr, payload_len });
-                while let Some(h) = rx.poll_transmit() {
-                    let size = UDP_IP_OVERHEAD + HDR_BYTES as u32;
-                    out(Packet::new(me, pkt.src, size, pkt.flow, PacketKind::Ltp(h)));
-                }
-            }
-            (GatherRx::Tcp { rx, .. }, PacketKind::Tcp(seg)) => {
-                if seg.is_ack {
-                    return;
-                }
-                let ack = rx.on_data(*seg, pkt.ecn_ce);
-                out(Packet::new(me, pkt.src, TCP_IP_OVERHEAD, pkt.flow, PacketKind::Tcp(ack)));
-            }
-            _ => {}
-        }
-    }
+    fn handle(&mut self, now: Nanos, pkt: &Packet, me: usize, out: &mut dyn FnMut(Packet));
 
-    pub fn next_wakeup(&self, now: Nanos) -> Option<Nanos> {
-        match self {
-            GatherRx::Ltp { rx, .. } => rx.next_wakeup(now),
-            GatherRx::Tcp { .. } => None,
-        }
-    }
+    /// Next instant a close decision could change, if any.
+    fn next_wakeup(&self, now: Nanos) -> Option<Nanos>;
 
-    pub fn on_wakeup(&mut self, now: Nanos, me: usize, _out: impl FnMut(Packet)) {
-        if let GatherRx::Ltp { rx, .. } = self {
-            rx.on_wakeup(now);
-            let _ = me;
-        }
-    }
+    /// Timer callback (Early Close threshold checks). Pending responses
+    /// are pulled afterwards with [`FlowRx::drain`].
+    fn on_wakeup(&mut self, now: Nanos);
 
     /// Drain pending control responses (after a wakeup-triggered close).
-    pub fn drain(&mut self, me: usize, peer: usize, mut out: impl FnMut(Packet)) {
-        if let GatherRx::Ltp { rx, .. } = self {
-            let flow = rx.flow() as u64;
-            while let Some(h) = rx.poll_transmit() {
-                let size = UDP_IP_OVERHEAD + HDR_BYTES as u32;
-                out(Packet::new(me, peer, size, flow, PacketKind::Ltp(h)));
-            }
-        }
-    }
+    fn drain(&mut self, me: usize, peer: usize, out: &mut dyn FnMut(Packet));
 
-    pub fn is_done(&self) -> bool {
-        match self {
-            GatherRx::Ltp { rx, .. } => rx.is_closed(),
-            GatherRx::Tcp { rx, total_bytes } => rx.bytes_received >= *total_bytes,
-        }
-    }
+    /// The flow closed (possibly early for loss-tolerant transports).
+    fn is_done(&self) -> bool;
 
     /// Fraction of the message delivered.
-    pub fn delivered_fraction(&self) -> f64 {
-        match self {
-            GatherRx::Ltp { rx, .. } => rx.pct_received(),
-            GatherRx::Tcp { rx, total_bytes } => {
-                (rx.bytes_received as f64 / *total_bytes as f64).min(1.0)
-            }
-        }
-    }
+    fn delivered_fraction(&self) -> f64;
 
     /// Did the receiver observe a complete (100 %) transmission? Used by
     /// the LT-threshold epoch update rule.
-    pub fn reached_full(&self) -> bool {
+    fn reached_full(&self) -> bool {
         self.delivered_fraction() >= 1.0 - 1e-12
     }
 
-    /// LTP close record once the flow is done: `(reason, criticals_ok,
-    /// delivered fraction)`. `None` for TCP flows or before close.
-    pub fn close_info(&self) -> Option<(crate::proto::CloseReason, bool, f64)> {
-        match self {
-            GatherRx::Ltp { rx, .. } => {
-                rx.close_reason().map(|r| (r, rx.stats.criticals_ok, rx.pct_received()))
+    /// Close record once the flow is done: `(reason, criticals_ok,
+    /// delivered fraction)`. `None` for transports without Early Close
+    /// semantics, or before close.
+    fn close_info(&self) -> Option<(CloseReason, bool, f64)> {
+        None
+    }
+
+    /// Arrival bitmap for bubble-filling; `None` when everything arrived
+    /// by construction (reliable transports).
+    fn bitmap(&self) -> Option<&Bitmap> {
+        None
+    }
+
+    /// Segmentation of the received message (loss-tolerant transports).
+    fn segment_map(&self) -> Option<SegmentMap> {
+        None
+    }
+}
+
+/// A transport protocol: a named, thread-shareable factory for flow
+/// endpoints. Implementations are registered under string keys in
+/// `ps/spec.rs` and instantiated from CLI specs like `ltp`,
+/// `ltp:pct=0.9,slack=100ms`, or `tcp:cc=cubic`.
+pub trait Transport: Send + Sync {
+    /// Canonical spec string — the protocol's name everywhere (report
+    /// labels, JSON, bench records). Borrowed, never re-allocated.
+    fn name(&self) -> &str;
+
+    /// Whether gathers over this transport may close before 100 % of the
+    /// data arrived (drives Early Close threshold tracking on the PS).
+    fn is_loss_tolerant(&self) -> bool;
+
+    /// The wire-visible form of a training-layer flow id (LTP flow ids are
+    /// 16-bit on the wire; byte-stream transports keep the full id).
+    fn wire_flow(&self, flow: u64) -> u64 {
+        flow
+    }
+
+    /// Spec-level overrides of run-configuration knobs.
+    fn tuning(&self) -> TransportTuning {
+        TransportTuning::default()
+    }
+
+    /// Open the sending side of one flow.
+    fn make_tx(&self, cfg: TxCfg) -> Box<dyn FlowTx>;
+
+    /// Open the receiving side of one flow.
+    fn make_rx(&self, cfg: RxCfg) -> Box<dyn FlowRx>;
+}
+
+// ---------------------------------------------------------------------------
+// LTP flows.
+// ---------------------------------------------------------------------------
+
+struct LtpFlowTx {
+    s: LtpSender,
+}
+
+impl LtpFlowTx {
+    fn open(cfg: TxCfg) -> Box<dyn FlowTx> {
+        let map = SegmentMap::new(
+            cfg.bytes,
+            crate::grad::Manifest::aligned_payload(LTP_MSS),
+            cfg.critical,
+        );
+        let mut s = LtpSender::new(cfg.flow as u16, map, crate::wire::MTU);
+        if cfg.seed_btlbw_bytes > 0 {
+            s.seed_cc(cfg.seed_rtprop, cfg.seed_btlbw_bytes);
+        }
+        Box::new(LtpFlowTx { s })
+    }
+}
+
+impl FlowTx for LtpFlowTx {
+    fn flow_matches(&self, f: u64) -> bool {
+        self.s.flow() as u64 == (f & 0xFFFF)
+    }
+
+    fn handle(&mut self, now: Nanos, pkt: &Packet) {
+        if let PacketKind::Ltp(hdr) = &pkt.kind {
+            self.s.handle(now, LtpEvent { hdr: *hdr, payload_len: 0 });
+        }
+    }
+
+    fn poll(&mut self, now: Nanos, me: usize, dst: usize) -> Option<Packet> {
+        self.s.poll_transmit(now).map(|out| {
+            let size = UDP_IP_OVERHEAD + HDR_BYTES as u32 + out.payload_len;
+            Packet::new(me, dst, size, self.s.flow() as u64, PacketKind::Ltp(out.hdr))
+        })
+    }
+
+    fn next_wakeup(&self) -> Option<Nanos> {
+        self.s.next_wakeup()
+    }
+
+    fn on_wakeup(&mut self, now: Nanos) {
+        self.s.on_wakeup(now);
+    }
+
+    fn is_complete(&self) -> bool {
+        self.s.is_complete()
+    }
+
+    fn path_estimates(&self) -> Option<(Nanos, u64)> {
+        Some((self.s.cc.rtprop_ns(), self.s.cc.btlbw_bytes_per_sec()))
+    }
+
+    fn retransmissions(&self) -> u64 {
+        self.s.stats.retransmissions
+    }
+
+    fn pkts_sent(&self) -> u64 {
+        self.s.stats.pkts_sent
+    }
+}
+
+struct LtpFlowRx {
+    rx: LtpReceiver,
+    total_bytes: u64,
+}
+
+impl LtpFlowRx {
+    fn open(cfg: RxCfg) -> Box<dyn FlowRx> {
+        Box::new(LtpFlowRx {
+            rx: LtpReceiver::new(cfg.flow as u16, cfg.ec, cfg.critical),
+            total_bytes: cfg.bytes,
+        })
+    }
+}
+
+impl FlowRx for LtpFlowRx {
+    fn flow_matches(&self, f: u64) -> bool {
+        self.rx.flow() as u64 == (f & 0xFFFF)
+    }
+
+    fn handle(&mut self, now: Nanos, pkt: &Packet, me: usize, out: &mut dyn FnMut(Packet)) {
+        let PacketKind::Ltp(hdr) = &pkt.kind else { return };
+        if hdr.ty == LtpType::Ack {
+            return;
+        }
+        let payload_len = pkt.size.saturating_sub(UDP_IP_OVERHEAD + HDR_BYTES as u32);
+        self.rx.handle(now, LtpEvent { hdr: *hdr, payload_len });
+        while let Some(h) = self.rx.poll_transmit() {
+            let size = UDP_IP_OVERHEAD + HDR_BYTES as u32;
+            out(Packet::new(me, pkt.src, size, pkt.flow, PacketKind::Ltp(h)));
+        }
+    }
+
+    fn next_wakeup(&self, now: Nanos) -> Option<Nanos> {
+        self.rx.next_wakeup(now)
+    }
+
+    fn on_wakeup(&mut self, now: Nanos) {
+        self.rx.on_wakeup(now);
+    }
+
+    fn drain(&mut self, me: usize, peer: usize, out: &mut dyn FnMut(Packet)) {
+        let flow = self.rx.flow() as u64;
+        while let Some(h) = self.rx.poll_transmit() {
+            let size = UDP_IP_OVERHEAD + HDR_BYTES as u32;
+            out(Packet::new(me, peer, size, flow, PacketKind::Ltp(h)));
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.rx.is_closed()
+    }
+
+    fn delivered_fraction(&self) -> f64 {
+        self.rx.pct_received()
+    }
+
+    fn close_info(&self) -> Option<(CloseReason, bool, f64)> {
+        self.rx
+            .close_reason()
+            .map(|r| (r, self.rx.stats.criticals_ok, self.rx.pct_received()))
+    }
+
+    fn bitmap(&self) -> Option<&Bitmap> {
+        Some(self.rx.received_bitmap())
+    }
+
+    fn segment_map(&self) -> Option<SegmentMap> {
+        Some(SegmentMap::new(
+            self.total_bytes,
+            crate::grad::Manifest::aligned_payload(LTP_MSS),
+            vec![],
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP flows.
+// ---------------------------------------------------------------------------
+
+struct TcpFlowTx {
+    s: TcpSender,
+}
+
+impl FlowTx for TcpFlowTx {
+    fn flow_matches(&self, f: u64) -> bool {
+        self.s.flow == f
+    }
+
+    fn handle(&mut self, now: Nanos, pkt: &Packet) {
+        if let PacketKind::Tcp(seg) = &pkt.kind {
+            if seg.is_ack {
+                self.s.on_ack(now, *seg);
             }
-            GatherRx::Tcp { .. } => None,
         }
     }
 
-    /// Arrival bitmap (LTP) for bubble-filling; None for TCP (everything
-    /// arrived).
-    pub fn bitmap(&self) -> Option<&Bitmap> {
-        match self {
-            GatherRx::Ltp { rx, .. } => Some(rx.received_bitmap()),
-            GatherRx::Tcp { .. } => None,
-        }
+    fn poll(&mut self, now: Nanos, me: usize, dst: usize) -> Option<Packet> {
+        self.s.poll_transmit(now).map(|seg| {
+            Packet::new(me, dst, seg.len + TCP_IP_OVERHEAD, self.s.flow, PacketKind::Tcp(seg))
+        })
     }
 
-    pub fn segment_map(&self) -> Option<SegmentMap> {
-        match self {
-            GatherRx::Ltp { total_bytes, .. } => Some(SegmentMap::new(
-                *total_bytes,
-                crate::grad::Manifest::aligned_payload(LTP_MSS),
-                vec![],
-            )),
-            GatherRx::Tcp { .. } => None,
+    fn next_wakeup(&self) -> Option<Nanos> {
+        self.s.next_wakeup()
+    }
+
+    fn on_wakeup(&mut self, now: Nanos) {
+        self.s.on_wakeup(now);
+    }
+
+    fn is_complete(&self) -> bool {
+        self.s.is_complete()
+    }
+
+    fn retransmissions(&self) -> u64 {
+        self.s.stats.retransmissions
+    }
+
+    fn pkts_sent(&self) -> u64 {
+        self.s.stats.pkts_sent
+    }
+}
+
+struct TcpFlowRx {
+    rx: TcpReceiver,
+    total_bytes: u64,
+}
+
+impl FlowRx for TcpFlowRx {
+    fn flow_matches(&self, f: u64) -> bool {
+        self.rx.flow == f
+    }
+
+    fn handle(&mut self, now: Nanos, pkt: &Packet, me: usize, out: &mut dyn FnMut(Packet)) {
+        let _ = now;
+        let PacketKind::Tcp(seg) = &pkt.kind else { return };
+        if seg.is_ack {
+            return;
         }
+        let ack = self.rx.on_data(*seg, pkt.ecn_ce);
+        out(Packet::new(me, pkt.src, TCP_IP_OVERHEAD, pkt.flow, PacketKind::Tcp(ack)));
+    }
+
+    fn next_wakeup(&self, _now: Nanos) -> Option<Nanos> {
+        None
+    }
+
+    fn on_wakeup(&mut self, _now: Nanos) {}
+
+    fn drain(&mut self, _me: usize, _peer: usize, _out: &mut dyn FnMut(Packet)) {}
+
+    fn is_done(&self) -> bool {
+        self.rx.bytes_received >= self.total_bytes
+    }
+
+    fn delivered_fraction(&self) -> f64 {
+        (self.rx.bytes_received as f64 / self.total_bytes as f64).min(1.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Concrete transports.
+// ---------------------------------------------------------------------------
+
+/// LTP with optional spec-level overrides of the Early Close knobs
+/// (`ltp:pct=0.9,slack=100ms`).
+pub(super) struct LtpTransport {
+    pub(super) pct: Option<f64>,
+    pub(super) slack: Option<Nanos>,
+    pub(super) spec: String,
+}
+
+impl Transport for LtpTransport {
+    fn name(&self) -> &str {
+        &self.spec
+    }
+
+    fn is_loss_tolerant(&self) -> bool {
+        true
+    }
+
+    fn wire_flow(&self, flow: u64) -> u64 {
+        flow & 0xFFFF // 16-bit on the LTP wire
+    }
+
+    fn tuning(&self) -> TransportTuning {
+        TransportTuning { pct_threshold: self.pct, deadline_slack: self.slack }
+    }
+
+    fn make_tx(&self, cfg: TxCfg) -> Box<dyn FlowTx> {
+        LtpFlowTx::open(cfg)
+    }
+
+    fn make_rx(&self, cfg: RxCfg) -> Box<dyn FlowRx> {
+        LtpFlowRx::open(cfg)
+    }
+}
+
+/// Phase-aware LTP (`ltp-adaptive`): anneals the Early-Close percentage
+/// threshold linearly from `start` to `end` over the first `over` BSP
+/// iterations — tolerate more loss while gradients are coarse, demand more
+/// data as training refines (the DBLP-style per-phase bounded-loss rule).
+/// Ships entirely through the [`Transport`] API: no PS or worker code knows
+/// it exists.
+pub(super) struct LtpAdaptiveTransport {
+    pub(super) start: f64,
+    pub(super) end: f64,
+    pub(super) over: u64,
+    pub(super) slack: Option<Nanos>,
+    pub(super) spec: String,
+}
+
+impl LtpAdaptiveTransport {
+    /// Annealed Early-Close percentage for BSP iteration `iter`.
+    pub(super) fn pct_at(&self, iter: u64) -> f64 {
+        let t = iter.min(self.over) as f64 / self.over as f64;
+        self.start + (self.end - self.start) * t
+    }
+}
+
+impl Transport for LtpAdaptiveTransport {
+    fn name(&self) -> &str {
+        &self.spec
+    }
+
+    fn is_loss_tolerant(&self) -> bool {
+        true
+    }
+
+    fn wire_flow(&self, flow: u64) -> u64 {
+        flow & 0xFFFF
+    }
+
+    fn tuning(&self) -> TransportTuning {
+        TransportTuning { pct_threshold: None, deadline_slack: self.slack }
+    }
+
+    fn make_tx(&self, cfg: TxCfg) -> Box<dyn FlowTx> {
+        LtpFlowTx::open(cfg)
+    }
+
+    fn make_rx(&self, mut cfg: RxCfg) -> Box<dyn FlowRx> {
+        // Only loss-tolerant flows anneal: the reliable broadcast direction
+        // (and iteration-0 gathers, still bootstrapping thresholds) keep
+        // their caller-supplied configuration.
+        if cfg.ec.is_loss_tolerant() {
+            cfg.ec.pct = self.pct_at(cfg.iter);
+        }
+        LtpFlowRx::open(cfg)
+    }
+}
+
+/// Reliable byte-stream transport with a chosen congestion control — the
+/// kernel-TCP baselines the paper compares against.
+pub(super) struct TcpTransport {
+    pub(super) cc: CcAlgo,
+    pub(super) spec: String,
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &str {
+        &self.spec
+    }
+
+    fn is_loss_tolerant(&self) -> bool {
+        false
+    }
+
+    fn make_tx(&self, cfg: TxCfg) -> Box<dyn FlowTx> {
+        Box::new(TcpFlowTx {
+            s: TcpSender::new(cfg.flow, cfg.bytes, TCP_MSS, self.cc.build(TCP_MSS)),
+        })
+    }
+
+    fn make_rx(&self, cfg: RxCfg) -> Box<dyn FlowRx> {
+        Box::new(TcpFlowRx { rx: TcpReceiver::new(cfg.flow), total_bytes: cfg.bytes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::MS;
+
+    #[test]
+    fn adaptive_pct_anneals_linearly_and_saturates() {
+        let t = LtpAdaptiveTransport {
+            start: 0.7,
+            end: 0.95,
+            over: 10,
+            slack: None,
+            spec: "ltp-adaptive".to_string(),
+        };
+        assert!((t.pct_at(0) - 0.7).abs() < 1e-12);
+        assert!((t.pct_at(5) - 0.825).abs() < 1e-12);
+        assert!((t.pct_at(10) - 0.95).abs() < 1e-12);
+        assert!((t.pct_at(1000) - 0.95).abs() < 1e-12, "holds at `end` past `over`");
+    }
+
+    #[test]
+    fn adaptive_leaves_reliable_flows_reliable() {
+        let t = LtpAdaptiveTransport {
+            start: 0.7,
+            end: 0.95,
+            over: 10,
+            slack: None,
+            spec: "ltp-adaptive".to_string(),
+        };
+        // A reliable (broadcast-direction) receiver must not early-close
+        // even late in training.
+        let rx = t.make_rx(RxCfg {
+            flow: 1,
+            bytes: 100_000,
+            ec: EarlyCloseCfg::reliable(),
+            critical: vec![],
+            iter: 50,
+        });
+        assert!(rx.next_wakeup(0).is_none(), "reliable flows schedule no close checks");
+    }
+
+    #[test]
+    fn wire_flow_masks_only_for_ltp() {
+        let ltp = LtpTransport { pct: None, slack: None, spec: "ltp".to_string() };
+        let tcp = TcpTransport { cc: CcAlgo::Reno, spec: "reno".to_string() };
+        assert_eq!(ltp.wire_flow(0x1_0005), 5);
+        assert_eq!(tcp.wire_flow(0x1_0005), 0x1_0005);
+    }
+
+    #[test]
+    fn tuning_defaults_are_inert() {
+        let ltp = LtpTransport { pct: None, slack: None, spec: "ltp".to_string() };
+        assert_eq!(ltp.tuning(), TransportTuning::default());
+        let tuned = LtpTransport { pct: Some(0.9), slack: Some(100 * MS), spec: String::new() };
+        assert_eq!(tuned.tuning().pct_threshold, Some(0.9));
+        assert_eq!(tuned.tuning().deadline_slack, Some(100 * MS));
     }
 }

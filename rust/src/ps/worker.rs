@@ -1,7 +1,8 @@
 //! Worker node: compute → gather (loss-tolerant) → wait for the reliable
 //! broadcast → next iteration (BSP).
 
-use super::transport::{GatherRx, GatherTx, Proto};
+use super::spec::ProtoSpec;
+use super::transport::{FlowRx, FlowTx, RxCfg, TxCfg};
 use crate::proto::EarlyCloseCfg;
 use crate::simnet::{Ctx, EntityId, Node, Packet};
 use crate::wire::PacketKind;
@@ -9,7 +10,7 @@ use crate::Nanos;
 
 /// The local computation a worker performs each iteration. Returns the
 /// simulated duration; real implementations also deposit gradients into
-/// the [`Blackboard`].
+/// the [`super::Blackboard`].
 pub trait Compute {
     fn compute(&mut self, worker: usize, iter: u64) -> Nanos;
 }
@@ -49,19 +50,19 @@ pub struct WorkerNode {
     pub index: usize,
     ps: EntityId,
     n_workers: usize,
-    proto: Proto,
+    proto: ProtoSpec,
     model_bytes: u64,
     critical: Vec<u32>,
     compute: Box<dyn Compute>,
     iters: u64,
     iter: u64,
     phase: Phase,
-    tx: Option<GatherTx>,
-    rx: Option<GatherRx>,
+    tx: Option<Box<dyn FlowTx>>,
+    rx: Option<Box<dyn FlowRx>>,
     /// Previous iteration's broadcast receiver, kept to answer straggler
     /// retransmissions (its final ACKs/Stops may have been lost; a silent
     /// worker would strand the PS's reliable broadcast sender).
-    rx_prev: Option<GatherRx>,
+    rx_prev: Option<Box<dyn FlowRx>>,
     gather_started: Nanos,
     bcast_started: Nanos,
     /// LTP path estimates carried across flows (epoch threshold sharing).
@@ -76,7 +77,7 @@ impl WorkerNode {
         index: usize,
         ps: EntityId,
         n_workers: usize,
-        proto: Proto,
+        proto: ProtoSpec,
         model_bytes: u64,
         critical: Vec<u32>,
         compute: Box<dyn Compute>,
@@ -123,23 +124,21 @@ impl WorkerNode {
         self.phase = Phase::Gathering;
         self.gather_started = ctx.now();
         let (rt, bw) = self.path.unwrap_or((0, 0));
-        let tx = GatherTx::new(
-            self.proto,
-            self.gather_flow(self.iter),
-            self.model_bytes,
-            self.critical.clone(),
-            rt,
-            bw,
-        );
-        self.tx = Some(tx);
+        self.tx = Some(self.proto.make_tx(TxCfg {
+            flow: self.gather_flow(self.iter),
+            bytes: self.model_bytes,
+            critical: self.critical.clone(),
+            seed_rtprop: rt,
+            seed_btlbw_bytes: bw,
+        }));
         // Broadcast receiver for this iteration: always reliable.
-        self.rx = Some(GatherRx::new(
-            self.proto,
-            self.bcast_flow(self.iter),
-            self.model_bytes,
-            EarlyCloseCfg::reliable(),
-            vec![],
-        ));
+        self.rx = Some(self.proto.make_rx(RxCfg {
+            flow: self.bcast_flow(self.iter),
+            bytes: self.model_bytes,
+            ec: EarlyCloseCfg::reliable(),
+            critical: vec![],
+            iter: self.iter,
+        }));
         self.drain(ctx);
     }
 
@@ -225,11 +224,11 @@ impl Node for WorkerNode {
             let cur = self.rx.as_ref().map(|r| r.flow_matches(pkt.flow)).unwrap_or(false);
             if cur {
                 if let Some(rx) = &mut self.rx {
-                    rx.handle(now, &pkt, me, |p| outgoing.push(p));
+                    rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
                 }
             } else if let Some(rx) = &mut self.rx_prev {
                 if rx.flow_matches(pkt.flow) {
-                    rx.handle(now, &pkt, me, |p| outgoing.push(p));
+                    rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
                 }
             }
             for p in outgoing {
@@ -253,13 +252,8 @@ impl Node for WorkerNode {
         if let Some(tx) = &mut self.tx {
             tx.on_wakeup(now);
         }
-        let me = ctx.me;
-        let mut outgoing = Vec::new();
         if let Some(rx) = &mut self.rx {
-            rx.on_wakeup(now, me, |p| outgoing.push(p));
-        }
-        for p in outgoing {
-            ctx.send(p);
+            rx.on_wakeup(now);
         }
         self.drain(ctx);
     }

@@ -1,39 +1,37 @@
-//! Scenario builders: each assembles `TrainingCfg`s (topology, loss,
-//! background traffic, protocol matrix), runs them, and returns the
-//! distilled cases. All sizes have a `quick` variant so the CI conformance
-//! matrix stays interactive.
+//! Scenario builders: each assembles training runs through [`RunBuilder`]
+//! (topology, loss, background traffic, protocol matrix), runs them, and
+//! returns the distilled cases. All sizes have a `quick` variant so the CI
+//! conformance matrix stays interactive.
 //!
 //! Conventions: every incast-class scenario runs the same condition under
-//! LTP **and** TCP Reno (the kernel-default baseline the paper leads
-//! with), labeled `<proto>/w<degree>`, so the conformance test can pair
-//! them by worker count.
+//! each protocol of [`ScenarioParams::matrix`] — by default LTP **and**
+//! TCP Reno (the kernel-default baseline the paper leads with), or
+//! whatever `--proto` specs the caller supplied — labeled
+//! `<proto>/w<degree>`, so the conformance test can pair loss-tolerant
+//! cases with reliable baselines by worker count. `proto_matrix` instead
+//! sweeps **every** matrix-flagged protocol in the registry
+//! ([`crate::ps::registry_matrix`]) over two fabrics.
 
 use super::{CaseResult, ScenarioParams};
 use crate::cc::CcAlgo;
 use crate::config::{NetEnv, Workload};
-use crate::grad::Manifest;
-use crate::ps::{run_training, BgFlow, Proto, Topo, TrainingCfg};
+use crate::ps::{BgFlow, ProtoSpec, RunBuilder};
 use crate::simnet::LossModel;
-use crate::wire::LTP_MSS;
 use crate::{Nanos, SEC};
 
-/// The two-protocol matrix every incast-class scenario runs.
-const MATRIX: [Proto; 2] = [Proto::Ltp, Proto::Tcp(CcAlgo::Reno)];
-
-/// A modeled config with scenario-appropriate sizing: `bytes` gradient
-/// bytes per worker per iteration, scenario-seeded, bounded horizon.
-fn base_cfg(proto: Proto, workers: usize, bytes: u64, p: &ScenarioParams) -> TrainingCfg {
-    let mut cfg = TrainingCfg::modeled(proto, Workload::Micro, workers);
-    cfg.seed = p.seed;
-    // ≥3 iterations so the means are not dominated by iteration 0, where
-    // LTP's thresholds are still bootstrapping (reliable-mode gathers).
-    cfg.iters = if p.quick { 3 } else { 4 };
-    cfg.model_bytes = bytes;
-    cfg.critical =
-        Manifest::synthetic(bytes, 20).critical_segments(Manifest::aligned_payload(LTP_MSS));
-    cfg.batches_per_epoch = 2; // exercise one epoch-threshold update
-    cfg.horizon = 600 * SEC;
-    cfg
+/// A modeled run with scenario-appropriate sizing: `bytes` gradient bytes
+/// per worker per iteration, scenario-seeded, bounded horizon.
+fn base(proto: &ProtoSpec, workers: usize, bytes: u64, p: &ScenarioParams) -> RunBuilder {
+    RunBuilder::modeled(proto.clone(), Workload::Micro, workers)
+        .seed(p.seed)
+        // ≥3 iterations so the means are not dominated by iteration 0,
+        // where LTP's thresholds are still bootstrapping (reliable-mode
+        // gathers).
+        .iters(if p.quick { 3 } else { 4 })
+        .model_bytes(bytes)
+        .critical_tensors(20)
+        .batches_per_epoch(2) // exercise one epoch-threshold update
+        .horizon(600 * SEC)
 }
 
 /// Total incast volume per iteration, split across the workers — keeps the
@@ -43,8 +41,9 @@ fn per_worker_bytes(workers: usize, p: &ScenarioParams) -> u64 {
     (total / workers as u64).max(64 * 1024)
 }
 
-fn run_case(label: String, workers: usize, cfg: &TrainingCfg) -> CaseResult {
-    CaseResult::from_report(label, workers, &run_training(cfg))
+fn run_case(label: String, workers: usize, b: RunBuilder) -> CaseResult {
+    let report = b.run().expect("scenario configurations are valid");
+    CaseResult::from_report(label, workers, &report)
 }
 
 /// `incast_sweep`: N→1 incast at degrees 2..64 under 0.5 % wire loss.
@@ -52,10 +51,10 @@ pub(super) fn incast_sweep(p: &ScenarioParams) -> Vec<CaseResult> {
     let degrees: &[usize] = if p.quick { &[2, 8, 32] } else { &[2, 4, 8, 16, 32, 64] };
     let mut out = Vec::new();
     for &w in degrees {
-        for proto in MATRIX {
-            let mut cfg = base_cfg(proto, w, per_worker_bytes(w, p), p);
-            cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.005 });
-            out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+        for proto in p.matrix() {
+            let b = base(&proto, w, per_worker_bytes(w, p), p)
+                .loss(LossModel::Bernoulli { p: 0.005 });
+            out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
         }
     }
     out
@@ -66,10 +65,10 @@ pub(super) fn incast_sweep(p: &ScenarioParams) -> Vec<CaseResult> {
 pub(super) fn incast_heavy_loss(p: &ScenarioParams) -> Vec<CaseResult> {
     let w = 8;
     let mut out = Vec::new();
-    for proto in MATRIX {
-        let mut cfg = base_cfg(proto, w, per_worker_bytes(w, p), p);
-        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.02 });
-        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+    for proto in p.matrix() {
+        let b = base(&proto, w, per_worker_bytes(w, p), p)
+            .loss(LossModel::Bernoulli { p: 0.02 });
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
     }
     out
 }
@@ -80,13 +79,12 @@ pub(super) fn incast_heavy_loss(p: &ScenarioParams) -> Vec<CaseResult> {
 pub(super) fn rack_oversub(p: &ScenarioParams) -> Vec<CaseResult> {
     let w = 8;
     let mut out = Vec::new();
-    for proto in MATRIX {
-        let mut cfg = base_cfg(proto, w, per_worker_bytes(w, p), p);
-        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.002 });
+    for proto in p.matrix() {
+        let b = base(&proto, w, per_worker_bytes(w, p), p)
+            .loss(LossModel::Bernoulli { p: 0.002 });
         // Trunk: same rate as one edge, deeper buffer (a real agg port).
-        let trunk = cfg.link.with_queue(2 * 1024 * 1024);
-        cfg.topo = Topo::TwoRack { rack0_workers: 4, trunk };
-        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+        let trunk = b.link_cfg().with_queue(2 * 1024 * 1024);
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, b.two_rack(4, trunk)));
     }
     out
 }
@@ -97,11 +95,9 @@ pub(super) fn wan_bursty(p: &ScenarioParams) -> Vec<CaseResult> {
     let w = 4;
     let bytes: u64 = if p.quick { 1_000_000 } else { 2_000_000 };
     let mut out = Vec::new();
-    for proto in MATRIX {
-        let mut cfg = base_cfg(proto, w, bytes, p);
-        cfg.link = NetEnv::WanBursty.link();
-        cfg.deadline_slack = NetEnv::WanBursty.deadline_slack();
-        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+    for proto in p.matrix() {
+        let b = base(&proto, w, bytes, p).net_env(NetEnv::WanBursty);
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
     }
     out
 }
@@ -113,10 +109,10 @@ pub(super) fn cross_traffic(p: &ScenarioParams) -> Vec<CaseResult> {
     const BG_RATE: u64 = 4_000_000_000; // 40 % of the 10 Gbps bottleneck
     const BG_STOP: Nanos = 30 * SEC;
     let mut out = Vec::new();
-    for proto in MATRIX {
-        let mut cfg = base_cfg(proto, w, per_worker_bytes(w, p), p);
-        cfg.bg = vec![BgFlow::udp_to_ps(BG_RATE, BG_STOP)];
-        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+    for proto in p.matrix() {
+        let b = base(&proto, w, per_worker_bytes(w, p), p)
+            .bg(BgFlow::udp_to_ps(BG_RATE, BG_STOP));
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
     }
     out
 }
@@ -127,13 +123,12 @@ pub(super) fn coexist_ltp_tcp(p: &ScenarioParams) -> Vec<CaseResult> {
     let w = 8;
     let bulk_bytes: u64 = if p.quick { 50_000_000 } else { 200_000_000 };
     let mut out = Vec::new();
-    for proto in MATRIX {
-        let mut cfg = base_cfg(proto, w, per_worker_bytes(w, p), p);
-        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.002 });
-        let trunk = cfg.link.with_queue(2 * 1024 * 1024);
-        cfg.topo = Topo::TwoRack { rack0_workers: 4, trunk };
-        cfg.bg = vec![BgFlow::tcp_bulk(CcAlgo::Cubic, bulk_bytes)];
-        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+    for proto in p.matrix() {
+        let b = base(&proto, w, per_worker_bytes(w, p), p)
+            .loss(LossModel::Bernoulli { p: 0.002 });
+        let trunk = b.link_cfg().with_queue(2 * 1024 * 1024);
+        let b = b.two_rack(4, trunk).bg(BgFlow::tcp_bulk(CcAlgo::Cubic, bulk_bytes));
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
     }
     out
 }
@@ -144,11 +139,32 @@ pub(super) fn wan_clean(p: &ScenarioParams) -> Vec<CaseResult> {
     let w = 4;
     let bytes: u64 = if p.quick { 1_000_000 } else { 2_000_000 };
     let mut out = Vec::new();
-    for proto in MATRIX {
-        let mut cfg = base_cfg(proto, w, bytes, p);
-        cfg.link = NetEnv::Wan1g.link();
-        cfg.deadline_slack = NetEnv::Wan1g.deadline_slack();
-        out.push(run_case(format!("{}/w{w}", proto.name()), w, &cfg));
+    for proto in p.matrix() {
+        let b = base(&proto, w, bytes, p).net_env(NetEnv::Wan1g);
+        out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
+    }
+    out
+}
+
+/// `proto_matrix`: every matrix-flagged protocol in the registry — at the
+/// time of writing reno, cubic, dctcp, bbr, ltp, and ltp-adaptive — over
+/// two fabrics: the 8→1 heavy-loss incast and the bursty WAN. Adding a
+/// protocol to [`crate::ps::PROTO_REGISTRY`] adds its column here with no
+/// other code change; `--proto` overrides are deliberately ignored so the
+/// scenario always reflects the whole registry.
+pub(super) fn proto_matrix(p: &ScenarioParams) -> Vec<CaseResult> {
+    let mut out = Vec::new();
+    let w = 8;
+    for proto in crate::ps::registry_matrix() {
+        let b = base(&proto, w, per_worker_bytes(w, p), p)
+            .loss(LossModel::Bernoulli { p: 0.02 });
+        out.push(run_case(format!("incast/{}/w{w}", proto.name()), w, b));
+    }
+    let w = 4;
+    let bytes: u64 = if p.quick { 1_000_000 } else { 2_000_000 };
+    for proto in crate::ps::registry_matrix() {
+        let b = base(&proto, w, bytes, p).net_env(NetEnv::WanBursty);
+        out.push(run_case(format!("wan/{}/w{w}", proto.name()), w, b));
     }
     out
 }

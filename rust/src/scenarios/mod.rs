@@ -2,10 +2,11 @@
 //! experiments over the LTP training stack (DESIGN.md §4.3).
 //!
 //! Each registered [`Scenario`] assembles a topology ([`crate::simnet`]),
-//! a protocol matrix ([`crate::ps::Proto`]), loss/traffic conditions
-//! ([`crate::config`], [`crate::ps::BgFlow`]), runs the BSP training loop,
-//! and distills every run into a [`CaseResult`]. The whole report is
-//! seed-reproducible down to the serialized bytes: the same
+//! a protocol matrix (a list of [`crate::ps::ProtoSpec`]s — the default is
+//! LTP vs kernel Reno, overridable per run with `--proto` specs), loss and
+//! traffic conditions ([`crate::config`], [`crate::ps::BgFlow`]), runs the
+//! BSP training loop, and distills every run into a [`CaseResult`]. The
+//! whole report is seed-reproducible down to the serialized bytes: the same
 //! [`ScenarioParams::seed`] yields a byte-identical JSON report
 //! ([`ScenarioReport::render_json`]).
 //!
@@ -19,7 +20,7 @@
 //!   (paper §III-E).
 //!
 //! Adding a network condition is one registry entry (plus its builder in
-//! [`defs`]); the conformance test picks it up automatically, so protocol
+//! `defs.rs`); the conformance test picks it up automatically, so protocol
 //! regressions surface as named scenario failures rather than silent
 //! figure drift.
 
@@ -33,17 +34,33 @@ use crate::util::Summary;
 use crate::MS;
 
 /// Engine-wide run parameters (everything else is per-scenario config).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ScenarioParams {
     /// Master seed: every simulation in the scenario derives from it.
     pub seed: u64,
     /// Shrink message sizes / sweep points for interactive & CI runs.
     pub quick: bool,
+    /// Protocol-matrix override (`--proto` specs, in order). `None` keeps
+    /// each scenario's default matrix — LTP vs Reno for the comparison
+    /// scenarios, the whole registry for `proto_matrix`.
+    pub protos: Option<Vec<crate::ps::ProtoSpec>>,
+}
+
+impl ScenarioParams {
+    pub fn new(seed: u64, quick: bool) -> ScenarioParams {
+        ScenarioParams { seed, quick, protos: None }
+    }
+
+    /// The protocol matrix this run sweeps: the `--proto` override, or the
+    /// paper's LTP-vs-Reno baseline.
+    pub fn matrix(&self) -> Vec<crate::ps::ProtoSpec> {
+        self.protos.clone().unwrap_or_else(crate::ps::baseline_matrix)
+    }
 }
 
 impl Default for ScenarioParams {
     fn default() -> ScenarioParams {
-        ScenarioParams { seed: 1, quick: false }
+        ScenarioParams::new(1, false)
     }
 }
 
@@ -114,6 +131,14 @@ pub const REGISTRY: &[Scenario] = &[
         summary: "clean 1 Gbps WAN calibration run (no loss; no invariant asserted)",
         incast_class: false,
         cases: defs::wan_clean,
+    },
+    // Appended after the original matrix so `scenario all` reports for the
+    // scenarios above keep their pre-registry byte layout.
+    Scenario {
+        name: "proto_matrix",
+        summary: "every registered protocol spec over the incast and bursty-WAN fabrics",
+        incast_class: true,
+        cases: defs::proto_matrix,
     },
 ];
 
@@ -246,14 +271,17 @@ impl ScenarioReport {
         self.to_json().render_pretty()
     }
 
-    /// `(ltp, baseline)` case pairs matched by worker count — the unit the
-    /// incast-class invariant is checked over.
+    /// `(loss-tolerant, reliable-baseline)` case pairs matched by worker
+    /// count — the unit the incast-class invariant is checked over. The
+    /// protocol kind comes from the registry (a case's proto is its
+    /// canonical spec string), not from matching on names.
     pub fn invariant_pairs(&self) -> Vec<(&CaseResult, &CaseResult)> {
+        let lt = |c: &CaseResult| {
+            crate::ps::parse_proto(&c.proto).map(|s| s.is_loss_tolerant()).unwrap_or(false)
+        };
         let mut out = Vec::new();
-        for l in self.cases.iter().filter(|c| c.proto == "ltp") {
-            if let Some(b) =
-                self.cases.iter().find(|c| c.proto != "ltp" && c.workers == l.workers)
-            {
+        for l in self.cases.iter().filter(|c| lt(c)) {
+            if let Some(b) = self.cases.iter().find(|c| !lt(c) && c.workers == l.workers) {
                 out.push((l, b));
             }
         }
@@ -309,12 +337,13 @@ mod tests {
     #[test]
     fn case_result_distills_report() {
         use crate::config::Workload;
-        use crate::ps::{run_training, Proto, TrainingCfg};
+        use crate::ps::{parse_proto, RunBuilder};
         use crate::simnet::LossModel;
-        let mut cfg = TrainingCfg::modeled(Proto::Ltp, Workload::Micro, 2);
-        cfg.iters = 2;
-        cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.01 });
-        let r = run_training(&cfg);
+        let r = RunBuilder::modeled(parse_proto("ltp").unwrap(), Workload::Micro, 2)
+            .iters(2)
+            .loss(LossModel::Bernoulli { p: 0.01 })
+            .run()
+            .unwrap();
         let c = CaseResult::from_report("ltp/w2", 2, &r);
         assert_eq!(c.proto, "ltp");
         assert_eq!(c.iters, 2);

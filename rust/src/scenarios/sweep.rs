@@ -3,7 +3,7 @@
 //! distill a machine-readable bench report (`BENCH_scenarios.json`).
 //!
 //! **Determinism contract.** A [`SweepJob`] is a pure function of
-//! `(scenario_index, seed, quick)`: every simulation owns its `Sim`, whose
+//! `(scenario_index, seed, quick, protos)`: every simulation owns its `Sim`, whose
 //! RNG streams derive from the job's seed, and nothing is shared between
 //! jobs. Results are merged in job order, so the report list — and its
 //! serialized bytes — are identical for any `--jobs N`. Wall-clock timing
@@ -16,24 +16,35 @@
 
 use super::{registry, ScenarioParams, ScenarioReport};
 use crate::metrics::Json;
+use crate::ps::ProtoSpec;
 use crate::runtime::pool;
 
-/// One enumerable unit of sweep work.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One enumerable unit of sweep work. Protocol handles are cheap clones of
+/// thread-shareable transports, so a job remains a pure function of
+/// `(scenario_index, seed, quick, protos)`.
+#[derive(Debug, Clone)]
 pub struct SweepJob {
     /// Index into [`registry`].
     pub scenario_index: usize,
     pub seed: u64,
     pub quick: bool,
+    /// Protocol-matrix override (`--proto` specs); `None` keeps scenario
+    /// defaults.
+    pub protos: Option<Vec<ProtoSpec>>,
 }
 
 /// Enumerate the (seed-major) job list for a set of registry indices.
-pub fn sweep_jobs(indices: &[usize], seeds: &[u64], quick: bool) -> Vec<SweepJob> {
+pub fn sweep_jobs(
+    indices: &[usize],
+    seeds: &[u64],
+    quick: bool,
+    protos: Option<Vec<ProtoSpec>>,
+) -> Vec<SweepJob> {
     let mut out = Vec::with_capacity(indices.len() * seeds.len());
     for &seed in seeds {
         for &scenario_index in indices {
             debug_assert!(scenario_index < registry().len());
-            out.push(SweepJob { scenario_index, seed, quick });
+            out.push(SweepJob { scenario_index, seed, quick, protos: protos.clone() });
         }
     }
     out
@@ -44,6 +55,10 @@ pub fn sweep_jobs(indices: &[usize], seeds: &[u64], quick: bool) -> Vec<SweepJob
 pub struct BenchJob {
     pub scenario: String,
     pub seed: u64,
+    /// Canonical protocol spec strings the job's cases exercised, first
+    /// occurrence order (the bench trajectory records *what* ran, not just
+    /// how fast).
+    pub protos: Vec<String>,
     pub cases: usize,
     /// BSP iterations completed, summed over the scenario's cases.
     pub iters: usize,
@@ -60,6 +75,7 @@ impl BenchJob {
         Json::obj(vec![
             ("scenario", self.scenario.as_str().into()),
             ("seed", self.seed.into()),
+            ("protos", Json::Arr(self.protos.iter().map(|p| p.as_str().into()).collect())),
             ("cases", self.cases.into()),
             ("iters", self.iters.into()),
             ("mean_bst_ms", self.mean_bst_ms.into()),
@@ -93,7 +109,7 @@ impl BenchReport {
             if self.wall_secs > 0.0 { self.sim_events as f64 / self.wall_secs } else { 0.0 };
         let speedup = if self.wall_secs > 0.0 { self.cpu_secs / self.wall_secs } else { 1.0 };
         Json::obj(vec![
-            ("schema", "ltp-bench-v1".into()),
+            ("schema", "ltp-bench-v2".into()),
             ("jobs_requested", self.jobs_requested.into()),
             ("n_jobs", self.n_jobs.into()),
             ("wall_secs", self.wall_secs.into()),
@@ -137,7 +153,11 @@ pub fn run_sweep(jobs: Vec<SweepJob>, n_jobs: usize) -> SweepResult {
     let outcomes = pool::run_jobs(n_jobs, jobs, |_, job| {
         let scenario = &registry()[job.scenario_index];
         let jt = std::time::Instant::now();
-        let report = scenario.run(&ScenarioParams { seed: job.seed, quick: job.quick });
+        let report = scenario.run(&ScenarioParams {
+            seed: job.seed,
+            quick: job.quick,
+            protos: job.protos,
+        });
         (report, jt.elapsed().as_secs_f64())
     });
     let wall_secs = t0.elapsed().as_secs_f64();
@@ -148,9 +168,16 @@ pub fn run_sweep(jobs: Vec<SweepJob>, n_jobs: usize) -> SweepResult {
     for (report, job_secs) in outcomes {
         let events: u64 = report.cases.iter().map(|c| c.sim_events).sum();
         let ncases = report.cases.len().max(1);
+        let mut protos: Vec<String> = Vec::new();
+        for c in &report.cases {
+            if !protos.contains(&c.proto) {
+                protos.push(c.proto.clone());
+            }
+        }
         per_job.push(BenchJob {
             scenario: report.name.clone(),
             seed: report.seed,
+            protos,
             cases: report.cases.len(),
             iters: report.cases.iter().map(|c| c.iters).sum(),
             mean_bst_ms: report.cases.iter().map(|c| c.mean_bst_ms).sum::<f64>()
@@ -188,34 +215,51 @@ mod tests {
 
     #[test]
     fn job_enumeration_is_seed_major() {
-        let jobs = sweep_jobs(&[0, 1], &[5, 6], true);
+        let jobs = sweep_jobs(&[0, 1], &[5, 6], true, None);
         let key: Vec<(u64, usize)> = jobs.iter().map(|j| (j.seed, j.scenario_index)).collect();
         assert_eq!(key, vec![(5, 0), (5, 1), (6, 0), (6, 1)]);
     }
 
     #[test]
     fn bench_report_carries_perf_fields() {
-        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true);
+        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, None);
         let result = run_sweep(jobs, 2);
         assert_eq!(result.reports.len(), 1);
         assert_eq!(result.bench.per_job.len(), 1);
         let j = &result.bench.per_job[0];
         assert_eq!(j.scenario, "wan_clean");
         assert_eq!(j.seed, 3);
+        assert_eq!(j.protos, ["ltp", "reno"], "bench records the job's proto specs");
         assert!(j.sim_events > 0, "a simulation processes events");
         assert!(j.mean_bst_ms > 0.0);
         let json = result.bench.to_json().render();
-        for key in ["\"schema\":\"ltp-bench-v1\"", "\"runs\":[", "\"events_per_sec\":", "\"speedup\":"]
-        {
+        for key in [
+            "\"schema\":\"ltp-bench-v2\"",
+            "\"runs\":[",
+            "\"events_per_sec\":",
+            "\"speedup\":",
+            "\"protos\":[\"ltp\",\"reno\"]",
+        ] {
             assert!(json.contains(key), "missing `{key}` in {json}");
         }
     }
 
     #[test]
+    fn proto_override_reaches_the_cases() {
+        let protos = vec![crate::ps::parse_proto("cubic").unwrap()];
+        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, Some(protos));
+        let result = run_sweep(jobs, 1);
+        let report = &result.reports[0];
+        assert!(!report.cases.is_empty());
+        assert!(report.cases.iter().all(|c| c.proto == "cubic"), "{:?}", report.cases);
+        assert_eq!(result.bench.per_job[0].protos, ["cubic"]);
+    }
+
+    #[test]
     fn single_report_renders_as_object_many_as_array() {
-        let one = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1], true), 1);
+        let one = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1], true, None), 1);
         assert!(one.render_json().starts_with('{'));
-        let two = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1, 2], true), 2);
+        let two = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1, 2], true, None), 2);
         assert!(two.render_json().starts_with('['));
         assert_eq!(two.reports[0].seed, 1);
         assert_eq!(two.reports[1].seed, 2);

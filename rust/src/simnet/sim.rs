@@ -37,7 +37,7 @@ pub enum Event {
     /// The serializer of `link` finished the packet at the head.
     Dequeue(LinkId),
     /// `pkt` finished propagation over `link` and arrives at its dst.
-    /// If the high [`VIRTUAL_FWD`] bit is set in the link id, this is a
+    /// If the high `VIRTUAL_FWD` bit is set in the link id, this is a
     /// delayed switch-forward enqueue instead.
     Arrive(LinkId, Packet),
     /// Timer for `entity` with an opaque token.

@@ -1,10 +1,9 @@
 //! Cross-module integration: LTP and TCP flows through multi-hop simulated
 //! topologies, incast barrels, and property checks on end-to-end invariants.
 
-use ltp::cc::CcAlgo;
 use ltp::config::Workload;
 use ltp::proto::{run_single_flow, CloseReason, EarlyCloseCfg};
-use ltp::ps::{run_training, Proto, TrainingCfg};
+use ltp::ps::{parse_proto, run_training, RunBuilder, TrainingCfg};
 use ltp::simnet::{LinkCfg, LossModel};
 use ltp::util::proptest::check;
 use ltp::{MS, SEC};
@@ -14,14 +13,15 @@ fn ltp_incast_8_to_1_cuts_the_tail_vs_tcp() {
     // The paper's core claim at protocol level: with 8 workers incasting,
     // LTP's per-iteration sync beats TCP's because stragglers are cut.
     let loss = LossModel::Bernoulli { p: 0.005 };
-    let mk = |proto| {
-        let mut cfg = TrainingCfg::modeled(proto, Workload::Micro, 8);
-        cfg.iters = 4;
-        cfg.link = cfg.link.with_loss(loss);
-        cfg
+    let run = |spec: &str| {
+        RunBuilder::modeled(parse_proto(spec).unwrap(), Workload::Micro, 8)
+            .iters(4)
+            .loss(loss)
+            .run()
+            .unwrap()
     };
-    let ltp = run_training(&mk(Proto::Ltp));
-    let reno = run_training(&mk(Proto::Tcp(CcAlgo::Reno)));
+    let ltp = run("ltp");
+    let reno = run("reno");
     assert_eq!(ltp.iters.len(), 4);
     assert_eq!(reno.iters.len(), 4);
     assert!(
@@ -72,7 +72,7 @@ fn delivered_fraction_respects_threshold() {
 fn bsp_iterations_are_serialized() {
     // BST per iteration must be positive and the iteration ends must be
     // strictly increasing — the BSP barrier cannot interleave.
-    let mut cfg = TrainingCfg::modeled(Proto::Ltp, Workload::Micro, 4);
+    let mut cfg = TrainingCfg::modeled(parse_proto("ltp").unwrap(), Workload::Micro, 4);
     cfg.iters = 5;
     let report = run_training(&cfg);
     assert_eq!(report.iters.len(), 5);
@@ -88,17 +88,19 @@ fn bsp_iterations_are_serialized() {
 fn wan_environment_also_converges() {
     // 1 Gbps / 40 ms RTT with bursty (Gilbert–Elliott) loss.
     let ge = LossModel::GilbertElliott { p_gb: 0.001, p_bg: 0.05, loss_good: 0.0, loss_bad: 0.2 };
-    let mut cfg = TrainingCfg::modeled(Proto::Ltp, Workload::Micro, 4);
-    cfg.link = ltp::config::NetEnv::Wan1g.link().with_loss(ge);
-    cfg.deadline_slack = ltp::config::NetEnv::Wan1g.deadline_slack();
-    cfg.iters = 3;
-    let report = run_training(&cfg);
+    let report = RunBuilder::modeled(parse_proto("ltp").unwrap(), Workload::Micro, 4)
+        .net_env(ltp::config::NetEnv::Wan1g)
+        .loss(ge)
+        .iters(3)
+        .run()
+        .unwrap();
     assert_eq!(report.iters.len(), 3, "WAN run must complete");
     assert!(report.mean_delivered() > 0.6);
 }
 
 #[test]
 fn dctcp_with_ecn_marking_keeps_queues_shorter() {
+    use ltp::cc::CcAlgo;
     use ltp::simnet::Sim;
     use ltp::tcp::{TcpReceiverNode, TcpSender, TcpSenderNode};
     use ltp::wire::TCP_MSS;

@@ -5,7 +5,7 @@
 //! All tests skip (pass trivially) when `make artifacts` has not run.
 
 use ltp::config::ModelManifest;
-use ltp::ps::{run_with, Corpus, Proto, RealCompute, RealTraining, TrainingCfg, XlaAggregate};
+use ltp::ps::{run_with, Corpus, RealCompute, RealTraining, RunBuilder, XlaAggregate};
 use ltp::runtime::{default_artifacts_dir, literal_f32, literal_i32, to_f32, Runtime};
 use ltp::simnet::LossModel;
 use ltp::{MS, SEC};
@@ -122,16 +122,24 @@ fn full_training_over_lossy_ltp_reduces_loss() {
     let Some(rt) = runtime() else { return };
     let shared = RealTraining::new(&rt, "tiny", 0.08).unwrap();
     let n_workers = 4;
-    let mut cfg = TrainingCfg::modeled(Proto::Ltp, ltp::config::Workload::Micro, n_workers);
-    cfg.model_bytes = shared.manifest.wire_bytes();
-    cfg.critical = shared
-        .manifest
-        .tensors
-        .critical_segments(ltp::grad::Manifest::aligned_payload(ltp::wire::LTP_MSS));
-    cfg.iters = 25;
-    cfg.compute_time = 50 * MS;
-    cfg.link = cfg.link.with_loss(LossModel::Bernoulli { p: 0.01 });
-    cfg.horizon = 600 * SEC;
+    let cfg = RunBuilder::modeled(
+        ltp::ps::parse_proto("ltp").unwrap(),
+        ltp::config::Workload::Micro,
+        n_workers,
+    )
+    .model_bytes(shared.manifest.wire_bytes())
+    .critical(
+        shared
+            .manifest
+            .tensors
+            .critical_segments(ltp::grad::Manifest::aligned_payload(ltp::wire::LTP_MSS)),
+    )
+    .iters(25)
+    .compute_time(50 * MS)
+    .loss(LossModel::Bernoulli { p: 0.01 })
+    .horizon(600 * SEC)
+    .build()
+    .unwrap();
 
     let shared2 = shared.clone();
     let report = run_with(

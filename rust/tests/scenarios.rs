@@ -15,7 +15,15 @@
 use ltp::scenarios::{find, registry, ScenarioParams, ScenarioReport};
 
 fn params() -> ScenarioParams {
-    ScenarioParams { seed: 7, quick: true }
+    ScenarioParams::new(7, true)
+}
+
+/// Protocol kind of a case, resolved through the registry (every case's
+/// proto is its canonical spec string).
+fn is_loss_tolerant(proto: &str) -> bool {
+    ltp::ps::parse_proto(proto)
+        .unwrap_or_else(|e| panic!("case proto `{proto}` must be a canonical spec: {e:#}"))
+        .is_loss_tolerant()
 }
 
 /// Run a scenario twice and check every invariant it is registered for.
@@ -41,7 +49,7 @@ fn conformance(name: &str) -> ScenarioReport {
             c.label,
             c.mean_delivered
         );
-        if c.proto == "ltp" {
+        if is_loss_tolerant(&c.proto) {
             // Every completed gather produced a close record…
             assert!(
                 c.nondeadline_closes + c.deadline_closes >= (c.workers * c.iters) as u64,
@@ -55,10 +63,10 @@ fn conformance(name: &str) -> ScenarioReport {
                 c.label
             );
         } else {
-            // TCP delivers everything, always.
+            // Reliable transports deliver everything, always.
             assert!(
                 (c.mean_delivered - 1.0).abs() < 1e-9,
-                "{name}/{}: TCP must deliver 100%",
+                "{name}/{}: a reliable transport must deliver 100%",
                 c.label
             );
         }
@@ -122,7 +130,7 @@ fn scenario_incast_heavy_loss() {
     // rendered JSON, whose header embeds the seed) on a scenario whose
     // loss process consumes randomness — a lossless scenario may
     // legitimately be seed-invariant.
-    let other = find("incast_heavy_loss").unwrap().run(&ScenarioParams { seed: 8, quick: true });
+    let other = find("incast_heavy_loss").unwrap().run(&ScenarioParams::new(8, true));
     let strip = |r: &ScenarioReport| format!("{:?}", r.cases);
     assert_ne!(strip(&report), strip(&other), "a different seed must change the measurements");
 }
@@ -170,6 +178,42 @@ fn scenario_wan_clean() {
             c.mean_delivered
         );
     }
+}
+
+#[test]
+fn scenario_proto_matrix() {
+    let report = conformance("proto_matrix");
+    // ≥6 distinct registered protocol specs, including the acceptance set.
+    let protos: std::collections::BTreeSet<&str> =
+        report.cases.iter().map(|c| c.proto.as_str()).collect();
+    for want in ["ltp", "ltp-adaptive", "reno", "cubic", "dctcp", "bbr"] {
+        assert!(protos.contains(want), "proto_matrix missing `{want}`: {protos:?}");
+    }
+    assert!(protos.len() >= 6, "{protos:?}");
+    // Both fabrics ran every protocol.
+    for fabric in ["incast/", "wan/"] {
+        let n = report.cases.iter().filter(|c| c.label.starts_with(fabric)).count();
+        assert_eq!(n, protos.len(), "fabric `{fabric}` must sweep every protocol");
+    }
+    // The adaptive variant is loss-tolerant end to end: it produced close
+    // records and never lost a critical on a non-deadline close.
+    for c in report.cases.iter().filter(|c| c.proto == "ltp-adaptive") {
+        assert!(
+            c.nondeadline_closes + c.deadline_closes >= (c.workers * c.iters) as u64,
+            "{}: ltp-adaptive gathers must close",
+            c.label
+        );
+    }
+}
+
+#[test]
+fn scenario_matrix_respects_proto_overrides() {
+    // `--proto` narrows a comparison scenario's matrix; proto_matrix
+    // ignores it (it always reflects the whole registry).
+    let mut p = ScenarioParams::new(7, true);
+    p.protos = Some(vec![ltp::ps::parse_proto("ltp").unwrap()]);
+    let narrowed = find("wan_clean").unwrap().run(&p);
+    assert!(narrowed.cases.iter().all(|c| c.proto == "ltp"), "{:?}", narrowed.cases);
 }
 
 #[test]

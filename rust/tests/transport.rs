@@ -1,0 +1,208 @@
+//! Transport conformance matrix: every registered protocol (at default
+//! parameters) is driven through the pluggable [`Transport`] API twice —
+//! once raw, as a single tx/rx flow pair shuttling packets through a lossy
+//! in-memory "wire", and once end-to-end through a small training gather —
+//! and must uphold the API's invariants:
+//!
+//! * reliable transports deliver 100 % of every message, always;
+//! * loss-tolerant transports close every gather exactly once, at or above
+//!   their percentage threshold for non-deadline closes, with every
+//!   critical segment present;
+//! * close events fire exactly once per flow (`is_done` latches).
+
+use ltp::config::Workload;
+use ltp::proto::{CloseReason, EarlyCloseCfg};
+use ltp::ps::{registry_matrix, ProtoSpec, RunBuilder, RxCfg, TxCfg};
+use ltp::simnet::LossModel;
+use ltp::{Nanos, MS};
+
+/// The lowest Early-Close percentage any default-parameter registry
+/// protocol may use (ltp-adaptive's anneal start).
+const MIN_PCT: f64 = 0.7;
+
+/// Drive one tx/rx pair of `proto` over an in-memory wire that drops every
+/// `drop_every`-th sender→receiver packet (0 = lossless). Returns
+/// `(delivered_fraction, close_info, done_transitions)`.
+fn drive_pair(
+    proto: &ProtoSpec,
+    drop_every: u64,
+) -> (f64, Option<(CloseReason, bool, f64)>, u32) {
+    let bytes: u64 = 300_000;
+    let critical = vec![0, 3, 7];
+    let ec = if proto.is_loss_tolerant() {
+        EarlyCloseCfg { lt_threshold: 5 * MS, deadline: 400 * MS, pct: 0.8 }
+    } else {
+        EarlyCloseCfg::reliable()
+    };
+    let flow = proto.wire_flow(9);
+    let mut tx = proto.make_tx(TxCfg {
+        flow,
+        bytes,
+        critical: critical.clone(),
+        seed_rtprop: 0,
+        seed_btlbw_bytes: 0,
+    });
+    let mut rx = proto.make_rx(RxCfg { flow, bytes, ec, critical, iter: 1 });
+    assert!(tx.flow_matches(flow) && rx.flow_matches(flow));
+
+    let rtt = 2 * MS;
+    let mut now: Nanos = 0;
+    let mut sent = 0u64;
+    let mut done_transitions = 0u32;
+    let mut was_done = false;
+    for _ in 0..2_000_000u64 {
+        if tx.is_complete() && rx.is_done() {
+            break;
+        }
+        let mut progressed = false;
+        while let Some(pkt) = tx.poll(now, 0, 1) {
+            progressed = true;
+            sent += 1;
+            if drop_every > 0 && sent % drop_every == 0 {
+                continue; // the wire ate it
+            }
+            let mut back = Vec::new();
+            rx.handle(now + rtt / 2, &pkt, 1, &mut |p| back.push(p));
+            for p in back {
+                tx.handle(now + rtt, &p);
+            }
+        }
+        if !was_done && rx.is_done() {
+            done_transitions += 1;
+            was_done = true;
+        }
+        if progressed {
+            now += rtt;
+        } else {
+            let wake = [tx.next_wakeup(), rx.next_wakeup(now)].into_iter().flatten().min();
+            now = wake.map(|w| w.max(now + 1)).unwrap_or(now + MS);
+            tx.on_wakeup(now);
+            rx.on_wakeup(now);
+            let mut back = Vec::new();
+            rx.drain(1, 0, &mut |p| back.push(p));
+            for p in back {
+                tx.handle(now, &p);
+            }
+        }
+    }
+    assert!(tx.is_complete(), "{}: sender never completed", proto.name());
+    assert!(rx.is_done(), "{}: receiver never closed", proto.name());
+    assert!(tx.pkts_sent() > 0);
+    (rx.delivered_fraction(), rx.close_info(), done_transitions)
+}
+
+#[test]
+fn every_registered_protocol_completes_a_lossless_flow() {
+    for proto in registry_matrix() {
+        let (delivered, _, transitions) = drive_pair(&proto, 0);
+        assert!(
+            (delivered - 1.0).abs() < 1e-9,
+            "{}: lossless wire must deliver 100%, got {delivered}",
+            proto.name()
+        );
+        assert_eq!(transitions, 1, "{}: close must fire exactly once", proto.name());
+    }
+}
+
+#[test]
+fn every_registered_protocol_survives_forward_loss() {
+    for proto in registry_matrix() {
+        // ~8% of sender→receiver packets vanish.
+        let (delivered, close, transitions) = drive_pair(&proto, 13);
+        assert_eq!(transitions, 1, "{}: close must fire exactly once", proto.name());
+        if proto.is_loss_tolerant() {
+            let (reason, criticals_ok, pct_at_close) =
+                close.unwrap_or_else(|| panic!("{}: no close record", proto.name()));
+            if reason != CloseReason::Deadline {
+                assert!(criticals_ok, "{}: criticals lost on {reason:?}", proto.name());
+                assert!(
+                    pct_at_close >= MIN_PCT - 1e-9,
+                    "{}: closed {reason:?} below threshold: {pct_at_close}",
+                    proto.name()
+                );
+            }
+        } else {
+            assert!(
+                (delivered - 1.0).abs() < 1e-9,
+                "{}: reliable transport must deliver 100% under loss, got {delivered}",
+                proto.name()
+            );
+            assert!(close.is_none(), "{}: reliable flows have no Early Close", proto.name());
+        }
+    }
+}
+
+#[test]
+fn every_registered_protocol_trains_end_to_end() {
+    let workers = 4;
+    let iters = 3;
+    for proto in registry_matrix() {
+        let loss_tolerant = proto.is_loss_tolerant();
+        let name = proto.name().to_string();
+        let report = RunBuilder::modeled(proto, Workload::Micro, workers)
+            .iters(iters)
+            .model_bytes(1_000_000)
+            .critical_tensors(20)
+            .loss(LossModel::Bernoulli { p: 0.01 })
+            .run()
+            .expect("conformance configuration is valid");
+        assert_eq!(report.iters.len(), iters as usize, "{name}: all iterations must finish");
+        assert_eq!(report.proto, name, "the report carries the canonical spec");
+        if loss_tolerant {
+            // Exactly one close record per (worker, iteration) gather flow
+            // — a double close or a silent one would break this count.
+            assert_eq!(
+                report.closes.len(),
+                (workers as u64 * iters) as usize,
+                "{name}: close records: {:?}",
+                report.closes
+            );
+            for c in &report.closes {
+                if c.reason != CloseReason::Deadline {
+                    assert!(c.criticals_ok, "{name}: criticals lost: {c:?}");
+                }
+                if c.reason == CloseReason::EarlyPct {
+                    assert!(
+                        c.delivered >= MIN_PCT - 1e-9,
+                        "{name}: early close below threshold: {c:?}"
+                    );
+                }
+            }
+        } else {
+            assert!(
+                (report.mean_delivered() - 1.0).abs() < 1e-9,
+                "{name}: reliable transports deliver 100%, got {}",
+                report.mean_delivered()
+            );
+            assert!(report.closes.is_empty(), "{name}: unexpected close records");
+        }
+    }
+}
+
+#[test]
+fn spec_tuning_overrides_reach_the_run() {
+    // `ltp:pct=...` must change Early Close behavior relative to plain ltp
+    // under identical conditions: a lower threshold closes earlier (lower
+    // delivered fraction), and both stay above their respective floors.
+    let run = |spec: &str| {
+        RunBuilder::modeled(ltp::ps::parse_proto(spec).unwrap(), Workload::Micro, 4)
+            .iters(4)
+            .model_bytes(1_000_000)
+            .loss(LossModel::Bernoulli { p: 0.02 })
+            .run()
+            .unwrap()
+    };
+    let strict = run("ltp:pct=0.99");
+    let lax = run("ltp:pct=0.75");
+    assert!(
+        strict.mean_delivered() >= lax.mean_delivered() - 1e-9,
+        "pct=0.99 ({}) must deliver at least as much as pct=0.75 ({})",
+        strict.mean_delivered(),
+        lax.mean_delivered()
+    );
+    for c in &lax.closes {
+        if c.reason == CloseReason::EarlyPct {
+            assert!(c.delivered >= 0.75 - 1e-9, "{c:?}");
+        }
+    }
+}
