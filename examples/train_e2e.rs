@@ -30,6 +30,7 @@ fn run(preset: &str, iters: u64, loss: f64, workers: usize) -> anyhow::Result<Ve
     }
     let cfg = b.build()?;
     let shared2 = shared.clone();
+    let shared_agg = shared.clone();
     let report = run_with(
         &cfg,
         move |w, _| {
@@ -38,7 +39,7 @@ fn run(preset: &str, iters: u64, loss: f64, workers: usize) -> anyhow::Result<Ve
                 corpus: Corpus::new(shared2.manifest.vocab, 42 + w as u64),
             })
         },
-        Box::new(XlaAggregate { shared: shared.clone(), n_workers: workers }),
+        move |_| Box::new(XlaAggregate { shared: shared_agg.clone(), n_workers: workers }),
     );
     println!(
         "  [{} @ {:.2}% loss] {} iters, mean BST {:.2} ms, delivered {:.2}%",

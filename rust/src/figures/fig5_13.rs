@@ -199,6 +199,7 @@ pub fn fig13(quick: bool, jobs: usize) -> Result<()> {
             }
             let cfg = b.build()?;
             let shared2 = shared.clone();
+            let shared_agg = shared.clone();
             let report = run_with(
                 &cfg,
                 move |w, _| {
@@ -207,7 +208,9 @@ pub fn fig13(quick: bool, jobs: usize) -> Result<()> {
                         corpus: Corpus::new(shared2.manifest.vocab, 500 + w as u64),
                     })
                 },
-                Box::new(XlaAggregate { shared: shared.clone(), n_workers: workers }),
+                move |_| {
+                    Box::new(XlaAggregate { shared: shared_agg.clone(), n_workers: workers })
+                },
             );
             let tta = report
                 .iters

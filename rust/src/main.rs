@@ -3,22 +3,26 @@
 //! ```text
 //! ltp scenario <name|list|all> [--json] [--seed N | --seeds A..B] [--quick]
 //!              [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]...
+//!              [--agg SPEC]...
 //! ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]
 //! ltp proto <list|parse SPEC>               protocol registry / spec grammar
+//! ltp agg <list|parse SPEC>                 aggregation-topology registry
 //! ltp train [--preset tiny] [--workers 4] [--iters 50] [--loss 0.01]
-//!           [--proto SPEC]
+//!           [--proto SPEC] [--agg SPEC]
 //! ltp bench-ltp [--bytes N] [--loss P]      one-flow protocol microbench
 //! ```
 //!
 //! Protocol specs follow the registry grammar (`ltp proto list`):
 //! `ltp`, `ltp:pct=0.9,slack=100ms`, `ltp-adaptive`, `tcp:cc=cubic`, …
+//! Aggregation specs use the same grammar (`ltp agg list`): `ps`,
+//! `sharded:n=4`, `hier:racks=2`.
 //!
 //! (Hand-rolled argument parsing: the vendored dependency set has no clap.)
 
 use anyhow::{bail, Context, Result};
 use ltp::ps::{
-    parse_proto, proto_registry, run_with, Corpus, ProtoSpec, RealCompute, RealTraining,
-    RunBuilder, XlaAggregate,
+    agg_registry, parse_agg, parse_proto, proto_registry, run_with, AggSpec, Corpus,
+    ProtoSpec, RealCompute, RealTraining, RunBuilder, XlaAggregate,
 };
 use ltp::simnet::LossModel;
 use ltp::{MS, SEC};
@@ -88,6 +92,21 @@ impl Args {
         }
         Ok(Some(out))
     }
+
+    /// Parse every `--agg SPEC` against the aggregation registry; `None`
+    /// when the flag was not given.
+    fn aggs(&self) -> Result<Option<Vec<AggSpec>>> {
+        let specs = self.all("agg");
+        if specs.is_empty() {
+            return Ok(None);
+        }
+        let mut out = Vec::with_capacity(specs.len());
+        for s in specs {
+            anyhow::ensure!(s != "true", "--agg requires a spec (see `ltp agg list`)");
+            out.push(parse_agg(s).with_context(|| format!("--agg {s}"))?);
+        }
+        Ok(Some(out))
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -97,6 +116,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let loss: f64 = args.flag("loss", 0.0)?;
     let lr: f32 = args.flag("lr", 0.08)?;
     let proto = parse_proto(&args.flag("proto", "ltp".to_string())?)?;
+    let agg = parse_agg(&args.flag("agg", "ps".to_string())?)?;
+    // Real-compute training updates one shared parameter blackboard; the
+    // masked-mean aggregate artifact spans the full model, so multi-point
+    // aggregations are modeled-only for now (`ltp scenario … --agg`).
+    anyhow::ensure!(
+        agg.n_aggregators(workers) == 1,
+        "`ltp train` runs real compute on a single aggregation point; \
+         `--agg {}` places {} (use `ltp scenario agg_matrix` or `--agg ps`)",
+        agg.name(),
+        agg.n_aggregators(workers)
+    );
 
     let rt = ltp::runtime::Runtime::cpu(ltp::runtime::default_artifacts_dir())
         .context("PJRT CPU client")?;
@@ -115,13 +145,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         ))
         .iters(iters)
         .compute_time(50 * MS)
-        .horizon(24 * 3600 * SEC);
+        .horizon(24 * 3600 * SEC)
+        .agg(agg);
     if loss > 0.0 {
         b = b.loss(LossModel::Bernoulli { p: loss });
     }
     let cfg = b.build()?;
 
     let shared2 = shared.clone();
+    let shared_agg = shared.clone();
     let t0 = std::time::Instant::now();
     let report = run_with(
         &cfg,
@@ -131,7 +163,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 corpus: Corpus::new(shared2.manifest.vocab, 42 + w as u64),
             })
         },
-        Box::new(XlaAggregate { shared: shared.clone(), n_workers: workers }),
+        move |_| Box::new(XlaAggregate { shared: shared_agg.clone(), n_workers: workers }),
     );
     println!("\n iter |   loss | BST(ms) | delivered | sim t(s)");
     for (i, it) in report.iters.iter().enumerate() {
@@ -224,8 +256,10 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             "--bench {v}: expected a .json path (bare --bench writes BENCH_scenarios.json)"
         ),
     };
-    // Protocol specs fail fast too, before any simulation runs.
+    // Protocol and aggregation specs fail fast too, before any simulation
+    // runs.
     let protos = args.protos()?;
+    let aggs = args.aggs()?;
     if which == "list" {
         println!("registered scenarios (run with `ltp scenario <name|all> [--json]`):\n");
         for s in scenarios::registry() {
@@ -252,8 +286,20 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             }
         }
     };
-    let jobs = sweep::sweep_jobs(&indices, &seeds, args.has("quick"), protos);
+    let jobs = sweep::sweep_jobs(&indices, &seeds, args.has("quick"), protos, aggs);
     let result = sweep::run_sweep(jobs, n_jobs);
+    // A scenario skips (agg, degree) combinations its aggregations
+    // reject; if that leaves a report empty, say so rather than emit a
+    // silent `cases: []` (stderr, so the JSON byte contract holds).
+    for r in &result.reports {
+        if r.cases.is_empty() {
+            eprintln!(
+                "warning: scenario `{}` produced no cases — no --agg/--proto spec was \
+                 compatible with its worker degrees (see `ltp agg list`)",
+                r.name
+            );
+        }
+    }
     if let Some(path) = &out_path {
         std::fs::write(path, result.render_json())
             .with_context(|| format!("writing {path}"))?;
@@ -315,6 +361,40 @@ fn cmd_proto(args: &Args) -> Result<()> {
     }
 }
 
+/// `ltp agg list` — the aggregation registry; `ltp agg parse <spec>` —
+/// echo a spec's canonical form and endpoint count.
+fn cmd_agg(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str).unwrap_or("list") {
+        "list" => {
+            println!(
+                "registered aggregation topologies (use with `--agg <key>[:name=value,...]`):\n"
+            );
+            for d in agg_registry() {
+                println!("  {:<10} {}", d.key, d.summary);
+                if !d.params.is_empty() {
+                    println!("  {:<10}   params: {}", "", d.params);
+                }
+            }
+            println!("\nthe `agg_matrix` scenario sweeps ps, sharded:n∈{{2,4,8}}, and hier.");
+            Ok(())
+        }
+        "parse" => {
+            let spec = args.positional.get(2).context("usage: ltp agg parse <spec>")?;
+            let a = parse_agg(spec)?;
+            // Endpoint counts can depend on the worker count; report for
+            // the paper's 8-worker testbed.
+            println!(
+                "{} -> canonical `{}` ({} aggregator endpoint(s) at 8 workers)",
+                spec,
+                a.name(),
+                a.n_aggregators(8)
+            );
+            Ok(())
+        }
+        other => bail!("unknown agg subcommand `{other}` (list|parse)"),
+    }
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     match args.positional.first().map(String::as_str) {
@@ -324,15 +404,17 @@ fn main() -> Result<()> {
             ltp::figures::run(which, args.has("quick"), args.flag("jobs", 1)?)
         }
         Some("proto") => cmd_proto(&args),
+        Some("agg") => cmd_agg(&args),
         Some("train") => cmd_train(&args),
         Some("bench-ltp") => cmd_bench_ltp(&args),
         _ => {
             eprintln!(
                 "usage:\n  ltp scenario <name|list|all> [--json] [--seed N | --seeds A..B] [--quick]\n  \
-                 \x20            [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]...\n  \
+                 \x20            [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]... [--agg SPEC]...\n  \
                  ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]\n  \
                  ltp proto <list|parse SPEC>\n  \
-                 ltp train [--preset tiny] [--workers N] [--iters N] [--loss P] [--proto SPEC]\n  \
+                 ltp agg <list|parse SPEC>\n  \
+                 ltp train [--preset tiny] [--workers N] [--iters N] [--loss P] [--proto SPEC] [--agg SPEC]\n  \
                  ltp bench-ltp [--bytes N] [--loss P]"
             );
             bail!("missing or unknown subcommand");

@@ -1,0 +1,1375 @@
+//! The pluggable **aggregation-topology** layer (DESIGN.md §1.2).
+//!
+//! Where the transport layer (DESIGN.md §1.1) makes the per-flow protocol
+//! pluggable, this module makes the *shape* of the gather pluggable: an
+//! [`Aggregation`]
+//! owns the simnet topology of a training run, places one or more
+//! aggregator endpoints, assigns every worker a (shard → aggregator)
+//! routing plan over its gradient's segment ranges, and defines how the
+//! per-aggregator iteration records merge into one BSP barrier (BST =
+//! max over shards/levels). Aggregations are registered under string
+//! keys and instantiated from specs reusing the transport grammar
+//! (`key[:name=value,...]`, [`parse_agg`]):
+//!
+//! * `ps` — the paper's single parameter server (star or the scenario
+//!   two-rack fabric); the default, byte-identical to the original runs;
+//! * `sharded:n=N` — the gradient's segment space partitioned across `N`
+//!   PS nodes behind one ToR (ATP-style multi-point aggregation): every
+//!   worker opens one flow per shard, each shard runs its own Early
+//!   Close, and the per-aggregator incast volume drops by `N`;
+//! * `hier[:racks=R]` — `R` rack-local aggregators reduce their rack's
+//!   gathers and forward **one** flow each to a root PS (MLfabric-style
+//!   in-network aggregation over the [`crate::simnet::n_rack`] fabric),
+//!   so only `R` flows cross the oversubscribed trunks.
+//!
+//! Naming note: an [`Aggregation`] is the *topology* of the gather; the
+//! [`Aggregate`] trait (in `ps/server.rs`) is the *compute backend* one
+//! aggregator endpoint runs when its gathers close.
+
+use super::runner::TrainingCfg;
+use super::server::{Aggregate, PsFlowPlan, PsNode};
+use super::spec::{canonical, parse_params, unknown_param};
+use super::transport::{FlowRx, FlowTx, RxCfg, TxCfg};
+use super::worker::{Compute, WorkerNode, WorkerRoute};
+use super::{GatherClose, IterStats};
+use crate::grad::Manifest;
+use crate::proto::{EarlyCloseCfg, ThresholdTracker};
+use crate::simnet::{
+    n_rack, star, two_rack, Ctx, EntityId, LinkCfg, LinkId, Node, Packet, Sim,
+};
+use crate::util::Bitmap;
+use crate::wire::{PacketKind, LTP_MSS};
+use crate::Nanos;
+use anyhow::{bail, ensure, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// Which fabric a `ps`-aggregation training run uses. Other aggregations
+/// own their topology outright and reject an explicit two-rack override.
+#[derive(Debug, Clone, Copy)]
+pub enum Topo {
+    /// A single ToR star — the paper's testbed.
+    Star,
+    /// Two racks under one aggregation switch. The PS and the first
+    /// `rack0_workers` workers sit in rack 0, the remaining workers in
+    /// rack 1; cross-rack gathers funnel through the `trunk` links
+    /// (size `trunk` below the sum of edge rates for oversubscription).
+    TwoRack { rack0_workers: usize, trunk: LinkCfg },
+}
+
+/// A parsed, validated aggregation spec: the handle stored in run
+/// configurations and carried across worker threads by the sweep driver.
+/// Clones share the underlying [`Aggregation`].
+#[derive(Clone)]
+pub struct AggSpec(Arc<dyn Aggregation>);
+
+impl AggSpec {
+    /// Canonical spec string — the aggregation's name everywhere (labels,
+    /// JSON reports, bench records). Borrowed; no per-call allocation.
+    pub fn name(&self) -> &str {
+        self.0.name()
+    }
+}
+
+impl std::ops::Deref for AggSpec {
+    type Target = dyn Aggregation;
+
+    fn deref(&self) -> &(dyn Aggregation + 'static) {
+        &*self.0
+    }
+}
+
+impl std::fmt::Display for AggSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::fmt::Debug for AggSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AggSpec({})", self.name())
+    }
+}
+
+/// Two specs are equal iff their canonical names are.
+impl PartialEq for AggSpec {
+    fn eq(&self, other: &AggSpec) -> bool {
+        self.name() == other.name()
+    }
+}
+
+impl std::str::FromStr for AggSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<AggSpec> {
+        parse_agg(s)
+    }
+}
+
+/// Compute and aggregation-backend factories handed to
+/// [`Aggregation::build`]: `make_compute(worker, cfg)` per worker,
+/// `make_agg(endpoint)` per aggregator endpoint (endpoints are numbered
+/// `0..n_aggregators`; for `hier` the racks come first, the root last).
+pub struct BuildEnv<'a> {
+    pub make_compute: &'a mut dyn FnMut(usize, &TrainingCfg) -> Box<dyn Compute>,
+    pub make_agg: &'a mut dyn FnMut(usize) -> Box<dyn Aggregate>,
+}
+
+/// One aggregator endpoint's observation handles, shared with the nodes
+/// placed by [`Aggregation::build`] and read back by the runner.
+pub struct ShardObs {
+    /// Deterministic label for the per-aggregator report breakdown
+    /// (`ps`, `shard3`, `rack1`, `root`).
+    pub label: String,
+    /// This endpoint's per-iteration records.
+    pub report: Rc<RefCell<Vec<IterStats>>>,
+    /// This endpoint's gather-flow close records.
+    pub closes: Rc<RefCell<Vec<GatherClose>>>,
+    /// Gather bytes this endpoint absorbs per worker flow — the
+    /// delivered-fraction weight in the barrier merge.
+    pub weight: u64,
+    /// Barrier members define the merged iteration records (max-BST
+    /// rule); non-members (the `hier` root) only appear in the shard
+    /// breakdown and multiply into the delivered fraction.
+    pub in_barrier: bool,
+}
+
+/// The built fabric, kept by the runner to attach late (background) hosts.
+pub enum Fabric {
+    Star {
+        switch: EntityId,
+    },
+    Racks {
+        agg: EntityId,
+        tors: Vec<EntityId>,
+        trunk_down: Vec<LinkId>,
+    },
+}
+
+impl Fabric {
+    /// Attach one late host carrying `node` in `rack` (ignored on a star)
+    /// over an `edge` link, wiring default uplink and switch routes.
+    pub fn attach(
+        &self,
+        sim: &mut Sim,
+        node: Box<dyn Node>,
+        rack: usize,
+        edge: LinkCfg,
+    ) -> EntityId {
+        let h = sim.add_host(node);
+        match self {
+            Fabric::Star { switch } => {
+                let (up, _) = sim.add_duplex(h, *switch, edge);
+                sim.set_default_uplink(h, up);
+            }
+            Fabric::Racks { agg, tors, trunk_down } => {
+                let r = rack.min(tors.len() - 1);
+                let (up, _) = sim.add_duplex(h, tors[r], edge);
+                sim.set_default_uplink(h, up);
+                sim.set_route(*agg, h, trunk_down[r]);
+            }
+        }
+        h
+    }
+}
+
+/// Everything [`Aggregation::build`] hands back to the runner: the nodes
+/// are already inside `sim`; these are the observation handles.
+pub struct AggRun {
+    /// The background-traffic sink (the PS, shard 0, or the `hier` root).
+    pub ps_id: EntityId,
+    /// Worker host entities, in worker-index order.
+    pub worker_ids: Vec<EntityId>,
+    /// One entry per aggregator endpoint, in endpoint order.
+    pub shards: Vec<ShardObs>,
+    pub fabric: Fabric,
+}
+
+/// An aggregation topology: a named, thread-shareable strategy that owns
+/// a training run's fabric, aggregator placement, worker routing plans,
+/// and barrier-merge semantics. Registered under string keys in
+/// [`AGG_REGISTRY`] and instantiated from CLI specs like `ps`,
+/// `sharded:n=4`, or `hier:racks=2`.
+pub trait Aggregation: Send + Sync {
+    /// Canonical spec string — the aggregation's label everywhere.
+    fn name(&self) -> &str;
+
+    /// Aggregator endpoints a run with `workers` workers places.
+    fn n_aggregators(&self, workers: usize) -> usize;
+
+    /// Per-iteration flow-id stride of this topology's layout. LTP
+    /// truncates flow ids to 16 bits on the wire; slot resolution
+    /// (`flow % stride`) survives that truncation only while flows stay
+    /// below 2¹⁶ — or for any run length when the stride is a power of
+    /// two. [`super::RunBuilder::build`] enforces the corresponding
+    /// iteration bound for loss-tolerant transports.
+    fn flow_stride(&self, workers: usize) -> u64 {
+        2 * workers as u64
+    }
+
+    /// Fail-fast validation against a run configuration (called by
+    /// [`super::RunBuilder::build`] before any simulation starts).
+    fn validate(&self, workers: usize, model_bytes: u64, topo: &Topo) -> Result<()>;
+
+    /// Build the fabric inside `sim`, place aggregator and worker nodes,
+    /// and return the observation handles.
+    fn build(&self, sim: &mut Sim, cfg: &TrainingCfg, env: &mut BuildEnv<'_>) -> AggRun;
+}
+
+/// One registered aggregation family.
+pub struct AggDef {
+    /// Spec key (`--agg <key>[:params]`).
+    pub key: &'static str,
+    pub summary: &'static str,
+    /// Accepted `name=value` parameters, for `ltp agg list`.
+    pub params: &'static str,
+    build: fn(&[(String, String)]) -> Result<AggSpec>,
+}
+
+/// The aggregation registry. Append entries here (and their strategies in
+/// this module); the CLI (`--agg`, `ltp agg list`), the `agg_matrix`
+/// scenario, and the conformance test (`rust/tests/agg.rs`) follow.
+pub const AGG_REGISTRY: &[AggDef] = &[
+    AggDef {
+        key: "ps",
+        summary: "single parameter server (the paper's star; default, byte-identical reports)",
+        params: "",
+        build: build_ps,
+    },
+    AggDef {
+        key: "sharded",
+        summary: "gradient segment ranges partitioned across N PS nodes, per-shard Early Close",
+        params: "n=<shards> (required; must divide the worker count)",
+        build: build_sharded,
+    },
+    AggDef {
+        key: "hier",
+        summary: "rack-local aggregators reduce locally, one flow per rack to a root PS",
+        params: "racks=<racks> (default 2; must divide the worker count)",
+        build: build_hier,
+    },
+];
+
+/// The registry (function form, for iteration symmetry with the protocol
+/// and scenario registries).
+pub fn agg_registry() -> &'static [AggDef] {
+    AGG_REGISTRY
+}
+
+/// Parse an aggregation spec (`ps`, `sharded:n=4`, `hier:racks=2`)
+/// against the registry.
+pub fn parse_agg(spec: &str) -> Result<AggSpec> {
+    let spec = spec.trim();
+    let (key, rest) = match spec.split_once(':') {
+        Some((k, r)) => (k, Some(r)),
+        None => (spec, None),
+    };
+    let key = key.to_ascii_lowercase();
+    let Some(def) = AGG_REGISTRY.iter().find(|d| d.key == key) else {
+        let known: Vec<&str> = AGG_REGISTRY.iter().map(|d| d.key).collect();
+        bail!("unknown aggregation `{key}` in spec `{spec}` (known: {})", known.join(", "));
+    };
+    let params =
+        parse_params(rest).map_err(|e| e.context(format!("in aggregation spec `{spec}`")))?;
+    (def.build)(&params).map_err(|e| e.context(format!("in aggregation spec `{spec}`")))
+}
+
+/// The default aggregation: the single-PS star every pre-existing run and
+/// report uses.
+pub fn default_agg() -> AggSpec {
+    parse_agg("ps").expect("registry default must parse")
+}
+
+// ---------------------------------------------------------------------------
+// Spec builders.
+// ---------------------------------------------------------------------------
+
+fn build_ps(params: &[(String, String)]) -> Result<AggSpec> {
+    if let Some((k, _)) = params.first() {
+        return Err(unknown_param("ps", k, "none"));
+    }
+    Ok(AggSpec(Arc::new(PsAggregation { spec: "ps".to_string() })))
+}
+
+fn build_sharded(params: &[(String, String)]) -> Result<AggSpec> {
+    let mut n = None;
+    for (k, v) in params {
+        match k.as_str() {
+            "n" => {
+                let x: usize = v
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad value for `n`: `{v}` ({e})"))?;
+                if x == 0 {
+                    bail!("`n=0`: a sharded deployment needs at least one shard");
+                }
+                n = Some(x);
+            }
+            _ => return Err(unknown_param("sharded", k, "n")),
+        }
+    }
+    let Some(n) = n else {
+        bail!("`sharded` needs a shard count: sharded:n=<shards>");
+    };
+    let spec = canonical("sharded", &[format!("n={n}")]);
+    Ok(AggSpec(Arc::new(ShardedAggregation { n, spec })))
+}
+
+/// Default rack count for a bare `hier` spec.
+const HIER_DEFAULT_RACKS: usize = 2;
+
+fn build_hier(params: &[(String, String)]) -> Result<AggSpec> {
+    let mut racks = None;
+    for (k, v) in params {
+        match k.as_str() {
+            "racks" => {
+                let x: usize = v
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad value for `racks`: `{v}` ({e})"))?;
+                if x == 0 {
+                    bail!("`racks=0`: a hierarchy needs at least one rack");
+                }
+                racks = Some(x);
+            }
+            _ => return Err(unknown_param("hier", k, "racks")),
+        }
+    }
+    // Canonical form: the parameter renders only when given (a bare
+    // `hier` stays `hier`), like transport-spec defaults.
+    let parts: Vec<String> = racks.iter().map(|r| format!("racks={r}")).collect();
+    let spec = canonical("hier", &parts);
+    Ok(AggSpec(Arc::new(HierAggregation {
+        racks: racks.unwrap_or(HIER_DEFAULT_RACKS),
+        spec,
+    })))
+}
+
+// ---------------------------------------------------------------------------
+// Barrier merge.
+// ---------------------------------------------------------------------------
+
+/// Merge per-aggregator iteration records into the run's barrier view:
+/// BST and gather time are the **max** over barrier members (an iteration
+/// is synchronized only when its slowest shard/rack is), the delivered
+/// fraction is their byte-weighted mean, further multiplied by the
+/// non-barrier tiers' delivered fraction (the `hier` root can drop
+/// forwarded data too). A single barrier member passes through verbatim.
+pub(super) fn merge_iters(shards: &[ShardObs]) -> Vec<IterStats> {
+    let barrier: Vec<&ShardObs> = shards.iter().filter(|s| s.in_barrier).collect();
+    if barrier.len() == 1 && shards.len() == 1 {
+        return barrier[0].report.borrow().clone();
+    }
+    let uppers: Vec<&ShardObs> = shards.iter().filter(|s| !s.in_barrier).collect();
+    let n = barrier.iter().map(|s| s.report.borrow().len()).min().unwrap_or(0);
+    let weight_sum: u64 = barrier.iter().map(|s| s.weight.max(1)).sum();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut merged = IterStats::default();
+        let mut delivered = 0.0;
+        for s in &barrier {
+            let rep = s.report.borrow();
+            let rec = &rep[i];
+            merged.bst = merged.bst.max(rec.bst);
+            merged.gather_time = merged.gather_time.max(rec.gather_time);
+            merged.end = merged.end.max(rec.end);
+            if merged.loss.is_none() {
+                merged.loss = rec.loss;
+            }
+            delivered += rec.mean_delivered * s.weight.max(1) as f64;
+        }
+        merged.mean_delivered = delivered / weight_sum as f64;
+        for s in &uppers {
+            let rep = s.report.borrow();
+            if let Some(rec) = rep.get(i) {
+                merged.mean_delivered *= rec.mean_delivered;
+            }
+        }
+        out.push(merged);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// `ps`: the single parameter server (star or scenario two-rack fabric).
+// ---------------------------------------------------------------------------
+
+struct PsAggregation {
+    spec: String,
+}
+
+impl Aggregation for PsAggregation {
+    fn name(&self) -> &str {
+        &self.spec
+    }
+
+    fn n_aggregators(&self, _workers: usize) -> usize {
+        1
+    }
+
+    fn validate(&self, _workers: usize, _model_bytes: u64, _topo: &Topo) -> Result<()> {
+        Ok(())
+    }
+
+    fn build(&self, sim: &mut Sim, cfg: &TrainingCfg, env: &mut BuildEnv<'_>) -> AggRun {
+        let report: Rc<RefCell<Vec<IterStats>>> = Rc::new(RefCell::new(Vec::new()));
+        let closes: Rc<RefCell<Vec<GatherClose>>> = Rc::new(RefCell::new(Vec::new()));
+        let tracker = tracker_for(cfg, cfg.n_workers);
+        // Entity-id layout is deterministic per topology: switches first,
+        // then the PS, then workers in index order (background hosts last).
+        let first_host = match cfg.topo {
+            Topo::Star => 1,           // switch 0
+            Topo::TwoRack { .. } => 3, // agg 0, tor0 1, tor1 2
+        };
+        let ps_id: EntityId = first_host;
+        let worker_ids: Vec<EntityId> =
+            (0..cfg.n_workers).map(|w| first_host + 1 + w).collect();
+        let ps = PsNode::new(
+            worker_ids.clone(),
+            cfg.proto.clone(),
+            cfg.model_bytes,
+            cfg.critical.clone(),
+            PsFlowPlan::single(cfg.n_workers),
+            (env.make_agg)(0),
+            tracker,
+            cfg.iters,
+            cfg.batches_per_epoch,
+            report.clone(),
+            closes.clone(),
+        );
+        let mut nodes: Vec<Box<dyn Node>> = vec![Box::new(ps)];
+        for w in 0..cfg.n_workers {
+            let route = WorkerRoute::single(
+                ps_id,
+                w,
+                cfg.n_workers,
+                cfg.model_bytes,
+                cfg.critical.clone(),
+            );
+            nodes.push(Box::new(WorkerNode::new(
+                w,
+                vec![route],
+                cfg.proto.clone(),
+                (env.make_compute)(w, cfg),
+                cfg.iters,
+            )));
+        }
+        let fabric = match cfg.topo {
+            Topo::Star => {
+                let topo = star(sim, nodes, cfg.link, cfg.switch_delay);
+                debug_assert_eq!(topo.hosts[0], ps_id);
+                Fabric::Star { switch: topo.switch }
+            }
+            Topo::TwoRack { rack0_workers, trunk } => {
+                let rack0_n = rack0_workers.min(cfg.n_workers);
+                let mut it = nodes.into_iter();
+                let rack0: Vec<Box<dyn Node>> = it.by_ref().take(1 + rack0_n).collect();
+                let rack1: Vec<Box<dyn Node>> = it.collect();
+                let topo = two_rack(sim, [rack0, rack1], cfg.link, trunk, cfg.switch_delay);
+                debug_assert_eq!(topo.hosts[0], ps_id);
+                Fabric::Racks {
+                    agg: topo.agg,
+                    tors: topo.tors.to_vec(),
+                    trunk_down: topo.trunk_down.to_vec(),
+                }
+            }
+        };
+        debug_assert!(worker_ids.last().map(|&w| w < sim.entity_count()).unwrap_or(true));
+        AggRun {
+            ps_id,
+            worker_ids,
+            shards: vec![ShardObs {
+                label: "ps".to_string(),
+                report,
+                closes,
+                weight: cfg.model_bytes,
+                in_barrier: true,
+            }],
+            fabric,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `sharded:n=N`: segment ranges partitioned across N PS nodes.
+// ---------------------------------------------------------------------------
+
+struct ShardedAggregation {
+    n: usize,
+    spec: String,
+}
+
+/// One shard's slice of the gradient: `(bytes, first segment id, segment
+/// count)`. Partitioning is on segment boundaries, so shard flows keep
+/// the wire segmentation (and the padding-bubble rule) intact.
+fn shard_ranges(model_bytes: u64, n: usize) -> Vec<(u64, u64, u64)> {
+    let seg = Manifest::aligned_payload(LTP_MSS) as u64;
+    let n_segs = model_bytes.div_ceil(seg);
+    let per = n_segs / n as u64;
+    let rem = n_segs % n as u64;
+    let mut out = Vec::with_capacity(n);
+    let mut seg0 = 0u64;
+    for i in 0..n as u64 {
+        let count = per + u64::from(i < rem);
+        let start_byte = seg0 * seg;
+        let end_byte = ((seg0 + count) * seg).min(model_bytes);
+        out.push((end_byte.saturating_sub(start_byte), seg0, count));
+        seg0 += count;
+    }
+    out
+}
+
+/// The critical segment ids of `critical` that fall in the shard
+/// `[seg0, seg0 + count)`, re-based to the shard's own segment space.
+fn shard_criticals(critical: &[u32], seg0: u64, count: u64) -> Vec<u32> {
+    critical
+        .iter()
+        .filter(|&&c| (c as u64) >= seg0 && (c as u64) < seg0 + count)
+        .map(|&c| c - seg0 as u32)
+        .collect()
+}
+
+impl Aggregation for ShardedAggregation {
+    fn name(&self) -> &str {
+        &self.spec
+    }
+
+    fn n_aggregators(&self, _workers: usize) -> usize {
+        self.n
+    }
+
+    fn flow_stride(&self, workers: usize) -> u64 {
+        2 * workers as u64 * self.n as u64
+    }
+
+    fn validate(&self, workers: usize, model_bytes: u64, topo: &Topo) -> Result<()> {
+        ensure!(
+            matches!(topo, Topo::Star),
+            "`{}` builds its own star fabric; drop the two-rack topology override",
+            self.spec
+        );
+        ensure!(
+            workers % self.n == 0,
+            "`{}`: worker count {workers} is not divisible across {} shards",
+            self.spec,
+            self.n
+        );
+        let seg = Manifest::aligned_payload(LTP_MSS) as u64;
+        let n_segs = model_bytes.div_ceil(seg);
+        ensure!(
+            n_segs >= self.n as u64,
+            "`{}`: the {model_bytes}-byte gradient has only {n_segs} segments — fewer than {} shards",
+            self.spec,
+            self.n
+        );
+        Ok(())
+    }
+
+    fn build(&self, sim: &mut Sim, cfg: &TrainingCfg, env: &mut BuildEnv<'_>) -> AggRun {
+        let w = cfg.n_workers;
+        let nsh = self.n;
+        let ranges = shard_ranges(cfg.model_bytes, nsh);
+        let crits: Vec<Vec<u32>> = ranges
+            .iter()
+            .map(|&(_, seg0, count)| shard_criticals(&cfg.critical, seg0, count))
+            .collect();
+        // Flow space: iteration stride 2·W·N; shard s owns the bands
+        // [s·2W, s·2W + W) (gathers) and [s·2W + W, (s+1)·2W) (broadcasts).
+        // With N = 1 this is exactly the single-PS layout.
+        let stride = (2 * w * nsh) as u64;
+        // Entity-id layout: switch 0, shards 1..=N, then workers.
+        let shard_ids: Vec<EntityId> = (0..nsh).map(|s| 1 + s).collect();
+        let worker_ids: Vec<EntityId> = (0..w).map(|i| 1 + nsh + i).collect();
+        let mut nodes: Vec<Box<dyn Node>> = Vec::with_capacity(nsh + w);
+        let mut shards = Vec::with_capacity(nsh);
+        for (s, &(bytes, _, _)) in ranges.iter().enumerate() {
+            let report: Rc<RefCell<Vec<IterStats>>> = Rc::new(RefCell::new(Vec::new()));
+            let closes: Rc<RefCell<Vec<GatherClose>>> = Rc::new(RefCell::new(Vec::new()));
+            let plan = PsFlowPlan {
+                gather_base: (s * 2 * w) as u64,
+                bcast_base: (s * 2 * w + w) as u64,
+                stride,
+            };
+            nodes.push(Box::new(PsNode::new(
+                worker_ids.clone(),
+                cfg.proto.clone(),
+                bytes,
+                crits[s].clone(),
+                plan,
+                (env.make_agg)(s),
+                tracker_for(cfg, w),
+                cfg.iters,
+                cfg.batches_per_epoch,
+                report.clone(),
+                closes.clone(),
+            )));
+            shards.push(ShardObs {
+                label: format!("shard{s}"),
+                report,
+                closes,
+                weight: bytes,
+                in_barrier: true,
+            });
+        }
+        for i in 0..w {
+            let routes: Vec<WorkerRoute> = ranges
+                .iter()
+                .enumerate()
+                .map(|(s, &(bytes, _, _))| WorkerRoute {
+                    dst: shard_ids[s],
+                    bytes,
+                    critical: crits[s].clone(),
+                    gather_slot: (s * 2 * w + i) as u64,
+                    bcast_slot: (s * 2 * w + w + i) as u64,
+                    stride,
+                })
+                .collect();
+            nodes.push(Box::new(WorkerNode::new(
+                i,
+                routes,
+                cfg.proto.clone(),
+                (env.make_compute)(i, cfg),
+                cfg.iters,
+            )));
+        }
+        let topo = star(sim, nodes, cfg.link, cfg.switch_delay);
+        debug_assert_eq!(topo.hosts[0], shard_ids[0]);
+        AggRun {
+            ps_id: shard_ids[0],
+            worker_ids,
+            shards,
+            fabric: Fabric::Star { switch: topo.switch },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `hier[:racks=R]`: rack-local aggregators under a root PS.
+// ---------------------------------------------------------------------------
+
+struct HierAggregation {
+    racks: usize,
+    spec: String,
+}
+
+impl Aggregation for HierAggregation {
+    fn name(&self) -> &str {
+        &self.spec
+    }
+
+    fn n_aggregators(&self, _workers: usize) -> usize {
+        self.racks + 1
+    }
+
+    fn flow_stride(&self, workers: usize) -> u64 {
+        2 * workers as u64 + 2 * self.racks as u64
+    }
+
+    fn validate(&self, workers: usize, _model_bytes: u64, topo: &Topo) -> Result<()> {
+        ensure!(
+            matches!(topo, Topo::Star),
+            "`{}` builds its own {}-rack fabric; drop the two-rack topology override",
+            self.spec,
+            self.racks
+        );
+        ensure!(
+            workers % self.racks == 0 && workers >= self.racks,
+            "`{}`: worker count {workers} is not divisible across {} racks",
+            self.spec,
+            self.racks
+        );
+        Ok(())
+    }
+
+    fn build(&self, sim: &mut Sim, cfg: &TrainingCfg, env: &mut BuildEnv<'_>) -> AggRun {
+        let w = cfg.n_workers;
+        let r_n = self.racks;
+        let per = w / r_n;
+        // Flow space per iteration: worker gathers [0, W), worker
+        // broadcasts [W, 2W), rack→root forwards [2W, 2W+R), root→rack
+        // broadcasts [2W+R, 2W+2R).
+        let stride = (2 * w + 2 * r_n) as u64;
+        // Entity-id layout: agg switch 0, tors 1..=R, then rack-major
+        // hosts (each rack: its relay first, then its workers), then the
+        // root attached directly to the aggregation switch.
+        let first_host = 1 + r_n;
+        let relay_ids: Vec<EntityId> = (0..r_n).map(|r| first_host + r * (1 + per)).collect();
+        let worker_ids: Vec<EntityId> = (0..w)
+            .map(|i| first_host + (i / per) * (1 + per) + 1 + (i % per))
+            .collect();
+        let root_id: EntityId = first_host + r_n * (1 + per);
+        let mut shards = Vec::with_capacity(r_n + 1);
+        let mut racks: Vec<Vec<Box<dyn Node>>> = Vec::with_capacity(r_n);
+        for r in 0..r_n {
+            let report: Rc<RefCell<Vec<IterStats>>> = Rc::new(RefCell::new(Vec::new()));
+            let closes: Rc<RefCell<Vec<GatherClose>>> = Rc::new(RefCell::new(Vec::new()));
+            let rack_workers: Vec<EntityId> =
+                worker_ids[r * per..(r + 1) * per].to_vec();
+            let relay = RelayAggNode::new(RelayCfg {
+                workers: rack_workers,
+                worker_base: r * per,
+                proto: cfg.proto.clone(),
+                model_bytes: cfg.model_bytes,
+                critical: cfg.critical.clone(),
+                plan: PsFlowPlan {
+                    gather_base: (r * per) as u64,
+                    bcast_base: (w + r * per) as u64,
+                    stride,
+                },
+                root: root_id,
+                up_gather_slot: (2 * w + r) as u64,
+                up_bcast_slot: (2 * w + r_n + r) as u64,
+                agg: (env.make_agg)(r),
+                tracker: tracker_for(cfg, per),
+                iters: cfg.iters,
+                batches_per_epoch: cfg.batches_per_epoch,
+                report: report.clone(),
+                closes: closes.clone(),
+            });
+            let mut rack_nodes: Vec<Box<dyn Node>> = vec![Box::new(relay)];
+            for j in 0..per {
+                let i = r * per + j;
+                let route = WorkerRoute {
+                    dst: relay_ids[r],
+                    bytes: cfg.model_bytes,
+                    critical: cfg.critical.clone(),
+                    gather_slot: i as u64,
+                    bcast_slot: (w + i) as u64,
+                    stride,
+                };
+                rack_nodes.push(Box::new(WorkerNode::new(
+                    i,
+                    vec![route],
+                    cfg.proto.clone(),
+                    (env.make_compute)(i, cfg),
+                    cfg.iters,
+                )));
+            }
+            racks.push(rack_nodes);
+            shards.push(ShardObs {
+                label: format!("rack{r}"),
+                report,
+                closes,
+                weight: cfg.model_bytes,
+                in_barrier: true,
+            });
+        }
+        // The root is a plain PsNode whose "workers" are the rack relays;
+        // its close records index the rack forward flows after the real
+        // workers (`W + r`), keeping the run-wide close list unambiguous.
+        let root_report: Rc<RefCell<Vec<IterStats>>> = Rc::new(RefCell::new(Vec::new()));
+        let root_closes: Rc<RefCell<Vec<GatherClose>>> = Rc::new(RefCell::new(Vec::new()));
+        let root = PsNode::new(
+            relay_ids.clone(),
+            cfg.proto.clone(),
+            cfg.model_bytes,
+            cfg.critical.clone(),
+            PsFlowPlan {
+                gather_base: (2 * w) as u64,
+                bcast_base: (2 * w + r_n) as u64,
+                stride,
+            },
+            (env.make_agg)(r_n),
+            tracker_for(cfg, r_n),
+            cfg.iters,
+            cfg.batches_per_epoch,
+            root_report.clone(),
+            root_closes.clone(),
+        )
+        .with_worker_base(w);
+        shards.push(ShardObs {
+            label: "root".to_string(),
+            report: root_report,
+            closes: root_closes,
+            weight: cfg.model_bytes,
+            in_barrier: false,
+        });
+        // Rack trunks run at edge rate: hierarchical aggregation sends
+        // only one flow per rack across them, which is the point.
+        let topo = n_rack(sim, racks, cfg.link, cfg.link, cfg.switch_delay);
+        debug_assert_eq!(topo.hosts.first().copied(), relay_ids.first().copied());
+        let root_host = sim.add_host(Box::new(root));
+        debug_assert_eq!(root_host, root_id);
+        let (up, _down) = sim.add_duplex(root_host, topo.agg, cfg.link);
+        sim.set_default_uplink(root_host, up);
+        AggRun {
+            ps_id: root_id,
+            worker_ids,
+            shards,
+            fabric: Fabric::Racks {
+                agg: topo.agg,
+                tors: topo.tors,
+                trunk_down: topo.trunk_down,
+            },
+        }
+    }
+}
+
+/// The run's threshold tracker for one aggregator endpoint over
+/// `n_links` incoming gather links, honoring spec-level tuning overrides.
+fn tracker_for(cfg: &TrainingCfg, n_links: usize) -> ThresholdTracker {
+    let tuning = cfg.proto.tuning();
+    ThresholdTracker::new(
+        n_links,
+        tuning.deadline_slack.unwrap_or(cfg.deadline_slack),
+        tuning.pct_threshold.unwrap_or(cfg.pct_threshold),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// The rack-local relay aggregator node.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RelayPhase {
+    /// Receiving this rack's worker gathers (Early Close per flow).
+    Gathering,
+    /// Local reduce running (modeled duration).
+    Reducing,
+    /// Forwarding the reduced gradient to the root (one flow).
+    Forwarding,
+    /// Waiting for the root's reliable model broadcast.
+    AwaitRoot,
+    /// Re-broadcasting the model to this rack's workers (reliable).
+    Broadcasting,
+    Done,
+}
+
+const TOK_REDUCE_DONE: u64 = 1 << 41;
+/// Cap on stashed ahead-of-iteration packets per worker.
+const MAX_STASH: usize = 8192;
+
+/// Constructor bundle for [`RelayAggNode`].
+struct RelayCfg {
+    workers: Vec<EntityId>,
+    /// Global index of this rack's first worker (close records use
+    /// run-global worker indices).
+    worker_base: usize,
+    proto: super::spec::ProtoSpec,
+    model_bytes: u64,
+    critical: Vec<u32>,
+    plan: PsFlowPlan,
+    root: EntityId,
+    up_gather_slot: u64,
+    up_bcast_slot: u64,
+    agg: Box<dyn Aggregate>,
+    tracker: ThresholdTracker,
+    iters: u64,
+    batches_per_epoch: u64,
+    report: Rc<RefCell<Vec<IterStats>>>,
+    closes: Rc<RefCell<Vec<GatherClose>>>,
+}
+
+/// A rack-local aggregator: PS-like toward its rack's workers (gather
+/// under Early Close, reliable re-broadcast), worker-like toward the root
+/// (one reliable-until-stopped forward flow per iteration, one reliable
+/// model receive). The local reduce runs between the two tiers.
+struct RelayAggNode {
+    c: RelayCfg,
+    iter: u64,
+    phase: RelayPhase,
+    /// Gather receiver per local worker for the current iteration.
+    rx: Vec<Option<Box<dyn FlowRx>>>,
+    /// Broadcast sender per local worker.
+    tx_down: Vec<Option<Box<dyn FlowTx>>>,
+    /// Forward sender toward the root.
+    tx_up: Option<Box<dyn FlowTx>>,
+    /// Model receiver from the root (reliable).
+    rx_root: Option<Box<dyn FlowRx>>,
+    /// Previous iteration's root receiver, kept to answer stragglers.
+    rx_root_prev: Option<Box<dyn FlowRx>>,
+    gather_done: Vec<bool>,
+    gather_started: Vec<Option<Nanos>>,
+    /// Early packets for the next iteration's worker gather flows.
+    stash: Vec<Vec<Packet>>,
+    gather_phase_done: Nanos,
+    reduce_dur: Nanos,
+    /// Path estimates for seeding the next forward flow.
+    path_up: Option<(Nanos, u64)>,
+    timer_gen: u64,
+    arrivals: Vec<Option<(Bitmap, u64)>>,
+    delivered_fractions: Vec<f64>,
+}
+
+impl RelayAggNode {
+    fn new(c: RelayCfg) -> RelayAggNode {
+        let n = c.workers.len();
+        RelayAggNode {
+            c,
+            iter: 0,
+            phase: RelayPhase::Gathering,
+            rx: (0..n).map(|_| None).collect(),
+            tx_down: (0..n).map(|_| None).collect(),
+            tx_up: None,
+            rx_root: None,
+            rx_root_prev: None,
+            gather_done: vec![false; n],
+            gather_started: vec![None; n],
+            stash: vec![Vec::new(); n],
+            gather_phase_done: 0,
+            reduce_dur: 0,
+            path_up: None,
+            timer_gen: 0,
+            arrivals: (0..n).map(|_| None).collect(),
+            delivered_fractions: vec![],
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.c.workers.len()
+    }
+
+    fn expected_gather_flow(&self, j: usize, iter: u64) -> u64 {
+        self.c
+            .proto
+            .wire_flow(iter * self.c.plan.stride + self.c.plan.gather_base + j as u64)
+    }
+
+    fn up_gather_flow(&self, iter: u64) -> u64 {
+        iter * self.c.plan.stride + self.c.up_gather_slot
+    }
+
+    fn up_bcast_flow(&self, iter: u64) -> u64 {
+        iter * self.c.plan.stride + self.c.up_bcast_slot
+    }
+
+    fn ec_cfg(&self, j: usize) -> EarlyCloseCfg {
+        if !self.c.proto.is_loss_tolerant() {
+            return EarlyCloseCfg::reliable();
+        }
+        self.c.tracker.cfg(j)
+    }
+
+    /// Route one worker gather packet: current-iteration flows go to the
+    /// (possibly new) receiver; next-iteration flows are stashed.
+    ///
+    /// NOTE: this (and the gather arm of [`RelayAggNode::check_progress`])
+    /// mirrors `PsNode::on_gather_packet` / `PsNode::check_progress` —
+    /// the same threshold-init, Early-Close-open, stash/replay, and
+    /// close-record rules over this node's [`PsFlowPlan`] band. A change
+    /// to the PS gather path belongs in both places.
+    fn on_gather_packet(&mut self, ctx: &mut Ctx, j: usize, pkt: Packet) {
+        let now = ctx.now();
+        let me = ctx.me;
+        let cur = self.expected_gather_flow(j, self.iter);
+        let next = self.expected_gather_flow(j, self.iter + 1);
+        if pkt.flow == cur && self.phase == RelayPhase::Gathering {
+            if self.rx[j].as_ref().map(|r| !r.flow_matches(pkt.flow)).unwrap_or(true) {
+                // First packet of this iteration's flow: init thresholds
+                // from the advertised estimates (paper §IV-A) and open the
+                // receiver under the current Early Close config.
+                if let PacketKind::Ltp(hdr) = &pkt.kind {
+                    if self.c.proto.is_loss_tolerant()
+                        && hdr.btlbw_mbps > 0
+                        && (self.iter % self.c.batches_per_epoch == 0
+                            || self.c.tracker.lt_threshold(j) == Nanos::MAX)
+                    {
+                        self.c.tracker.init_link(
+                            j,
+                            hdr.rtprop_us as Nanos * crate::US,
+                            self.c.model_bytes,
+                            hdr.btlbw_mbps as u64 * 1_000_000 / 8,
+                        );
+                    }
+                }
+                self.rx[j] = Some(self.c.proto.make_rx(RxCfg {
+                    flow: pkt.flow,
+                    bytes: self.c.model_bytes,
+                    ec: self.ec_cfg(j),
+                    critical: self.c.critical.clone(),
+                    iter: self.iter,
+                }));
+                self.gather_started[j] = Some(now);
+            }
+            let mut outgoing = Vec::new();
+            if let Some(rx) = &mut self.rx[j] {
+                rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
+            }
+            for p in outgoing {
+                ctx.send(p);
+            }
+        } else if pkt.flow == next {
+            if self.stash[j].len() < MAX_STASH {
+                self.stash[j].push(pkt);
+            }
+        } else if pkt.flow == cur {
+            // Current flow while not gathering (late retransmissions after
+            // close): let the existing receiver re-issue its Stop.
+            let mut outgoing = Vec::new();
+            if let Some(rx) = &mut self.rx[j] {
+                if rx.flow_matches(pkt.flow) {
+                    rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
+                }
+            }
+            for p in outgoing {
+                ctx.send(p);
+            }
+        }
+        // Anything else: a stale flow — drop.
+    }
+
+    fn check_progress(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        if self.phase == RelayPhase::Gathering {
+            for j in 0..self.n() {
+                if self.gather_done[j] {
+                    continue;
+                }
+                let done = self.rx[j].as_ref().map(|r| r.is_done()).unwrap_or(false);
+                if done {
+                    self.gather_done[j] = true;
+                    let rx = self.rx[j].as_ref().unwrap();
+                    let started = self.gather_started[j].unwrap_or(now);
+                    self.c.tracker.record_flow(j, now - started, rx.reached_full());
+                    self.delivered_fractions.push(rx.delivered_fraction());
+                    if let Some((reason, criticals_ok, delivered)) = rx.close_info() {
+                        self.c.closes.borrow_mut().push(GatherClose {
+                            iter: self.iter,
+                            worker: self.c.worker_base + j,
+                            reason,
+                            criticals_ok,
+                            delivered,
+                        });
+                    }
+                    self.arrivals[j] = rx.bitmap().map(|b| {
+                        (b.clone(), rx.segment_map().map(|m| m.n_segs as u64).unwrap_or(0))
+                    });
+                }
+            }
+            if self.gather_done.iter().all(|&d| d) {
+                self.gather_phase_done = now;
+                self.phase = RelayPhase::Reducing;
+                let dur = self.c.agg.aggregate(self.iter, &self.arrivals);
+                self.reduce_dur = dur;
+                ctx.set_timer(now + dur, TOK_REDUCE_DONE | self.iter);
+            }
+        }
+        if self.phase == RelayPhase::Forwarding
+            && self.tx_up.as_ref().map(|t| t.is_complete()).unwrap_or(false)
+        {
+            self.phase = RelayPhase::AwaitRoot;
+            self.path_up =
+                self.tx_up.as_ref().and_then(|t| t.path_estimates()).or(self.path_up);
+        }
+        if self.phase == RelayPhase::AwaitRoot
+            && self.rx_root.as_ref().map(|r| r.is_done()).unwrap_or(false)
+        {
+            self.begin_local_broadcast(ctx);
+        }
+        if self.phase == RelayPhase::Broadcasting {
+            let all = (0..self.n())
+                .all(|j| self.tx_down[j].as_ref().map(|t| t.is_complete()).unwrap_or(false));
+            if all {
+                self.finish_iteration(ctx);
+            }
+        }
+    }
+
+    fn begin_forward(&mut self, ctx: &mut Ctx) {
+        self.phase = RelayPhase::Forwarding;
+        let (rt, bw) = self.path_up.unwrap_or((0, 0));
+        self.tx_up = Some(self.c.proto.make_tx(TxCfg {
+            flow: self.up_gather_flow(self.iter),
+            bytes: self.c.model_bytes,
+            critical: self.c.critical.clone(),
+            seed_rtprop: rt,
+            seed_btlbw_bytes: bw,
+        }));
+        // The root's broadcast comes back reliably on this iteration's
+        // down-slot; open the receiver now, like a worker does.
+        self.rx_root = Some(self.c.proto.make_rx(RxCfg {
+            flow: self.up_bcast_flow(self.iter),
+            bytes: self.c.model_bytes,
+            ec: EarlyCloseCfg::reliable(),
+            critical: vec![],
+            iter: self.iter,
+        }));
+        self.drain(ctx);
+    }
+
+    fn begin_local_broadcast(&mut self, ctx: &mut Ctx) {
+        self.phase = RelayPhase::Broadcasting;
+        for j in 0..self.n() {
+            let flow = self.iter * self.c.plan.stride + self.c.plan.bcast_base + j as u64;
+            // Rack-local broadcast is reliable, like every model push.
+            self.tx_down[j] = Some(self.c.proto.make_tx(TxCfg {
+                flow,
+                bytes: self.c.model_bytes,
+                critical: vec![],
+                seed_rtprop: 0,
+                seed_btlbw_bytes: 0,
+            }));
+        }
+        self.drain(ctx);
+    }
+
+    fn finish_iteration(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        let first_gather =
+            self.gather_started.iter().flatten().min().copied().unwrap_or(now);
+        let n = self.n() as f64;
+        let recent: f64 =
+            self.delivered_fractions.iter().rev().take(self.n()).sum::<f64>() / n;
+        let stats = IterStats {
+            // The whole synchronization span of this rack — local gather,
+            // forward, root round-trip, local re-broadcast — minus this
+            // rack's own reduce. The root's aggregation latency stays
+            // inside the span: it is upper-tier synchronization the rack
+            // must wait out, so hier BSTs carry that constant relative to
+            // ps/sharded rows (within-topology comparisons, which the
+            // conformance invariants use, are unaffected — DESIGN.md §1.2).
+            bst: (now - first_gather).saturating_sub(self.reduce_dur),
+            gather_time: self.gather_phase_done - first_gather,
+            mean_delivered: recent,
+            loss: self.c.agg.loss(self.iter),
+            end: now,
+        };
+        self.c.report.borrow_mut().push(stats);
+        let epoch_end = (self.iter + 1) % self.c.batches_per_epoch == 0;
+        if self.c.proto.is_loss_tolerant() && epoch_end {
+            self.c.tracker.end_epoch();
+        }
+        self.iter += 1;
+        for j in 0..self.n() {
+            self.rx[j] = None;
+            self.tx_down[j] = None;
+            self.gather_done[j] = false;
+            self.gather_started[j] = None;
+            self.arrivals[j] = None;
+        }
+        self.tx_up = None;
+        self.rx_root_prev = self.rx_root.take();
+        self.phase =
+            if self.iter >= self.c.iters { RelayPhase::Done } else { RelayPhase::Gathering };
+        // Replay any gather packets that arrived ahead of the barrier.
+        if self.phase == RelayPhase::Gathering {
+            let stashes: Vec<Vec<Packet>> =
+                self.stash.iter_mut().map(std::mem::take).collect();
+            for (j, pkts) in stashes.into_iter().enumerate() {
+                for pkt in pkts {
+                    self.on_gather_packet(ctx, j, pkt);
+                }
+            }
+        }
+    }
+
+    fn drain(&mut self, ctx: &mut Ctx) {
+        let now = ctx.now();
+        let me = ctx.me;
+        if let Some(tx) = &mut self.tx_up {
+            while let Some(pkt) = tx.poll(now, me, self.c.root) {
+                ctx.send(pkt);
+            }
+        }
+        for j in 0..self.n() {
+            if let Some(tx) = &mut self.tx_down[j] {
+                while let Some(pkt) = tx.poll(now, me, self.c.workers[j]) {
+                    ctx.send(pkt);
+                }
+            }
+        }
+        self.check_progress(ctx);
+        // Timers: worker receivers' Early Close checks, the forward
+        // sender's pacing/PTO, broadcast senders, the root receiver.
+        self.timer_gen += 1;
+        let mut wake: Option<Nanos> = None;
+        for j in 0..self.n() {
+            let rxw = self.rx[j].as_ref().and_then(|r| r.next_wakeup(now));
+            let txw = self.tx_down[j].as_ref().and_then(|t| t.next_wakeup());
+            for cand in [rxw, txw].into_iter().flatten() {
+                wake = Some(wake.map_or(cand, |a: Nanos| a.min(cand)));
+            }
+        }
+        let upw = self.tx_up.as_ref().and_then(|t| t.next_wakeup());
+        let rootw = self.rx_root.as_ref().and_then(|r| r.next_wakeup(now));
+        for cand in [upw, rootw].into_iter().flatten() {
+            wake = Some(wake.map_or(cand, |a: Nanos| a.min(cand)));
+        }
+        if let Some(at) = wake {
+            ctx.set_timer(at.max(now + 1), self.timer_gen);
+        }
+    }
+}
+
+impl Node for RelayAggNode {
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {
+        if matches!(pkt.kind, PacketKind::Raw(_)) {
+            return; // background cross traffic: pure link load, no protocol
+        }
+        let now = ctx.now();
+        let me = ctx.me;
+        let slot = pkt.flow % self.c.plan.stride;
+        let n = self.n() as u64;
+        if slot >= self.c.plan.gather_base && slot < self.c.plan.gather_base + n {
+            let j = (slot - self.c.plan.gather_base) as usize;
+            self.on_gather_packet(ctx, j, pkt);
+        } else if slot >= self.c.plan.bcast_base && slot < self.c.plan.bcast_base + n {
+            // ACK/Stop for a rack-local broadcast flow.
+            let j = (slot - self.c.plan.bcast_base) as usize;
+            if let Some(tx) = &mut self.tx_down[j] {
+                if tx.flow_matches(pkt.flow) {
+                    tx.handle(now, &pkt);
+                }
+            }
+        } else if slot == self.c.up_gather_slot {
+            // ACK/Stop from the root for our forward flow.
+            if let Some(tx) = &mut self.tx_up {
+                tx.handle(now, &pkt);
+            }
+        } else if slot == self.c.up_bcast_slot {
+            // Model data from the root — current flow, or a straggler
+            // retransmission of the previous iteration's.
+            let mut outgoing = Vec::new();
+            let cur =
+                self.rx_root.as_ref().map(|r| r.flow_matches(pkt.flow)).unwrap_or(false);
+            if cur {
+                if let Some(rx) = &mut self.rx_root {
+                    rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
+                }
+            } else if let Some(rx) = &mut self.rx_root_prev {
+                if rx.flow_matches(pkt.flow) {
+                    rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
+                }
+            }
+            for p in outgoing {
+                ctx.send(p);
+            }
+        }
+        self.drain(ctx);
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, token: u64) {
+        if token & TOK_REDUCE_DONE != 0 {
+            if token & !TOK_REDUCE_DONE == self.iter && self.phase == RelayPhase::Reducing {
+                self.begin_forward(ctx);
+            }
+            return;
+        }
+        if token != self.timer_gen {
+            return;
+        }
+        let now = ctx.now();
+        let me = ctx.me;
+        let mut outgoing = Vec::new();
+        for j in 0..self.n() {
+            let peer = self.c.workers[j];
+            if let Some(rx) = &mut self.rx[j] {
+                rx.on_wakeup(now);
+                rx.drain(me, peer, &mut |p| outgoing.push(p));
+            }
+            if let Some(tx) = &mut self.tx_down[j] {
+                tx.on_wakeup(now);
+            }
+        }
+        if let Some(tx) = &mut self.tx_up {
+            tx.on_wakeup(now);
+        }
+        if let Some(rx) = &mut self.rx_root {
+            rx.on_wakeup(now);
+            rx.drain(me, self.c.root, &mut |p| outgoing.push(p));
+        }
+        for p in outgoing {
+            ctx.send(p);
+        }
+        self.drain(ctx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_parses_canonical_names() {
+        for (spec, canon, aggs) in [
+            ("ps", "ps", 1),
+            ("PS", "ps", 1),
+            ("sharded:n=1", "sharded:n=1", 1),
+            ("sharded:n=4", "sharded:n=4", 4),
+            ("SHARDED:N=8", "sharded:n=8", 8),
+            ("hier", "hier", 3),
+            ("hier:racks=2", "hier:racks=2", 3),
+            ("hier:racks=4", "hier:racks=4", 5),
+        ] {
+            let a = parse_agg(spec).unwrap_or_else(|e| panic!("{spec}: {e:#}"));
+            assert_eq!(a.name(), canon, "{spec}");
+            assert_eq!(a.n_aggregators(8), aggs, "{spec}");
+            // Canonical form is a fixed point of the grammar.
+            assert_eq!(parse_agg(a.name()).unwrap().name(), canon);
+        }
+        assert_eq!(parse_agg("ps").unwrap(), default_agg());
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "mesh",            // unknown key
+            "ps:n=2",          // ps takes no params
+            "sharded",         // n is required
+            "sharded:",        // empty param list
+            "sharded:n=0",     // zero shards
+            "sharded:n=two",   // non-numeric
+            "sharded:m=2",     // unknown param
+            "sharded:n=2,n=4", // duplicate param
+            "hier:racks=0",    // zero racks
+            "hier:n=2",        // unknown param
+        ] {
+            assert!(parse_agg(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn validation_enforces_divisibility_and_fabric() {
+        let star = Topo::Star;
+        let sharded4 = parse_agg("sharded:n=4").unwrap();
+        assert!(sharded4.validate(8, 10_000_000, &star).is_ok());
+        assert!(sharded4.validate(6, 10_000_000, &star).is_err(), "6 % 4 != 0");
+        // Fewer segments than shards.
+        assert!(sharded4.validate(4, 12, &star).is_err());
+        let hier3 = parse_agg("hier:racks=3").unwrap();
+        assert!(hier3.validate(6, 10_000_000, &star).is_ok());
+        assert!(hier3.validate(8, 10_000_000, &star).is_err(), "8 % 3 != 0");
+        // Aggregations that own their fabric reject a two-rack override.
+        let two_rack = Topo::TwoRack {
+            rack0_workers: 2,
+            trunk: crate::simnet::LinkCfg::dcn(10, 2),
+        };
+        assert!(sharded4.validate(8, 10_000_000, &two_rack).is_err());
+        assert!(hier3.validate(6, 10_000_000, &two_rack).is_err());
+        assert!(parse_agg("ps").unwrap().validate(8, 10_000_000, &two_rack).is_ok());
+    }
+
+    #[test]
+    fn shard_ranges_partition_the_segment_space() {
+        let seg = Manifest::aligned_payload(LTP_MSS) as u64;
+        let bytes = 10 * seg + 7; // 11 segments, last one partial
+        let ranges = shard_ranges(bytes, 4);
+        assert_eq!(ranges.len(), 4);
+        let total_bytes: u64 = ranges.iter().map(|r| r.0).sum();
+        let total_segs: u64 = ranges.iter().map(|r| r.2).sum();
+        assert_eq!(total_bytes, bytes, "byte ranges must tile the gradient");
+        assert_eq!(total_segs, 11);
+        // Contiguous, in order.
+        let mut next = 0;
+        for &(_, seg0, count) in &ranges {
+            assert_eq!(seg0, next);
+            assert!(count >= 2, "11 segs over 4 shards: 3/3/3/2");
+            next = seg0 + count;
+        }
+        // n = 1 is the whole message.
+        let whole = shard_ranges(bytes, 1);
+        assert_eq!(whole, vec![(bytes, 0, 11)]);
+    }
+
+    #[test]
+    fn shard_criticals_rebase_to_the_shard() {
+        let critical = vec![0, 2, 5, 9];
+        assert_eq!(shard_criticals(&critical, 0, 3), vec![0, 2]);
+        assert_eq!(shard_criticals(&critical, 3, 3), vec![2]);
+        assert_eq!(shard_criticals(&critical, 6, 5), vec![3]);
+        assert_eq!(shard_criticals(&critical, 0, 11), critical);
+    }
+}

@@ -8,7 +8,8 @@
 //! too large for LTP's 24-bit segment space, …) instead of letting them
 //! surface as silent mis-simulations.
 
-use super::runner::{BgFlow, RunReport, Topo, TrainingCfg};
+use super::agg::{default_agg, AggSpec, Topo};
+use super::runner::{BgFlow, RunReport, TrainingCfg};
 use super::spec::ProtoSpec;
 use crate::config::{NetEnv, Workload};
 use crate::grad::Manifest;
@@ -60,6 +61,7 @@ pub struct RunBuilder {
     horizon: Nanos,
     topo: Topo,
     bg: Vec<BgFlow>,
+    agg: AggSpec,
 }
 
 impl RunBuilder {
@@ -84,6 +86,7 @@ impl RunBuilder {
             horizon: 3600 * SEC,
             topo: Topo::Star,
             bg: vec![],
+            agg: default_agg(),
         }
     }
 
@@ -194,6 +197,15 @@ impl RunBuilder {
         self
     }
 
+    /// Choose the aggregation topology (`ps`, `sharded:n=4`,
+    /// `hier:racks=2`, … — see [`super::parse_agg`]). The default is the
+    /// single-PS star, whose reports are byte-identical to the
+    /// pre-aggregation-API runs.
+    pub fn agg(mut self, agg: AggSpec) -> RunBuilder {
+        self.agg = agg;
+        self
+    }
+
     /// Validate and produce the run configuration.
     pub fn build(self) -> Result<TrainingCfg> {
         ensure!(self.workers >= 1, "a training run needs at least one worker");
@@ -224,6 +236,25 @@ impl RunBuilder {
                 self.model_bytes
             );
         }
+        // The aggregation's own consistency rules: worker count divisible
+        // across `hier` racks / `sharded` shards, fabric compatibility.
+        self.agg.validate(self.workers, self.model_bytes, &self.topo)?;
+        if self.proto.is_loss_tolerant() {
+            // LTP truncates flow ids to 16 bits; slot resolution survives
+            // the wrap only for power-of-two strides (the classic 2W
+            // layouts), so other layouts must keep raw flow ids below 2¹⁶.
+            let stride = self.agg.flow_stride(self.workers);
+            ensure!(
+                stride.is_power_of_two()
+                    || self.iters.saturating_mul(stride).saturating_add(stride) <= 1 << 16,
+                "`{}` at {} workers uses flow stride {stride}: {} iterations overflow \
+                 LTP's 16-bit wire flow ids (max {})",
+                self.agg.name(),
+                self.workers,
+                self.iters,
+                (1u64 << 16) / stride - 1
+            );
+        }
         let critical = match self.critical {
             Critical::Explicit(segments) => segments,
             Critical::Synthetic(n) => Manifest::synthetic(self.model_bytes, n)
@@ -246,6 +277,7 @@ impl RunBuilder {
             horizon: self.horizon,
             topo: self.topo,
             bg: self.bg,
+            agg: self.agg,
         })
     }
 
@@ -333,6 +365,29 @@ mod tests {
         assert!(b().two_rack(2, trunk).build().is_ok());
         // A message beyond LTP's 24-bit segment space.
         assert!(b().model_bytes(30_000_000_000_000).build().is_err());
+        // Worker count not divisible across shards / racks fails fast…
+        let agg = |s: &str| crate::ps::parse_agg(s).unwrap();
+        assert!(b().agg(agg("sharded:n=3")).build().is_err());
+        assert!(b().agg(agg("hier:racks=3")).build().is_err());
+        // …divisible combinations build.
+        assert!(b().agg(agg("sharded:n=2")).build().is_ok());
+        assert!(b().agg(agg("hier:racks=2")).build().is_ok());
+        // Aggregations that own their fabric reject a two-rack override.
+        assert!(b().two_rack(2, trunk).agg(agg("sharded:n=2")).build().is_err());
+        assert!(b().two_rack(2, trunk).agg(agg("hier")).build().is_err());
+        // Non-power-of-two flow strides must keep LTP's raw flow ids
+        // within the 16-bit wire space (hier at 4 workers: stride 12 →
+        // at most 5460 iterations); power-of-two strides are unbounded.
+        assert!(b().agg(agg("hier")).iters(5000).build().is_ok());
+        assert!(b().agg(agg("hier")).iters(6000).build().is_err());
+        assert!(b().iters(1_000_000).build().is_ok(), "classic 2W stride never wraps wrong");
+        // …and reliable transports are unaffected (full flow ids on the wire).
+        let reno = crate::ps::parse_proto("reno").unwrap();
+        assert!(RunBuilder::modeled(reno, Workload::Micro, 4)
+            .agg(agg("hier"))
+            .iters(6000)
+            .build()
+            .is_ok());
     }
 
     #[test]

@@ -14,13 +14,22 @@
 //! (init `1.5·RTprop + Size/BtlBw`, per-epoch update to the fastest full
 //! transmission, deadline `max+C`); broadcast is always reliable.
 //!
-//! The transport underneath is **pluggable** (DESIGN.md §Transport API):
-//! both nodes drive boxed [`FlowTx`]/[`FlowRx`] endpoints produced by a
+//! The transport underneath is **pluggable** (DESIGN.md §1.1): both nodes
+//! drive boxed [`FlowTx`]/[`FlowRx`] endpoints produced by a
 //! [`Transport`] factory, protocols are registered under string keys
 //! ([`proto_registry`]) and instantiated from specs like `ltp`,
 //! `ltp:pct=0.9,slack=100ms`, or `tcp:cc=cubic` ([`parse_proto`]), and runs
 //! are assembled through the validated [`RunBuilder`].
+//!
+//! The aggregation *topology* is equally pluggable (DESIGN.md §1.2): an
+//! [`Aggregation`] owns the fabric build, aggregator placement, and the
+//! workers' (shard → aggregator) routing plans. Registered today:
+//! `ps` (the single-PS star above, default), `sharded:n=N` (gradient
+//! segment ranges across N PS nodes), and `hier[:racks=R]` (rack-local
+//! aggregators under a root PS). Specs parse with [`parse_agg`] and
+//! thread through [`RunBuilder::agg`] and the CLI's `--agg`.
 
+mod agg;
 mod blackboard;
 mod builder;
 mod data;
@@ -30,20 +39,24 @@ mod spec;
 mod transport;
 mod worker;
 
+pub use agg::{
+    agg_registry, default_agg, parse_agg, AggDef, AggRun, AggSpec, Aggregation, BuildEnv,
+    Fabric, ShardObs, Topo, AGG_REGISTRY,
+};
 pub use blackboard::Blackboard;
 pub use builder::RunBuilder;
 pub use data::Corpus;
 pub use runner::{
     run_training, run_with, BgFlow, BgKind, NetTotals, RealCompute, RealTraining, RunReport,
-    Topo, TrainingCfg, XlaAggregate,
+    ShardStat, TrainingCfg, XlaAggregate,
 };
-pub use server::{Aggregate, NullAggregate, PsNode};
+pub use server::{Aggregate, NullAggregate, PsFlowPlan, PsNode};
 pub use spec::{
     baseline_matrix, parse_proto, proto_registry, registry_matrix, ProtoDef, ProtoSpec,
     PROTO_REGISTRY,
 };
 pub use transport::{FlowRx, FlowTx, RxCfg, Transport, TransportTuning, TxCfg};
-pub use worker::{Compute, ModeledCompute, WorkerNode, WorkerStats};
+pub use worker::{Compute, ModeledCompute, WorkerNode, WorkerRoute, WorkerStats};
 
 use crate::proto::CloseReason;
 use crate::Nanos;

@@ -1,18 +1,21 @@
-//! Training-run orchestration: build the topology (single-rack star or an
-//! oversubscribed two-rack fabric), attach PS, workers, and any background
-//! flows, run the BSP loop, and collect the report. Supports modeled
-//! compute (paper message sizes + calibrated compute times) and real
-//! compute (PJRT train_step + Pallas masked aggregation).
+//! Training-run orchestration: hand the fabric build to the run's
+//! [`super::AggSpec`] (single PS, sharded multi-PS, or hierarchical
+//! rack-local aggregation — DESIGN.md §1.2), attach any background flows,
+//! run the BSP loop, and merge every aggregator endpoint's records into
+//! one report. Supports modeled compute (paper message sizes + calibrated
+//! compute times) and real compute (PJRT train_step + Pallas masked
+//! aggregation).
 
-use super::server::{Aggregate, NullAggregate, PsNode};
+use super::agg::{merge_iters, BuildEnv, Topo};
+use super::server::{Aggregate, NullAggregate};
 use super::spec::ProtoSpec;
 use super::worker::{Compute, ModeledCompute, WorkerNode};
-use super::{Blackboard, Corpus, GatherClose, IterStats};
+use super::{AggSpec, Blackboard, Corpus, GatherClose, IterStats};
 use crate::cc::CcAlgo;
 use crate::config::ModelManifest;
 use crate::grad::{element_mask, Manifest};
 use crate::runtime::{literal_f32, literal_i32, to_f32, Artifact, Runtime};
-use crate::simnet::{two_rack, CrossTraffic, EntityId, LinkCfg, Node, Sim};
+use crate::simnet::{CrossTraffic, EntityId, LinkCfg, Sim};
 use crate::tcp::{TcpReceiverNode, TcpSender, TcpSenderNode};
 use crate::util::{Bitmap, Summary};
 use crate::wire::{LTP_MSS, TCP_MSS};
@@ -23,18 +26,6 @@ use std::rc::Rc;
 
 /// Fabric-wide link counters (summed over every link in the topology).
 pub type NetTotals = crate::simnet::LinkStats;
-
-/// Which fabric a training run uses.
-#[derive(Debug, Clone, Copy)]
-pub enum Topo {
-    /// A single ToR star — the paper's testbed.
-    Star,
-    /// Two racks under one aggregation switch. The PS and the first
-    /// `rack0_workers` workers sit in rack 0, the remaining workers in
-    /// rack 1; cross-rack gathers funnel through the `trunk` links
-    /// (size `trunk` below the sum of edge rates for oversubscription).
-    TwoRack { rack0_workers: usize, trunk: LinkCfg },
-}
 
 /// A background flow sharing the fabric with the training job.
 #[derive(Debug, Clone, Copy)]
@@ -94,10 +85,13 @@ pub struct TrainingCfg {
     pub seed: u64,
     /// Wall-clock cap on the simulation.
     pub horizon: Nanos,
-    /// Fabric topology (star unless a scenario says otherwise).
+    /// Fabric topology for the `ps` aggregation (star unless a scenario
+    /// says otherwise); other aggregations own their topology.
     pub topo: Topo,
     /// Background flows sharing the fabric.
     pub bg: Vec<BgFlow>,
+    /// Aggregation topology (`ps`, `sharded:n=4`, `hier:racks=2`, …).
+    pub agg: AggSpec,
 }
 
 impl TrainingCfg {
@@ -114,10 +108,24 @@ impl TrainingCfg {
     }
 }
 
+/// Per-aggregator distillation for the report's `shards` breakdown:
+/// mean BST and mean delivered fraction of one shard / rack / root.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStat {
+    /// Deterministic endpoint label (`shard0`, `rack1`, `root`).
+    pub label: String,
+    /// Mean per-iteration BST of this endpoint, in nanoseconds.
+    pub bst_ns: Nanos,
+    /// Mean delivered fraction at this endpoint.
+    pub delivered: f64,
+}
+
 /// The outcome of a run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub proto: String,
+    /// Canonical aggregation spec the run used (`ps` by default).
+    pub agg: String,
     pub iters: Vec<IterStats>,
     pub total_time: Nanos,
     /// Mean per-worker gather times (incast direction).
@@ -136,6 +144,10 @@ pub struct RunReport {
     /// Discrete events the simulator processed for this run — the
     /// deterministic work unit behind the bench reports' events/sec.
     pub sim_events: u64,
+    /// Per-aggregator breakdown, in endpoint order. **Empty for
+    /// single-aggregator runs**, so single-PS reports keep their original
+    /// byte layout.
+    pub shards: Vec<ShardStat>,
 }
 
 impl RunReport {
@@ -180,7 +192,7 @@ pub fn run_training(cfg: &TrainingCfg) -> RunReport {
     run_with(
         cfg,
         |_, _| Box::new(ModeledCompute(cfg.compute_time)),
-        Box::new(NullAggregate(cfg.agg_time)),
+        |_| Box::new(NullAggregate(cfg.agg_time)),
     )
 }
 
@@ -190,137 +202,106 @@ enum BgHandle {
     Udp { src_host: EntityId },
 }
 
-/// Run with custom compute/aggregation backends (real training uses this).
+/// Run with custom compute/aggregation backends (real training uses
+/// this). `make_agg(endpoint)` is called once per aggregator endpoint of
+/// the configured [`AggSpec`] — exactly once, with `0`, for the default
+/// single-PS aggregation.
 pub fn run_with(
     cfg: &TrainingCfg,
     mut make_compute: impl FnMut(usize, &TrainingCfg) -> Box<dyn Compute>,
-    agg: Box<dyn Aggregate>,
+    mut make_agg: impl FnMut(usize) -> Box<dyn Aggregate>,
 ) -> RunReport {
-    let report: Rc<RefCell<Vec<IterStats>>> = Rc::new(RefCell::new(Vec::new()));
     let mut sim = Sim::new(cfg.seed);
-    // Spec-level knobs (e.g. `ltp:pct=0.9,slack=100ms`) take precedence
-    // over the run configuration; default specs override nothing.
-    let tuning = cfg.proto.tuning();
-    let tracker = crate::proto::ThresholdTracker::new(
-        cfg.n_workers,
-        tuning.deadline_slack.unwrap_or(cfg.deadline_slack),
-        tuning.pct_threshold.unwrap_or(cfg.pct_threshold),
-    );
-    // Entity-id layout is deterministic per topology: switches first, then
-    // the PS, then workers in index order (background hosts come last).
-    let first_host = match cfg.topo {
-        Topo::Star => 1,            // switch 0
-        Topo::TwoRack { .. } => 3,  // agg 0, tor0 1, tor1 2
-    };
-    let ps_id: EntityId = first_host;
-    let worker_ids: Vec<usize> = (0..cfg.n_workers).map(|w| first_host + 1 + w).collect();
-    let ps = PsNode::new(
-        worker_ids.clone(),
-        cfg.proto.clone(),
-        cfg.model_bytes,
-        cfg.critical.clone(),
-        agg,
-        tracker,
-        cfg.iters,
-        cfg.batches_per_epoch,
-        report.clone(),
-    );
-    let mut nodes: Vec<Box<dyn Node>> = vec![Box::new(ps)];
-    for w in 0..cfg.n_workers {
-        nodes.push(Box::new(WorkerNode::new(
-            w,
-            ps_id,
-            cfg.n_workers,
-            cfg.proto.clone(),
-            cfg.model_bytes,
-            cfg.critical.clone(),
-            make_compute(w, cfg),
-            cfg.iters,
-        )));
-    }
-    // Build the fabric and remember how to attach late (background) hosts.
-    enum Fabric {
-        Star { sw: EntityId },
-        TwoRack(crate::simnet::TwoRackTopology),
-    }
-    let fabric = match cfg.topo {
-        Topo::Star => {
-            let topo = crate::simnet::star(&mut sim, nodes, cfg.link, cfg.switch_delay);
-            debug_assert_eq!(topo.hosts[0], ps_id);
-            Fabric::Star { sw: topo.switch }
-        }
-        Topo::TwoRack { rack0_workers, trunk } => {
-            let rack0_n = rack0_workers.min(cfg.n_workers);
-            let mut it = nodes.into_iter();
-            let rack0: Vec<Box<dyn Node>> = it.by_ref().take(1 + rack0_n).collect();
-            let rack1: Vec<Box<dyn Node>> = it.collect();
-            let topo = two_rack(&mut sim, [rack0, rack1], cfg.link, trunk, cfg.switch_delay);
-            debug_assert_eq!(topo.hosts[0], ps_id);
-            Fabric::TwoRack(topo)
-        }
-    };
-    debug_assert!(worker_ids.last().map(|&w| w < sim.entity_count()).unwrap_or(true));
-    // Attach one host for `node` in `rack` (rack ignored on a star).
-    let mut attach = |sim: &mut Sim, node: Box<dyn Node>, rack: usize| -> EntityId {
-        let h = sim.add_host(node);
-        match &fabric {
-            Fabric::Star { sw } => {
-                let (up, _) = sim.add_duplex(h, *sw, cfg.link);
-                sim.set_default_uplink(h, up);
-            }
-            Fabric::TwoRack(t) => {
-                let r = rack.min(1);
-                let (up, _) = sim.add_duplex(h, t.tors[r], cfg.link);
-                sim.set_default_uplink(h, up);
-                sim.set_route(t.agg, h, t.trunk_down[r]);
-            }
-        }
-        h
+    // The aggregation owns the topology: it builds the fabric, places the
+    // aggregator endpoints and the workers' routing plans, and hands back
+    // the observation handles.
+    let run = {
+        let mut env = BuildEnv { make_compute: &mut make_compute, make_agg: &mut make_agg };
+        cfg.agg.build(&mut sim, cfg, &mut env)
     };
     let mut bg_handles: Vec<BgHandle> = Vec::new();
     for (i, bg) in cfg.bg.iter().enumerate() {
         match bg.kind {
             BgKind::TcpBulk { cc, bytes } => {
-                // Flow ids far above the training range (iters * 2W).
+                // Flow ids far above the training range.
                 let flow = 1_000_000 + i as u64;
-                let rx_host = attach(&mut sim, Box::new(TcpReceiverNode::new()), bg.dst_rack);
+                let rx_host = run.fabric.attach(
+                    &mut sim,
+                    Box::new(TcpReceiverNode::new()),
+                    bg.dst_rack,
+                    cfg.link,
+                );
                 let snd = TcpSender::new(flow, bytes, TCP_MSS, cc.build(TCP_MSS));
                 let snd_node = TcpSenderNode::new(snd, rx_host).with_start(bg.start);
-                attach(&mut sim, Box::new(snd_node), bg.src_rack);
+                run.fabric.attach(&mut sim, Box::new(snd_node), bg.src_rack, cfg.link);
                 bg_handles.push(BgHandle::Tcp { rx_host, flow });
             }
             BgKind::UdpToPs { rate_bps, pkt_size, stop } => {
-                let node = CrossTraffic::new(ps_id, rate_bps, pkt_size, stop)
+                let node = CrossTraffic::new(run.ps_id, rate_bps, pkt_size, stop)
                     .with_start(bg.start);
-                let src_host = attach(&mut sim, Box::new(node), bg.src_rack);
+                let src_host =
+                    run.fabric.attach(&mut sim, Box::new(node), bg.src_rack, cfg.link);
                 bg_handles.push(BgHandle::Udp { src_host });
             }
         }
     }
     // Run in slices so the simulation stops as soon as training completes
     // (long-lived background flows would otherwise keep the event queue
-    // busy until the horizon).
+    // busy until the horizon). The barrier is complete when every
+    // barrier-member aggregator finished all iterations.
     let slice = 100 * MS;
     let mut until = slice;
     loop {
         sim.run_until(until.min(cfg.horizon));
-        let done = report.borrow().len() as u64 >= cfg.iters;
+        let done = run
+            .shards
+            .iter()
+            .filter(|s| s.in_barrier)
+            .all(|s| s.report.borrow().len() as u64 >= cfg.iters);
         if done || sim.is_idle() || until >= cfg.horizon {
             break;
         }
         until += slice;
     }
-    let total_time = report.borrow().last().map(|i| i.end).unwrap_or(sim.now());
+    // Merge the per-aggregator records into the barrier view (BST = max
+    // over shards/levels; identity for a single aggregator).
+    let iters = merge_iters(&run.shards);
+    let total_time = iters.last().map(|i| i.end).unwrap_or(sim.now());
     let mut gathers = Vec::new();
     let mut retransmits = 0;
     let mut gather_pkts = 0;
-    for &w in &worker_ids {
+    for &w in &run.worker_ids {
         let node = sim.node_as::<WorkerNode>(w);
         gathers.extend(node.stats.gather_times.iter().map(|&t| t as f64 / MS as f64));
         retransmits += node.stats.retransmissions;
         gather_pkts += node.stats.pkts_sent;
     }
-    let closes = sim.node_as::<PsNode>(ps_id).closes.clone();
+    let mut closes = Vec::new();
+    for s in &run.shards {
+        closes.extend(s.closes.borrow().iter().copied());
+    }
+    let shards: Vec<ShardStat> = if run.shards.len() <= 1 {
+        vec![] // single aggregator: keep the original report layout
+    } else {
+        run.shards
+            .iter()
+            .map(|s| {
+                let rep = s.report.borrow();
+                let n = rep.len().max(1) as u64;
+                ShardStat {
+                    label: s.label.clone(),
+                    bst_ns: rep.iter().map(|i| i.bst).sum::<Nanos>() / n,
+                    // An endpoint that closed no iteration delivered
+                    // nothing (a horizon-truncated run), not everything.
+                    delivered: if rep.is_empty() {
+                        0.0
+                    } else {
+                        rep.iter().map(|i| i.mean_delivered).sum::<f64>() / rep.len() as f64
+                    },
+                }
+            })
+            .collect()
+    };
     let bg_bytes: Vec<u64> = bg_handles
         .iter()
         .map(|h| match h {
@@ -330,9 +311,9 @@ pub fn run_with(
             BgHandle::Udp { src_host } => sim.node_as::<CrossTraffic>(*src_host).sent_bytes,
         })
         .collect();
-    let iters = report.borrow().clone();
     RunReport {
         proto: cfg.proto.name().to_string(),
+        agg: cfg.agg.name().to_string(),
         iters,
         total_time,
         gather_summary: Summary::of(&gathers),
@@ -342,6 +323,7 @@ pub fn run_with(
         closes,
         bg_bytes,
         sim_events: sim.events_processed(),
+        shards,
     }
 }
 

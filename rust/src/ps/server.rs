@@ -2,6 +2,13 @@
 //! iteration (loss-tolerant under Early Close for LTP), aggregates, and
 //! broadcasts the updated model reliably.
 //!
+//! A [`PsNode`] serves one **aggregator endpoint** of an aggregation
+//! topology (DESIGN.md §1.2): the classic single PS, one shard of a
+//! sharded deployment, or the root of a hierarchical one. Its place in
+//! the run's per-iteration flow-id space is described by a
+//! [`PsFlowPlan`]; the single-PS plan reproduces the original layout
+//! bit-for-bit.
+//!
 //! BSP pipelining race: a fast worker can finish its broadcast and start
 //! the *next* gather while the PS is still broadcasting to stragglers.
 //! Those early packets are stashed and replayed when the iteration
@@ -39,6 +46,31 @@ impl Aggregate for NullAggregate {
     }
 }
 
+/// Where an aggregator endpoint's flows live inside the run's
+/// per-iteration flow-id space. Iteration `i`'s flows for worker `w`
+/// (local index) are `i * stride + gather_base + w` (gather direction)
+/// and `i * stride + bcast_base + w` (broadcast direction); all
+/// endpoints of one run share `stride`, so their flow spaces never
+/// collide.
+#[derive(Debug, Clone, Copy)]
+pub struct PsFlowPlan {
+    pub gather_base: u64,
+    pub bcast_base: u64,
+    pub stride: u64,
+}
+
+impl PsFlowPlan {
+    /// The classic single-PS layout: gathers in `[0, W)`, broadcasts in
+    /// `[W, 2W)`, stride `2W` — the original star run's numbering.
+    pub fn single(n_workers: usize) -> PsFlowPlan {
+        PsFlowPlan {
+            gather_base: 0,
+            bcast_base: n_workers as u64,
+            stride: 2 * n_workers as u64,
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
     Gathering,
@@ -56,6 +88,11 @@ pub struct PsNode {
     proto: ProtoSpec,
     model_bytes: u64,
     critical: Vec<u32>,
+    plan: PsFlowPlan,
+    /// Offset added to local source indices in [`GatherClose::worker`], so
+    /// every aggregator endpoint of a run reports in one namespace (the
+    /// `hier` root's rack flows index after the workers).
+    worker_base: usize,
     agg: Box<dyn Aggregate>,
     pub tracker: ThresholdTracker,
     iters: u64,
@@ -76,8 +113,9 @@ pub struct PsNode {
     pub report: Rc<RefCell<Vec<IterStats>>>,
     arrivals: Vec<Option<(Bitmap, u64)>>,
     pub delivered_fractions: Vec<f64>,
-    /// Per-flow close records (LTP gathers only), across all iterations.
-    pub closes: Vec<GatherClose>,
+    /// Per-flow close records (LTP gathers only), across all iterations —
+    /// shared with the runner, which merges every aggregator's records.
+    pub closes: Rc<RefCell<Vec<GatherClose>>>,
 }
 
 impl PsNode {
@@ -87,11 +125,13 @@ impl PsNode {
         proto: ProtoSpec,
         model_bytes: u64,
         critical: Vec<u32>,
+        plan: PsFlowPlan,
         agg: Box<dyn Aggregate>,
         tracker: ThresholdTracker,
         iters: u64,
         batches_per_epoch: u64,
         report: Rc<RefCell<Vec<IterStats>>>,
+        closes: Rc<RefCell<Vec<GatherClose>>>,
     ) -> PsNode {
         let w = workers.len();
         PsNode {
@@ -99,6 +139,8 @@ impl PsNode {
             proto,
             model_bytes,
             critical,
+            plan,
+            worker_base: 0,
             agg,
             tracker,
             iters,
@@ -116,8 +158,16 @@ impl PsNode {
             report,
             arrivals: (0..w).map(|_| None).collect(),
             delivered_fractions: vec![],
-            closes: vec![],
+            closes,
         }
+    }
+
+    /// Report close records with source indices offset by `base` (the
+    /// `hier` root numbers its rack forward flows after the workers, so
+    /// the run-wide close list stays unambiguous).
+    pub fn with_worker_base(mut self, base: usize) -> PsNode {
+        self.worker_base = base;
+        self
     }
 
     fn n(&self) -> usize {
@@ -125,16 +175,23 @@ impl PsNode {
     }
 
     fn expected_gather_flow(&self, w: usize, iter: u64) -> u64 {
-        self.proto.wire_flow(iter * 2 * self.n() as u64 + w as u64)
+        self.proto
+            .wire_flow(iter * self.plan.stride + self.plan.gather_base + w as u64)
     }
 
+    /// Resolve a flow id to `(local worker index, is_gather)`. Flows
+    /// outside this endpoint's bands resolve to `(self.n(), _)`, which the
+    /// caller drops. As before, the slot arithmetic assumes the wire's
+    /// (possibly truncated) flow ids have not wrapped within a run.
     fn worker_of_flow(&self, flow: u64) -> (usize, bool) {
-        let per_iter = 2 * self.n() as u64;
-        let slot = flow % per_iter;
-        if slot < self.n() as u64 {
-            (slot as usize, true)
+        let slot = flow % self.plan.stride;
+        let n = self.n() as u64;
+        if slot >= self.plan.gather_base && slot < self.plan.gather_base + n {
+            ((slot - self.plan.gather_base) as usize, true)
+        } else if slot >= self.plan.bcast_base && slot < self.plan.bcast_base + n {
+            ((slot - self.plan.bcast_base) as usize, false)
         } else {
-            (slot as usize - self.n(), false)
+            (self.n(), true)
         }
     }
 
@@ -147,6 +204,10 @@ impl PsNode {
 
     /// Route one gather-direction packet: current-iteration flows go to the
     /// (possibly new) receiver; next-iteration flows are stashed.
+    ///
+    /// NOTE: the rack-local relay (`ps/agg.rs`, `RelayAggNode`) mirrors
+    /// this gather machinery for its worker-facing side — a change here
+    /// belongs there too.
     fn on_gather_packet(&mut self, ctx: &mut Ctx, w: usize, pkt: Packet) {
         let now = ctx.now();
         let me = ctx.me;
@@ -223,9 +284,9 @@ impl PsNode {
                         self.tracker.record_flow(w, now - started, rx.reached_full());
                         self.delivered_fractions.push(rx.delivered_fraction());
                         if let Some((reason, criticals_ok, delivered)) = rx.close_info() {
-                            self.closes.push(GatherClose {
+                            self.closes.borrow_mut().push(GatherClose {
                                 iter: self.iter,
-                                worker: w,
+                                worker: self.worker_base + w,
                                 reason,
                                 criticals_ok,
                                 delivered,
@@ -257,9 +318,8 @@ impl PsNode {
     fn begin_broadcast(&mut self, ctx: &mut Ctx) {
         self.phase = Phase::Broadcasting;
         self.bcast_started = ctx.now();
-        let per_iter = 2 * self.n() as u64;
         for w in 0..self.n() {
-            let flow = self.iter * per_iter + self.n() as u64 + w as u64;
+            let flow = self.iter * self.plan.stride + self.plan.bcast_base + w as u64;
             // Broadcast is reliable; the sender retransmits until the
             // receiver confirms 100 % (no Early Close on this direction).
             self.tx[w] = Some(self.proto.make_tx(TxCfg {

@@ -186,10 +186,11 @@ pub fn registry_matrix() -> Vec<ProtoSpec> {
 }
 
 // ---------------------------------------------------------------------------
-// Grammar helpers.
+// Grammar helpers (shared with the aggregation registry in `ps/agg.rs`,
+// which reuses the same `key[:name=value,...]` spec grammar).
 // ---------------------------------------------------------------------------
 
-fn parse_params(rest: Option<&str>) -> Result<Vec<(String, String)>> {
+pub(super) fn parse_params(rest: Option<&str>) -> Result<Vec<(String, String)>> {
     let Some(rest) = rest else { return Ok(Vec::new()) };
     if rest.trim().is_empty() {
         bail!("empty parameter list after `:`");
@@ -246,12 +247,12 @@ fn parse_fraction(k: &str, v: &str) -> Result<f64> {
     Ok(x)
 }
 
-fn unknown_param(key: &str, k: &str, accepted: &str) -> anyhow::Error {
+pub(super) fn unknown_param(key: &str, k: &str, accepted: &str) -> anyhow::Error {
     anyhow::anyhow!("unknown parameter `{k}` for `{key}` (accepted: {accepted})")
 }
 
 /// Canonical spec string: `key` alone, or `key:` + the given params.
-fn canonical(key: &str, parts: &[String]) -> String {
+pub(super) fn canonical(key: &str, parts: &[String]) -> String {
     if parts.is_empty() {
         key.to_string()
     } else {

@@ -1,5 +1,14 @@
 //! Worker node: compute → gather (loss-tolerant) → wait for the reliable
 //! broadcast → next iteration (BSP).
+//!
+//! A worker's gather/broadcast traffic follows a **routing plan**
+//! assigned by the run's aggregation topology (DESIGN.md §1.2): one
+//! [`WorkerRoute`] per aggregator endpoint, each naming the destination,
+//! the byte range of the gradient sent there, its critical segments, and
+//! the flow-id slots used. The classic single-PS run is the one-route
+//! case ([`WorkerRoute::single`]) and behaves bit-for-bit as before;
+//! sharded runs fan one iteration's gather out over several concurrent
+//! flows that share this worker's uplink.
 
 use super::spec::ProtoSpec;
 use super::transport::{FlowRx, FlowTx, RxCfg, TxCfg};
@@ -21,6 +30,53 @@ pub struct ModeledCompute(pub Nanos);
 impl Compute for ModeledCompute {
     fn compute(&mut self, _worker: usize, _iter: u64) -> Nanos {
         self.0
+    }
+}
+
+/// One (shard → aggregator) leg of a worker's per-iteration traffic: the
+/// gradient byte range `bytes` goes to `dst` on flow
+/// `iter * stride + gather_slot`, and the matching model broadcast comes
+/// back on `iter * stride + bcast_slot`. Slots are unique fabric-wide
+/// within an iteration, so concurrent legs never collide.
+#[derive(Debug, Clone)]
+pub struct WorkerRoute {
+    pub dst: EntityId,
+    /// Gradient bytes this leg carries (the aggregator's shard range).
+    pub bytes: u64,
+    /// Critical segment ids *within this leg's range* (re-based to 0).
+    pub critical: Vec<u32>,
+    pub gather_slot: u64,
+    pub bcast_slot: u64,
+    pub stride: u64,
+}
+
+impl WorkerRoute {
+    /// The classic single-PS route for worker `index` of `n_workers`:
+    /// gather flow `iter·2W + index`, broadcast flow `iter·2W + W + index`
+    /// — the original star run's numbering, bit-for-bit.
+    pub fn single(
+        ps: EntityId,
+        index: usize,
+        n_workers: usize,
+        bytes: u64,
+        critical: Vec<u32>,
+    ) -> WorkerRoute {
+        WorkerRoute {
+            dst: ps,
+            bytes,
+            critical,
+            gather_slot: index as u64,
+            bcast_slot: (n_workers + index) as u64,
+            stride: 2 * n_workers as u64,
+        }
+    }
+
+    fn gather_flow(&self, iter: u64) -> u64 {
+        iter * self.stride + self.gather_slot
+    }
+
+    fn bcast_flow(&self, iter: u64) -> u64 {
+        iter * self.stride + self.bcast_slot
     }
 }
 
@@ -48,69 +104,56 @@ pub struct WorkerStats {
 
 pub struct WorkerNode {
     pub index: usize,
-    ps: EntityId,
-    n_workers: usize,
+    routes: Vec<WorkerRoute>,
     proto: ProtoSpec,
-    model_bytes: u64,
-    critical: Vec<u32>,
     compute: Box<dyn Compute>,
     iters: u64,
     iter: u64,
     phase: Phase,
-    tx: Option<Box<dyn FlowTx>>,
-    rx: Option<Box<dyn FlowRx>>,
-    /// Previous iteration's broadcast receiver, kept to answer straggler
-    /// retransmissions (its final ACKs/Stops may have been lost; a silent
-    /// worker would strand the PS's reliable broadcast sender).
-    rx_prev: Option<Box<dyn FlowRx>>,
+    /// One gather sender per route.
+    txs: Vec<Option<Box<dyn FlowTx>>>,
+    /// One broadcast receiver per route.
+    rxs: Vec<Option<Box<dyn FlowRx>>>,
+    /// Previous iteration's broadcast receivers, kept to answer straggler
+    /// retransmissions (their final ACKs/Stops may have been lost; a
+    /// silent worker would strand an aggregator's reliable broadcast).
+    rx_prevs: Vec<Option<Box<dyn FlowRx>>>,
     gather_started: Nanos,
     bcast_started: Nanos,
-    /// LTP path estimates carried across flows (epoch threshold sharing).
-    path: Option<(Nanos, u64)>,
+    /// LTP path estimates carried across flows, per route (epoch
+    /// threshold sharing).
+    paths: Vec<Option<(Nanos, u64)>>,
     timer_gen: u64,
     pub stats: WorkerStats,
 }
 
 impl WorkerNode {
-    #[allow(clippy::too_many_arguments)]
     pub fn new(
         index: usize,
-        ps: EntityId,
-        n_workers: usize,
+        routes: Vec<WorkerRoute>,
         proto: ProtoSpec,
-        model_bytes: u64,
-        critical: Vec<u32>,
         compute: Box<dyn Compute>,
         iters: u64,
     ) -> WorkerNode {
+        assert!(!routes.is_empty(), "a worker needs at least one aggregator route");
+        let n = routes.len();
         WorkerNode {
             index,
-            ps,
-            n_workers,
+            routes,
             proto,
-            model_bytes,
-            critical,
             compute,
             iters,
             iter: 0,
             phase: Phase::Computing,
-            tx: None,
-            rx: None,
-            rx_prev: None,
+            txs: (0..n).map(|_| None).collect(),
+            rxs: (0..n).map(|_| None).collect(),
+            rx_prevs: (0..n).map(|_| None).collect(),
             gather_started: 0,
             bcast_started: 0,
-            path: None,
+            paths: vec![None; n],
             timer_gen: 0,
             stats: WorkerStats::default(),
         }
-    }
-
-    fn gather_flow(&self, iter: u64) -> u64 {
-        iter * (2 * self.n_workers as u64) + self.index as u64
-    }
-
-    fn bcast_flow(&self, iter: u64) -> u64 {
-        iter * (2 * self.n_workers as u64) + self.n_workers as u64 + self.index as u64
     }
 
     fn begin_compute(&mut self, ctx: &mut Ctx) {
@@ -123,48 +166,62 @@ impl WorkerNode {
     fn begin_gather(&mut self, ctx: &mut Ctx) {
         self.phase = Phase::Gathering;
         self.gather_started = ctx.now();
-        let (rt, bw) = self.path.unwrap_or((0, 0));
-        self.tx = Some(self.proto.make_tx(TxCfg {
-            flow: self.gather_flow(self.iter),
-            bytes: self.model_bytes,
-            critical: self.critical.clone(),
-            seed_rtprop: rt,
-            seed_btlbw_bytes: bw,
-        }));
-        // Broadcast receiver for this iteration: always reliable.
-        self.rx = Some(self.proto.make_rx(RxCfg {
-            flow: self.bcast_flow(self.iter),
-            bytes: self.model_bytes,
-            ec: EarlyCloseCfg::reliable(),
-            critical: vec![],
-            iter: self.iter,
-        }));
+        for (r, route) in self.routes.iter().enumerate() {
+            let (rt, bw) = self.paths[r].unwrap_or((0, 0));
+            self.txs[r] = Some(self.proto.make_tx(TxCfg {
+                flow: route.gather_flow(self.iter),
+                bytes: route.bytes,
+                critical: route.critical.clone(),
+                seed_rtprop: rt,
+                seed_btlbw_bytes: bw,
+            }));
+            // Broadcast receiver for this iteration: always reliable.
+            self.rxs[r] = Some(self.proto.make_rx(RxCfg {
+                flow: route.bcast_flow(self.iter),
+                bytes: route.bytes,
+                ec: EarlyCloseCfg::reliable(),
+                critical: vec![],
+                iter: self.iter,
+            }));
+        }
         self.drain(ctx);
     }
 
     fn drain(&mut self, ctx: &mut Ctx) {
         let now = ctx.now();
         let me = ctx.me;
-        if let Some(tx) = &mut self.tx {
-            while let Some(pkt) = tx.poll(now, me, self.ps) {
-                ctx.send(pkt);
-            }
-            if tx.is_complete() && self.phase == Phase::Gathering {
-                self.phase = Phase::WaitBroadcast;
-                self.bcast_started = now;
-                self.stats.gathers_completed += 1;
-                self.stats.gather_times.push(now - self.gather_started);
-                self.stats.retransmissions += tx.retransmissions();
-                self.stats.pkts_sent += tx.pkts_sent();
-                self.path = tx.path_estimates().or(self.path);
+        for (r, tx) in self.txs.iter_mut().enumerate() {
+            if let Some(tx) = tx {
+                while let Some(pkt) = tx.poll(now, me, self.routes[r].dst) {
+                    ctx.send(pkt);
+                }
             }
         }
-        // Broadcast completion check.
-        let rx_done = self.rx.as_ref().map(|r| r.is_done()).unwrap_or(false);
+        // Gather completion: every route's sender finished (ACKed in full
+        // or stopped by its aggregator).
+        if self.phase == Phase::Gathering
+            && self.txs.iter().all(|t| t.as_ref().map(|t| t.is_complete()).unwrap_or(false))
+        {
+            self.phase = Phase::WaitBroadcast;
+            self.bcast_started = now;
+            self.stats.gathers_completed += 1;
+            self.stats.gather_times.push(now - self.gather_started);
+            for (r, tx) in self.txs.iter().enumerate() {
+                let tx = tx.as_ref().expect("gather completed, so every tx exists");
+                self.stats.retransmissions += tx.retransmissions();
+                self.stats.pkts_sent += tx.pkts_sent();
+                self.paths[r] = tx.path_estimates().or(self.paths[r]);
+            }
+        }
+        // Broadcast completion check: every route's model shard arrived.
+        let rx_done =
+            self.rxs.iter().all(|r| r.as_ref().map(|r| r.is_done()).unwrap_or(false));
         if rx_done && self.phase == Phase::WaitBroadcast {
             self.stats.broadcast_times.push(now - self.bcast_started);
-            self.tx = None;
-            self.rx_prev = self.rx.take();
+            for r in 0..self.routes.len() {
+                self.txs[r] = None;
+                self.rx_prevs[r] = self.rxs[r].take();
+            }
             self.iter += 1;
             if self.iter >= self.iters {
                 self.phase = Phase::Done;
@@ -175,12 +232,14 @@ impl WorkerNode {
         }
         // Re-arm protocol timers.
         self.timer_gen += 1;
-        let tx_wake = self.tx.as_ref().and_then(|t| t.next_wakeup());
-        let rx_wake = self.rx.as_ref().and_then(|r| r.next_wakeup(now));
-        let wake = match (tx_wake, rx_wake) {
-            (Some(a), Some(b)) => Some(a.min(b)),
-            (a, b) => a.or(b),
-        };
+        let mut wake: Option<Nanos> = None;
+        for r in 0..self.routes.len() {
+            let tx_wake = self.txs[r].as_ref().and_then(|t| t.next_wakeup());
+            let rx_wake = self.rxs[r].as_ref().and_then(|x| x.next_wakeup(now));
+            for cand in [tx_wake, rx_wake].into_iter().flatten() {
+                wake = Some(wake.map_or(cand, |a: Nanos| a.min(cand)));
+            }
+        }
         if let Some(w) = wake {
             ctx.set_timer(w.max(now + 1), self.timer_gen);
         }
@@ -210,29 +269,35 @@ impl Node for WorkerNode {
         }
         let now = ctx.now();
         let me = ctx.me;
-        let per_iter = 2 * self.n_workers as u64;
-        let slot = pkt.flow % per_iter;
-        if slot < self.n_workers as u64 {
-            // ACK/Stop for our gather flow.
-            if let Some(tx) = &mut self.tx {
-                tx.handle(now, &pkt);
-            }
-        } else {
-            // Broadcast data from the PS — current flow, or a straggler
-            // retransmission of the previous iteration's flow.
-            let mut outgoing = Vec::new();
-            let cur = self.rx.as_ref().map(|r| r.flow_matches(pkt.flow)).unwrap_or(false);
-            if cur {
-                if let Some(rx) = &mut self.rx {
-                    rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
+        for r in 0..self.routes.len() {
+            let slot = pkt.flow % self.routes[r].stride;
+            if slot == self.routes[r].gather_slot {
+                // ACK/Stop for this route's gather flow (any iteration —
+                // the sender itself ignores stale control traffic).
+                if let Some(tx) = &mut self.txs[r] {
+                    tx.handle(now, &pkt);
                 }
-            } else if let Some(rx) = &mut self.rx_prev {
-                if rx.flow_matches(pkt.flow) {
-                    rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
-                }
+                break;
             }
-            for p in outgoing {
-                ctx.send(p);
+            if slot == self.routes[r].bcast_slot {
+                // Broadcast data from the aggregator — current flow, or a
+                // straggler retransmission of the previous iteration's.
+                let mut outgoing = Vec::new();
+                let cur =
+                    self.rxs[r].as_ref().map(|x| x.flow_matches(pkt.flow)).unwrap_or(false);
+                if cur {
+                    if let Some(rx) = &mut self.rxs[r] {
+                        rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
+                    }
+                } else if let Some(rx) = &mut self.rx_prevs[r] {
+                    if rx.flow_matches(pkt.flow) {
+                        rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
+                    }
+                }
+                for p in outgoing {
+                    ctx.send(p);
+                }
+                break;
             }
         }
         self.drain(ctx);
@@ -249,11 +314,13 @@ impl Node for WorkerNode {
             return;
         }
         let now = ctx.now();
-        if let Some(tx) = &mut self.tx {
-            tx.on_wakeup(now);
-        }
-        if let Some(rx) = &mut self.rx {
-            rx.on_wakeup(now);
+        for r in 0..self.routes.len() {
+            if let Some(tx) = &mut self.txs[r] {
+                tx.on_wakeup(now);
+            }
+            if let Some(rx) = &mut self.rxs[r] {
+                rx.on_wakeup(now);
+            }
         }
         self.drain(ctx);
     }

@@ -6,16 +6,20 @@
 //! Conventions: every incast-class scenario runs the same condition under
 //! each protocol of [`ScenarioParams::matrix`] — by default LTP **and**
 //! TCP Reno (the kernel-default baseline the paper leads with), or
-//! whatever `--proto` specs the caller supplied — labeled
-//! `<proto>/w<degree>`, so the conformance test can pair loss-tolerant
-//! cases with reliable baselines by worker count. `proto_matrix` instead
-//! sweeps **every** matrix-flagged protocol in the registry
-//! ([`crate::ps::registry_matrix`]) over two fabrics.
+//! whatever `--proto` specs the caller supplied — crossed with each
+//! aggregation topology of [`ScenarioParams::aggs`] (default: the single
+//! PS). Cases are labeled `<proto>/w<degree>` under the default
+//! aggregation (the original golden-byte layout) and
+//! `<agg>/<proto>/w<degree>` otherwise, so the conformance test can pair
+//! loss-tolerant cases with reliable baselines by (worker count,
+//! aggregation). `proto_matrix` and `agg_matrix` instead sweep their
+//! whole registries ([`crate::ps::registry_matrix`], the `--agg` spec
+//! set) over fixed fabrics.
 
 use super::{CaseResult, ScenarioParams};
 use crate::cc::CcAlgo;
 use crate::config::{NetEnv, Workload};
-use crate::ps::{BgFlow, ProtoSpec, RunBuilder};
+use crate::ps::{parse_agg, parse_proto, AggSpec, BgFlow, ProtoSpec, RunBuilder, Topo};
 use crate::simnet::LossModel;
 use crate::{Nanos, SEC};
 
@@ -46,15 +50,37 @@ fn run_case(label: String, workers: usize, b: RunBuilder) -> CaseResult {
     CaseResult::from_report(label, workers, &report)
 }
 
+/// Case label: `<proto>/w<degree>` for the default single PS (the
+/// original, golden-byte layout) and `<agg>/<proto>/w<degree>` otherwise.
+fn case_label(agg: &AggSpec, proto: &ProtoSpec, w: usize) -> String {
+    if agg.name() == "ps" {
+        format!("{}/w{w}", proto.name())
+    } else {
+        format!("{}/{}/w{w}", agg.name(), proto.name())
+    }
+}
+
+/// The `--agg` specs applicable to a star scenario at degree `w`: specs
+/// whose divisibility/size rules the combination satisfies (an
+/// `incast_sweep` degree a sharded spec cannot divide is skipped, not an
+/// error — the CLI validates the spec itself up front).
+fn applicable_aggs(p: &ScenarioParams, w: usize, bytes: u64) -> Vec<AggSpec> {
+    p.aggs().into_iter().filter(|a| a.validate(w, bytes, &Topo::Star).is_ok()).collect()
+}
+
 /// `incast_sweep`: N→1 incast at degrees 2..64 under 0.5 % wire loss.
 pub(super) fn incast_sweep(p: &ScenarioParams) -> Vec<CaseResult> {
     let degrees: &[usize] = if p.quick { &[2, 8, 32] } else { &[2, 4, 8, 16, 32, 64] };
     let mut out = Vec::new();
     for &w in degrees {
-        for proto in p.matrix() {
-            let b = base(&proto, w, per_worker_bytes(w, p), p)
-                .loss(LossModel::Bernoulli { p: 0.005 });
-            out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
+        let bytes = per_worker_bytes(w, p);
+        for agg in applicable_aggs(p, w, bytes) {
+            for proto in p.matrix() {
+                let b = base(&proto, w, bytes, p)
+                    .agg(agg.clone())
+                    .loss(LossModel::Bernoulli { p: 0.005 });
+                out.push(run_case(case_label(&agg, &proto, w), w, b));
+            }
         }
     }
     out
@@ -64,18 +90,23 @@ pub(super) fn incast_sweep(p: &ScenarioParams) -> Vec<CaseResult> {
 /// non-congestion loss, where loss-based TCP collapses.
 pub(super) fn incast_heavy_loss(p: &ScenarioParams) -> Vec<CaseResult> {
     let w = 8;
+    let bytes = per_worker_bytes(w, p);
     let mut out = Vec::new();
-    for proto in p.matrix() {
-        let b = base(&proto, w, per_worker_bytes(w, p), p)
-            .loss(LossModel::Bernoulli { p: 0.02 });
-        out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
+    for agg in applicable_aggs(p, w, bytes) {
+        for proto in p.matrix() {
+            let b =
+                base(&proto, w, bytes, p).agg(agg.clone()).loss(LossModel::Bernoulli { p: 0.02 });
+            out.push(run_case(case_label(&agg, &proto, w), w, b));
+        }
     }
     out
 }
 
 /// `rack_oversub`: 8 workers split across two racks behind an aggregation
 /// switch whose trunk carries rack 1's four edges at 1× edge rate (4:1
-/// oversubscription), plus light wire loss.
+/// oversubscription), plus light wire loss. The fabric is fixed, so the
+/// `--agg` override does not apply (compare with `agg_matrix`'s `hier`
+/// cases for aggregation-aware rack deployments).
 pub(super) fn rack_oversub(p: &ScenarioParams) -> Vec<CaseResult> {
     let w = 8;
     let mut out = Vec::new();
@@ -95,9 +126,11 @@ pub(super) fn wan_bursty(p: &ScenarioParams) -> Vec<CaseResult> {
     let w = 4;
     let bytes: u64 = if p.quick { 1_000_000 } else { 2_000_000 };
     let mut out = Vec::new();
-    for proto in p.matrix() {
-        let b = base(&proto, w, bytes, p).net_env(NetEnv::WanBursty);
-        out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
+    for agg in applicable_aggs(p, w, bytes) {
+        for proto in p.matrix() {
+            let b = base(&proto, w, bytes, p).agg(agg.clone()).net_env(NetEnv::WanBursty);
+            out.push(run_case(case_label(&agg, &proto, w), w, b));
+        }
     }
     out
 }
@@ -108,11 +141,15 @@ pub(super) fn cross_traffic(p: &ScenarioParams) -> Vec<CaseResult> {
     let w = 8;
     const BG_RATE: u64 = 4_000_000_000; // 40 % of the 10 Gbps bottleneck
     const BG_STOP: Nanos = 30 * SEC;
+    let bytes = per_worker_bytes(w, p);
     let mut out = Vec::new();
-    for proto in p.matrix() {
-        let b = base(&proto, w, per_worker_bytes(w, p), p)
-            .bg(BgFlow::udp_to_ps(BG_RATE, BG_STOP));
-        out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
+    for agg in applicable_aggs(p, w, bytes) {
+        for proto in p.matrix() {
+            let b = base(&proto, w, bytes, p)
+                .agg(agg.clone())
+                .bg(BgFlow::udp_to_ps(BG_RATE, BG_STOP));
+            out.push(run_case(case_label(&agg, &proto, w), w, b));
+        }
     }
     out
 }
@@ -139,9 +176,11 @@ pub(super) fn wan_clean(p: &ScenarioParams) -> Vec<CaseResult> {
     let w = 4;
     let bytes: u64 = if p.quick { 1_000_000 } else { 2_000_000 };
     let mut out = Vec::new();
-    for proto in p.matrix() {
-        let b = base(&proto, w, bytes, p).net_env(NetEnv::Wan1g);
-        out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
+    for agg in applicable_aggs(p, w, bytes) {
+        for proto in p.matrix() {
+            let b = base(&proto, w, bytes, p).agg(agg.clone()).net_env(NetEnv::Wan1g);
+            out.push(run_case(case_label(&agg, &proto, w), w, b));
+        }
     }
     out
 }
@@ -165,6 +204,38 @@ pub(super) fn proto_matrix(p: &ScenarioParams) -> Vec<CaseResult> {
     for proto in crate::ps::registry_matrix() {
         let b = base(&proto, w, bytes, p).net_env(NetEnv::WanBursty);
         out.push(run_case(format!("wan/{}/w{w}", proto.name()), w, b));
+    }
+    out
+}
+
+/// `agg_matrix`: every aggregation topology — single PS, sharding at
+/// n ∈ {2, 4, 8}, and 2-rack hierarchy — under each of {ltp, reno, dctcp}
+/// on the paper's headline 8→1, 2 %-loss incast fabric. This is where
+/// multi-point aggregation compounds with loss tolerance: sharding
+/// divides each aggregator's incast volume by N, so `sharded:n=4` + ltp
+/// must beat single-PS + ltp on mean BST (asserted by the conformance
+/// test). `--agg`/`--proto` overrides are deliberately ignored so the
+/// scenario always reflects the whole matrix; every case is labeled
+/// `<agg>/<proto>/w8`, the `ps` rows included.
+pub(super) fn agg_matrix(p: &ScenarioParams) -> Vec<CaseResult> {
+    let w = 8;
+    let bytes = per_worker_bytes(w, p);
+    let aggs: Vec<AggSpec> = ["ps", "sharded:n=2", "sharded:n=4", "sharded:n=8", "hier"]
+        .iter()
+        .map(|s| parse_agg(s).expect("agg_matrix specs parse against the registry"))
+        .collect();
+    let protos: Vec<ProtoSpec> = ["ltp", "reno", "dctcp"]
+        .iter()
+        .map(|s| parse_proto(s).expect("agg_matrix protocols parse against the registry"))
+        .collect();
+    let mut out = Vec::new();
+    for agg in &aggs {
+        for proto in &protos {
+            let b = base(proto, w, bytes, p)
+                .agg(agg.clone())
+                .loss(LossModel::Bernoulli { p: 0.02 });
+            out.push(run_case(format!("{}/{}/w{w}", agg.name(), proto.name()), w, b));
+        }
     }
     out
 }

@@ -44,17 +44,30 @@ pub struct ScenarioParams {
     /// each scenario's default matrix — LTP vs Reno for the comparison
     /// scenarios, the whole registry for `proto_matrix`.
     pub protos: Option<Vec<crate::ps::ProtoSpec>>,
+    /// Aggregation-topology override (`--agg` specs, in order). `None`
+    /// keeps each scenario's default — the single-PS star, whose reports
+    /// are byte-identical to the pre-aggregation-API engine. Scenarios
+    /// with a fixed fabric (`rack_oversub`, `coexist_ltp_tcp`) and the
+    /// fixed matrices ignore the override; star scenarios skip (agg,
+    /// degree) points the aggregation rejects (non-divisible workers).
+    pub aggs: Option<Vec<crate::ps::AggSpec>>,
 }
 
 impl ScenarioParams {
     pub fn new(seed: u64, quick: bool) -> ScenarioParams {
-        ScenarioParams { seed, quick, protos: None }
+        ScenarioParams { seed, quick, protos: None, aggs: None }
     }
 
     /// The protocol matrix this run sweeps: the `--proto` override, or the
     /// paper's LTP-vs-Reno baseline.
     pub fn matrix(&self) -> Vec<crate::ps::ProtoSpec> {
         self.protos.clone().unwrap_or_else(crate::ps::baseline_matrix)
+    }
+
+    /// The aggregation topologies this run sweeps: the `--agg` override,
+    /// or the default single PS.
+    pub fn aggs(&self) -> Vec<crate::ps::AggSpec> {
+        self.aggs.clone().unwrap_or_else(|| vec![crate::ps::default_agg()])
     }
 }
 
@@ -140,6 +153,12 @@ pub const REGISTRY: &[Scenario] = &[
         incast_class: true,
         cases: defs::proto_matrix,
     },
+    Scenario {
+        name: "agg_matrix",
+        summary: "aggregation topologies (ps, sharded:n∈{2,4,8}, hier) × {ltp, reno, dctcp} on the 2%-loss incast fabric",
+        incast_class: true,
+        cases: defs::agg_matrix,
+    },
 ];
 
 /// The registry (function form, for iteration symmetry with `find`).
@@ -155,9 +174,14 @@ pub fn find(name: &str) -> Option<&'static Scenario> {
 /// One (topology, protocol, degree) run distilled for the report.
 #[derive(Debug, Clone)]
 pub struct CaseResult {
-    /// E.g. `ltp/w8`.
+    /// E.g. `ltp/w8` (plus an agg prefix for non-default aggregations:
+    /// `sharded:n=4/ltp/w8`).
     pub label: String,
     pub proto: String,
+    /// Canonical aggregation spec the case ran under (`ps` by default).
+    pub agg: String,
+    /// Per-aggregator breakdown; empty for single-aggregator runs.
+    pub shards: Vec<crate::ps::ShardStat>,
     pub workers: usize,
     /// BSP iterations completed within the horizon.
     pub iters: usize,
@@ -202,6 +226,8 @@ impl CaseResult {
         CaseResult {
             label: label.into(),
             proto: r.proto.clone(),
+            agg: r.agg.clone(),
+            shards: r.shards.clone(),
             workers,
             iters: r.iters.len(),
             mean_bst_ms: bst.mean,
@@ -222,7 +248,7 @@ impl CaseResult {
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("label", self.label.as_str().into()),
             ("proto", self.proto.as_str().into()),
             ("workers", self.workers.into()),
@@ -241,7 +267,29 @@ impl CaseResult {
             ("bg_bytes", self.bg_bytes.into()),
             ("total_time_ms", self.total_time_ms.into()),
             ("sim_events", self.sim_events.into()),
-        ])
+        ];
+        // Multi-aggregator runs append their spec and per-aggregator
+        // breakdown; single-PS cases keep the original key set, so
+        // pre-aggregation-API reports stay byte-identical.
+        if !self.shards.is_empty() {
+            pairs.push(("agg", self.agg.as_str().into()));
+            pairs.push((
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("label", s.label.as_str().into()),
+                                ("bst_ns", s.bst_ns.into()),
+                                ("delivered", s.delivered.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -272,16 +320,22 @@ impl ScenarioReport {
     }
 
     /// `(loss-tolerant, reliable-baseline)` case pairs matched by worker
-    /// count — the unit the incast-class invariant is checked over. The
-    /// protocol kind comes from the registry (a case's proto is its
-    /// canonical spec string), not from matching on names.
+    /// count **and aggregation topology** — the unit the incast-class
+    /// invariant is checked over (comparing protocols across different
+    /// fabrics would be apples to oranges). The protocol kind comes from
+    /// the registry (a case's proto is its canonical spec string), not
+    /// from matching on names.
     pub fn invariant_pairs(&self) -> Vec<(&CaseResult, &CaseResult)> {
         let lt = |c: &CaseResult| {
             crate::ps::parse_proto(&c.proto).map(|s| s.is_loss_tolerant()).unwrap_or(false)
         };
         let mut out = Vec::new();
         for l in self.cases.iter().filter(|c| lt(c)) {
-            if let Some(b) = self.cases.iter().find(|c| !lt(c) && c.workers == l.workers) {
+            if let Some(b) = self
+                .cases
+                .iter()
+                .find(|c| !lt(c) && c.workers == l.workers && c.agg == l.agg)
+            {
                 out.push((l, b));
             }
         }

@@ -3,9 +3,9 @@
 //! distill a machine-readable bench report (`BENCH_scenarios.json`).
 //!
 //! **Determinism contract.** A [`SweepJob`] is a pure function of
-//! `(scenario_index, seed, quick, protos)`: every simulation owns its `Sim`, whose
-//! RNG streams derive from the job's seed, and nothing is shared between
-//! jobs. Results are merged in job order, so the report list — and its
+//! `(scenario_index, seed, quick, protos, aggs)`: every simulation owns
+//! its `Sim`, whose RNG streams derive from the job's seed, and nothing
+//! is shared between jobs. Results are merged in job order, so the report list — and its
 //! serialized bytes — are identical for any `--jobs N`. Wall-clock timing
 //! is measured per job but confined to the [`BenchReport`], which is
 //! explicitly *not* part of the deterministic surface.
@@ -16,12 +16,12 @@
 
 use super::{registry, ScenarioParams, ScenarioReport};
 use crate::metrics::Json;
-use crate::ps::ProtoSpec;
+use crate::ps::{AggSpec, ProtoSpec};
 use crate::runtime::pool;
 
-/// One enumerable unit of sweep work. Protocol handles are cheap clones of
-/// thread-shareable transports, so a job remains a pure function of
-/// `(scenario_index, seed, quick, protos)`.
+/// One enumerable unit of sweep work. Protocol and aggregation handles
+/// are cheap clones of thread-shareable specs, so a job remains a pure
+/// function of `(scenario_index, seed, quick, protos, aggs)`.
 #[derive(Debug, Clone)]
 pub struct SweepJob {
     /// Index into [`registry`].
@@ -31,6 +31,9 @@ pub struct SweepJob {
     /// Protocol-matrix override (`--proto` specs); `None` keeps scenario
     /// defaults.
     pub protos: Option<Vec<ProtoSpec>>,
+    /// Aggregation-topology override (`--agg` specs); `None` keeps the
+    /// default single PS.
+    pub aggs: Option<Vec<AggSpec>>,
 }
 
 /// Enumerate the (seed-major) job list for a set of registry indices.
@@ -39,12 +42,19 @@ pub fn sweep_jobs(
     seeds: &[u64],
     quick: bool,
     protos: Option<Vec<ProtoSpec>>,
+    aggs: Option<Vec<AggSpec>>,
 ) -> Vec<SweepJob> {
     let mut out = Vec::with_capacity(indices.len() * seeds.len());
     for &seed in seeds {
         for &scenario_index in indices {
             debug_assert!(scenario_index < registry().len());
-            out.push(SweepJob { scenario_index, seed, quick, protos: protos.clone() });
+            out.push(SweepJob {
+                scenario_index,
+                seed,
+                quick,
+                protos: protos.clone(),
+                aggs: aggs.clone(),
+            });
         }
     }
     out
@@ -59,6 +69,9 @@ pub struct BenchJob {
     /// occurrence order (the bench trajectory records *what* ran, not just
     /// how fast).
     pub protos: Vec<String>,
+    /// Canonical aggregation spec strings the job's cases exercised,
+    /// first-occurrence order (`["ps"]` for the default topology).
+    pub aggs: Vec<String>,
     pub cases: usize,
     /// BSP iterations completed, summed over the scenario's cases.
     pub iters: usize,
@@ -76,6 +89,7 @@ impl BenchJob {
             ("scenario", self.scenario.as_str().into()),
             ("seed", self.seed.into()),
             ("protos", Json::Arr(self.protos.iter().map(|p| p.as_str().into()).collect())),
+            ("aggs", Json::Arr(self.aggs.iter().map(|a| a.as_str().into()).collect())),
             ("cases", self.cases.into()),
             ("iters", self.iters.into()),
             ("mean_bst_ms", self.mean_bst_ms.into()),
@@ -109,7 +123,7 @@ impl BenchReport {
             if self.wall_secs > 0.0 { self.sim_events as f64 / self.wall_secs } else { 0.0 };
         let speedup = if self.wall_secs > 0.0 { self.cpu_secs / self.wall_secs } else { 1.0 };
         Json::obj(vec![
-            ("schema", "ltp-bench-v2".into()),
+            ("schema", "ltp-bench-v3".into()),
             ("jobs_requested", self.jobs_requested.into()),
             ("n_jobs", self.n_jobs.into()),
             ("wall_secs", self.wall_secs.into()),
@@ -157,6 +171,7 @@ pub fn run_sweep(jobs: Vec<SweepJob>, n_jobs: usize) -> SweepResult {
             seed: job.seed,
             quick: job.quick,
             protos: job.protos,
+            aggs: job.aggs,
         });
         (report, jt.elapsed().as_secs_f64())
     });
@@ -169,15 +184,20 @@ pub fn run_sweep(jobs: Vec<SweepJob>, n_jobs: usize) -> SweepResult {
         let events: u64 = report.cases.iter().map(|c| c.sim_events).sum();
         let ncases = report.cases.len().max(1);
         let mut protos: Vec<String> = Vec::new();
+        let mut aggs: Vec<String> = Vec::new();
         for c in &report.cases {
             if !protos.contains(&c.proto) {
                 protos.push(c.proto.clone());
+            }
+            if !aggs.contains(&c.agg) {
+                aggs.push(c.agg.clone());
             }
         }
         per_job.push(BenchJob {
             scenario: report.name.clone(),
             seed: report.seed,
             protos,
+            aggs,
             cases: report.cases.len(),
             iters: report.cases.iter().map(|c| c.iters).sum(),
             mean_bst_ms: report.cases.iter().map(|c| c.mean_bst_ms).sum::<f64>()
@@ -215,14 +235,14 @@ mod tests {
 
     #[test]
     fn job_enumeration_is_seed_major() {
-        let jobs = sweep_jobs(&[0, 1], &[5, 6], true, None);
+        let jobs = sweep_jobs(&[0, 1], &[5, 6], true, None, None);
         let key: Vec<(u64, usize)> = jobs.iter().map(|j| (j.seed, j.scenario_index)).collect();
         assert_eq!(key, vec![(5, 0), (5, 1), (6, 0), (6, 1)]);
     }
 
     #[test]
     fn bench_report_carries_perf_fields() {
-        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, None);
+        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, None, None);
         let result = run_sweep(jobs, 2);
         assert_eq!(result.reports.len(), 1);
         assert_eq!(result.bench.per_job.len(), 1);
@@ -230,15 +250,17 @@ mod tests {
         assert_eq!(j.scenario, "wan_clean");
         assert_eq!(j.seed, 3);
         assert_eq!(j.protos, ["ltp", "reno"], "bench records the job's proto specs");
+        assert_eq!(j.aggs, ["ps"], "bench records the job's agg specs");
         assert!(j.sim_events > 0, "a simulation processes events");
         assert!(j.mean_bst_ms > 0.0);
         let json = result.bench.to_json().render();
         for key in [
-            "\"schema\":\"ltp-bench-v2\"",
+            "\"schema\":\"ltp-bench-v3\"",
             "\"runs\":[",
             "\"events_per_sec\":",
             "\"speedup\":",
             "\"protos\":[\"ltp\",\"reno\"]",
+            "\"aggs\":[\"ps\"]",
         ] {
             assert!(json.contains(key), "missing `{key}` in {json}");
         }
@@ -247,7 +269,7 @@ mod tests {
     #[test]
     fn proto_override_reaches_the_cases() {
         let protos = vec![crate::ps::parse_proto("cubic").unwrap()];
-        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, Some(protos));
+        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, Some(protos), None);
         let result = run_sweep(jobs, 1);
         let report = &result.reports[0];
         assert!(!report.cases.is_empty());
@@ -256,10 +278,28 @@ mod tests {
     }
 
     #[test]
+    fn agg_override_reaches_the_cases_and_bench() {
+        let aggs = vec![crate::ps::parse_agg("sharded:n=2").unwrap()];
+        let jobs =
+            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, Some(aggs));
+        let result = run_sweep(jobs, 1);
+        let report = &result.reports[0];
+        assert!(!report.cases.is_empty());
+        assert!(
+            report.cases.iter().all(|c| c.agg == "sharded:n=2"),
+            "{:?}",
+            report.cases
+        );
+        assert!(report.cases.iter().all(|c| c.label.starts_with("sharded:n=2/")));
+        assert_eq!(result.bench.per_job[0].aggs, ["sharded:n=2"]);
+    }
+
+    #[test]
     fn single_report_renders_as_object_many_as_array() {
-        let one = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1], true, None), 1);
+        let one = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1], true, None, None), 1);
         assert!(one.render_json().starts_with('{'));
-        let two = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1, 2], true, None), 2);
+        let two =
+            run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1, 2], true, None, None), 2);
         assert!(two.render_json().starts_with('['));
         assert_eq!(two.reports[0].seed, 1);
         assert_eq!(two.reports[1].seed, 2);

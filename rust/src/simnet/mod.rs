@@ -16,7 +16,10 @@ mod topo;
 
 pub use link::{Link, LinkCfg, LinkStats, LossModel};
 pub use sim::{Ctx, EntityId, Event, LinkId, Node, Sim};
-pub use topo::{star, two_rack, CountingSink, CrossTraffic, StarTopology, TwoRackTopology};
+pub use topo::{
+    n_rack, star, two_rack, CountingSink, CrossTraffic, RackTopology, StarTopology,
+    TwoRackTopology,
+};
 
 use crate::wire::PacketKind;
 

@@ -38,46 +38,47 @@ pub fn star(sim: &mut Sim, nodes: Vec<Box<dyn Node>>, cfg: LinkCfg, fwd_delay: N
     StarTopology { switch, hosts, uplinks, downlinks }
 }
 
-/// A two-rack topology: two ToR switches under one aggregation switch.
-/// Cross-rack traffic funnels through the (typically oversubscribed)
-/// ToR↔agg links; in-rack traffic stays under its ToR.
-pub struct TwoRackTopology {
+/// An N-rack topology: one ToR switch per rack under one aggregation
+/// switch. Cross-rack traffic funnels through the (typically
+/// oversubscribed) ToR↔agg links; in-rack traffic stays under its ToR.
+pub struct RackTopology {
     pub agg: EntityId,
     /// `tors[r]` is rack r's ToR switch.
-    pub tors: [EntityId; 2],
+    pub tors: Vec<EntityId>,
     /// All hosts in creation order (rack 0 first).
     pub hosts: Vec<EntityId>,
     /// `rack_of[i]` is the rack of `hosts[i]`.
     pub rack_of: Vec<usize>,
     /// `trunk_up[r]`: tor r → agg; `trunk_down[r]`: agg → tor r.
-    pub trunk_up: [LinkId; 2],
-    pub trunk_down: [LinkId; 2],
+    pub trunk_up: Vec<LinkId>,
+    pub trunk_down: Vec<LinkId>,
 }
 
-/// Build a two-rack fabric: `racks[r]` holds rack r's host nodes, every
-/// edge link uses `edge`, both ToR↔agg trunks use `trunk` (make
+/// Build an N-rack fabric: `racks[r]` holds rack r's host nodes, every
+/// edge link uses `edge`, every ToR↔agg trunk uses `trunk` (make
 /// `trunk.rate_bps` smaller than the sum of edge rates for an
 /// oversubscribed fabric). Switches add `fwd_delay` forwarding latency.
 ///
-/// Entity-id layout (deterministic): agg, tor0, tor1, then the hosts of
-/// rack 0, then the hosts of rack 1.
-pub fn two_rack(
+/// Entity-id layout (deterministic): agg, tor0, …, torN-1, then the hosts
+/// of rack 0, rack 1, … in order.
+pub fn n_rack(
     sim: &mut Sim,
-    racks: [Vec<Box<dyn Node>>; 2],
+    racks: Vec<Vec<Box<dyn Node>>>,
     edge: LinkCfg,
     trunk: LinkCfg,
     fwd_delay: Nanos,
-) -> TwoRackTopology {
+) -> RackTopology {
+    assert!(!racks.is_empty(), "a rack fabric needs at least one rack");
     let agg = sim.add_switch(fwd_delay);
-    let tors = [sim.add_switch(fwd_delay), sim.add_switch(fwd_delay)];
-    let mut trunk_up = [0; 2];
-    let mut trunk_down = [0; 2];
-    for r in 0..2 {
-        let (up, down) = sim.add_duplex(tors[r], agg, trunk);
-        trunk_up[r] = up;
-        trunk_down[r] = down;
+    let tors: Vec<EntityId> = racks.iter().map(|_| sim.add_switch(fwd_delay)).collect();
+    let mut trunk_up = Vec::with_capacity(tors.len());
+    let mut trunk_down = Vec::with_capacity(tors.len());
+    for &tor in &tors {
+        let (up, down) = sim.add_duplex(tor, agg, trunk);
+        trunk_up.push(up);
+        trunk_down.push(down);
         // Cross-rack traffic leaves the ToR via its trunk by default.
-        sim.set_default_uplink(tors[r], up);
+        sim.set_default_uplink(tor, up);
     }
     let mut hosts = Vec::new();
     let mut rack_of = Vec::new();
@@ -93,7 +94,43 @@ pub fn two_rack(
             rack_of.push(r);
         }
     }
-    TwoRackTopology { agg, tors, hosts, rack_of, trunk_up, trunk_down }
+    RackTopology { agg, tors, hosts, rack_of, trunk_up, trunk_down }
+}
+
+/// A two-rack topology — the `racks = 2` case of [`RackTopology`], kept
+/// with fixed-size fields for the original scenario callers.
+pub struct TwoRackTopology {
+    pub agg: EntityId,
+    /// `tors[r]` is rack r's ToR switch.
+    pub tors: [EntityId; 2],
+    /// All hosts in creation order (rack 0 first).
+    pub hosts: Vec<EntityId>,
+    /// `rack_of[i]` is the rack of `hosts[i]`.
+    pub rack_of: Vec<usize>,
+    /// `trunk_up[r]`: tor r → agg; `trunk_down[r]`: agg → tor r.
+    pub trunk_up: [LinkId; 2],
+    pub trunk_down: [LinkId; 2],
+}
+
+/// Build a two-rack fabric — [`n_rack`] with `racks = 2` (identical
+/// entity-id layout and link creation order, so reports stay
+/// byte-identical).
+pub fn two_rack(
+    sim: &mut Sim,
+    racks: [Vec<Box<dyn Node>>; 2],
+    edge: LinkCfg,
+    trunk: LinkCfg,
+    fwd_delay: Nanos,
+) -> TwoRackTopology {
+    let t = n_rack(sim, racks.into(), edge, trunk, fwd_delay);
+    TwoRackTopology {
+        agg: t.agg,
+        tors: [t.tors[0], t.tors[1]],
+        hosts: t.hosts,
+        rack_of: t.rack_of,
+        trunk_up: [t.trunk_up[0], t.trunk_up[1]],
+        trunk_down: [t.trunk_down[0], t.trunk_down[1]],
+    }
 }
 
 /// A constant-rate background datagram source (cross traffic). Emits
@@ -290,6 +327,34 @@ mod tests {
         // Cross-rack traffic used the trunks; in-rack did not need to.
         assert!(sim.link_stats(topo.trunk_up[1]).tx_pkts >= 2, "rack1 pings cross the trunk");
         assert!(sim.link_stats(topo.trunk_down[1]).tx_pkts >= 2, "pongs return over the trunk");
+    }
+
+    #[test]
+    fn n_rack_three_racks_all_cross_rack_reachable() {
+        let echo_seen = Rc::new(RefCell::new(0));
+        let pong = Rc::new(RefCell::new(0));
+        let mut sim = Sim::new(5);
+        // Entity ids: agg 0, tors 1..=3, hosts 4… — the echo target is
+        // rack 0's only host (id 4); one pinger per other rack.
+        let racks: Vec<Vec<Box<dyn Node>>> = vec![
+            vec![Box::new(Echo { seen: echo_seen.clone() })],
+            vec![Box::new(Pinger { target: 4, seen: pong.clone() })],
+            vec![Box::new(Pinger { target: 4, seen: pong.clone() })],
+        ];
+        let edge = LinkCfg::dcn(10, 2);
+        let trunk = LinkCfg::dcn(10, 5);
+        let topo = n_rack(&mut sim, racks, edge, trunk, 0);
+        assert_eq!(topo.tors.len(), 3);
+        assert_eq!(topo.hosts, vec![4, 5, 6]);
+        assert_eq!(topo.rack_of, vec![0, 1, 2]);
+        sim.run();
+        assert_eq!(*echo_seen.borrow(), 2);
+        assert_eq!(*pong.borrow(), 2);
+        // Every ping crossed its rack's trunk and came back over rack 0's.
+        for r in 1..3 {
+            assert!(sim.link_stats(topo.trunk_up[r]).tx_pkts >= 1, "rack {r} uplink");
+        }
+        assert!(sim.link_stats(topo.trunk_down[0]).tx_pkts >= 2, "pings reach rack 0");
     }
 
     #[test]

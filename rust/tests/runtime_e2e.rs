@@ -142,6 +142,7 @@ fn full_training_over_lossy_ltp_reduces_loss() {
     .unwrap();
 
     let shared2 = shared.clone();
+    let shared_agg = shared.clone();
     let report = run_with(
         &cfg,
         move |w, _| {
@@ -150,7 +151,7 @@ fn full_training_over_lossy_ltp_reduces_loss() {
                 corpus: Corpus::new(shared2.manifest.vocab, 1000 + w as u64),
             })
         },
-        Box::new(XlaAggregate { shared: shared.clone(), n_workers }),
+        move |_| Box::new(XlaAggregate { shared: shared_agg.clone(), n_workers }),
     );
     assert_eq!(report.iters.len(), 25, "all BSP iterations must complete");
     let losses: Vec<f32> = report.iters.iter().filter_map(|i| i.loss).collect();

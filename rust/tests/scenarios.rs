@@ -207,6 +207,71 @@ fn scenario_proto_matrix() {
 }
 
 #[test]
+fn scenario_agg_matrix() {
+    let report = conformance("agg_matrix");
+    // Every aggregation topology ran under every matrix protocol.
+    let aggs: std::collections::BTreeSet<&str> =
+        report.cases.iter().map(|c| c.agg.as_str()).collect();
+    for want in ["ps", "sharded:n=2", "sharded:n=4", "sharded:n=8", "hier"] {
+        assert!(aggs.contains(want), "agg_matrix missing `{want}`: {aggs:?}");
+    }
+    let protos: std::collections::BTreeSet<&str> =
+        report.cases.iter().map(|c| c.proto.as_str()).collect();
+    assert_eq!(protos.len(), 3, "{protos:?}");
+    assert_eq!(report.cases.len(), aggs.len() * protos.len());
+    // Multi-aggregator cases carry a per-aggregator breakdown; the
+    // single-PS rows keep the legacy shape.
+    for c in &report.cases {
+        if c.agg == "ps" {
+            assert!(c.shards.is_empty(), "{}: ps rows have no shard breakdown", c.label);
+        } else {
+            assert!(!c.shards.is_empty(), "{}: missing shard breakdown", c.label);
+        }
+    }
+    // The headline claim of the aggregation API (and the repo's
+    // acceptance criterion): partitioning the incast across 4 PS nodes
+    // strictly lowers LTP's mean BST on the 2%-loss fabric at equal
+    // worker count.
+    let find = |agg: &str| {
+        report
+            .cases
+            .iter()
+            .find(|c| c.agg == agg && c.proto == "ltp")
+            .unwrap_or_else(|| panic!("missing {agg}/ltp case"))
+    };
+    let ps = find("ps");
+    let sharded = find("sharded:n=4");
+    assert_eq!(ps.workers, sharded.workers);
+    assert!(
+        sharded.mean_bst_ms < ps.mean_bst_ms,
+        "sharded:n=4 + ltp mean BST {:.2} ms must be strictly below single-PS {:.2} ms",
+        sharded.mean_bst_ms,
+        ps.mean_bst_ms
+    );
+}
+
+#[test]
+fn scenario_matrix_respects_agg_overrides() {
+    // `--agg` multiplies a star scenario's cases; `--agg ps` reproduces
+    // the default labels exactly (CI diffs this byte-for-byte through the
+    // binary).
+    let mut p = ScenarioParams::new(7, true);
+    p.aggs = Some(vec![ltp::ps::parse_agg("ps").unwrap()]);
+    let explicit = find("incast_heavy_loss").unwrap().run(&p);
+    let default = find("incast_heavy_loss").unwrap().run(&params());
+    assert_eq!(
+        explicit.render_json(),
+        default.render_json(),
+        "--agg ps must be byte-identical to the bare default"
+    );
+    // A non-default aggregation prefixes its labels.
+    p.aggs = Some(vec![ltp::ps::parse_agg("hier").unwrap()]);
+    let hier = find("incast_heavy_loss").unwrap().run(&p);
+    assert!(hier.cases.iter().all(|c| c.label.starts_with("hier/")), "{:?}", hier.cases);
+    assert!(hier.cases.iter().all(|c| c.agg == "hier"));
+}
+
+#[test]
 fn scenario_matrix_respects_proto_overrides() {
     // `--proto` narrows a comparison scenario's matrix; proto_matrix
     // ignores it (it always reflects the whole registry).
