@@ -1,0 +1,342 @@
+//! The pluggable **compute plane** (DESIGN.md §1.3) — the third pluggable
+//! layer after transports (§1.1) and aggregation topologies (§1.2).
+//!
+//! A [`Backend`] supplies the *numerics* of a training run: what each
+//! worker computes every iteration ([`crate::ps::Compute`]) and what each
+//! aggregator endpoint does when its gathers close
+//! ([`crate::ps::Aggregate`]). Backends are registered under string keys
+//! and instantiated from specs reusing the transport/aggregation grammar
+//! (`key[:name=value,...]`, [`parse_backend`]):
+//!
+//! * `native` — a deterministic pure-Rust trainer (seeded synthetic
+//!   classification corpus, dense f32 MLP with a hand-written backward
+//!   pass, momentum SGD, and a masked-mean aggregation that consumes
+//!   [`crate::grad::element_mask`] exactly like the Pallas kernel). Runs
+//!   everywhere, no artifacts needed — this is what makes the paper's
+//!   accuracy-under-loss claims CI-assertable.
+//! * `xla` — the PJRT/AOT path (`train_step`/`aggregate`/`eval` HLO
+//!   artifacts produced by `make artifacts`); fails fast with an
+//!   artifacts message when the AOT step has not run.
+//!
+//! A backend is thread-shareable configuration; each simulated run opens
+//! its own single-threaded [`TrainSession`] (seeded from the run), so
+//! sweep jobs stay pure functions of their inputs and `--jobs N` reports
+//! remain byte-identical to serial ones. With a backend attached, a
+//! [`crate::ps::RunReport`] carries a deterministic [`TrainStats`] block
+//! (`final_loss`, `accuracy`, `iters_to_target`); with none attached the
+//! report keeps its original byte layout.
+
+mod native;
+mod xla;
+
+pub use native::NativeBackend;
+pub use xla::XlaBackend;
+
+use crate::ps::spec::parse_params;
+use crate::ps::{Aggregate, Compute, EndpointRole, IterStats};
+use crate::Nanos;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Deterministic training outcome of a backend-attached run, emitted into
+/// the run report (and the scenario JSON) **only when a backend is
+/// attached**, so default reports keep their golden bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainStats {
+    /// Loss of the final parameters on the backend's held-out eval set.
+    pub final_loss: f32,
+    /// Accuracy of the final parameters on the held-out eval set
+    /// (fraction correct for `native`; a per-token probability proxy,
+    /// `exp(-loss)`, for the `xla` language model).
+    pub accuracy: f64,
+    /// 1-based count of BSP iterations until the mean training loss first
+    /// reached the backend's `target`; `None` if it never did.
+    pub iters_to_target: Option<u64>,
+}
+
+/// Wire-layout facts a backend derives deterministically from its
+/// configuration: the run's message size and critical segment set.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    /// Gradient bytes on the wire per worker per iteration.
+    pub wire_bytes: u64,
+    /// Critical segment ids (tensor-boundary segments, paper §III-E).
+    pub critical: Vec<u32>,
+}
+
+/// Per-run context handed to [`Backend::open`]: everything a session
+/// needs to seed its corpus/init and to build one [`Aggregate`] per
+/// aggregator endpoint of the run's topology.
+#[derive(Debug, Clone)]
+pub struct RunCtx {
+    /// The run's master seed (task, init, and corpus streams derive from
+    /// it).
+    pub seed: u64,
+    pub n_workers: usize,
+    /// Simulated duration of one worker compute step.
+    pub compute_time: Nanos,
+    /// Simulated duration of one aggregation.
+    pub agg_time: Nanos,
+    /// One role per aggregator endpoint, in endpoint order (from
+    /// [`crate::ps::Aggregation::endpoint_roles`]).
+    pub roles: Vec<EndpointRole>,
+}
+
+/// A training backend: thread-shareable, registered under a string key,
+/// instantiated from CLI specs like `native:dim=64,lr=0.1` or
+/// `xla:preset=tiny`.
+pub trait Backend: Send + Sync {
+    /// Canonical spec string — the backend's label everywhere.
+    fn name(&self) -> &str;
+
+    /// Fail-fast precondition check, run at [`crate::ps::RunBuilder::build`]
+    /// time. The error must name the backend's *actual* missing dependency
+    /// (the `xla` backend needs `make artifacts`; `native` needs nothing).
+    fn check_ready(&self) -> Result<()>;
+
+    /// Deterministic wire layout of this backend's gradient.
+    fn model(&self) -> Result<ModelInfo>;
+
+    /// Can this backend serve a run with `workers` workers over the given
+    /// aggregation-endpoint roles? The default accepts everything; `xla`
+    /// restricts to a single full-model endpoint within its artifact's
+    /// baked-in worker capacity.
+    fn supports(&self, _workers: usize, _roles: &[EndpointRole]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Open a per-run, single-threaded training session.
+    fn open(&self, run: &RunCtx) -> Result<Box<dyn TrainSession>>;
+}
+
+/// One run's training state: produces the per-worker [`Compute`] and
+/// per-endpoint [`Aggregate`] objects wired into the simulation, and
+/// distills the outcome afterwards. Sessions are single-threaded (they
+/// live inside one simulated run) and deterministic in the run seed.
+pub trait TrainSession {
+    fn make_compute(&mut self, worker: usize) -> Box<dyn Compute>;
+
+    /// Build the aggregation backend for endpoint `endpoint` (indexing
+    /// [`RunCtx::roles`]).
+    fn make_agg(&mut self, endpoint: usize) -> Box<dyn Aggregate>;
+
+    /// The current flat parameter vector (tests assert cross-topology
+    /// bit-identity on this).
+    fn params(&self) -> Vec<f32>;
+
+    /// Distill the run's deterministic training outcome from the merged
+    /// iteration records.
+    fn stats(&self, iters: &[IterStats]) -> TrainStats;
+}
+
+/// A parsed, validated backend spec: the handle stored in run
+/// configurations and carried across worker threads by the sweep driver.
+/// Clones share the underlying [`Backend`].
+#[derive(Clone)]
+pub struct BackendSpec(Arc<dyn Backend>);
+
+impl BackendSpec {
+    /// Canonical spec string — the backend's name everywhere (labels,
+    /// JSON reports, bench records). Borrowed; no per-call allocation.
+    pub fn name(&self) -> &str {
+        self.0.name()
+    }
+}
+
+impl std::ops::Deref for BackendSpec {
+    type Target = dyn Backend;
+
+    fn deref(&self) -> &(dyn Backend + 'static) {
+        &*self.0
+    }
+}
+
+impl std::fmt::Display for BackendSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::fmt::Debug for BackendSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BackendSpec({})", self.name())
+    }
+}
+
+/// Two specs are equal iff their canonical names are.
+impl PartialEq for BackendSpec {
+    fn eq(&self, other: &BackendSpec) -> bool {
+        self.name() == other.name()
+    }
+}
+
+impl std::str::FromStr for BackendSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<BackendSpec> {
+        parse_backend(s)
+    }
+}
+
+/// One registered backend family.
+pub struct BackendDef {
+    /// Spec key (`--backend <key>[:params]`).
+    pub key: &'static str,
+    pub summary: &'static str,
+    /// Accepted `name=value` parameters, for `ltp backend list`.
+    pub params: &'static str,
+    build: fn(&[(String, String)]) -> Result<BackendSpec>,
+}
+
+/// The backend registry. Append entries here (and their implementations
+/// in this module); the CLI (`--backend`, `ltp backend list`), the
+/// `accuracy_matrix` scenario, and the conformance tests follow.
+pub const BACKEND_REGISTRY: &[BackendDef] = &[
+    BackendDef {
+        key: "native",
+        summary: "deterministic pure-Rust MLP trainer (synthetic corpus, masked-mean SGD)",
+        params: "dim=<features>, layers=<hidden>, hidden=<width>, classes=<C>, lr=<rate>, \
+                 fill=<on|off>, target=<loss>",
+        build: native::build_native,
+    },
+    BackendDef {
+        key: "xla",
+        summary: "PJRT execution of the AOT-compiled JAX/Pallas artifacts (needs `make artifacts`)",
+        params: "preset=<name>, lr=<rate>, target=<loss>",
+        build: xla::build_xla,
+    },
+];
+
+/// The registry (function form, for iteration symmetry with the protocol,
+/// aggregation, and scenario registries).
+pub fn backend_registry() -> &'static [BackendDef] {
+    BACKEND_REGISTRY
+}
+
+/// Parse a backend spec (`native`, `native:dim=64,fill=off`,
+/// `xla:preset=tiny`) against the registry.
+pub fn parse_backend(spec: &str) -> Result<BackendSpec> {
+    let spec = spec.trim();
+    let (key, rest) = match spec.split_once(':') {
+        Some((k, r)) => (k, Some(r)),
+        None => (spec, None),
+    };
+    let key = key.to_ascii_lowercase();
+    let Some(def) = BACKEND_REGISTRY.iter().find(|d| d.key == key) else {
+        let known: Vec<&str> = BACKEND_REGISTRY.iter().map(|d| d.key).collect();
+        bail!("unknown backend `{key}` in spec `{spec}` (known: {})", known.join(", "));
+    };
+    let params = parse_params(rest).with_context(|| format!("in backend spec `{spec}`"))?;
+    (def.build)(&params).with_context(|| format!("in backend spec `{spec}`"))
+}
+
+// ---------------------------------------------------------------------------
+// Shared parameter-value helpers for the backend builders.
+// ---------------------------------------------------------------------------
+
+fn parse_count(key: &str, v: &str) -> Result<usize> {
+    let n: usize = v.parse().with_context(|| format!("bad value for `{key}`: `{v}`"))?;
+    if n == 0 {
+        bail!("`{key}=0`: need at least one");
+    }
+    Ok(n)
+}
+
+fn parse_rate(key: &str, v: &str) -> Result<f32> {
+    let x: f32 = v.parse().with_context(|| format!("bad value for `{key}`: `{v}`"))?;
+    if !(x > 0.0 && x.is_finite()) {
+        bail!("`{key}={v}` out of range (need a positive finite value)");
+    }
+    Ok(x)
+}
+
+fn parse_switch(key: &str, v: &str) -> Result<bool> {
+    match v.to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        _ => bail!("bad value for `{key}`: `{v}` (expected on|off)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_parse_with_canonical_names() {
+        for (spec, canon) in [
+            ("native", "native"),
+            ("NATIVE", "native"),
+            ("native:dim=64", "native:dim=64"),
+            ("native:fill=off", "native:fill=off"),
+            ("xla", "xla"),
+            ("XLA:preset=tiny", "xla:preset=tiny"),
+        ] {
+            let b = parse_backend(spec).unwrap_or_else(|e| panic!("{spec}: {e:#}"));
+            assert_eq!(b.name(), canon, "{spec}");
+            // Canonical form is a fixed point of the grammar.
+            assert_eq!(parse_backend(b.name()).unwrap().name(), canon, "{spec}");
+        }
+    }
+
+    #[test]
+    fn parameter_order_normalizes() {
+        let b = parse_backend("native:lr=0.2,dim=16").unwrap();
+        assert_eq!(b.name(), "native:dim=16,lr=0.2");
+    }
+
+    #[test]
+    fn spec_equality_is_canonical() {
+        assert_eq!(parse_backend("native").unwrap(), parse_backend("NATIVE").unwrap());
+        assert_ne!(
+            parse_backend("native").unwrap(),
+            parse_backend("native:dim=16").unwrap()
+        );
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "torch",                 // unknown backend
+            "native:",               // empty parameter list
+            "native:dim",            // malformed parameter
+            "native:dim=",           // empty value
+            "native:dim=0",          // zero
+            "native:dim=x",          // non-numeric
+            "native:dim=8,dim=9",    // duplicate parameter
+            "native:lr=-1",          // out of range
+            "native:lr=nope",        // non-numeric
+            "native:fill=maybe",     // bad switch
+            "native:window=3",       // unknown parameter
+            "xla:foo=1",             // unknown parameter
+            "xla:lr=0",              // out of range
+        ] {
+            assert!(parse_backend(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn registry_is_well_formed() {
+        let mut keys: Vec<&str> = BACKEND_REGISTRY.iter().map(|d| d.key).collect();
+        assert!(keys.contains(&"native") && keys.contains(&"xla"));
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), BACKEND_REGISTRY.len(), "backend keys must be unique");
+    }
+
+    #[test]
+    fn native_is_ready_everywhere() {
+        parse_backend("native").unwrap().check_ready().unwrap();
+    }
+
+    #[test]
+    fn native_model_info_is_deterministic() {
+        let b = parse_backend("native").unwrap();
+        let a = b.model().unwrap();
+        let c = b.model().unwrap();
+        assert_eq!(a.wire_bytes, c.wire_bytes);
+        assert_eq!(a.critical, c.critical);
+        assert!(a.wire_bytes > 0 && a.wire_bytes % 4 == 0);
+        assert!(!a.critical.is_empty(), "tensor boundaries produce criticals");
+    }
+}

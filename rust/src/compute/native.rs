@@ -1,0 +1,894 @@
+//! The `native` backend: a deterministic, dependency-free trainer that
+//! makes accuracy-vs-loss measurable everywhere (DESIGN.md §1.3).
+//!
+//! * **Data** — a seeded synthetic classification corpus: each class `c`
+//!   draws a mean vector `μ_c ~ N(0, 3²)` per feature (seeded from the
+//!   run seed), samples are `x = (μ_y + N(0, 1)) / √dim` (normalized so
+//!   activations stay O(1) at any width). Every worker owns a disjoint
+//!   deterministic stream; a fixed held-out eval set measures final
+//!   loss/accuracy.
+//! * **Model** — a dense f32 MLP (`dim → hidden×layers → classes`,
+//!   leaky-ReLU, softmax cross-entropy) with a hand-written backward
+//!   pass. Parameters live in one flat vector whose tensor layout also
+//!   yields the wire manifest (critical segments = tensor boundaries).
+//! * **Aggregation** — the masked mean the Pallas kernel implements:
+//!   per element, `mean = Σ_w g_w·m_w / Σ_w m_w` with `m` from
+//!   [`crate::grad::element_mask`] over the transport's delivery bitmap
+//!   (bubbles are zeros with zero weight — unbiased), then momentum SGD
+//!   (`v ← 0.9·v + mean`, `p ← p − lr·v`). With `fill=off` the masks
+//!   still zero the lost bytes (that is what the wire delivered) but the
+//!   denominator counts every contributing worker — the biased estimate a
+//!   receiver without bubble filling would compute; the `accuracy_matrix`
+//!   scenario sweeps both.
+//!
+//! Gradient values never ride simulated packets: workers deposit into a
+//! shared in-process store and aggregators read it gated by the
+//! transport's delivery bitmaps (the [`crate::ps::Blackboard`] pattern),
+//! so the numerics see exactly what the wire delivered. Summation is in
+//! worker order at every endpoint, which makes `ps`, `sharded:n=N`, and
+//! `hier` aggregation **bit-identical** at zero loss (asserted by
+//! `rust/tests/agg.rs`).
+
+use super::{
+    parse_count, parse_rate, parse_switch, Backend, BackendSpec, ModelInfo, RunCtx,
+    TrainSession, TrainStats,
+};
+use crate::grad::{element_mask, Manifest};
+use crate::proto::SegmentMap;
+use crate::ps::spec::{canonical, unknown_param};
+use crate::ps::{Aggregate, Compute, EndpointRole, IterStats};
+use crate::util::{Bitmap, Pcg64};
+use crate::wire::LTP_MSS;
+use crate::Nanos;
+use anyhow::Result;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// Per-worker minibatch size (matches the paper's batch-32 workloads).
+const BATCH: usize = 32;
+/// Held-out eval set size.
+const EVAL_SAMPLES: usize = 256;
+/// Momentum coefficient — the same the Pallas aggregate kernel uses.
+const MOMENTUM: f32 = 0.9;
+/// Leaky-ReLU negative slope (avoids dead units under any seed).
+const LEAK: f32 = 0.01;
+/// Class-mean spread vs unit sample noise: well-separated blobs, so a
+/// few dozen SGD steps reach high accuracy — the property the
+/// accuracy-under-loss experiments measure degradation against.
+const MEAN_SPREAD: f64 = 3.0;
+
+// Deterministic RNG stream ids (disjoint from the simulator's).
+const STREAM_TASK: u64 = 0xD474;
+const STREAM_INIT: u64 = 0x1417;
+const STREAM_EVAL: u64 = 0xE7A1;
+const STREAM_WORKER0: u64 = 0x10_0000;
+
+/// Immutable model/optimizer configuration (the parsed spec).
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    dim: usize,
+    layers: usize,
+    hidden: usize,
+    classes: usize,
+    lr: f32,
+    /// Bubble filling: masked-mean denominators count only delivered
+    /// elements (`true`, the paper's kernel) or every contributor
+    /// (`false`, the ablation).
+    fill: bool,
+    /// Training-loss target for `iters_to_target`.
+    target: f32,
+    spec: String,
+}
+
+pub(super) fn build_native(params: &[(String, String)]) -> Result<BackendSpec> {
+    let (mut dim, mut layers, mut hidden, mut classes) = (None, None, None, None);
+    let (mut lr, mut fill, mut target) = (None, None, None);
+    for (k, v) in params {
+        match k.as_str() {
+            "dim" => dim = Some(parse_count(k, v)?),
+            "layers" => layers = Some(parse_count(k, v)?),
+            "hidden" => hidden = Some(parse_count(k, v)?),
+            "classes" => classes = Some(parse_count(k, v)?),
+            "lr" => lr = Some(parse_rate(k, v)?),
+            "fill" => fill = Some(parse_switch(k, v)?),
+            "target" => target = Some(parse_rate(k, v)?),
+            _ => {
+                return Err(unknown_param(
+                    "native",
+                    k,
+                    "dim, layers, hidden, classes, lr, fill, target",
+                ))
+            }
+        }
+    }
+    // Canonical order: dim, layers, hidden, classes, lr, fill, target —
+    // parameters render only when given, so a bare `native` stays `native`.
+    let mut parts = Vec::new();
+    if let Some(x) = dim {
+        parts.push(format!("dim={x}"));
+    }
+    if let Some(x) = layers {
+        parts.push(format!("layers={x}"));
+    }
+    if let Some(x) = hidden {
+        parts.push(format!("hidden={x}"));
+    }
+    if let Some(x) = classes {
+        parts.push(format!("classes={x}"));
+    }
+    if let Some(x) = lr {
+        parts.push(format!("lr={x}"));
+    }
+    if let Some(x) = fill {
+        parts.push(format!("fill={}", if x { "on" } else { "off" }));
+    }
+    if let Some(x) = target {
+        parts.push(format!("target={x}"));
+    }
+    Ok(BackendSpec(Arc::new(NativeBackend {
+        dim: dim.unwrap_or(64),
+        layers: layers.unwrap_or(2),
+        hidden: hidden.unwrap_or(64),
+        classes: classes.unwrap_or(8),
+        lr: lr.unwrap_or(0.15),
+        fill: fill.unwrap_or(true),
+        target: target.unwrap_or(0.3),
+        spec: canonical("native", &parts),
+    })))
+}
+
+impl NativeBackend {
+    /// The tensor layout of the flat parameter vector, in order: per
+    /// hidden layer a weight matrix and a bias, then the output head.
+    fn manifest(&self) -> Manifest {
+        let mut tensors: Vec<(String, usize)> = Vec::new();
+        let mut fan_in = self.dim;
+        for l in 0..self.layers {
+            tensors.push((format!("layer{l}.w"), fan_in * self.hidden));
+            tensors.push((format!("layer{l}.b"), self.hidden));
+            fan_in = self.hidden;
+        }
+        tensors.push(("head.w".to_string(), self.hidden * self.classes));
+        tensors.push(("head.b".to_string(), self.classes));
+        Manifest {
+            tensors: tensors
+                .into_iter()
+                .map(|(name, numel)| crate::grad::TensorSpec { name, numel })
+                .collect(),
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        self.manifest().total_elems()
+    }
+
+    /// Draw one labeled sample: `x = (μ_y + N(0,1)) / √dim` (the 1/√dim
+    /// scale keeps activations O(1) at any width), `y` uniform. One code
+    /// path serves the worker streams and the eval set, so their
+    /// distributions can never drift apart.
+    fn sample(&self, means: &[f32], rng: &mut Pcg64, x: &mut [f32]) -> usize {
+        let y = rng.gen_range(self.classes as u64) as usize;
+        let inv = 1.0 / (self.dim as f32).sqrt();
+        for (d, xd) in x.iter_mut().enumerate() {
+            *xd = (means[y * self.dim + d] + rng.normal() as f32) * inv;
+        }
+        y
+    }
+
+    /// Deterministic initial parameters: `N(0, 1/fan_in)` weights, zero
+    /// biases, seeded from the run seed.
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, STREAM_INIT);
+        let mut params = Vec::with_capacity(self.param_count());
+        let mut fan_in = self.dim;
+        for _ in 0..self.layers {
+            let scale = 1.0 / (fan_in as f64).sqrt();
+            for _ in 0..fan_in * self.hidden {
+                params.push((rng.normal() * scale) as f32);
+            }
+            params.resize(params.len() + self.hidden, 0.0);
+            fan_in = self.hidden;
+        }
+        let scale = 1.0 / (self.hidden as f64).sqrt();
+        for _ in 0..self.hidden * self.classes {
+            params.push((rng.normal() * scale) as f32);
+        }
+        params.resize(params.len() + self.classes, 0.0);
+        params
+    }
+
+    /// Forward pass; returns `(loss, predicted class)` and, when `grads`
+    /// is given, accumulates `d loss / d params` into it (both per
+    /// sample; callers average over the batch).
+    fn forward_backward(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        label: usize,
+        mut grads: Option<&mut [f32]>,
+    ) -> (f32, usize) {
+        let (h, c, l_n) = (self.hidden, self.classes, self.layers);
+        // Activations per hidden layer (post-nonlinearity), kept for the
+        // backward pass.
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(l_n);
+        let mut pre: Vec<Vec<f32>> = Vec::with_capacity(l_n);
+        let mut off = 0usize;
+        let mut offsets = Vec::with_capacity(l_n);
+        for l in 0..l_n {
+            let fan_in = if l == 0 { self.dim } else { h };
+            offsets.push(off);
+            let w = &params[off..off + fan_in * h];
+            let b = &params[off + fan_in * h..off + fan_in * h + h];
+            let mut z = vec![0.0f32; h];
+            {
+                let below: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+                for (i, &xi) in below.iter().enumerate() {
+                    let row = &w[i * h..(i + 1) * h];
+                    for j in 0..h {
+                        z[j] += xi * row[j];
+                    }
+                }
+            }
+            for j in 0..h {
+                z[j] += b[j];
+            }
+            let a: Vec<f32> = z.iter().map(|&v| if v > 0.0 { v } else { LEAK * v }).collect();
+            off += fan_in * h + h;
+            pre.push(z);
+            acts.push(a);
+        }
+        let w_out = &params[off..off + h * c];
+        let b_out = &params[off + h * c..off + h * c + c];
+        let top = acts.last().expect("at least one hidden layer");
+        let mut logits = vec![0.0f32; c];
+        for (i, &ai) in top.iter().enumerate() {
+            let row = &w_out[i * c..(i + 1) * c];
+            for k in 0..c {
+                logits[k] += ai * row[k];
+            }
+        }
+        for k in 0..c {
+            logits[k] += b_out[k];
+        }
+        // Softmax cross-entropy (max-shifted for stability).
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|&v| (v - max).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let probs: Vec<f32> = exps.iter().map(|&e| e / sum).collect();
+        let loss = -(probs[label].max(1e-12)).ln();
+        let mut best = 0usize;
+        for k in 1..c {
+            if logits[k] > logits[best] {
+                best = k;
+            }
+        }
+        let Some(grads) = grads.as_deref_mut() else {
+            return (loss, best);
+        };
+        // Backward: d logits.
+        let mut dlogit = probs;
+        dlogit[label] -= 1.0;
+        // Head gradients.
+        let g_w_out = off;
+        for (i, &ai) in top.iter().enumerate() {
+            let row = &mut grads[g_w_out + i * c..g_w_out + (i + 1) * c];
+            for k in 0..c {
+                row[k] += ai * dlogit[k];
+            }
+        }
+        for k in 0..c {
+            grads[g_w_out + h * c + k] += dlogit[k];
+        }
+        // d top activation.
+        let mut d_act = vec![0.0f32; h];
+        for (i, d) in d_act.iter_mut().enumerate() {
+            let row = &w_out[i * c..(i + 1) * c];
+            let mut s = 0.0f32;
+            for k in 0..c {
+                s += row[k] * dlogit[k];
+            }
+            *d = s;
+        }
+        // Hidden layers, last to first.
+        for l in (0..l_n).rev() {
+            let z = &pre[l];
+            let mut dz = vec![0.0f32; h];
+            for j in 0..h {
+                let slope = if z[j] > 0.0 { 1.0 } else { LEAK };
+                dz[j] = d_act[j] * slope;
+            }
+            let below: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            let fan_in = below.len();
+            let w_off = offsets[l];
+            for (i, &xi) in below.iter().enumerate() {
+                let row = &mut grads[w_off + i * h..w_off + (i + 1) * h];
+                for j in 0..h {
+                    row[j] += xi * dz[j];
+                }
+            }
+            for j in 0..h {
+                grads[w_off + fan_in * h + j] += dz[j];
+            }
+            if l > 0 {
+                let w = &params[w_off..w_off + fan_in * h];
+                let mut d_below = vec![0.0f32; fan_in];
+                for (i, d) in d_below.iter_mut().enumerate() {
+                    let row = &w[i * h..(i + 1) * h];
+                    let mut s = 0.0f32;
+                    for j in 0..h {
+                        s += row[j] * dz[j];
+                    }
+                    *d = s;
+                }
+                d_act = d_below;
+            }
+        }
+        (loss, best)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        &self.spec
+    }
+
+    fn check_ready(&self) -> Result<()> {
+        Ok(()) // pure Rust: no artifacts, no external runtime
+    }
+
+    fn model(&self) -> Result<ModelInfo> {
+        let m = self.manifest();
+        Ok(ModelInfo {
+            wire_bytes: m.total_bytes(),
+            critical: m.critical_segments(Manifest::aligned_payload(LTP_MSS)),
+        })
+    }
+
+    fn open(&self, run: &RunCtx) -> Result<Box<dyn TrainSession>> {
+        let cfg = Arc::new(self.clone());
+        // The task (class means) and the held-out eval set derive from the
+        // run seed: same seed ⇒ same task across protocols/topologies.
+        let mut task_rng = Pcg64::new(run.seed, STREAM_TASK);
+        let means: Vec<f32> = (0..cfg.classes * cfg.dim)
+            .map(|_| (task_rng.normal() * MEAN_SPREAD) as f32)
+            .collect();
+        let mut eval_rng = Pcg64::new(run.seed, STREAM_EVAL);
+        let mut eval_x = vec![0.0f32; EVAL_SAMPLES * cfg.dim];
+        let mut eval_y = Vec::with_capacity(EVAL_SAMPLES);
+        for s in 0..EVAL_SAMPLES {
+            let y =
+                cfg.sample(&means, &mut eval_rng, &mut eval_x[s * cfg.dim..(s + 1) * cfg.dim]);
+            eval_y.push(y);
+        }
+        let params = cfg.init_params(run.seed);
+        let momentum = vec![0.0f32; params.len()];
+        Ok(Box::new(NativeSession {
+            cfg,
+            task: Rc::new(Task { means, eval_x, eval_y }),
+            state: Rc::new(RefCell::new(NativeState {
+                params,
+                momentum,
+                grads: HashMap::new(),
+                masks: HashMap::new(),
+                losses: Vec::new(),
+            })),
+            run: run.clone(),
+        }))
+    }
+}
+
+/// The shared classification task: class means plus the held-out eval set.
+struct Task {
+    means: Vec<f32>,
+    eval_x: Vec<f32>,
+    eval_y: Vec<usize>,
+}
+
+/// Single-threaded per-run training state, shared between the workers'
+/// [`Compute`] objects and the aggregator endpoints (the in-process data
+/// plane; the simulator only accounts bytes).
+struct NativeState {
+    params: Vec<f32>,
+    momentum: Vec<f32>,
+    /// (worker, iter) → flat gradient as computed (pre-masking).
+    grads: HashMap<(usize, u64), Vec<f32>>,
+    /// (worker, iter) → per-element delivery mask accumulated by relay
+    /// tiers (`hier` racks); terminal endpoints multiply their own masks
+    /// on top.
+    masks: HashMap<(usize, u64), Vec<f32>>,
+    /// (iter, mean batch loss), one entry per worker compute, in
+    /// simulation order.
+    losses: Vec<(u64, f32)>,
+}
+
+impl NativeState {
+    /// Drop per-iteration buffers older than `iter` (every endpoint of an
+    /// iteration reads before any endpoint reaches `iter + 1` under BSP;
+    /// `mean_loss` is only ever queried for the current iteration, so the
+    /// loss log is prunable too — without this, long runs would rescan an
+    /// ever-growing vector on every endpoint's `loss()` call).
+    fn gc(&mut self, iter: u64) {
+        self.grads.retain(|&(_, i), _| i >= iter);
+        self.masks.retain(|&(_, i), _| i >= iter);
+        self.losses.retain(|&(i, _)| i >= iter);
+    }
+
+    fn mean_loss(&self, iter: u64) -> Option<f32> {
+        let vals: Vec<f32> =
+            self.losses.iter().filter(|&&(i, _)| i == iter).map(|&(_, l)| l).collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f32>() / vals.len() as f32)
+        }
+    }
+}
+
+pub(super) struct NativeSession {
+    cfg: Arc<NativeBackend>,
+    task: Rc<Task>,
+    state: Rc<RefCell<NativeState>>,
+    run: RunCtx,
+}
+
+impl TrainSession for NativeSession {
+    fn make_compute(&mut self, worker: usize) -> Box<dyn Compute> {
+        Box::new(NativeCompute {
+            cfg: self.cfg.clone(),
+            task: self.task.clone(),
+            state: self.state.clone(),
+            rng: Pcg64::new(self.run.seed, STREAM_WORKER0 + worker as u64),
+            compute_time: self.run.compute_time,
+        })
+    }
+
+    fn make_agg(&mut self, endpoint: usize) -> Box<dyn Aggregate> {
+        let role = self.run.roles.get(endpoint).copied().unwrap_or_else(|| {
+            panic!("endpoint {endpoint} beyond the aggregation's {} roles", self.run.roles.len())
+        });
+        let payload = Manifest::aligned_payload(LTP_MSS);
+        let model_bytes = self.cfg.param_count() as u64 * 4;
+        match role {
+            EndpointRole::Final { byte_offset, bytes } => Box::new(NativeAggregate {
+                cfg: self.cfg.clone(),
+                state: self.state.clone(),
+                elem0: (byte_offset / 4) as usize,
+                numel: (bytes / 4) as usize,
+                seg_map: SegmentMap::new(bytes, payload, vec![]),
+                workers: (0, self.run.n_workers),
+                agg_time: self.run.agg_time,
+            }),
+            EndpointRole::Relay { first_worker, n_workers } => Box::new(NativeRelay {
+                state: self.state.clone(),
+                first_worker,
+                n_workers,
+                numel: self.cfg.param_count(),
+                seg_map: SegmentMap::new(model_bytes, payload, vec![]),
+                agg_time: self.run.agg_time,
+            }),
+            EndpointRole::Root { racks } => Box::new(NativeRoot {
+                cfg: self.cfg.clone(),
+                state: self.state.clone(),
+                racks,
+                per_rack: self.run.n_workers / racks.max(1),
+                seg_map: SegmentMap::new(model_bytes, payload, vec![]),
+                agg_time: self.run.agg_time,
+            }),
+        }
+    }
+
+    fn params(&self) -> Vec<f32> {
+        self.state.borrow().params.clone()
+    }
+
+    fn stats(&self, iters: &[IterStats]) -> TrainStats {
+        let state = self.state.borrow();
+        let cfg = &self.cfg;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        for (s, &y) in self.task.eval_y.iter().enumerate() {
+            let x = &self.task.eval_x[s * cfg.dim..(s + 1) * cfg.dim];
+            let (loss, pred) = cfg.forward_backward(&state.params, x, y, None);
+            loss_sum += loss as f64;
+            if pred == y {
+                correct += 1;
+            }
+        }
+        let n = self.task.eval_y.len().max(1);
+        TrainStats {
+            final_loss: (loss_sum / n as f64) as f32,
+            accuracy: correct as f64 / n as f64,
+            iters_to_target: iters
+                .iter()
+                .position(|i| i.loss.map(|l| l <= cfg.target).unwrap_or(false))
+                .map(|i| i as u64 + 1),
+        }
+    }
+}
+
+/// Worker-side compute: draw a batch from this worker's stream, run
+/// forward/backward over the current global parameters, deposit the
+/// gradient.
+struct NativeCompute {
+    cfg: Arc<NativeBackend>,
+    task: Rc<Task>,
+    state: Rc<RefCell<NativeState>>,
+    rng: Pcg64,
+    compute_time: Nanos,
+}
+
+impl Compute for NativeCompute {
+    fn compute(&mut self, worker: usize, iter: u64) -> Nanos {
+        let cfg = &self.cfg;
+        let params = self.state.borrow().params.clone();
+        let mut grads = vec![0.0f32; params.len()];
+        let mut loss_sum = 0.0f32;
+        let mut x = vec![0.0f32; cfg.dim];
+        for _ in 0..BATCH {
+            let y = cfg.sample(&self.task.means, &mut self.rng, &mut x);
+            let (loss, _) = cfg.forward_backward(&params, &x, y, Some(&mut grads));
+            loss_sum += loss;
+        }
+        let scale = 1.0 / BATCH as f32;
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+        let mut st = self.state.borrow_mut();
+        st.grads.insert((worker, iter), grads);
+        st.losses.push((iter, loss_sum * scale));
+        self.compute_time
+    }
+}
+
+/// Per-element mask of one gather flow's delivery bitmap (`None` = a
+/// reliable transport delivered everything).
+fn flow_mask(seg_map: &SegmentMap, arrival: &Option<(Bitmap, u64)>, numel: usize) -> Vec<f32> {
+    match arrival {
+        Some((bitmap, _)) => element_mask(seg_map, bitmap, numel),
+        None => vec![1.0f32; numel],
+    }
+}
+
+/// Terminal masked-mean + momentum-SGD endpoint over the element range
+/// `[elem0, elem0 + numel)` — the single PS or one shard. Matches the
+/// Pallas `aggregate` kernel's semantics element for element.
+struct NativeAggregate {
+    cfg: Arc<NativeBackend>,
+    state: Rc<RefCell<NativeState>>,
+    elem0: usize,
+    numel: usize,
+    /// Segmentation of *this endpoint's* flows (shard bytes).
+    seg_map: SegmentMap,
+    /// Global worker range feeding this endpoint (`(first, count)`).
+    workers: (usize, usize),
+    agg_time: Nanos,
+}
+
+/// The shared update rule: masked mean over `rows` (each `(grad slice at
+/// elem0, mask slice)` in worker order), then momentum SGD on
+/// `params[elem0..elem0+numel]`.
+fn masked_mean_sgd(
+    state: &mut NativeState,
+    fill: bool,
+    lr: f32,
+    elem0: usize,
+    numel: usize,
+    rows: &[(&[f32], Vec<f32>)],
+) {
+    for i in 0..numel {
+        let mut sum = 0.0f64;
+        let mut cnt = 0.0f64;
+        for (g, m) in rows {
+            let mi = m[i];
+            sum += (g[elem0 + i] * mi) as f64;
+            cnt += mi as f64;
+        }
+        let denom = if fill { cnt.max(1.0) } else { (rows.len() as f64).max(1.0) };
+        // Clamp as an optimizer safety net (inactive at these scales; the
+        // clamp is part of the update rule, so it is identical at every
+        // endpoint and cross-topology bit-identity holds).
+        let mean = (sum / denom).clamp(-10.0, 10.0) as f32;
+        let p = elem0 + i;
+        let v = MOMENTUM * state.momentum[p] + mean;
+        state.momentum[p] = v;
+        state.params[p] -= lr * v;
+    }
+}
+
+impl Aggregate for NativeAggregate {
+    fn aggregate(&mut self, iter: u64, arrivals: &[Option<(Bitmap, u64)>]) -> Nanos {
+        let state = &mut *self.state.borrow_mut();
+        let (first, count) = self.workers;
+        // Collect (grad, mask) rows in global worker order; workers that
+        // deposited nothing this round contribute nothing.
+        let mut rows: Vec<(&[f32], Vec<f32>)> = Vec::with_capacity(count);
+        // Split borrows: grads are read, params/momentum written below.
+        let grads = std::mem::take(&mut state.grads);
+        for w in first..first + count {
+            let Some(g) = grads.get(&(w, iter)) else { continue };
+            let mask = flow_mask(&self.seg_map, &arrivals[w - first], self.numel);
+            rows.push((g.as_slice(), mask));
+        }
+        masked_mean_sgd(state, self.cfg.fill, self.cfg.lr, self.elem0, self.numel, &rows);
+        drop(rows);
+        state.grads = grads;
+        state.gc(iter);
+        self.agg_time
+    }
+
+    fn loss(&mut self, iter: u64) -> Option<f32> {
+        self.state.borrow().mean_loss(iter)
+    }
+}
+
+/// A `hier` rack relay: records each rack worker's delivery mask (what
+/// the rack-local wire actually delivered); the root multiplies its own
+/// trunk masks on top and runs the update. The relay performs no
+/// parameter math, mirroring how the in-network reduce only combines
+/// already-masked data.
+struct NativeRelay {
+    state: Rc<RefCell<NativeState>>,
+    first_worker: usize,
+    n_workers: usize,
+    numel: usize,
+    seg_map: SegmentMap,
+    agg_time: Nanos,
+}
+
+impl Aggregate for NativeRelay {
+    fn aggregate(&mut self, iter: u64, arrivals: &[Option<(Bitmap, u64)>]) -> Nanos {
+        let mut state = self.state.borrow_mut();
+        for j in 0..self.n_workers {
+            let mask = flow_mask(&self.seg_map, &arrivals[j], self.numel);
+            state.masks.insert((self.first_worker + j, iter), mask);
+        }
+        self.agg_time
+    }
+
+    fn loss(&mut self, iter: u64) -> Option<f32> {
+        self.state.borrow().mean_loss(iter)
+    }
+}
+
+/// The `hier` root: combines every worker's rack-tier mask with the
+/// rack→root trunk delivery mask, then runs the same masked-mean SGD as a
+/// single PS — in global worker order, so zero-loss runs are bit-identical
+/// to the `ps` topology.
+struct NativeRoot {
+    cfg: Arc<NativeBackend>,
+    state: Rc<RefCell<NativeState>>,
+    racks: usize,
+    per_rack: usize,
+    seg_map: SegmentMap,
+    agg_time: Nanos,
+}
+
+impl Aggregate for NativeRoot {
+    fn aggregate(&mut self, iter: u64, arrivals: &[Option<(Bitmap, u64)>]) -> Nanos {
+        let numel = self.cfg.param_count();
+        let state = &mut *self.state.borrow_mut();
+        let trunk_masks: Vec<Vec<f32>> = (0..self.racks)
+            .map(|r| flow_mask(&self.seg_map, &arrivals[r], numel))
+            .collect();
+        let grads = std::mem::take(&mut state.grads);
+        let masks = std::mem::take(&mut state.masks);
+        let mut rows: Vec<(&[f32], Vec<f32>)> = Vec::with_capacity(self.racks * self.per_rack);
+        for w in 0..self.racks * self.per_rack {
+            let Some(g) = grads.get(&(w, iter)) else { continue };
+            let trunk = &trunk_masks[w / self.per_rack.max(1)];
+            let mask: Vec<f32> = match masks.get(&(w, iter)) {
+                Some(rack_mask) => {
+                    rack_mask.iter().zip(trunk).map(|(&a, &b)| a * b).collect()
+                }
+                None => trunk.clone(),
+            };
+            rows.push((g.as_slice(), mask));
+        }
+        masked_mean_sgd(state, self.cfg.fill, self.cfg.lr, 0, numel, &rows);
+        drop(rows);
+        state.grads = grads;
+        state.masks = masks;
+        state.gc(iter);
+        self.agg_time
+    }
+
+    fn loss(&mut self, iter: u64) -> Option<f32> {
+        self.state.borrow().mean_loss(iter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::parse_backend;
+
+    fn native(spec: &str) -> BackendSpec {
+        parse_backend(spec).unwrap()
+    }
+
+    fn open(spec: &str, seed: u64, workers: usize) -> Box<dyn TrainSession> {
+        let b = native(spec);
+        let info = b.model().unwrap();
+        let roles = vec![EndpointRole::Final { byte_offset: 0, bytes: info.wire_bytes }];
+        b.open(&RunCtx {
+            seed,
+            n_workers: workers,
+            compute_time: crate::MS,
+            agg_time: crate::MS,
+            roles,
+        })
+        .unwrap()
+    }
+
+    /// Drive a bare BSP loop with full delivery (no simulator): compute on
+    /// every worker, aggregate, repeat.
+    fn train_inline(session: &mut Box<dyn TrainSession>, workers: usize, iters: u64) -> Vec<f32> {
+        let mut computes: Vec<Box<dyn Compute>> =
+            (0..workers).map(|w| session.make_compute(w)).collect();
+        let mut agg = session.make_agg(0);
+        let arrivals: Vec<Option<(Bitmap, u64)>> = (0..workers).map(|_| None).collect();
+        let mut losses = Vec::new();
+        for iter in 0..iters {
+            for (w, c) in computes.iter_mut().enumerate() {
+                c.compute(w, iter);
+            }
+            agg.aggregate(iter, &arrivals);
+            losses.push(agg.loss(iter).expect("losses recorded"));
+        }
+        losses
+    }
+
+    #[test]
+    fn inline_training_reduces_loss_and_reaches_high_accuracy() {
+        let workers = 4;
+        let mut s = open("native", 7, workers);
+        let losses = train_inline(&mut s, workers, 12);
+        let first = losses[0];
+        let last = *losses.last().unwrap();
+        assert!(
+            last < first * 0.5,
+            "loss must drop under full delivery: {first} → {last} ({losses:?})"
+        );
+        let stats = s.stats(&[]);
+        assert!(
+            stats.accuracy > 0.97,
+            "separable blobs must classify: accuracy {}",
+            stats.accuracy
+        );
+        assert!(stats.final_loss < 0.5, "eval loss {}", stats.final_loss);
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_and_seeds_differ() {
+        let run = |seed| {
+            let mut s = open("native", seed, 2);
+            let losses = train_inline(&mut s, 2, 4);
+            (losses, s.params())
+        };
+        let (l1, p1) = run(3);
+        let (l2, p2) = run(3);
+        assert_eq!(l1, l2, "same seed must replay bit-identically");
+        assert_eq!(p1, p2);
+        let (l3, _) = run(4);
+        assert_ne!(l1, l3, "a different seed must change the run");
+    }
+
+    /// Open a session, run one compute step on each of two workers, then
+    /// aggregate with the given arrival bitmaps and return the parameters.
+    fn one_step(b: &BackendSpec, arrivals: &[Option<(Bitmap, u64)>]) -> Vec<f32> {
+        let info = b.model().unwrap();
+        let mut s = b
+            .open(&RunCtx {
+                seed: 9,
+                n_workers: 2,
+                compute_time: crate::MS,
+                agg_time: crate::MS,
+                roles: vec![EndpointRole::Final { byte_offset: 0, bytes: info.wire_bytes }],
+            })
+            .unwrap();
+        let mut cs: Vec<Box<dyn Compute>> = (0..2).map(|w| s.make_compute(w)).collect();
+        for (w, c) in cs.iter_mut().enumerate() {
+            c.compute(w, 0);
+        }
+        let mut agg = s.make_agg(0);
+        agg.aggregate(0, arrivals);
+        s.params()
+    }
+
+    #[test]
+    fn bubbled_elements_are_driven_by_delivering_workers_alone() {
+        // Masking property, asserted bit-for-bit: wherever worker 0's mask
+        // is zero, the masked-mean update must equal the update of a run
+        // where worker 0 delivered *nothing* — those elements see only
+        // worker 1's gradient. The model must span ≥2 wire segments so
+        // "lost segment 0" differs from "lost everything": 676 params =
+        // 2704 bytes = two 1460-byte segments.
+        let b = native("native:dim=16,layers=1,hidden=32,classes=4");
+        let info = b.model().unwrap();
+        assert!(info.wire_bytes > 1460 && info.wire_bytes <= 2 * 1460, "{}", info.wire_bytes);
+        let map =
+            SegmentMap::new(info.wire_bytes, Manifest::aligned_payload(LTP_MSS), vec![]);
+        let numel = (info.wire_bytes / 4) as usize;
+        // Worker 0 lost segment 0; worker 1 (reliable) delivered all.
+        let mut bm = Bitmap::new(map.n_segs as usize);
+        for seg in 1..map.n_segs as usize {
+            bm.set(seg);
+        }
+        let partial = one_step(&b, &[Some((bm.clone(), map.n_segs as u64)), None]);
+        // Worker 0 lost everything.
+        let empty = Bitmap::new(map.n_segs as usize);
+        let solo = one_step(&b, &[Some((empty, map.n_segs as u64)), None]);
+        let m0 = element_mask(&map, &bm, numel);
+        assert!(m0.iter().any(|&m| m == 0.0) && m0.iter().any(|&m| m == 1.0));
+        for i in 0..numel {
+            if m0[i] == 0.0 {
+                assert_eq!(
+                    partial[i], solo[i],
+                    "elem {i}: a bubbled element must be driven by the delivering worker alone"
+                );
+            }
+        }
+        // Elsewhere worker 0 contributed, so the runs differ…
+        assert_ne!(partial, solo);
+        // …and both moved off the (seed-identical) initial parameters.
+        let full = one_step(&b, &[None, None]);
+        assert_ne!(partial, full, "losing a segment must change the update");
+    }
+
+    #[test]
+    fn fill_off_biases_the_update_toward_zero() {
+        // One worker, half the segments lost: with bubble filling the
+        // delivered elements update at full magnitude; without it the same
+        // elements update identically (n=1 either way) but *lost* elements
+        // pull momentum toward zero in both. The observable difference
+        // needs ≥2 workers: worker 0 lost, worker 1 delivered — fill=on
+        // averages over 1 contributor, fill=off over 2.
+        let mk = |spec: &str| {
+            let b = native(spec);
+            let info = b.model().unwrap();
+            let mut s = b
+                .open(&RunCtx {
+                    seed: 21,
+                    n_workers: 2,
+                    compute_time: crate::MS,
+                    agg_time: crate::MS,
+                    roles: vec![EndpointRole::Final {
+                        byte_offset: 0,
+                        bytes: info.wire_bytes,
+                    }],
+                })
+                .unwrap();
+            let mut cs: Vec<Box<dyn Compute>> = (0..2).map(|w| s.make_compute(w)).collect();
+            for (w, c) in cs.iter_mut().enumerate() {
+                c.compute(w, 0);
+            }
+            let map = SegmentMap::new(
+                info.wire_bytes,
+                Manifest::aligned_payload(LTP_MSS),
+                vec![],
+            );
+            let empty = Bitmap::new(map.n_segs as usize);
+            let mut agg = s.make_agg(0);
+            agg.aggregate(0, &[Some((empty, map.n_segs as u64)), None]);
+            s.params()
+        };
+        let p_fill = mk("native:dim=8,layers=1,hidden=8,classes=2");
+        let p_nofill = mk("native:dim=8,layers=1,hidden=8,classes=2,fill=off");
+        assert_ne!(p_fill, p_nofill, "the ablation must change the update");
+    }
+
+    #[test]
+    fn stats_report_iters_to_target() {
+        let s = open("native:target=1", 7, 2);
+        let iters: Vec<IterStats> = [2.0f32, 1.4, 0.9, 0.5]
+            .iter()
+            .map(|&l| IterStats { loss: Some(l), ..Default::default() })
+            .collect();
+        assert_eq!(s.stats(&iters).iters_to_target, Some(3));
+        let never: Vec<IterStats> =
+            vec![IterStats { loss: Some(5.0), ..Default::default() }];
+        assert_eq!(s.stats(&never).iters_to_target, None);
+    }
+}

@@ -1,34 +1,33 @@
-//! Real-compute figures (need `make artifacts`):
+//! Real-compute figures:
 //!
 //! * Fig 5 — Top-k vs Random-k: final loss (accuracy proxy) and relative
 //!   throughput as a function of the kept fraction k, using the L1 Pallas
 //!   sparsification kernels on the transformer workload (substituting the
-//!   paper's ResNet18/CIFAR-10 — DESIGN.md §2).
+//!   paper's ResNet18/CIFAR-10 — DESIGN.md §2). Needs the `xla` backend's
+//!   artifacts (`make artifacts`); the precondition check routes through
+//!   the [`crate::compute::Backend`] trait so the error names them.
 //! * Fig 13 — time-to-accuracy: sim-time until the training loss reaches a
 //!   target, per protocol and loss rate, with real gradients flowing
-//!   through the transports (LTP drops are *actual* bubbles).
+//!   through the transports (drops are *actual* bubbles). Runs the
+//!   `native` backend (DESIGN.md §1.3), so it needs no artifacts and its
+//!   table is fully deterministic.
 
+use crate::compute::parse_backend;
 use crate::metrics::Table;
-use crate::ps::{
-    parse_proto, run_with, Corpus, ProtoSpec, RealCompute, RealTraining, RunBuilder,
-    XlaAggregate,
-};
+use crate::ps::{parse_proto, Corpus, ProtoSpec, RealTraining, RunBuilder, XlaAggregate};
 use crate::runtime::{default_artifacts_dir, literal_f32, pool, to_f32, Runtime};
 use crate::simnet::LossModel;
 use crate::util::Pcg64;
-use crate::{MS, SEC};
+use crate::SEC;
 use anyhow::{Context, Result};
 use std::cell::RefCell;
 use std::rc::Rc;
 use std::time::Instant;
 
-/// Cheap artifacts-presence check (no PJRT client) for fail-fast paths.
+/// Fail-fast precondition of the PJRT figures, routed through the `xla`
+/// backend so the error names the actual missing dependency.
 fn ensure_artifacts() -> Result<()> {
-    anyhow::ensure!(
-        default_artifacts_dir().join("manifest_tiny.txt").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    Ok(())
+    parse_backend("xla")?.check_ready()
 }
 
 fn require_runtime() -> Result<Runtime> {
@@ -161,83 +160,72 @@ pub fn fig5(quick: bool, jobs: usize) -> Result<()> {
 }
 
 /// Fig 13: sim-time to reach a target training loss, per protocol × loss
-/// rate, with real gradients and real (bubble-filled) aggregation.
+/// rate, with real gradients and real (bubble-filled) aggregation on the
+/// `native` backend — no artifacts needed, and (unlike the wall-clock
+/// columns of Fig 5) the whole table is byte-deterministic for any
+/// `--jobs` count.
 pub fn fig13(quick: bool, jobs: usize) -> Result<()> {
-    ensure_artifacts()?; // fail fast before spawning jobs (no client built here)
     let workers = 4;
-    let target = 4.8f32;
-    let max_iters = if quick { 20 } else { 60 };
+    // One constant drives both the backend's iters-to-target computation
+    // and the emitted caption, so they can never drift apart.
+    const TARGET: f64 = 0.3;
+    let backend = parse_backend(&format!("native:target={TARGET}"))?;
+    let max_iters = if quick { 16 } else { 40 };
     let specs: &[&str] =
         if quick { &["ltp", "cubic"] } else { &["ltp", "bbr", "cubic", "reno"] };
     let protos: Vec<ProtoSpec> =
         specs.iter().map(|s| parse_proto(s).expect("registered spec")).collect();
     let loss_rates: &[f64] = if quick { &[0.0, 0.01] } else { &[0.0, 0.001, 0.01] };
-    // One job per (proto, loss) point; each job owns its model state and
-    // corpora (runtime cached per thread), so runs stay independent and
-    // seed-deterministic.
+    // One job per (proto, loss) point; each job owns its training session
+    // (seeded from the run), so runs stay independent and deterministic.
     let mut sweep: Vec<(ProtoSpec, f64)> = Vec::new();
     for proto in &protos {
         for &p in loss_rates {
             sweep.push((proto.clone(), p));
         }
     }
-    let rows = pool::run_jobs(jobs, sweep, |_, (proto, p)| -> Result<Vec<String>> {
-        with_runtime(|rt| {
-            let shared = RealTraining::new(rt, "tiny", 0.08)?;
-            let name = proto.name().to_string();
-            let mut b =
-                RunBuilder::modeled(proto, crate::config::Workload::Micro, workers)
-                    .model_bytes(shared.manifest.wire_bytes())
-                    .critical(shared.manifest.tensors.critical_segments(
-                        crate::grad::Manifest::aligned_payload(crate::wire::LTP_MSS),
-                    ))
-                    .iters(max_iters)
-                    .compute_time(50 * MS)
-                    .horizon(3600 * SEC);
-            if p > 0.0 {
-                b = b.loss(LossModel::Bernoulli { p });
-            }
-            let cfg = b.build()?;
-            let shared2 = shared.clone();
-            let shared_agg = shared.clone();
-            let report = run_with(
-                &cfg,
-                move |w, _| {
-                    Box::new(RealCompute {
-                        shared: shared2.clone(),
-                        corpus: Corpus::new(shared2.manifest.vocab, 500 + w as u64),
-                    })
-                },
-                move |_| {
-                    Box::new(XlaAggregate { shared: shared_agg.clone(), n_workers: workers })
-                },
-            );
-            let tta = report
-                .iters
-                .iter()
-                .find(|i| i.loss.map(|l| l <= target).unwrap_or(false))
-                .map(|i| format!("{:.2}", i.end as f64 / SEC as f64))
-                .unwrap_or_else(|| "—".into());
-            let final_loss = report
-                .iters
-                .iter()
-                .rev()
-                .find_map(|i| i.loss)
-                .map(|l| format!("{l:.3}"))
-                .unwrap_or_else(|| "—".into());
-            Ok(vec![
-                name,
-                format!("{:.2}%", p * 100.0),
-                tta,
-                final_loss,
-                format!("{:.1}%", report.mean_delivered() * 100.0),
-            ])
-        })
+    let backend_spec = backend.clone();
+    let rows = pool::run_jobs(jobs, sweep, move |_, (proto, p)| -> Result<Vec<String>> {
+        let name = proto.name().to_string();
+        let mut b = RunBuilder::modeled(proto, crate::config::Workload::Micro, workers)
+            .backend(backend_spec.clone())
+            .iters(max_iters)
+            .seed(13)
+            .batches_per_epoch(4)
+            .horizon(3600 * SEC);
+        if p > 0.0 {
+            b = b.loss(LossModel::Bernoulli { p });
+        }
+        let report = b.run()?;
+        let train = report.train.expect("backend attached");
+        let tta = train
+            .iters_to_target
+            .and_then(|n| report.iters.get(n as usize - 1))
+            .map(|i| format!("{:.2}", i.end as f64 / SEC as f64))
+            .unwrap_or_else(|| "—".into());
+        Ok(vec![
+            name,
+            format!("{:.2}%", p * 100.0),
+            tta,
+            format!("{:.3}", train.final_loss),
+            format!("{:.1}%", train.accuracy * 100.0),
+            format!("{:.1}%", report.mean_delivered() * 100.0),
+        ])
     });
-    let mut table = Table::new(vec!["proto", "net loss", "TTA (sim s)", "final loss", "delivered"]);
+    let mut table = Table::new(vec![
+        "proto",
+        "net loss",
+        "TTA (sim s)",
+        "final loss",
+        "accuracy",
+        "delivered",
+    ]);
     for row in rows {
         table.row(row?);
     }
-    table.emit("fig13", &format!("Fig 13 — time to loss ≤ {target} (real training, {workers} workers)"));
+    table.emit(
+        "fig13",
+        &format!("Fig 13 — time to loss ≤ {TARGET} (native backend, {workers} workers)"),
+    );
     Ok(())
 }

@@ -28,10 +28,12 @@ pub const FIG4_LOSS_RATES: [f64; 7] = [0.0, 0.0001, 0.001, 0.005, 0.01, 0.03, 0.
 /// `jobs` shards each figure's independent sweep points (incast degree,
 /// loss rate, worker count, …) across worker threads via
 /// [`crate::runtime::pool`]; results merge in sweep order, so the printed
-/// tables of the simulation-driven figures (fig2/3/4/12/14/15) are
-/// byte-identical for any job count (0 = auto, 1 = serial). fig5/fig13
-/// tables embed wall-clock kernel-cost columns that vary run to run —
-/// they are outside the byte-identity contract regardless of `--jobs`.
+/// tables of the simulation-driven figures (fig2/3/4/12/13/14/15) are
+/// byte-identical for any job count (0 = auto, 1 = serial) — fig13 now
+/// trains the deterministic `native` backend (DESIGN.md §1.3). fig5's
+/// table embeds wall-clock kernel-cost columns that vary run to run — it
+/// is outside the byte-identity contract regardless of `--jobs`, and it
+/// still needs the `xla` backend's artifacts (`make artifacts`).
 pub fn run(name: &str, quick: bool, jobs: usize) -> anyhow::Result<()> {
     match name {
         "fig2" => {
@@ -59,11 +61,12 @@ pub fn run(name: &str, quick: bool, jobs: usize) -> anyhow::Result<()> {
             fig3(quick, jobs);
             fig4(quick, jobs);
             fig12(quick, jobs);
+            // Native-backend training figure: runs everywhere.
+            fig13(quick, jobs)?;
             fig14(quick, jobs);
             fig15(quick);
-            // Real-compute figures last (need artifacts).
+            // The Pallas-kernel figure last (needs `make artifacts`).
             fig5(quick, jobs)?;
-            fig13(quick, jobs)?;
         }
         other => anyhow::bail!("unknown figure `{other}` (fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all)"),
     }

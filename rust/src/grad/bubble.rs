@@ -148,6 +148,67 @@ mod tests {
     }
 
     #[test]
+    fn prop_bubble_oracle_random_maps_and_masks() {
+        // `bubble_fill` + `element_mask` against a brute-force per-byte /
+        // per-element reference, over random segment maps (random aligned
+        // payload sizes, partial final-segment tails) and random loss
+        // masks — with the all-lost and all-received edges forced so they
+        // are exercised every run, not just when the dice land there.
+        check("bubble oracle", |rng| {
+            // Aligned payload: 1..=64 f32 elements per segment.
+            let per_seg = 1 + rng.gen_range(64) as usize;
+            let payload = (per_seg * ALIGN as usize) as u32;
+            // 4-aligned totals (gradients are f32-flat); the tail segment
+            // is partial unless numel happens to divide evenly.
+            let numel = 1 + rng.gen_range(3000) as usize;
+            let bytes = (numel * ALIGN as usize) as u64;
+            let map = SegmentMap::new(bytes, payload, vec![]);
+            let mut rec = Bitmap::new(map.n_segs as usize);
+            // mode 0: all lost; mode 1: all received; otherwise random.
+            let mode = rng.gen_range(4);
+            for s in 0..map.n_segs as usize {
+                let keep = match mode {
+                    0 => false,
+                    1 => true,
+                    _ => rng.chance(0.5),
+                };
+                if keep {
+                    rec.set(s);
+                }
+            }
+            let src: Vec<u8> = (0..bytes).map(|_| rng.next_u32() as u8).collect();
+            let out = bubble_fill(&src, &map, &rec);
+            assert_eq!(out.len() as u64, bytes);
+            for (b, (&got, &want_src)) in out.iter().zip(&src).enumerate() {
+                let seg = b / payload as usize;
+                let want = if rec.get(seg) { want_src } else { 0 };
+                assert_eq!(got, want, "byte {b} of segment {seg} (mode {mode})");
+            }
+            let mask = element_mask(&map, &rec, numel);
+            assert_eq!(mask.len(), numel);
+            for (i, &m) in mask.iter().enumerate() {
+                // Brute force: an element arrived iff the segment holding
+                // its 4 bytes did (the padding-bubble rule guarantees the
+                // element cannot straddle two segments).
+                let seg = (i * ALIGN as usize) / payload as usize;
+                let want = if rec.get(seg) { 1.0 } else { 0.0 };
+                assert_eq!(m, want, "elem {i} in segment {seg} (mode {mode})");
+            }
+            match mode {
+                0 => {
+                    assert!(out.iter().all(|&b| b == 0), "all-lost fills zeros");
+                    assert!(mask.iter().all(|&m| m == 0.0));
+                }
+                1 => {
+                    assert_eq!(out, src, "all-received is the identity");
+                    assert!(mask.iter().all(|&m| m == 1.0));
+                }
+                _ => {}
+            }
+        });
+    }
+
+    #[test]
     fn prop_bubble_fill_roundtrip_arbitrary_loss() {
         check("bubble fill", |rng| {
             let bytes = 400 + rng.gen_range(20_000);

@@ -7,22 +7,25 @@
 //! ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]
 //! ltp proto <list|parse SPEC>               protocol registry / spec grammar
 //! ltp agg <list|parse SPEC>                 aggregation-topology registry
-//! ltp train [--preset tiny] [--workers 4] [--iters 50] [--loss 0.01]
-//!           [--proto SPEC] [--agg SPEC]
+//! ltp backend <list|parse SPEC>             compute-backend registry
+//! ltp train [--backend native] [--workers 4] [--iters 50] [--loss 0.01]
+//!           [--proto SPEC] [--agg SPEC] [--max-loss X]
 //! ltp bench-ltp [--bytes N] [--loss P]      one-flow protocol microbench
 //! ```
 //!
 //! Protocol specs follow the registry grammar (`ltp proto list`):
 //! `ltp`, `ltp:pct=0.9,slack=100ms`, `ltp-adaptive`, `tcp:cc=cubic`, …
 //! Aggregation specs use the same grammar (`ltp agg list`): `ps`,
-//! `sharded:n=4`, `hier:racks=2`.
+//! `sharded:n=4`, `hier:racks=2`. Compute backends too (`ltp backend
+//! list`): `native`, `native:dim=64,fill=off`, `xla:preset=tiny`.
 //!
 //! (Hand-rolled argument parsing: the vendored dependency set has no clap.)
 
 use anyhow::{bail, Context, Result};
+use ltp::compute::{backend_registry, parse_backend};
 use ltp::ps::{
-    agg_registry, parse_agg, parse_proto, proto_registry, run_with, AggSpec, Corpus,
-    ProtoSpec, RealCompute, RealTraining, RunBuilder, XlaAggregate,
+    agg_registry, parse_agg, parse_proto, proto_registry, run_training, AggSpec, ProtoSpec,
+    RunBuilder,
 };
 use ltp::simnet::LossModel;
 use ltp::{MS, SEC};
@@ -110,39 +113,44 @@ impl Args {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let preset: String = args.flag("preset", "tiny".to_string())?;
+    // These pre-compute-plane flags moved into the backend spec; reject
+    // them loudly rather than silently training something else.
+    anyhow::ensure!(
+        !args.has("preset"),
+        "--preset moved into the backend spec: use `--backend xla:preset=<name>`"
+    );
+    anyhow::ensure!(
+        !args.has("lr"),
+        "--lr moved into the backend spec: use `--backend native:lr=<rate>` \
+         (or `xla:lr=<rate>`)"
+    );
     let workers: usize = args.flag("workers", 4)?;
     let iters: u64 = args.flag("iters", 50)?;
     let loss: f64 = args.flag("loss", 0.0)?;
-    let lr: f32 = args.flag("lr", 0.08)?;
     let proto = parse_proto(&args.flag("proto", "ltp".to_string())?)?;
     let agg = parse_agg(&args.flag("agg", "ps".to_string())?)?;
-    // Real-compute training updates one shared parameter blackboard; the
-    // masked-mean aggregate artifact spans the full model, so multi-point
-    // aggregations are modeled-only for now (`ltp scenario … --agg`).
+    // The compute backend (DESIGN.md §1.3). `native` is the default: it
+    // needs no artifacts, so `ltp train` works out of the box; `--backend
+    // xla[:preset=..]` selects the PJRT path and fails fast with the
+    // artifacts message when `make artifacts` has not run.
+    let backend_spec: String = args.flag("backend", "native".to_string())?;
     anyhow::ensure!(
-        agg.n_aggregators(workers) == 1,
-        "`ltp train` runs real compute on a single aggregation point; \
-         `--agg {}` places {} (use `ltp scenario agg_matrix` or `--agg ps`)",
-        agg.name(),
-        agg.n_aggregators(workers)
+        backend_spec != "true",
+        "--backend requires a spec (see `ltp backend list`)"
     );
+    let backend = parse_backend(&backend_spec)?;
+    // Optional CI assertion: fail (exit non-zero) unless the final eval
+    // loss lands at or below the bound.
+    let max_loss: f64 = args.flag("max-loss", f64::INFINITY)?;
 
-    let rt = ltp::runtime::Runtime::cpu(ltp::runtime::default_artifacts_dir())
-        .context("PJRT CPU client")?;
-    println!("platform: {}", rt.platform());
-    let shared = RealTraining::new(&rt, &preset, lr)?;
+    let info = backend.model().map_err(|e| e.context(format!("backend `{}`", backend.name())))?;
     println!(
-        "model: preset={} params={} ({} on the wire/iteration)",
-        preset,
-        shared.manifest.param_count,
-        ltp::util::fmt_bytes(shared.manifest.wire_bytes()),
+        "backend: {} ({} on the wire/iteration)",
+        backend.name(),
+        ltp::util::fmt_bytes(info.wire_bytes),
     );
     let mut b = RunBuilder::modeled(proto, ltp::config::Workload::Micro, workers)
-        .model_bytes(shared.manifest.wire_bytes())
-        .critical(shared.manifest.tensors.critical_segments(
-            ltp::grad::Manifest::aligned_payload(ltp::wire::LTP_MSS),
-        ))
+        .backend(backend.clone())
         .iters(iters)
         .compute_time(50 * MS)
         .horizon(24 * 3600 * SEC)
@@ -152,19 +160,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let cfg = b.build()?;
 
-    let shared2 = shared.clone();
-    let shared_agg = shared.clone();
     let t0 = std::time::Instant::now();
-    let report = run_with(
-        &cfg,
-        move |w, _| {
-            Box::new(RealCompute {
-                shared: shared2.clone(),
-                corpus: Corpus::new(shared2.manifest.vocab, 42 + w as u64),
-            })
-        },
-        move |_| Box::new(XlaAggregate { shared: shared_agg.clone(), n_workers: workers }),
-    );
+    let report = run_training(&cfg);
     println!("\n iter |   loss | BST(ms) | delivered | sim t(s)");
     for (i, it) in report.iters.iter().enumerate() {
         println!(
@@ -176,6 +173,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             it.end as f64 / SEC as f64,
         );
     }
+    let train = report.train.expect("a backend is always attached to `ltp train`");
     println!(
         "\ncompleted {}/{} iterations | proto={} | loss rate {:.2}% | wall {:.1}s",
         report.iters.len(),
@@ -183,6 +181,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.proto,
         loss * 100.0,
         t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "train: final eval loss {:.4} | accuracy {:.2}% | iters-to-target {}",
+        train.final_loss,
+        train.accuracy * 100.0,
+        train
+            .iters_to_target
+            .map(|n| n.to_string())
+            .unwrap_or_else(|| "—".to_string()),
+    );
+    anyhow::ensure!(
+        (train.final_loss as f64) <= max_loss,
+        "final eval loss {:.4} exceeds --max-loss {max_loss}",
+        train.final_loss
     );
     Ok(())
 }
@@ -395,6 +407,39 @@ fn cmd_agg(args: &Args) -> Result<()> {
     }
 }
 
+/// `ltp backend list` — the compute-backend registry; `ltp backend parse
+/// <spec>` — echo a spec's canonical form and readiness (whether its
+/// dependencies — e.g. the AOT artifacts for `xla` — are present).
+fn cmd_backend(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str).unwrap_or("list") {
+        "list" => {
+            println!(
+                "registered compute backends (use with `--backend <key>[:name=value,...]`):\n"
+            );
+            for d in backend_registry() {
+                println!("  {:<8} {}", d.key, d.summary);
+                if !d.params.is_empty() {
+                    println!("  {:<8}   params: {}", "", d.params);
+                }
+            }
+            println!("\nthe `accuracy_matrix` scenario trains the native backend across loss rates.");
+            Ok(())
+        }
+        "parse" => {
+            let spec =
+                args.positional.get(2).context("usage: ltp backend parse <spec>")?;
+            let b = parse_backend(spec)?;
+            let ready = match b.check_ready() {
+                Ok(()) => "ready".to_string(),
+                Err(e) => format!("unavailable: {e:#}"),
+            };
+            println!("{} -> canonical `{}` ({ready})", spec, b.name());
+            Ok(())
+        }
+        other => bail!("unknown backend subcommand `{other}` (list|parse)"),
+    }
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     match args.positional.first().map(String::as_str) {
@@ -405,6 +450,7 @@ fn main() -> Result<()> {
         }
         Some("proto") => cmd_proto(&args),
         Some("agg") => cmd_agg(&args),
+        Some("backend") => cmd_backend(&args),
         Some("train") => cmd_train(&args),
         Some("bench-ltp") => cmd_bench_ltp(&args),
         _ => {
@@ -414,7 +460,9 @@ fn main() -> Result<()> {
                  ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]\n  \
                  ltp proto <list|parse SPEC>\n  \
                  ltp agg <list|parse SPEC>\n  \
-                 ltp train [--preset tiny] [--workers N] [--iters N] [--loss P] [--proto SPEC] [--agg SPEC]\n  \
+                 ltp backend <list|parse SPEC>\n  \
+                 ltp train [--backend SPEC] [--workers N] [--iters N] [--loss P] [--proto SPEC]\n  \
+                 \x20        [--agg SPEC] [--max-loss X]\n  \
                  ltp bench-ltp [--bytes N] [--loss P]"
             );
             bail!("missing or unknown subcommand");

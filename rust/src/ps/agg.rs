@@ -186,6 +186,25 @@ pub struct AggRun {
     pub fabric: Fabric,
 }
 
+/// What one aggregator endpoint *is* to a compute backend (DESIGN.md
+/// §1.3): terminal masked-mean endpoints own a gradient byte range;
+/// `hier` rack relays and the root describe the two tiers of the
+/// hierarchy. Roles are listed in endpoint order (matching the
+/// `make_agg(endpoint)` numbering of [`BuildEnv`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EndpointRole {
+    /// Terminal aggregator (single PS, or one shard): runs the masked
+    /// mean + optimizer over the gradient bytes
+    /// `[byte_offset, byte_offset + bytes)`, fed by every worker.
+    Final { byte_offset: u64, bytes: u64 },
+    /// A `hier` rack-local relay over the global workers
+    /// `[first_worker, first_worker + n_workers)`; forwards one reduced
+    /// flow to the root.
+    Relay { first_worker: usize, n_workers: usize },
+    /// The `hier` root, fed by one forward flow per rack (rack order).
+    Root { racks: usize },
+}
+
 /// An aggregation topology: a named, thread-shareable strategy that owns
 /// a training run's fabric, aggregator placement, worker routing plans,
 /// and barrier-merge semantics. Registered under string keys in
@@ -211,6 +230,13 @@ pub trait Aggregation: Send + Sync {
     /// Fail-fast validation against a run configuration (called by
     /// [`super::RunBuilder::build`] before any simulation starts).
     fn validate(&self, workers: usize, model_bytes: u64, topo: &Topo) -> Result<()>;
+
+    /// The role of each aggregator endpoint, in endpoint order — how a
+    /// compute backend knows which gradient range (or hierarchy tier)
+    /// each `make_agg(endpoint)` call serves. Callers must [`Self::validate`]
+    /// first; roles of an invalid (workers, model) combination are
+    /// unspecified.
+    fn endpoint_roles(&self, workers: usize, model_bytes: u64) -> Vec<EndpointRole>;
 
     /// Build the fabric inside `sim`, place aggregator and worker nodes,
     /// and return the observation handles.
@@ -410,6 +436,10 @@ impl Aggregation for PsAggregation {
         Ok(())
     }
 
+    fn endpoint_roles(&self, _workers: usize, model_bytes: u64) -> Vec<EndpointRole> {
+        vec![EndpointRole::Final { byte_offset: 0, bytes: model_bytes }]
+    }
+
     fn build(&self, sim: &mut Sim, cfg: &TrainingCfg, env: &mut BuildEnv<'_>) -> AggRun {
         let report: Rc<RefCell<Vec<IterStats>>> = Rc::new(RefCell::new(Vec::new()));
         let closes: Rc<RefCell<Vec<GatherClose>>> = Rc::new(RefCell::new(Vec::new()));
@@ -564,6 +594,14 @@ impl Aggregation for ShardedAggregation {
         Ok(())
     }
 
+    fn endpoint_roles(&self, _workers: usize, model_bytes: u64) -> Vec<EndpointRole> {
+        let seg = Manifest::aligned_payload(LTP_MSS) as u64;
+        shard_ranges(model_bytes, self.n)
+            .into_iter()
+            .map(|(bytes, seg0, _)| EndpointRole::Final { byte_offset: seg0 * seg, bytes })
+            .collect()
+    }
+
     fn build(&self, sim: &mut Sim, cfg: &TrainingCfg, env: &mut BuildEnv<'_>) -> AggRun {
         let w = cfg.n_workers;
         let nsh = self.n;
@@ -678,6 +716,15 @@ impl Aggregation for HierAggregation {
             self.racks
         );
         Ok(())
+    }
+
+    fn endpoint_roles(&self, workers: usize, _model_bytes: u64) -> Vec<EndpointRole> {
+        let per = workers / self.racks.max(1);
+        let mut roles: Vec<EndpointRole> = (0..self.racks)
+            .map(|r| EndpointRole::Relay { first_worker: r * per, n_workers: per })
+            .collect();
+        roles.push(EndpointRole::Root { racks: self.racks });
+        roles
     }
 
     fn build(&self, sim: &mut Sim, cfg: &TrainingCfg, env: &mut BuildEnv<'_>) -> AggRun {
@@ -1362,6 +1409,44 @@ mod tests {
         // n = 1 is the whole message.
         let whole = shard_ranges(bytes, 1);
         assert_eq!(whole, vec![(bytes, 0, 11)]);
+    }
+
+    #[test]
+    fn endpoint_roles_describe_every_topology() {
+        let bytes = 1_000_000u64;
+        assert_eq!(
+            parse_agg("ps").unwrap().endpoint_roles(8, bytes),
+            vec![EndpointRole::Final { byte_offset: 0, bytes }]
+        );
+        // Sharded roles tile the byte space contiguously.
+        let roles = parse_agg("sharded:n=4").unwrap().endpoint_roles(8, bytes);
+        assert_eq!(roles.len(), 4);
+        let mut next = 0u64;
+        let mut total = 0u64;
+        for r in &roles {
+            let EndpointRole::Final { byte_offset, bytes } = *r else {
+                panic!("sharded endpoints are terminal: {r:?}");
+            };
+            assert_eq!(byte_offset, next);
+            next = byte_offset + bytes;
+            total += bytes;
+        }
+        assert_eq!(total, bytes);
+        // Hier: racks first (partitioning the workers in order), root last.
+        let roles = parse_agg("hier:racks=2").unwrap().endpoint_roles(8, bytes);
+        assert_eq!(
+            roles,
+            vec![
+                EndpointRole::Relay { first_worker: 0, n_workers: 4 },
+                EndpointRole::Relay { first_worker: 4, n_workers: 4 },
+                EndpointRole::Root { racks: 2 },
+            ]
+        );
+        // Role counts always match the endpoint counts `build` numbers.
+        for spec in ["ps", "sharded:n=2", "sharded:n=8", "hier", "hier:racks=4"] {
+            let a = parse_agg(spec).unwrap();
+            assert_eq!(a.endpoint_roles(8, bytes).len(), a.n_aggregators(8), "{spec}");
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use super::agg::{default_agg, AggSpec, Topo};
 use super::runner::{BgFlow, RunReport, TrainingCfg};
 use super::spec::ProtoSpec;
+use crate::compute::BackendSpec;
 use crate::config::{NetEnv, Workload};
 use crate::grad::Manifest;
 use crate::proto::MAX_SEGS;
@@ -62,6 +63,7 @@ pub struct RunBuilder {
     topo: Topo,
     bg: Vec<BgFlow>,
     agg: AggSpec,
+    backend: Option<BackendSpec>,
 }
 
 impl RunBuilder {
@@ -87,6 +89,7 @@ impl RunBuilder {
             topo: Topo::Star,
             bg: vec![],
             agg: default_agg(),
+            backend: None,
         }
     }
 
@@ -206,8 +209,28 @@ impl RunBuilder {
         self
     }
 
+    /// Attach a compute backend (`native`, `xla:preset=tiny`, … — see
+    /// [`crate::compute::parse_backend`]). [`RunBuilder::build`] then
+    /// derives the message size and critical set from the backend's model
+    /// (overriding [`RunBuilder::model_bytes`]/[`RunBuilder::critical`]),
+    /// checks the backend's preconditions fail-fast (the error names the
+    /// actual missing dependency, e.g. `make artifacts` for `xla`), and
+    /// the run's report gains a deterministic `train` block.
+    pub fn backend(mut self, backend: BackendSpec) -> RunBuilder {
+        self.backend = Some(backend);
+        self
+    }
+
     /// Validate and produce the run configuration.
-    pub fn build(self) -> Result<TrainingCfg> {
+    pub fn build(mut self) -> Result<TrainingCfg> {
+        if let Some(b) = &self.backend {
+            // The backend's own precondition first, so `fig5`/`ltp train`
+            // errors name the actual missing dependency.
+            b.check_ready()?;
+            let info = b.model()?;
+            self.model_bytes = info.wire_bytes;
+            self.critical = Critical::Explicit(info.critical);
+        }
         ensure!(self.workers >= 1, "a training run needs at least one worker");
         ensure!(self.iters >= 1, "a training run needs at least one iteration");
         ensure!(self.model_bytes > 0, "model_bytes must be positive");
@@ -239,6 +262,12 @@ impl RunBuilder {
         // The aggregation's own consistency rules: worker count divisible
         // across `hier` racks / `sharded` shards, fabric compatibility.
         self.agg.validate(self.workers, self.model_bytes, &self.topo)?;
+        // Can the backend serve this topology's endpoints at this worker
+        // count? (The `xla` Pallas kernel spans the full model — single PS
+        // only — and its artifact bakes in a worker capacity.)
+        if let Some(b) = &self.backend {
+            b.supports(self.workers, &self.agg.endpoint_roles(self.workers, self.model_bytes))?;
+        }
         if self.proto.is_loss_tolerant() {
             // LTP truncates flow ids to 16 bits; slot resolution survives
             // the wrap only for power-of-two strides (the classic 2W
@@ -278,10 +307,13 @@ impl RunBuilder {
             topo: self.topo,
             bg: self.bg,
             agg: self.agg,
+            backend: self.backend,
         })
     }
 
-    /// Build and run a modeled-compute training simulation.
+    /// Build and run the training simulation (modeled compute, or the
+    /// attached backend's real compute when [`RunBuilder::backend`] was
+    /// called).
     pub fn run(self) -> Result<RunReport> {
         Ok(super::runner::run_training(&self.build()?))
     }
@@ -388,6 +420,44 @@ mod tests {
             .iters(6000)
             .build()
             .is_ok());
+    }
+
+    #[test]
+    fn backend_overrides_wire_layout_and_fails_fast() {
+        let native = crate::compute::parse_backend("native").unwrap();
+        let info = native.model().unwrap();
+        let cfg = RunBuilder::modeled(ltp(), Workload::Micro, 4)
+            .backend(native.clone())
+            .build()
+            .unwrap();
+        assert_eq!(cfg.model_bytes, info.wire_bytes, "backend dictates the message size");
+        assert_eq!(cfg.critical, info.critical, "…and the critical set");
+        assert!(cfg.backend.is_some());
+        // The native backend serves multi-endpoint aggregations too.
+        let agg = |s: &str| crate::ps::parse_agg(s).unwrap();
+        assert!(RunBuilder::modeled(ltp(), Workload::Micro, 4)
+            .backend(native.clone())
+            .agg(agg("sharded:n=2"))
+            .build()
+            .is_ok());
+        assert!(RunBuilder::modeled(ltp(), Workload::Micro, 4)
+            .backend(native)
+            .agg(agg("hier"))
+            .build()
+            .is_ok());
+        // `xla` without artifacts fails at build time, naming the actual
+        // missing dependency (skip when someone has built them locally).
+        if !crate::runtime::default_artifacts_dir().join("manifest_tiny.txt").exists() {
+            let xla = crate::compute::parse_backend("xla").unwrap();
+            let err = format!(
+                "{:#}",
+                RunBuilder::modeled(ltp(), Workload::Micro, 4)
+                    .backend(xla)
+                    .build()
+                    .expect_err("no artifacts in this checkout")
+            );
+            assert!(err.contains("make artifacts"), "{err}");
+        }
     }
 
     #[test]

@@ -35,20 +35,20 @@ mod builder;
 mod data;
 mod runner;
 mod server;
-mod spec;
+pub(crate) mod spec;
 mod transport;
 mod worker;
 
 pub use agg::{
     agg_registry, default_agg, parse_agg, AggDef, AggRun, AggSpec, Aggregation, BuildEnv,
-    Fabric, ShardObs, Topo, AGG_REGISTRY,
+    EndpointRole, Fabric, ShardObs, Topo, AGG_REGISTRY,
 };
 pub use blackboard::Blackboard;
 pub use builder::RunBuilder;
 pub use data::Corpus;
 pub use runner::{
-    run_training, run_with, BgFlow, BgKind, NetTotals, RealCompute, RealTraining, RunReport,
-    ShardStat, TrainingCfg, XlaAggregate,
+    run_training, run_training_session, run_with, BgFlow, BgKind, NetTotals, RealCompute,
+    RealTraining, RunReport, ShardStat, TrainingCfg, XlaAggregate,
 };
 pub use server::{Aggregate, NullAggregate, PsFlowPlan, PsNode};
 pub use spec::{

@@ -3,14 +3,16 @@
 //! rack-local aggregation — DESIGN.md §1.2), attach any background flows,
 //! run the BSP loop, and merge every aggregator endpoint's records into
 //! one report. Supports modeled compute (paper message sizes + calibrated
-//! compute times) and real compute (PJRT train_step + Pallas masked
-//! aggregation).
+//! compute times) and real compute through a pluggable backend
+//! (DESIGN.md §1.3: the pure-Rust `native` trainer, or the `xla` PJRT
+//! train_step + Pallas masked aggregation).
 
 use super::agg::{merge_iters, BuildEnv, Topo};
 use super::server::{Aggregate, NullAggregate};
 use super::spec::ProtoSpec;
 use super::worker::{Compute, ModeledCompute, WorkerNode};
 use super::{AggSpec, Blackboard, Corpus, GatherClose, IterStats};
+use crate::compute::{BackendSpec, RunCtx, TrainSession, TrainStats};
 use crate::cc::CcAlgo;
 use crate::config::ModelManifest;
 use crate::grad::{element_mask, Manifest};
@@ -92,6 +94,10 @@ pub struct TrainingCfg {
     pub bg: Vec<BgFlow>,
     /// Aggregation topology (`ps`, `sharded:n=4`, `hier:racks=2`, …).
     pub agg: AggSpec,
+    /// Compute backend (`native`, `xla:preset=tiny`, … — DESIGN.md §1.3).
+    /// `None` keeps modeled compute: fixed durations, no numerics, and a
+    /// report without a `train` block (the original byte layout).
+    pub backend: Option<BackendSpec>,
 }
 
 impl TrainingCfg {
@@ -148,6 +154,10 @@ pub struct RunReport {
     /// single-aggregator runs**, so single-PS reports keep their original
     /// byte layout.
     pub shards: Vec<ShardStat>,
+    /// Deterministic training outcome — present **only when a compute
+    /// backend is attached**, so backend-less reports keep their original
+    /// byte layout.
+    pub train: Option<TrainStats>,
 }
 
 impl RunReport {
@@ -187,13 +197,50 @@ impl RunReport {
     }
 }
 
-/// Run a modeled-compute training simulation (no PJRT involved).
+/// Run a training simulation: modeled compute when no backend is
+/// attached, otherwise one [`crate::compute::TrainSession`] of the
+/// configured backend (real gradients each iteration, masked-mean
+/// aggregation of real bytes, and a `train` block in the report).
 pub fn run_training(cfg: &TrainingCfg) -> RunReport {
+    if cfg.backend.is_some() {
+        return run_training_session(cfg).0;
+    }
     run_with(
         cfg,
         |_, _| Box::new(ModeledCompute(cfg.compute_time)),
         |_| Box::new(NullAggregate(cfg.agg_time)),
     )
+}
+
+/// Like [`run_training`] for a backend-attached configuration, but hands
+/// the finished [`TrainSession`] back alongside the report — tests
+/// inspect the final parameters through the same wiring production runs
+/// use (`rust/tests/agg.rs` asserts cross-topology bit-identity on it).
+///
+/// Panics when no backend is attached. Preconditions were validated at
+/// `RunBuilder::build` time (`check_ready`/`supports`); an open failure
+/// here is a runtime defect of the backend itself, reported like any
+/// other compute panic.
+pub fn run_training_session(cfg: &TrainingCfg) -> (RunReport, Box<dyn TrainSession>) {
+    let backend = cfg.backend.as_ref().expect("run_training_session needs a backend");
+    let session = backend
+        .open(&RunCtx {
+            seed: cfg.seed,
+            n_workers: cfg.n_workers,
+            compute_time: cfg.compute_time,
+            agg_time: cfg.agg_time,
+            roles: cfg.agg.endpoint_roles(cfg.n_workers, cfg.model_bytes),
+        })
+        .unwrap_or_else(|e| panic!("backend `{}` failed to open: {e:#}", backend.name()));
+    let session = RefCell::new(session);
+    let mut report = run_with(
+        cfg,
+        |w, _| session.borrow_mut().make_compute(w),
+        |e| session.borrow_mut().make_agg(e),
+    );
+    let session = session.into_inner();
+    report.train = Some(session.stats(&report.iters));
+    (report, session)
 }
 
 /// How a background flow is observed after the run.
@@ -324,6 +371,7 @@ pub fn run_with(
         bg_bytes,
         sim_events: sim.events_processed(),
         shards,
+        train: None,
     }
 }
 

@@ -186,11 +186,12 @@ pub fn registry_matrix() -> Vec<ProtoSpec> {
 }
 
 // ---------------------------------------------------------------------------
-// Grammar helpers (shared with the aggregation registry in `ps/agg.rs`,
-// which reuses the same `key[:name=value,...]` spec grammar).
+// Grammar helpers (shared with the aggregation registry in `ps/agg.rs` and
+// the compute-backend registry in `crate::compute`, which reuse the same
+// `key[:name=value,...]` spec grammar).
 // ---------------------------------------------------------------------------
 
-pub(super) fn parse_params(rest: Option<&str>) -> Result<Vec<(String, String)>> {
+pub(crate) fn parse_params(rest: Option<&str>) -> Result<Vec<(String, String)>> {
     let Some(rest) = rest else { return Ok(Vec::new()) };
     if rest.trim().is_empty() {
         bail!("empty parameter list after `:`");
@@ -247,12 +248,12 @@ fn parse_fraction(k: &str, v: &str) -> Result<f64> {
     Ok(x)
 }
 
-pub(super) fn unknown_param(key: &str, k: &str, accepted: &str) -> anyhow::Error {
+pub(crate) fn unknown_param(key: &str, k: &str, accepted: &str) -> anyhow::Error {
     anyhow::anyhow!("unknown parameter `{k}` for `{key}` (accepted: {accepted})")
 }
 
 /// Canonical spec string: `key` alone, or `key:` + the given params.
-pub(super) fn canonical(key: &str, parts: &[String]) -> String {
+pub(crate) fn canonical(key: &str, parts: &[String]) -> String {
     if parts.is_empty() {
         key.to_string()
     } else {

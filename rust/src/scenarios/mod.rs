@@ -159,6 +159,14 @@ pub const REGISTRY: &[Scenario] = &[
         incast_class: true,
         cases: defs::agg_matrix,
     },
+    Scenario {
+        name: "accuracy_matrix",
+        summary: "native-backend training accuracy: {0,2,5,10}% loss × {ltp, ltp-adaptive, reno} × bubble filling on/off",
+        // An accuracy scenario, not a throughput one: messages are tiny
+        // (a few KB of MLP gradient), so the BST invariant is not asserted.
+        incast_class: false,
+        cases: defs::accuracy_matrix,
+    },
 ];
 
 /// The registry (function form, for iteration symmetry with `find`).
@@ -209,6 +217,10 @@ pub struct CaseResult {
     /// Simulator events processed by this run (deterministic; the bench
     /// report divides these by wall-clock for events/sec).
     pub sim_events: u64,
+    /// Deterministic training outcome — present only for backend-attached
+    /// runs (`accuracy_matrix`), absent from every modeled-compute case so
+    /// pre-compute-plane reports stay byte-identical.
+    pub train: Option<crate::compute::TrainStats>,
 }
 
 impl CaseResult {
@@ -244,6 +256,7 @@ impl CaseResult {
             bg_bytes: r.bg_bytes.iter().sum(),
             total_time_ms: r.total_time as f64 / MS as f64,
             sim_events: r.sim_events,
+            train: r.train,
         }
     }
 
@@ -268,6 +281,21 @@ impl CaseResult {
             ("total_time_ms", self.total_time_ms.into()),
             ("sim_events", self.sim_events.into()),
         ];
+        // Backend-attached runs append their training outcome; cases
+        // without a backend keep the original key set.
+        if let Some(t) = &self.train {
+            pairs.push((
+                "train",
+                Json::obj(vec![
+                    ("final_loss", Json::Num(t.final_loss as f64)),
+                    ("accuracy", Json::Num(t.accuracy)),
+                    (
+                        "iters_to_target",
+                        t.iters_to_target.map(Json::from).unwrap_or(Json::Null),
+                    ),
+                ]),
+            ));
+        }
         // Multi-aggregator runs append their spec and per-aggregator
         // breakdown; single-PS cases keep the original key set, so
         // pre-aggregation-API reports stay byte-identical.
@@ -342,9 +370,11 @@ impl ScenarioReport {
         out
     }
 
-    /// Human-readable table (mirrors the JSON fields that matter).
+    /// Human-readable table (mirrors the JSON fields that matter). Cases
+    /// that trained a backend grow a final-accuracy column.
     pub fn print_table(&self) {
-        let mut t = Table::new(vec![
+        let with_train = self.cases.iter().any(|c| c.train.is_some());
+        let mut headers = vec![
             "case",
             "iters",
             "mean BST(ms)",
@@ -353,9 +383,13 @@ impl ScenarioReport {
             "drops q/r",
             "retx",
             "criticals",
-        ]);
+        ];
+        if with_train {
+            headers.push("final acc");
+        }
+        let mut t = Table::new(headers);
         for c in &self.cases {
-            t.row(vec![
+            let mut row = vec![
                 c.label.clone(),
                 c.iters.to_string(),
                 format!("{:.2}", c.mean_bst_ms),
@@ -364,7 +398,15 @@ impl ScenarioReport {
                 format!("{}/{}", c.drops_queue, c.drops_random),
                 c.retransmits.to_string(),
                 if c.criticals_ok { "ok".to_string() } else { "LOST".to_string() },
-            ]);
+            ];
+            if with_train {
+                row.push(
+                    c.train
+                        .map(|t| format!("{:.1}%", t.accuracy * 100.0))
+                        .unwrap_or_else(|| "—".to_string()),
+                );
+            }
+            t.row(row);
         }
         t.emit(
             &format!("scenario_{}", self.name),

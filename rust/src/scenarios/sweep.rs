@@ -60,6 +60,18 @@ pub fn sweep_jobs(
     out
 }
 
+/// Deterministic training summary of one job's backend-attached cases
+/// (schema ltp-bench-v4; `null` for jobs whose scenario trains nothing).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchTrain {
+    /// Cases that carried a `train` block.
+    pub cases: usize,
+    /// Mean final eval loss over those cases.
+    pub mean_final_loss: f64,
+    /// Mean final eval accuracy over those cases.
+    pub mean_accuracy: f64,
+}
+
 /// Per-job bench record (wall-clock fields are non-deterministic).
 #[derive(Debug, Clone)]
 pub struct BenchJob {
@@ -78,6 +90,9 @@ pub struct BenchJob {
     /// Mean of the cases' mean BSTs (ms) — the per-scenario perf headline.
     pub mean_bst_ms: f64,
     pub mean_delivered: f64,
+    /// Training summary over the job's backend-attached cases, if any
+    /// (schema v4: the key is always present, `null` without a backend).
+    pub train: Option<BenchTrain>,
     pub sim_events: u64,
     pub wall_secs: f64,
     pub events_per_sec: f64,
@@ -94,6 +109,17 @@ impl BenchJob {
             ("iters", self.iters.into()),
             ("mean_bst_ms", self.mean_bst_ms.into()),
             ("mean_delivered", self.mean_delivered.into()),
+            (
+                "train",
+                match &self.train {
+                    None => Json::Null,
+                    Some(t) => Json::obj(vec![
+                        ("cases", t.cases.into()),
+                        ("mean_final_loss", t.mean_final_loss.into()),
+                        ("mean_accuracy", t.mean_accuracy.into()),
+                    ]),
+                },
+            ),
             ("sim_events", self.sim_events.into()),
             ("wall_secs", self.wall_secs.into()),
             ("events_per_sec", self.events_per_sec.into()),
@@ -123,7 +149,7 @@ impl BenchReport {
             if self.wall_secs > 0.0 { self.sim_events as f64 / self.wall_secs } else { 0.0 };
         let speedup = if self.wall_secs > 0.0 { self.cpu_secs / self.wall_secs } else { 1.0 };
         Json::obj(vec![
-            ("schema", "ltp-bench-v3".into()),
+            ("schema", "ltp-bench-v4".into()),
             ("jobs_requested", self.jobs_requested.into()),
             ("n_jobs", self.n_jobs.into()),
             ("wall_secs", self.wall_secs.into()),
@@ -193,6 +219,18 @@ pub fn run_sweep(jobs: Vec<SweepJob>, n_jobs: usize) -> SweepResult {
                 aggs.push(c.agg.clone());
             }
         }
+        let trained: Vec<&crate::compute::TrainStats> =
+            report.cases.iter().filter_map(|c| c.train.as_ref()).collect();
+        let train = if trained.is_empty() {
+            None
+        } else {
+            let n = trained.len() as f64;
+            Some(BenchTrain {
+                cases: trained.len(),
+                mean_final_loss: trained.iter().map(|t| t.final_loss as f64).sum::<f64>() / n,
+                mean_accuracy: trained.iter().map(|t| t.accuracy).sum::<f64>() / n,
+            })
+        };
         per_job.push(BenchJob {
             scenario: report.name.clone(),
             seed: report.seed,
@@ -204,6 +242,7 @@ pub fn run_sweep(jobs: Vec<SweepJob>, n_jobs: usize) -> SweepResult {
                 / ncases as f64,
             mean_delivered: report.cases.iter().map(|c| c.mean_delivered).sum::<f64>()
                 / ncases as f64,
+            train,
             sim_events: events,
             wall_secs: job_secs,
             events_per_sec: if job_secs > 0.0 { events as f64 / job_secs } else { 0.0 },
@@ -255,15 +294,37 @@ mod tests {
         assert!(j.mean_bst_ms > 0.0);
         let json = result.bench.to_json().render();
         for key in [
-            "\"schema\":\"ltp-bench-v3\"",
+            "\"schema\":\"ltp-bench-v4\"",
             "\"runs\":[",
             "\"events_per_sec\":",
             "\"speedup\":",
             "\"protos\":[\"ltp\",\"reno\"]",
             "\"aggs\":[\"ps\"]",
+            // No backend attached: the v4 train block is present but null.
+            "\"train\":null",
         ] {
             assert!(json.contains(key), "missing `{key}` in {json}");
         }
+    }
+
+    #[test]
+    fn accuracy_matrix_jobs_carry_the_train_block() {
+        let jobs = sweep_jobs(&[index_of("accuracy_matrix")], &[3], true, None, None);
+        let result = run_sweep(jobs, 1);
+        let j = &result.bench.per_job[0];
+        let t = j.train.expect("backend-attached scenario summarizes training");
+        assert_eq!(t.cases, j.cases, "every accuracy_matrix case trains");
+        assert!(t.mean_accuracy > 0.0 && t.mean_accuracy <= 1.0);
+        assert!(t.mean_final_loss.is_finite());
+        let json = result.bench.to_json().render();
+        assert!(json.contains("\"mean_accuracy\":"), "{json}");
+        // Byte-identity across job counts holds for the training scenario
+        // too (the pool determinism contract).
+        let again = run_sweep(
+            sweep_jobs(&[index_of("accuracy_matrix")], &[3], true, None, None),
+            2,
+        );
+        assert_eq!(result.render_json(), again.render_json());
     }
 
     #[test]

@@ -16,9 +16,10 @@
 //! * malformed specs and inconsistent (workers, agg) combinations fail
 //!   fast with actionable messages.
 
+use ltp::compute::parse_backend;
 use ltp::config::Workload;
 use ltp::proto::CloseReason;
-use ltp::ps::{parse_agg, parse_proto, RunBuilder, RunReport};
+use ltp::ps::{parse_agg, parse_proto, run_training_session, RunBuilder, RunReport};
 use ltp::scenarios::CaseResult;
 use ltp::simnet::LossModel;
 use ltp::SEC;
@@ -188,6 +189,45 @@ fn sharded_n4_beats_single_ps_on_lossy_incast() {
         sharded.mean_bst(),
         ps.mean_bst()
     );
+}
+
+/// Run the native backend through a full simulation on the given
+/// aggregation topology at zero wire loss under a reliable transport and
+/// return the final flat parameters — via the production
+/// `run_training_session` wiring, not a test-local re-implementation.
+fn native_final_params(agg: &str) -> Vec<f32> {
+    let cfg = RunBuilder::modeled(parse_proto("reno").unwrap(), Workload::Micro, WORKERS)
+        .backend(parse_backend("native").unwrap())
+        .agg(parse_agg(agg).unwrap())
+        .iters(ITERS)
+        .seed(5)
+        .batches_per_epoch(2)
+        .horizon(600 * SEC)
+        .build()
+        .unwrap_or_else(|e| panic!("{agg}: {e:#}"));
+    let (report, session) = run_training_session(&cfg);
+    assert_eq!(report.iters.len(), ITERS as usize, "{agg}: all iterations must finish");
+    assert!(
+        (report.mean_delivered() - 1.0).abs() < 1e-9,
+        "{agg}: the reliable zero-loss run delivers everything"
+    );
+    assert!(report.train.is_some(), "{agg}: backend-attached run carries a train block");
+    session.params()
+}
+
+#[test]
+fn native_backend_aggregation_is_bit_identical_across_topologies() {
+    // At 0% loss every element mask is all-ones and every endpoint sums in
+    // global worker order, so sharded and hierarchical aggregation must
+    // reproduce the single-PS parameter trajectory *bit for bit* — the
+    // compute-plane counterpart of `sharded_n1_report_is_byte_identical`.
+    let ps = native_final_params("ps");
+    assert!(ps.iter().any(|&p| p != 0.0), "training must move the parameters");
+    assert!(ps.iter().all(|p| p.is_finite()));
+    let sharded = native_final_params("sharded:n=2");
+    assert_eq!(ps, sharded, "sharded:n=2 must aggregate bit-identically to ps");
+    let hier = native_final_params("hier");
+    assert_eq!(ps, hier, "hier must aggregate bit-identically to ps");
 }
 
 #[test]

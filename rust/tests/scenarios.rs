@@ -251,6 +251,57 @@ fn scenario_agg_matrix() {
 }
 
 #[test]
+fn scenario_accuracy_matrix() {
+    let report = conformance("accuracy_matrix");
+    // {0,2,5,10}% loss × {ltp, ltp-adaptive, reno} × bubble filling on/off.
+    assert_eq!(report.cases.len(), 4 * 3 * 2, "{:?}", report.cases);
+    for c in &report.cases {
+        let t = c.train.unwrap_or_else(|| panic!("{}: missing train block", c.label));
+        assert!(t.final_loss.is_finite(), "{}: {t:?}", c.label);
+        assert!(
+            (0.0..=1.0).contains(&t.accuracy),
+            "{}: implausible accuracy {}",
+            c.label,
+            t.accuracy
+        );
+    }
+    let case = |label: &str| {
+        report
+            .cases
+            .iter()
+            .find(|c| c.label == label)
+            .unwrap_or_else(|| panic!("missing case `{label}`"))
+    };
+    let acc = |label: &str| case(label).train.unwrap().accuracy;
+    // The paper's headline accuracy claim (ISSUE 5 acceptance criterion):
+    // with bubble filling, LTP at 2% wire loss trains to within 1%
+    // absolute of the lossless reliable baseline.
+    let baseline = acc("bf/reno/l0");
+    assert!(baseline > 0.95, "the lossless baseline must converge: {baseline}");
+    let ltp2 = acc("bf/ltp/l2");
+    assert!(
+        (ltp2 - baseline).abs() <= 0.01,
+        "bubble-filled LTP at 2% loss must match the lossless baseline within 1%: \
+         ltp {ltp2} vs reno {baseline}"
+    );
+    // LTP actually dropped data at 2% loss — the claim is non-vacuous.
+    assert!(case("bf/ltp/l2").mean_delivered < 1.0);
+    // A reliable transport's numerics are independent of the wire loss
+    // rate and of the fill ablation (its masks are all-ones): every reno
+    // row reproduces the same deterministic outcome bit for bit.
+    for tag in ["bf", "nobf"] {
+        for pct in [0, 2, 5, 10] {
+            let t = case(&format!("{tag}/reno/l{pct}")).train.unwrap();
+            assert_eq!(
+                t,
+                case("bf/reno/l0").train.unwrap(),
+                "{tag}/reno/l{pct}: reliable rows must be loss-rate-invariant"
+            );
+        }
+    }
+}
+
+#[test]
 fn scenario_matrix_respects_agg_overrides() {
     // `--agg` multiplies a star scenario's cases; `--agg ps` reproduces
     // the default labels exactly (CI diffs this byte-for-byte through the
