@@ -1,0 +1,106 @@
+//! Microbenchmarks of the event core (hand-rolled: no criterion in the
+//! vendored set): the hierarchical timer wheel vs the `BinaryHeap` it
+//! replaced, under the simulator's access patterns. Reports ns/op medians;
+//! run with `cargo bench --bench eventcore` (the bench profile keeps debug
+//! symbols, so `perf record` / flamegraphs attribute samples to source).
+
+use ltp::simnet::EventQueue;
+use ltp::util::Pcg64;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+fn bench<F: FnMut() -> u64>(name: &str, iters: u32, mut f: F) {
+    let mut samples = Vec::with_capacity(iters as usize);
+    let mut units = 0u64;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        units = f();
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    samples.sort_unstable();
+    let med = samples[samples.len() / 2];
+    println!(
+        "{name:<44} median {:>10} ns  ({:>8.1} ns/unit over {units} units)",
+        med,
+        med as f64 / units.max(1) as f64
+    );
+}
+
+/// The simulator's steady-state pattern: pop the earliest event, schedule
+/// a couple of successors a short (network-scale) delta ahead — with the
+/// queue holding `depth` events in flight throughout.
+fn churn_wheel(depth: u64, ops: u64) -> u64 {
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut rng = Pcg64::seeded(1);
+    for i in 0..depth {
+        q.schedule(rng.gen_range(1 << 20), i);
+    }
+    let mut processed = 0u64;
+    while processed < ops {
+        let (at, _, _) = q.pop().expect("queue stays populated");
+        processed += 1;
+        q.schedule(at + 1 + rng.gen_range(1 << 14), processed);
+    }
+    std::hint::black_box(q.len());
+    processed
+}
+
+/// The same churn over the former `BinaryHeap<Reverse<(time, seq)>>` —
+/// the baseline the wheel is measured against.
+fn churn_heap(depth: u64, ops: u64) -> u64 {
+    let mut heap: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+    let mut rng = Pcg64::seeded(1);
+    let mut seq = 0u64;
+    for _ in 0..depth {
+        seq += 1;
+        heap.push(Reverse((rng.gen_range(1 << 20), seq)));
+    }
+    let mut processed = 0u64;
+    while processed < ops {
+        let Reverse((at, _)) = heap.pop().expect("heap stays populated");
+        processed += 1;
+        seq += 1;
+        heap.push(Reverse((at + 1 + rng.gen_range(1 << 14), seq)));
+    }
+    std::hint::black_box(heap.len());
+    processed
+}
+
+fn main() {
+    println!("== event core: timer wheel vs binary heap ==");
+    for &depth in &[1_000u64, 100_000] {
+        let ops = 1_000_000;
+        bench(&format!("wheel churn, {depth} in flight"), 10, || churn_wheel(depth, ops));
+        bench(&format!("heap churn, {depth} in flight"), 10, || churn_heap(depth, ops));
+    }
+
+    bench("wheel: same-instant burst drain (FIFO ties)", 10, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let n = 200_000u64;
+        for i in 0..n {
+            q.schedule(1000, i);
+        }
+        let mut acc = 0u64;
+        while let Some((_, _, x)) = q.pop() {
+            acc = acc.wrapping_add(x);
+        }
+        std::hint::black_box(acc);
+        n
+    });
+
+    bench("wheel: far-future cascade sweep", 10, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut rng = Pcg64::seeded(2);
+        let n = 200_000u64;
+        for i in 0..n {
+            q.schedule(rng.gen_range(1 << 50), i);
+        }
+        let mut acc = 0u64;
+        while let Some((at, _, _)) = q.pop() {
+            acc = acc.wrapping_add(at);
+        }
+        std::hint::black_box(acc);
+        n
+    });
+}

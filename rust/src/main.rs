@@ -10,6 +10,8 @@
 //! ltp backend <list|parse SPEC>             compute-backend registry
 //! ltp train [--backend native] [--workers 4] [--iters 50] [--loss 0.01]
 //!           [--proto SPEC] [--agg SPEC] [--max-loss X]
+//! ltp bench check --baseline FILE --current FILE [--scenario NAME]
+//!                 [--max-regress-pct P]     CI events/sec regression gate
 //! ltp bench-ltp [--bytes N] [--loss P]      one-flow protocol microbench
 //! ```
 //!
@@ -338,6 +340,57 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ltp bench check` — the CI perf gate: compare a freshly written bench
+/// report against the committed snapshot and fail (exit non-zero) when
+/// the scenario's events/sec regresses beyond the threshold.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use ltp::scenarios::sweep;
+    match args.positional.get(1).map(String::as_str) {
+        Some("check") => {
+            let baseline_path =
+                args.get("baseline").context("usage: ltp bench check --baseline FILE --current FILE")?;
+            let current_path =
+                args.get("current").context("usage: ltp bench check --baseline FILE --current FILE")?;
+            anyhow::ensure!(
+                baseline_path != "true" && current_path != "true",
+                "--baseline/--current require file paths"
+            );
+            let scenario: String = args.flag("scenario", "incast_sweep".to_string())?;
+            let max_regress_pct: f64 = args.flag("max-regress-pct", 20.0)?;
+            let baseline = std::fs::read_to_string(baseline_path)
+                .with_context(|| format!("reading {baseline_path}"))?;
+            let current = std::fs::read_to_string(current_path)
+                .with_context(|| format!("reading {current_path}"))?;
+            let check = sweep::check_regression(&baseline, &current, &scenario, max_regress_pct)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            for note in &check.notes {
+                eprintln!("note: {note}");
+            }
+            println!(
+                "bench check `{}`: baseline {:.0} ev/s, current {:.0} ev/s ({:+.1}%, threshold -{}%)",
+                check.scenario,
+                check.baseline_eps,
+                check.current_eps,
+                check.delta_pct,
+                check.max_regress_pct,
+            );
+            anyhow::ensure!(
+                check.ok,
+                "events/sec on `{}` regressed {:.1}% (> {}% allowed)",
+                check.scenario,
+                -check.delta_pct,
+                check.max_regress_pct
+            );
+            Ok(())
+        }
+        other => bail!(
+            "unknown bench subcommand `{}` (check) — the sweep itself is \
+             `ltp scenario ... --bench [FILE]`",
+            other.unwrap_or("")
+        ),
+    }
+}
+
 /// `ltp proto list` — the registry; `ltp proto parse <spec>` — echo a
 /// spec's canonical form (handy for checking what a `--proto` flag means).
 fn cmd_proto(args: &Args) -> Result<()> {
@@ -452,6 +505,7 @@ fn main() -> Result<()> {
         Some("agg") => cmd_agg(&args),
         Some("backend") => cmd_backend(&args),
         Some("train") => cmd_train(&args),
+        Some("bench") => cmd_bench(&args),
         Some("bench-ltp") => cmd_bench_ltp(&args),
         _ => {
             eprintln!(
@@ -463,6 +517,7 @@ fn main() -> Result<()> {
                  ltp backend <list|parse SPEC>\n  \
                  ltp train [--backend SPEC] [--workers N] [--iters N] [--loss P] [--proto SPEC]\n  \
                  \x20        [--agg SPEC] [--max-loss X]\n  \
+                 ltp bench check --baseline FILE --current FILE [--scenario NAME] [--max-regress-pct P]\n  \
                  ltp bench-ltp [--bytes N] [--loss P]"
             );
             bail!("missing or unknown subcommand");

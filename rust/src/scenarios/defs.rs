@@ -254,6 +254,36 @@ pub(super) fn accuracy_matrix(p: &ScenarioParams) -> Vec<CaseResult> {
     out
 }
 
+/// `incast_xl`: the paper's headline regime pushed to datacenter scale —
+/// N→1 incast at degrees 256 and 1024 under 2 % non-congestion loss,
+/// {ltp, reno, dctcp} per degree. The paper measured its 30× claim at 8
+/// workers; MLFabric-class systems aggregate across hundreds to thousands
+/// of participants, and this scenario is where the timer-wheel event core
+/// earns its keep (a degree-1024 gather keeps ~10⁵ events in flight).
+/// `--proto`/`--agg` overrides are deliberately ignored so the scenario
+/// always reflects the fixed matrix; labels keep the original
+/// `<proto>/w<degree>` golden-byte layout.
+pub(super) fn incast_xl(p: &ScenarioParams) -> Vec<CaseResult> {
+    let degrees: &[usize] = &[256, 1024];
+    // Fixed per-worker volume (unlike the sweep's fixed total): at XL
+    // degree the interesting cost is per-flow state and the incast burst
+    // itself, and 64 KiB is already past the per-flow floor the sweep
+    // would clamp to.
+    let bytes: u64 = if p.quick { 64 * 1024 } else { 256 * 1024 };
+    let protos: Vec<ProtoSpec> = ["ltp", "reno", "dctcp"]
+        .iter()
+        .map(|s| parse_proto(s).expect("incast_xl protocols parse against the registry"))
+        .collect();
+    let mut out = Vec::new();
+    for &w in degrees {
+        for proto in &protos {
+            let b = base(proto, w, bytes, p).loss(LossModel::Bernoulli { p: 0.02 });
+            out.push(run_case(format!("{}/w{w}", proto.name()), w, b));
+        }
+    }
+    out
+}
+
 /// `agg_matrix`: every aggregation topology — single PS, sharding at
 /// n ∈ {2, 4, 8}, and 2-rack hierarchy — under each of {ltp, reno, dctcp}
 /// on the paper's headline 8→1, 2 %-loss incast fabric. This is where

@@ -167,6 +167,12 @@ pub const REGISTRY: &[Scenario] = &[
         incast_class: false,
         cases: defs::accuracy_matrix,
     },
+    Scenario {
+        name: "incast_xl",
+        summary: "datacenter-scale incast: degrees 256 and 1024 at 2% loss, {ltp, reno, dctcp}",
+        incast_class: true,
+        cases: defs::incast_xl,
+    },
 ];
 
 /// The registry (function form, for iteration symmetry with `find`).

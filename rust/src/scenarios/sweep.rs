@@ -61,7 +61,7 @@ pub fn sweep_jobs(
 }
 
 /// Deterministic training summary of one job's backend-attached cases
-/// (schema ltp-bench-v4; `null` for jobs whose scenario trains nothing).
+/// (schema ltp-bench-v5; `null` for jobs whose scenario trains nothing).
 #[derive(Debug, Clone, Copy)]
 pub struct BenchTrain {
     /// Cases that carried a `train` block.
@@ -91,7 +91,7 @@ pub struct BenchJob {
     pub mean_bst_ms: f64,
     pub mean_delivered: f64,
     /// Training summary over the job's backend-attached cases, if any
-    /// (schema v4: the key is always present, `null` without a backend).
+    /// (the key is always present, `null` without a backend).
     pub train: Option<BenchTrain>,
     pub sim_events: u64,
     pub wall_secs: f64,
@@ -144,12 +144,25 @@ pub struct BenchReport {
 }
 
 impl BenchReport {
+    /// Minimum per-job events/sec — the regression-threshold headline
+    /// (schema v5). The floor, not the mean: one scenario collapsing is
+    /// what a perf gate must catch, and a mean would average it away.
+    pub fn events_per_sec_floor(&self) -> f64 {
+        let floor =
+            self.per_job.iter().map(|j| j.events_per_sec).fold(f64::INFINITY, f64::min);
+        if floor.is_finite() { floor } else { 0.0 } // 0.0 when there are no jobs
+    }
+
     pub fn to_json(&self) -> Json {
         let events_per_sec =
             if self.wall_secs > 0.0 { self.sim_events as f64 / self.wall_secs } else { 0.0 };
         let speedup = if self.wall_secs > 0.0 { self.cpu_secs / self.wall_secs } else { 1.0 };
         Json::obj(vec![
-            ("schema", "ltp-bench-v4".into()),
+            ("schema", "ltp-bench-v5".into()),
+            // How the numbers came to be: "measured" (this process timed
+            // the runs) vs "bootstrap" (a hand-committed seed snapshot —
+            // see rust/BENCH_scenarios.json).
+            ("provenance", "measured".into()),
             ("jobs_requested", self.jobs_requested.into()),
             ("n_jobs", self.n_jobs.into()),
             ("wall_secs", self.wall_secs.into()),
@@ -157,6 +170,7 @@ impl BenchReport {
             ("speedup", speedup.into()),
             ("sim_events", self.sim_events.into()),
             ("events_per_sec", events_per_sec.into()),
+            ("events_per_sec_floor", self.events_per_sec_floor().into()),
             ("runs", Json::Arr(self.per_job.iter().map(|j| j.to_json()).collect())),
         ])
     }
@@ -164,6 +178,124 @@ impl BenchReport {
     pub fn render_json(&self) -> String {
         self.to_json().render_pretty()
     }
+}
+
+// ---------------------------------------------------------------------------
+// Bench-report field extraction + the perf regression gate (`ltp bench
+// check`). These read only documents our own renderer wrote (compact or
+// pretty [`Json`] output), so a targeted scanner is enough — no general
+// JSON parser in the dependency set, none needed.
+// ---------------------------------------------------------------------------
+
+/// Byte offset of the value following `"key"` (+ colon) at or after
+/// `from`, or `None` if the key does not occur.
+fn value_pos(json: &str, key: &str, from: usize) -> Option<usize> {
+    let pat = format!("\"{key}\"");
+    let at = json[from..].find(&pat)? + from + pat.len();
+    let rest = json[at..].trim_start().strip_prefix(':')?.trim_start();
+    Some(json.len() - rest.len())
+}
+
+/// First string value of `"key"` in `json` (no-escape strings only —
+/// which is all the bench schema emits).
+pub fn bench_field_str(json: &str, key: &str) -> Option<String> {
+    let v = value_pos(json, key, 0)?;
+    let body = json[v..].strip_prefix('"')?;
+    Some(body[..body.find('"')?].to_string())
+}
+
+/// First numeric value of `"key"` in `json`.
+pub fn bench_field_num(json: &str, key: &str) -> Option<f64> {
+    let v = value_pos(json, key, 0)?;
+    let end = json[v..]
+        .find(|c: char| !matches!(c, '0'..='9' | '-' | '+' | '.' | 'e' | 'E'))
+        .unwrap_or(json.len() - v);
+    json[v..v + end].parse().ok()
+}
+
+/// Best (maximum) per-job `events_per_sec` among a bench report's runs of
+/// `scenario`. Max, not mean: the gate should compare each side's best
+/// measurement so one scheduler hiccup in a multi-seed sweep cannot fail
+/// an otherwise healthy build.
+pub fn bench_scenario_events_per_sec(json: &str, scenario: &str) -> Option<f64> {
+    let mut best: Option<f64> = None;
+    let mut from = 0;
+    while let Some(v) = value_pos(json, "scenario", from) {
+        from = v + 1;
+        let Some(name) = json[v..].strip_prefix('"') else { continue };
+        let Some(q) = name.find('"') else { break };
+        if &name[..q] != scenario {
+            continue;
+        }
+        let eps = value_pos(json, "events_per_sec", v).and_then(|p| {
+            let end = json[p..]
+                .find(|c: char| !matches!(c, '0'..='9' | '-' | '+' | '.' | 'e' | 'E'))
+                .unwrap_or(json.len() - p);
+            json[p..p + end].parse::<f64>().ok()
+        });
+        if let Some(eps) = eps {
+            best = Some(best.map_or(eps, |b: f64| b.max(eps)));
+        }
+    }
+    best
+}
+
+/// Outcome of [`check_regression`] — everything the CLI prints.
+#[derive(Debug)]
+pub struct BenchCheck {
+    pub scenario: String,
+    pub baseline_eps: f64,
+    pub current_eps: f64,
+    /// Relative change, percent (positive = faster than baseline).
+    pub delta_pct: f64,
+    pub max_regress_pct: f64,
+    pub ok: bool,
+    /// Human-readable caveats (schema drift, bootstrap baseline, …).
+    pub notes: Vec<String>,
+}
+
+/// The perf gate behind `ltp bench check`: fail if `scenario`'s best
+/// events/sec in `current_json` regresses more than `max_regress_pct`
+/// below the committed `baseline_json`.
+pub fn check_regression(
+    baseline_json: &str,
+    current_json: &str,
+    scenario: &str,
+    max_regress_pct: f64,
+) -> Result<BenchCheck, String> {
+    let mut notes = Vec::new();
+    for (side, json) in [("baseline", baseline_json), ("current", current_json)] {
+        match bench_field_str(json, "schema") {
+            Some(s) if s == "ltp-bench-v5" => {}
+            Some(s) => notes.push(format!("{side} uses schema {s}, expected ltp-bench-v5")),
+            None => return Err(format!("{side} is not a bench report (no schema field)")),
+        }
+    }
+    if bench_field_str(baseline_json, "provenance").as_deref() == Some("bootstrap") {
+        notes.push(
+            "baseline is a bootstrap snapshot (hand-committed floor, not a measured run)"
+                .to_string(),
+        );
+    }
+    let baseline_eps = bench_scenario_events_per_sec(baseline_json, scenario)
+        .ok_or_else(|| format!("baseline has no `{scenario}` run"))?;
+    let current_eps = bench_scenario_events_per_sec(current_json, scenario)
+        .ok_or_else(|| format!("current report has no `{scenario}` run"))?;
+    let delta_pct = if baseline_eps > 0.0 {
+        (current_eps - baseline_eps) / baseline_eps * 100.0
+    } else {
+        0.0
+    };
+    let ok = current_eps >= baseline_eps * (1.0 - max_regress_pct / 100.0);
+    Ok(BenchCheck {
+        scenario: scenario.to_string(),
+        baseline_eps,
+        current_eps,
+        delta_pct,
+        max_regress_pct,
+        ok,
+        notes,
+    })
 }
 
 /// A finished sweep: reports in job order plus the bench distillation.
@@ -294,17 +426,93 @@ mod tests {
         assert!(j.mean_bst_ms > 0.0);
         let json = result.bench.to_json().render();
         for key in [
-            "\"schema\":\"ltp-bench-v4\"",
+            "\"schema\":\"ltp-bench-v5\"",
+            "\"provenance\":\"measured\"",
             "\"runs\":[",
             "\"events_per_sec\":",
+            "\"events_per_sec_floor\":",
             "\"speedup\":",
             "\"protos\":[\"ltp\",\"reno\"]",
             "\"aggs\":[\"ps\"]",
-            // No backend attached: the v4 train block is present but null.
+            // No backend attached: the v5 train block is present but null.
             "\"train\":null",
         ] {
             assert!(json.contains(key), "missing `{key}` in {json}");
         }
+        // The floor is the min over per-job rates — with one job, its rate.
+        assert!(
+            (result.bench.events_per_sec_floor() - j.events_per_sec).abs() < 1e-9,
+            "single-job floor equals that job's rate"
+        );
+    }
+
+    #[test]
+    fn bench_field_scanner_reads_compact_and_pretty() {
+        let report = BenchReport {
+            jobs_requested: 1,
+            n_jobs: 1,
+            wall_secs: 2.0,
+            cpu_secs: 2.0,
+            sim_events: 4_000_000,
+            per_job: vec![BenchJob {
+                scenario: "incast_sweep".to_string(),
+                seed: 1,
+                protos: vec!["ltp".to_string()],
+                aggs: vec!["ps".to_string()],
+                cases: 3,
+                iters: 9,
+                mean_bst_ms: 1.5,
+                mean_delivered: 0.99,
+                train: None,
+                sim_events: 4_000_000,
+                wall_secs: 2.0,
+                events_per_sec: 2_000_000.0,
+            }],
+        };
+        for json in [report.to_json().render(), report.render_json()] {
+            assert_eq!(bench_field_str(&json, "schema").as_deref(), Some("ltp-bench-v5"));
+            assert_eq!(bench_field_num(&json, "sim_events"), Some(4_000_000.0));
+            assert_eq!(
+                bench_scenario_events_per_sec(&json, "incast_sweep"),
+                Some(2_000_000.0),
+                "{json}"
+            );
+            assert_eq!(bench_scenario_events_per_sec(&json, "no_such"), None);
+        }
+    }
+
+    #[test]
+    fn scenario_scan_takes_the_best_run_and_ignores_others() {
+        let json = r#"{"schema": "ltp-bench-v5", "events_per_sec": 9.0, "runs": [
+            {"scenario": "wan_clean", "events_per_sec": 50.0},
+            {"scenario": "incast_sweep", "events_per_sec": 10.0},
+            {"scenario": "incast_sweep", "events_per_sec": 30.0}]}"#;
+        assert_eq!(bench_scenario_events_per_sec(json, "incast_sweep"), Some(30.0));
+        assert_eq!(bench_scenario_events_per_sec(json, "wan_clean"), Some(50.0));
+    }
+
+    #[test]
+    fn regression_gate_passes_within_threshold_and_fails_beyond() {
+        let bench = |eps: f64, provenance: &str| {
+            format!(
+                r#"{{"schema": "ltp-bench-v5", "provenance": "{provenance}",
+                     "runs": [{{"scenario": "incast_sweep", "events_per_sec": {eps}}}]}}"#
+            )
+        };
+        let baseline = bench(1_000_000.0, "bootstrap");
+        // 10% down, 20% allowed: pass (with a bootstrap-baseline note).
+        let c = check_regression(&baseline, &bench(900_000.0, "measured"), "incast_sweep", 20.0)
+            .unwrap();
+        assert!(c.ok, "{c:?}");
+        assert!(c.delta_pct < 0.0);
+        assert!(c.notes.iter().any(|n| n.contains("bootstrap")), "{c:?}");
+        // 30% down, 20% allowed: fail.
+        let c = check_regression(&baseline, &bench(700_000.0, "measured"), "incast_sweep", 20.0)
+            .unwrap();
+        assert!(!c.ok, "{c:?}");
+        // Missing scenario on either side is an error, not a pass.
+        assert!(check_regression(&baseline, &bench(1.0, "measured"), "wan_clean", 20.0).is_err());
+        assert!(check_regression("{}", &baseline, "incast_sweep", 20.0).is_err());
     }
 
     #[test]

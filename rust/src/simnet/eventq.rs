@@ -1,0 +1,394 @@
+//! The simulator's event queue: a hierarchical timer wheel with
+//! heap-identical ordering.
+//!
+//! The original engine kept every pending event in a
+//! `BinaryHeap<Reverse<Scheduled>>` ordered by `(time, seq)`. That is
+//! O(log n) per schedule/pop with poor cache behavior once a
+//! datacenter-scale incast keeps hundreds of thousands of events in
+//! flight; the wheel replaces it with O(1) amortized schedule and pop.
+//!
+//! **Ordering contract** (the golden-byte contract of every scenario
+//! report): events pop in strictly nondecreasing `(time, seq)` order, where
+//! `seq` is the schedule-call counter — i.e. exactly the order the old
+//! heap produced, including FIFO ties at the same instant. The equivalence
+//! test `rust/tests/eventcore.rs` drives randomized workloads through this
+//! wheel and a reference heap side by side and asserts identical pop
+//! sequences.
+//!
+//! # Design
+//!
+//! Eleven levels of 64 slots each cover the full 64-bit nanosecond clock
+//! (6 bits per level). An event at absolute time `at` lives at the level
+//! of the highest 6-bit block in which `at` differs from the queue's
+//! current time (`at == now` → level 0), in the slot indexed by that
+//! block's value:
+//!
+//! ```text
+//! level = highest_set_bit(at ^ now) / 6      (0 when at == now)
+//! slot  = (at >> (6 * level)) & 63
+//! ```
+//!
+//! Level 0 slots therefore hold exactly one timestamp each, so FIFO order
+//! within a slot *is* seq order; higher-level slots hold whole time blocks
+//! that **cascade** down (stably, preserving insertion order) as the clock
+//! advances into them. A 64-bit occupancy bitmap per level finds the next
+//! non-empty slot with `trailing_zeros` — no scanning, no comparisons.
+//!
+//! # Invariants
+//!
+//! * Every stored event's time `at` satisfies `at >= now`, and its digits
+//!   above its level equal `now`'s (maintained by cascading exactly when
+//!   the clock enters a slot's block).
+//! * `schedule` requires `at >= now`. `now` advances only to popped event
+//!   times and to slot starts `<= until` of a bounded pop — so inside the
+//!   simulator, where scheduling only happens while an event is being
+//!   dispatched (at which instant `now` equals that event's timestamp),
+//!   the requirement holds by construction. Debug builds assert it.
+//! * Slot vectors keep their capacity when drained (and the cascade
+//!   scratch buffer is reused), so steady-state schedule/pop traffic
+//!   performs **zero heap allocations** once the wheel has warmed up.
+//!
+//! Cancellation is tombstone-based: `cancel` marks the sequence number and
+//! the entry is skipped (and the tombstone dropped) when its slot drains.
+//! The simulator itself never cancels; the operation exists for the
+//! equivalence test's workload and future protocol timer reuse.
+
+use std::collections::{HashSet, VecDeque};
+
+/// Bits per wheel level.
+const BITS: u32 = 6;
+/// Slots per level (`1 << BITS`).
+const SLOTS: usize = 1 << BITS;
+/// Levels needed to cover a 64-bit clock at 6 bits each.
+const LEVELS: usize = 11;
+
+struct Entry<T> {
+    at: u64,
+    seq: u64,
+    item: T,
+}
+
+/// A hierarchical timer wheel ordered by `(time, seq)` — drop-in
+/// replacement for the simulator's former binary heap (see module docs).
+pub struct EventQueue<T> {
+    /// The queue clock: the largest slot start / event time reached so
+    /// far. All stored entries have `at >= now`.
+    now: u64,
+    /// Schedule-call counter; the next schedule gets `seq + 1`.
+    seq: u64,
+    /// Live (scheduled, not yet popped or cancelled) entries.
+    len: usize,
+    /// `LEVELS * SLOTS` slot vectors, level-major.
+    slots: Vec<Vec<Entry<T>>>,
+    /// Per-level occupancy bitmaps (bit `s` ⇔ slot `s` non-empty).
+    occ: [u64; LEVELS],
+    /// Entries of the level-0 slot currently being served (all share one
+    /// timestamp, in seq order).
+    ready: VecDeque<Entry<T>>,
+    /// Scratch for stable cascades (capacity reused across cascades).
+    cascade_buf: Vec<Entry<T>>,
+    /// Tombstoned sequence numbers, consumed when their entry surfaces.
+    cancelled: HashSet<u64>,
+    /// Debug-only liveness tracking: catches cancels of already-delivered
+    /// events (a contract violation that would corrupt `len`).
+    #[cfg(debug_assertions)]
+    live: HashSet<u64>,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        let mut slots = Vec::with_capacity(LEVELS * SLOTS);
+        slots.resize_with(LEVELS * SLOTS, Vec::new);
+        EventQueue {
+            now: 0,
+            seq: 0,
+            len: 0,
+            slots,
+            occ: [0; LEVELS],
+            ready: VecDeque::new(),
+            cascade_buf: Vec::new(),
+            cancelled: HashSet::new(),
+            #[cfg(debug_assertions)]
+            live: HashSet::new(),
+        }
+    }
+
+    /// Live events (scheduled, not yet popped or cancelled).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The queue clock (see module docs); `schedule` requires `at >= now()`.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Schedule `item` at absolute time `at` (which must be `>= now()`;
+    /// debug-asserted, clamped in release builds). Returns the event's
+    /// sequence number — the FIFO tiebreaker, usable with [`cancel`].
+    ///
+    /// [`cancel`]: EventQueue::cancel
+    pub fn schedule(&mut self, at: u64, item: T) -> u64 {
+        debug_assert!(
+            at >= self.now,
+            "schedule in the past: at={at} < now={}",
+            self.now
+        );
+        let at = at.max(self.now);
+        self.seq += 1;
+        let seq = self.seq;
+        #[cfg(debug_assertions)]
+        self.live.insert(seq);
+        self.insert(Entry { at, seq, item });
+        self.len += 1;
+        seq
+    }
+
+    /// Cancel a pending event by its sequence number. Returns `true` if a
+    /// tombstone was planted. Cancelling an already-delivered event is a
+    /// caller bug (debug-asserted); the simulator itself never cancels.
+    pub fn cancel(&mut self, seq: u64) -> bool {
+        if seq == 0 || seq > self.seq || self.cancelled.contains(&seq) {
+            return false;
+        }
+        #[cfg(debug_assertions)]
+        {
+            debug_assert!(
+                self.live.contains(&seq),
+                "cancel of an already-delivered event (seq {seq})"
+            );
+            self.live.remove(&seq);
+        }
+        self.cancelled.insert(seq);
+        self.len -= 1;
+        true
+    }
+
+    /// Pop the earliest event in `(time, seq)` order.
+    pub fn pop(&mut self) -> Option<(u64, u64, T)> {
+        self.pop_at_most(u64::MAX)
+    }
+
+    /// Pop the earliest event if its time is `<= until`; otherwise leave
+    /// it pending and return `None`. (The clock may still advance up to
+    /// `until` internally while cascading — never past it.)
+    pub fn pop_at_most(&mut self, until: u64) -> Option<(u64, u64, T)> {
+        loop {
+            // Serve the level-0 slot currently in flight.
+            while let Some(head) = self.ready.front() {
+                if head.at > until {
+                    return None;
+                }
+                let e = self.ready.pop_front().expect("front was Some");
+                if self.cancelled.remove(&e.seq) {
+                    continue; // tombstoned: skip, already uncounted
+                }
+                #[cfg(debug_assertions)]
+                self.live.remove(&e.seq);
+                self.len -= 1;
+                return Some((e.at, e.seq, e.item));
+            }
+            if self.len == 0 {
+                return None;
+            }
+            // Level 0: slots hold single timestamps within the current
+            // 64 ns block; the lowest occupied one is the global minimum.
+            if self.occ[0] != 0 {
+                let s = self.occ[0].trailing_zeros() as usize;
+                let t = (self.now & !(SLOTS as u64 - 1)) | s as u64;
+                debug_assert!(t >= self.now, "stale level-0 slot at {t} (now {})", self.now);
+                if t > until {
+                    return None;
+                }
+                self.occ[0] &= !(1u64 << s);
+                self.now = t;
+                let slot = &mut self.slots[s];
+                self.ready.extend(slot.drain(..)); // capacity stays in the slot
+                continue;
+            }
+            // Higher levels: advance to the lowest occupied slot's block
+            // start and cascade its entries down (stably).
+            let lvl = (1..LEVELS)
+                .find(|&l| self.occ[l] != 0)
+                .expect("len > 0 but every wheel level is empty");
+            let s = self.occ[lvl].trailing_zeros() as usize;
+            let shift = BITS * lvl as u32;
+            // Digits of `now` above this level, with the level digit set to
+            // `s` and everything below zeroed = the slot's block start.
+            let upper = if shift + BITS >= 64 {
+                0
+            } else {
+                self.now & !((1u64 << (shift + BITS)) - 1)
+            };
+            let slot_start = upper | ((s as u64) << shift);
+            debug_assert!(
+                slot_start >= self.now,
+                "stale level-{lvl} slot at {slot_start} (now {})",
+                self.now
+            );
+            if slot_start > until {
+                return None;
+            }
+            self.occ[lvl] &= !(1u64 << s);
+            self.now = slot_start;
+            let mut buf = std::mem::take(&mut self.cascade_buf);
+            buf.extend(self.slots[lvl * SLOTS + s].drain(..));
+            for e in buf.drain(..) {
+                self.insert(e); // lands strictly below `lvl`
+            }
+            self.cascade_buf = buf;
+        }
+    }
+
+    fn insert(&mut self, e: Entry<T>) {
+        let lvl = if e.at == self.now {
+            0
+        } else {
+            ((63 - (e.at ^ self.now).leading_zeros()) / BITS) as usize
+        };
+        let s = ((e.at >> (BITS * lvl as u32)) & (SLOTS as u64 - 1)) as usize;
+        self.occ[lvl] |= 1u64 << s;
+        self.slots[lvl * SLOTS + s].push(e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut EventQueue<u32>) -> Vec<(u64, u64, u32)> {
+        let mut out = Vec::new();
+        while let Some(e) = q.pop() {
+            out.push(e);
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut q = EventQueue::new();
+        q.schedule(300, 3);
+        q.schedule(100, 1);
+        q.schedule(200, 2);
+        q.schedule(100, 10); // same instant: FIFO by insertion
+        let got: Vec<(u64, u32)> = drain(&mut q).into_iter().map(|(t, _, x)| (t, x)).collect();
+        assert_eq!(got, vec![(100, 1), (100, 10), (200, 2), (300, 3)]);
+    }
+
+    #[test]
+    fn same_instant_ties_are_fifo_across_many_events() {
+        let mut q = EventQueue::new();
+        for i in 0..1000u32 {
+            q.schedule(42, i);
+        }
+        let got: Vec<u32> = drain(&mut q).into_iter().map(|(_, _, x)| x).collect();
+        assert_eq!(got, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn far_future_events_cascade_correctly() {
+        let mut q = EventQueue::new();
+        q.schedule(u64::MAX, 9);
+        q.schedule(1 << 40, 4);
+        q.schedule(5, 0);
+        q.schedule((1 << 40) + 1, 5);
+        let got: Vec<u64> = drain(&mut q).into_iter().map(|(t, _, _)| t).collect();
+        assert_eq!(got, vec![5, 1 << 40, (1 << 40) + 1, u64::MAX]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bounded_pop_respects_the_horizon() {
+        let mut q = EventQueue::new();
+        q.schedule(100, 1);
+        q.schedule(5000, 2);
+        assert_eq!(q.pop_at_most(50), None);
+        assert_eq!(q.pop_at_most(100).map(|(t, _, x)| (t, x)), Some((100, 1)));
+        assert_eq!(q.pop_at_most(4999), None);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop_at_most(5000).map(|(t, _, x)| (t, x)), Some((5000, 2)));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn bounded_pop_never_advances_past_until() {
+        let mut q = EventQueue::new();
+        // An event deep in a higher-level block: a bounded pop below its
+        // slot start must not move the clock at all; one inside the block
+        // may cascade but never past `until`.
+        q.schedule(1_000_000, 7);
+        assert_eq!(q.pop_at_most(400), None);
+        assert_eq!(q.now(), 0);
+        assert_eq!(q.pop_at_most(999_999), None);
+        assert!(q.now() <= 999_999);
+        assert_eq!(q.pop_at_most(1_000_000).map(|(t, _, _)| t), Some(1_000_000));
+    }
+
+    #[test]
+    fn cancellation_skips_events_and_updates_len() {
+        let mut q = EventQueue::new();
+        let a = q.schedule(10, 1);
+        let b = q.schedule(10, 2);
+        let c = q.schedule(20, 3);
+        assert!(q.cancel(b));
+        assert!(!q.cancel(b), "double cancel is a no-op");
+        assert!(!q.cancel(999), "unknown seq is a no-op");
+        assert_eq!(q.len(), 2);
+        let got: Vec<u64> = drain(&mut q).into_iter().map(|(_, s, _)| s).collect();
+        assert_eq!(got, vec![a, c]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn cancel_everything_leaves_an_empty_queue() {
+        let mut q = EventQueue::new();
+        let seqs: Vec<u64> = (0..10).map(|i| q.schedule(100 + i, i as u32)).collect();
+        for s in seqs {
+            assert!(q.cancel(s));
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn interleaved_schedule_and_pop_keeps_order() {
+        let mut q = EventQueue::new();
+        q.schedule(10, 0);
+        q.schedule(30, 1);
+        assert_eq!(q.pop().map(|(t, _, x)| (t, x)), Some((10, 0)));
+        // Scheduling at the current instant lands after nothing (queue has
+        // only later events) but before them in time.
+        q.schedule(10, 2);
+        q.schedule(20, 3);
+        let got: Vec<(u64, u32)> = drain(&mut q).into_iter().map(|(t, _, x)| (t, x)).collect();
+        assert_eq!(got, vec![(10, 2), (20, 3), (30, 1)]);
+    }
+
+    #[test]
+    fn seq_numbers_are_the_schedule_counter() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.schedule(1, 0), 1);
+        assert_eq!(q.schedule(1, 0), 2);
+        assert_eq!(q.schedule(2, 0), 3);
+    }
+}
+
+impl<T> std::fmt::Debug for EventQueue<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventQueue")
+            .field("now", &self.now)
+            .field("len", &self.len)
+            .field("seq", &self.seq)
+            .finish()
+    }
+}

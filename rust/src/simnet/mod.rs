@@ -6,15 +6,20 @@
 //! optional ECN marking, and a non-congestion loss model; switches that
 //! forward between links; and protocol endpoints attached as [`Node`]s.
 //!
-//! Everything is driven from a single binary-heap event queue keyed by
-//! `(time, seq)`, so runs are bit-reproducible for a given seed — the
-//! property the paper-figure benches rely on.
+//! Everything is driven from a single event queue keyed by `(time, seq)`
+//! — a hierarchical timer wheel ([`eventq::EventQueue`]) with the exact
+//! pop order of the binary heap it replaced — so runs are bit-reproducible
+//! for a given seed: the property the paper-figure benches rely on.
 
+pub mod eventq;
 mod link;
+pub mod pool;
 mod sim;
 mod topo;
 
+pub use eventq::EventQueue;
 pub use link::{Link, LinkCfg, LinkStats, LossModel};
+pub use pool::{BufId, BufPool};
 pub use sim::{Ctx, EntityId, Event, LinkId, Node, Sim};
 pub use topo::{
     n_rack, star, two_rack, CountingSink, CrossTraffic, RackTopology, StarTopology,

@@ -1,0 +1,182 @@
+//! An arena/free-list pool for payload byte buffers.
+//!
+//! The real-socket UDP receive path used to allocate a fresh `Vec<u8>` per
+//! reassembled data segment — tens of thousands of allocations per
+//! gather round at incast degree 1024. [`BufPool`] recycles those buffers
+//! instead: a `take` hands out a **cleared** buffer (stale payload bytes
+//! from a previous flow never leak into the next — segments are
+//! copy-extended, so a dirty buffer would be a silent correctness bug),
+//! and a `recycle` returns it for reuse.
+//!
+//! Buffers are identified by [`BufId`] handles into the arena rather than
+//! moved by value, so a double `recycle` is *detectable* — debug builds
+//! assert on it (the test profile compiles with `debug-assertions = true`).
+//!
+//! The pool grows without bound under burst, but `recycle` drops the
+//! capacity of any buffer beyond the `high_water` free-list cap, so a
+//! one-off spike does not pin its peak memory forever.
+
+/// Handle to a pooled buffer. Obtained from [`BufPool::take`]; the buffer
+/// stays owned by the pool and is accessed via [`BufPool::get`]/[`get_mut`].
+///
+/// [`get_mut`]: BufPool::get_mut
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufId(u32);
+
+/// Arena of reusable byte buffers with a free list (see module docs).
+pub struct BufPool {
+    bufs: Vec<Vec<u8>>,
+    free: Vec<u32>,
+    /// `live[i]` ⇔ buffer `i` is checked out. Drives the double-free
+    /// debug-assert and makes `recycle` idempotence violations visible.
+    live: Vec<bool>,
+    /// Max buffers kept on the free list with capacity intact; recycles
+    /// beyond this release their allocation.
+    high_water: usize,
+}
+
+impl BufPool {
+    /// An empty pool keeping at most `high_water` spare buffers warm.
+    pub fn new(high_water: usize) -> BufPool {
+        BufPool { bufs: Vec::new(), free: Vec::new(), live: Vec::new(), high_water }
+    }
+
+    /// Check out a cleared (empty, possibly pre-allocated) buffer.
+    pub fn take(&mut self) -> BufId {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                let id = self.bufs.len() as u32;
+                self.bufs.push(Vec::new());
+                self.live.push(false);
+                id
+            }
+        };
+        debug_assert!(!self.live[id as usize], "free list handed out a live buffer");
+        self.live[id as usize] = true;
+        self.bufs[id as usize].clear();
+        BufId(id)
+    }
+
+    /// Return a buffer to the pool. Its contents become invalid; the next
+    /// [`take`] may hand the same (cleared) buffer to a different flow.
+    /// Recycling a buffer twice is a caller bug (debug-asserted).
+    ///
+    /// [`take`]: BufPool::take
+    pub fn recycle(&mut self, id: BufId) {
+        let i = id.0 as usize;
+        debug_assert!(self.live[i], "double recycle of pooled buffer {}", id.0);
+        if !self.live[i] {
+            return; // release builds: ignore rather than corrupt the free list
+        }
+        self.live[i] = false;
+        if self.free.len() >= self.high_water {
+            // Past the high-water cap: keep the slot but drop the memory.
+            self.bufs[i] = Vec::new();
+        }
+        self.free.push(id.0);
+    }
+
+    pub fn get(&self, id: BufId) -> &Vec<u8> {
+        debug_assert!(self.live[id.0 as usize], "access to a recycled buffer");
+        &self.bufs[id.0 as usize]
+    }
+
+    pub fn get_mut(&mut self, id: BufId) -> &mut Vec<u8> {
+        debug_assert!(self.live[id.0 as usize], "access to a recycled buffer");
+        &mut self.bufs[id.0 as usize]
+    }
+
+    /// Buffers currently checked out.
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    /// Total arena slots (checked out + free).
+    pub fn capacity(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Free-list slots still holding allocated capacity (spare memory kept
+    /// warm for the next burst).
+    pub fn warm_spares(&self) -> usize {
+        self.free.iter().filter(|&&i| self.bufs[i as usize].capacity() > 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycled_buffers_come_back_cleared() {
+        let mut pool = BufPool::new(8);
+        let a = pool.take();
+        pool.get_mut(a).extend_from_slice(b"stale payload bytes");
+        pool.recycle(a);
+        let b = pool.take();
+        // Same arena slot, but no stale bytes leak across flows.
+        assert!(pool.get(b).is_empty(), "recycled buffer not cleared");
+        pool.get_mut(b).extend_from_slice(b"xy");
+        assert_eq!(pool.get(b).as_slice(), b"xy");
+    }
+
+    #[test]
+    fn pool_grows_under_burst_and_reuses_after() {
+        let mut pool = BufPool::new(64);
+        let burst: Vec<BufId> = (0..100).map(|_| pool.take()).collect();
+        assert_eq!(pool.capacity(), 100);
+        assert_eq!(pool.live_count(), 100);
+        for id in burst {
+            pool.recycle(id);
+        }
+        assert_eq!(pool.live_count(), 0);
+        // A second burst reuses the arena: no new slots.
+        let again: Vec<BufId> = (0..100).map(|_| pool.take()).collect();
+        assert_eq!(pool.capacity(), 100);
+        for id in again {
+            pool.recycle(id);
+        }
+    }
+
+    #[test]
+    fn recycle_shrinks_to_the_high_water_cap() {
+        let mut pool = BufPool::new(4);
+        let ids: Vec<BufId> = (0..10).map(|_| pool.take()).collect();
+        for &id in &ids {
+            pool.get_mut(id).extend_from_slice(&[0u8; 4096]);
+        }
+        for id in ids {
+            pool.recycle(id);
+        }
+        // First 4 recycles keep their capacity; the rest release it.
+        assert_eq!(pool.warm_spares(), 4);
+        assert_eq!(pool.capacity(), 10, "arena slots are kept, memory is not");
+    }
+
+    #[test]
+    fn steady_state_take_recycle_allocates_nothing() {
+        let mut pool = BufPool::new(8);
+        let warm = pool.take();
+        pool.get_mut(warm).reserve(2048);
+        let warm_cap = pool.get(warm).capacity();
+        pool.recycle(warm);
+        for _ in 0..1000 {
+            let id = pool.take();
+            assert!(pool.get(id).capacity() >= warm_cap, "warm capacity was lost");
+            pool.get_mut(id).extend_from_slice(&[7u8; 1024]);
+            pool.recycle(id);
+        }
+        assert_eq!(pool.capacity(), 1, "steady state must not grow the arena");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "double recycle")]
+    fn double_free_is_caught_in_debug_builds() {
+        let mut pool = BufPool::new(8);
+        let id = pool.take();
+        pool.recycle(id);
+        pool.recycle(id); // caller bug: debug-assert fires
+    }
+}

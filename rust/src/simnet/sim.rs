@@ -1,17 +1,19 @@
 //! The discrete-event engine: entities (hosts and switches), links between
-//! them, and a `(time, seq)`-ordered event heap.
+//! them, and a `(time, seq)`-ordered event queue (a hierarchical timer
+//! wheel, [`super::eventq::EventQueue`], which preserves the former binary
+//! heap's exact pop order — including same-instant FIFO ties — at O(1)
+//! amortized cost per event).
 //!
 //! Protocol endpoints implement [`Node`] and interact with the network only
 //! through [`Ctx`], which exposes the clock, packet transmission, timers,
 //! and a per-node RNG stream — the same surface the real-socket driver
 //! provides, keeping protocol code sans-IO.
 
+use super::eventq::EventQueue;
 use super::link::{Link, LinkCfg};
 use super::Packet;
 use crate::util::Pcg64;
 use crate::Nanos;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 
 /// Index of a host or switch in the simulation.
 pub type EntityId = usize;
@@ -48,28 +50,8 @@ pub enum Event {
 /// the link in the low bits".
 const VIRTUAL_FWD: usize = 1 << 62;
 
-struct Scheduled {
-    at: Nanos,
-    seq: u64,
-    ev: Event,
-}
-
-impl PartialEq for Scheduled {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl Eq for Scheduled {}
-impl PartialOrd for Scheduled {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Scheduled {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.at, self.seq).cmp(&(other.at, other.seq))
-    }
-}
+/// "No exact route" sentinel in the dense per-entity route rows.
+const NO_ROUTE: u32 = u32::MAX;
 
 enum Entity {
     Host,
@@ -128,12 +110,13 @@ impl<'a> Ctx<'a> {
 /// with `&mut` access to the network.
 struct NetState {
     now: Nanos,
-    seq: u64,
-    heap: BinaryHeap<Reverse<Scheduled>>,
+    queue: EventQueue<Event>,
     links: Vec<Link>,
     entities: Vec<Entity>,
-    /// Exact routes: (entity, dst) → link.
-    routes: std::collections::HashMap<(EntityId, EntityId), LinkId>,
+    /// Exact routes as dense per-entity rows: `routes[src][dst]` is a link
+    /// id or [`NO_ROUTE`]. An indexed load per hop instead of the former
+    /// `HashMap<(EntityId, EntityId), LinkId>`'s SipHash per packet.
+    routes: Vec<Vec<u32>>,
     /// Fallback uplink per entity.
     default_uplink: Vec<Option<LinkId>>,
     node_rngs: Vec<Pcg64>,
@@ -142,12 +125,25 @@ struct NetState {
 
 impl NetState {
     fn schedule(&mut self, at: Nanos, ev: Event) {
-        self.seq += 1;
-        self.heap.push(Reverse(Scheduled { at, seq: self.seq, ev }));
+        self.queue.schedule(at, ev);
     }
 
     fn route(&self, at: EntityId, dst: EntityId) -> Option<LinkId> {
-        self.routes.get(&(at, dst)).copied().or(self.default_uplink[at])
+        self.routes[at]
+            .get(dst)
+            .copied()
+            .filter(|&l| l != NO_ROUTE)
+            .map(|l| l as LinkId)
+            .or(self.default_uplink[at])
+    }
+
+    fn set_route_entry(&mut self, at: EntityId, dst: EntityId, link: LinkId) {
+        debug_assert!((link as u64) < NO_ROUTE as u64, "link id overflows route table");
+        let row = &mut self.routes[at];
+        if row.len() <= dst {
+            row.resize(dst + 1, NO_ROUTE);
+        }
+        row[dst] = link as u32;
     }
 
     /// Enqueue `pkt` on `link`: drop-tail + ECN + serializer start.
@@ -219,11 +215,10 @@ impl Sim {
         Sim {
             net: NetState {
                 now: 0,
-                seq: 0,
-                heap: BinaryHeap::new(),
+                queue: EventQueue::new(),
                 links: Vec::new(),
                 entities: Vec::new(),
-                routes: std::collections::HashMap::new(),
+                routes: Vec::new(),
                 default_uplink: Vec::new(),
                 node_rngs: Vec::new(),
                 events_processed: 0,
@@ -235,10 +230,24 @@ impl Sim {
         }
     }
 
+    /// Pre-size entity- and link-indexed tables for a large topology.
+    /// Purely an allocation hint — behavior (and every RNG stream) is
+    /// identical without it; the `topo` builders call this so thousand-host
+    /// fabrics build without repeated reallocation.
+    pub fn reserve(&mut self, entities: usize, links: usize) {
+        self.net.entities.reserve(entities);
+        self.net.routes.reserve(entities);
+        self.net.default_uplink.reserve(entities);
+        self.net.node_rngs.reserve(entities);
+        self.nodes.reserve(entities);
+        self.net.links.reserve(links);
+    }
+
     /// Add a host entity driven by `node`.
     pub fn add_host(&mut self, node: Box<dyn Node>) -> EntityId {
         let id = self.net.entities.len();
         self.net.entities.push(Entity::Host);
+        self.net.routes.push(Vec::new());
         self.net.default_uplink.push(None);
         self.net.node_rngs.push(Pcg64::new(self.seed, 1000 + id as u64));
         self.nodes.push(Some(node));
@@ -249,6 +258,7 @@ impl Sim {
     pub fn add_switch(&mut self, fwd_delay: Nanos) -> EntityId {
         let id = self.net.entities.len();
         self.net.entities.push(Entity::Switch { fwd_delay });
+        self.net.routes.push(Vec::new());
         self.net.default_uplink.push(None);
         self.net.node_rngs.push(Pcg64::new(self.seed, 1000 + id as u64));
         self.nodes.push(None);
@@ -261,7 +271,7 @@ impl Sim {
         let id = self.net.links.len();
         let rng = Pcg64::new(self.seed, 2000 + id as u64);
         self.net.links.push(Link::new(cfg, src, dst, rng));
-        self.net.routes.insert((src, dst), id);
+        self.net.set_route_entry(src, dst, id);
         id
     }
 
@@ -279,7 +289,7 @@ impl Sim {
 
     /// Install an exact route (used on switches: (switch, host) → downlink).
     pub fn set_route(&mut self, at: EntityId, dst: EntityId, link: LinkId) {
-        self.net.routes.insert((at, dst), link);
+        self.net.set_route_entry(at, dst, link);
     }
 
     pub fn now(&self) -> Nanos {
@@ -300,7 +310,7 @@ impl Sim {
 
     /// True when no events remain — nothing can ever happen again.
     pub fn is_idle(&self) -> bool {
-        self.net.heap.is_empty()
+        self.net.queue.is_empty()
     }
 
     /// Sum of every link's counters (fabric-wide totals for reports).
@@ -350,19 +360,15 @@ impl Sim {
         if !self.started {
             self.start_nodes();
         }
-        while let Some(Reverse(head)) = self.net.heap.peek() {
-            if head.at > until {
-                break;
-            }
-            let Reverse(sched) = self.net.heap.pop().unwrap();
-            self.net.now = sched.at;
+        while let Some((at, _seq, ev)) = self.net.queue.pop_at_most(until) {
+            self.net.now = at;
             self.net.events_processed += 1;
             assert!(
                 self.net.events_processed <= self.max_events,
                 "simulation exceeded max_events={}",
                 self.max_events
             );
-            match sched.ev {
+            match ev {
                 Event::Dequeue(link) => self.net.dequeue(link),
                 Event::Arrive(link, pkt) => {
                     if link & VIRTUAL_FWD != 0 {

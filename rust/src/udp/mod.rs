@@ -7,6 +7,7 @@
 //! [`crate::proto`].
 
 use crate::proto::{EarlyCloseCfg, LtpEvent, LtpReceiver, LtpSender, SegmentMap, CTRL_SEQ};
+use crate::simnet::{BufId, BufPool};
 use crate::util::Pcg64;
 use crate::wire::{LtpHeader, LtpType, HDR_BYTES};
 use crate::Nanos;
@@ -121,8 +122,11 @@ pub fn recv_message(
     socket.set_nonblocking(true)?;
     let mut buf = [0u8; 65536];
     let mut peer: Option<std::net::SocketAddr> = None;
-    // Segment payload bytes arrive over the wire; stash by seq.
-    let mut segments: Vec<(u32, Vec<u8>)> = Vec::new();
+    // Segment payload bytes arrive over the wire; stash by seq in pooled
+    // buffers (recycled after reassembly — the receive loop itself does
+    // zero per-segment heap allocations at steady state).
+    let mut pool = BufPool::new(64);
+    let mut segments: Vec<(u32, BufId)> = Vec::new();
     let mut backoff = IdleBackoff::fresh();
     loop {
         if clock.0.elapsed() > timeout {
@@ -140,7 +144,9 @@ pub fn recv_message(
             }
             peer = Some(from);
             if hdr.ty == LtpType::Data && !receiver.is_closed() {
-                segments.push((hdr.seq, buf[HDR_BYTES..n].to_vec()));
+                let id = pool.take();
+                pool.get_mut(id).extend_from_slice(&buf[HDR_BYTES..n]);
+                segments.push((hdr.seq, id));
             }
             receiver.handle(
                 clock.now(),
@@ -167,28 +173,37 @@ pub fn recv_message(
     let stats = receiver.stats.clone();
     let seg_payload = segments
         .iter()
-        .map(|(_, d)| d.len())
+        .map(|(_, id)| pool.get(*id).len())
         .max()
         .unwrap_or(0);
-    let mut out = vec![0u8; receiver_len(&segments, total, seg_payload)];
-    for (seq, bytes) in segments {
+    let mut out = vec![0u8; receiver_len(&segments, &pool, total, seg_payload)];
+    for &(seq, id) in &segments {
         if seq == CTRL_SEQ {
             continue;
         }
+        let bytes = pool.get(id);
         let start = seq as usize * seg_payload;
-        out[start..start + bytes.len()].copy_from_slice(&bytes);
+        out[start..start + bytes.len()].copy_from_slice(bytes);
+    }
+    for (_, id) in segments {
+        pool.recycle(id);
     }
     Ok((out, stats))
 }
 
-fn receiver_len(segments: &[(u32, Vec<u8>)], total: usize, seg_payload: usize) -> usize {
+fn receiver_len(
+    segments: &[(u32, BufId)],
+    pool: &BufPool,
+    total: usize,
+    seg_payload: usize,
+) -> usize {
     // Last segment may be short; derive the exact length when we saw it,
     // otherwise assume full (bubble).
     let last = total.saturating_sub(1);
     let last_len = segments
         .iter()
         .find(|(s, _)| *s as usize == last)
-        .map(|(_, d)| d.len())
+        .map(|(_, id)| pool.get(*id).len())
         .unwrap_or(seg_payload);
     last * seg_payload + last_len
 }

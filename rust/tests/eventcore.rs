@@ -1,0 +1,208 @@
+//! Equivalence suite for the simulator's event core (ISSUE 6): the
+//! hierarchical timer wheel ([`ltp::simnet::EventQueue`]) must reproduce
+//! the *exact* pop order of the `BinaryHeap<Reverse<(time, seq)>>` it
+//! replaced — same-timestamp FIFO ties included — because every golden
+//! report byte of the scenario engine rides on that order.
+//!
+//! The randomized properties run through `ltp::util::proptest`; a CI
+//! failure prints an `LTP_PROPTEST_REPLAY=<seed>:<case>` incantation that
+//! replays exactly the failing workload.
+
+use ltp::simnet::EventQueue;
+use ltp::util::{proptest, Pcg64};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+
+/// The old event core's semantics, restated: a `(time, seq)`-min binary
+/// heap with a pre-incremented schedule counter, plus tombstone
+/// cancellation so the cancel property has a reference too.
+#[derive(Default)]
+struct ModelHeap {
+    heap: BinaryHeap<Reverse<(u64, u64)>>,
+    seq: u64,
+    cancelled: HashSet<u64>,
+}
+
+impl ModelHeap {
+    fn schedule(&mut self, at: u64) -> u64 {
+        self.seq += 1;
+        self.heap.push(Reverse((at, self.seq)));
+        self.seq
+    }
+
+    fn cancel(&mut self, seq: u64) {
+        self.cancelled.insert(seq);
+    }
+
+    fn pop_at_most(&mut self, until: u64) -> Option<(u64, u64)> {
+        while let Some(&Reverse((at, seq))) = self.heap.peek() {
+            if at > until {
+                return None;
+            }
+            self.heap.pop();
+            if self.cancelled.remove(&seq) {
+                continue;
+            }
+            return Some((at, seq));
+        }
+        None
+    }
+}
+
+/// One randomized schedule/cancel/pop workload driven through both cores
+/// in lockstep. Times are drawn at or after the wheel's clock (the
+/// simulator's contract: nodes schedule only while an event at the current
+/// instant is being dispatched), mixing same-instant bursts, near-future
+/// deltas, and far-future jumps across wheel levels.
+fn drive_workload(rng: &mut Pcg64, ops: usize) {
+    let mut wheel: EventQueue<u64> = EventQueue::new();
+    let mut model = ModelHeap::default();
+    let mut live: Vec<u64> = Vec::new(); // seqs scheduled and not yet popped/cancelled
+    for _ in 0..ops {
+        match rng.gen_range(10) {
+            // 0..=5: schedule (the common case; keeps the queues populated)
+            0..=5 => {
+                let base = wheel.now();
+                let at = match rng.gen_range(4) {
+                    0 => base,                                    // same-instant tie
+                    1 => base + rng.gen_range(64),                // level-0 neighborhood
+                    2 => base + rng.gen_range(1 << 20),           // mid-level
+                    _ => base.saturating_add(rng.gen_range(1 << 40)), // far future
+                };
+                let ws = wheel.schedule(at, at);
+                let ms = model.schedule(at);
+                assert_eq!(ws, ms, "schedule counters diverged");
+                live.push(ws);
+            }
+            // 6: cancel a live event
+            6 => {
+                if !live.is_empty() {
+                    let i = rng.gen_range(live.len() as u64) as usize;
+                    let seq = live.swap_remove(i);
+                    assert!(wheel.cancel(seq), "cancel of live seq {seq} refused");
+                    model.cancel(seq);
+                }
+            }
+            // 7: bounded pop (a run_until slice edge)
+            7 => {
+                let until = wheel.now().saturating_add(rng.gen_range(1 << 24));
+                let got = wheel.pop_at_most(until).map(|(at, seq, _)| (at, seq));
+                let want = model.pop_at_most(until);
+                assert_eq!(got, want, "bounded pop (until={until}) diverged");
+                if let Some((_, seq)) = got {
+                    live.retain(|&s| s != seq);
+                }
+            }
+            // 8..=9: unbounded pop
+            _ => {
+                let got = wheel.pop_at_most(u64::MAX).map(|(at, seq, _)| (at, seq));
+                let want = model.pop_at_most(u64::MAX);
+                assert_eq!(got, want, "pop diverged");
+                if let Some((_, seq)) = got {
+                    live.retain(|&s| s != seq);
+                }
+            }
+        }
+        assert_eq!(wheel.len(), live.len(), "live-event count diverged");
+    }
+    // Drain both and compare the full remaining order.
+    loop {
+        let got = wheel.pop_at_most(u64::MAX).map(|(at, seq, _)| (at, seq));
+        let want = model.pop_at_most(u64::MAX);
+        assert_eq!(got, want, "drain diverged");
+        if got.is_none() {
+            break;
+        }
+    }
+    assert!(wheel.is_empty());
+}
+
+#[test]
+fn wheel_matches_heap_on_random_workloads() {
+    proptest::check("wheel equals heap (mixed ops)", |rng| {
+        drive_workload(rng, 400);
+    });
+}
+
+#[test]
+fn wheel_matches_heap_on_same_instant_bursts() {
+    // FIFO ties are the golden-byte-critical case: everything lands on a
+    // handful of instants, so nearly every comparison is seq-ordered.
+    proptest::check("wheel equals heap (tie storm)", |rng| {
+        let mut wheel: EventQueue<u64> = EventQueue::new();
+        let mut model = ModelHeap::default();
+        let instants: Vec<u64> = (0..4).map(|_| rng.gen_range(1 << 16)).collect();
+        for _ in 0..300 {
+            let at = instants[rng.gen_range(instants.len() as u64) as usize];
+            // Keep the schedule contract: never behind the wheel clock.
+            let at = at.max(wheel.now());
+            assert_eq!(wheel.schedule(at, at), model.schedule(at));
+        }
+        loop {
+            let got = wheel.pop_at_most(u64::MAX).map(|(at, seq, _)| (at, seq));
+            let want = model.pop_at_most(u64::MAX);
+            assert_eq!(got, want, "tie-storm drain diverged");
+            if got.is_none() {
+                break;
+            }
+        }
+    });
+}
+
+#[test]
+fn wheel_matches_heap_under_interleaved_schedule_and_pop() {
+    // The simulator's actual access pattern: pop one event, schedule a few
+    // more at or after its timestamp, repeat — with occasional far-future
+    // retransmit-style timers thrown in.
+    proptest::check("wheel equals heap (sim interleave)", |rng| {
+        let mut wheel: EventQueue<u64> = EventQueue::new();
+        let mut model = ModelHeap::default();
+        assert_eq!(wheel.schedule(0, 0), model.schedule(0));
+        for _ in 0..200 {
+            let got = wheel.pop_at_most(u64::MAX).map(|(at, seq, _)| (at, seq));
+            let want = model.pop_at_most(u64::MAX);
+            assert_eq!(got, want, "interleave pop diverged");
+            let Some((at, _)) = got else { break };
+            for _ in 0..rng.gen_range(3) {
+                let delta = if rng.gen_range(10) == 0 {
+                    rng.gen_range(1 << 44) // far-future (retransmit deadline)
+                } else {
+                    rng.gen_range(4096) // network-scale near future
+                };
+                let t = at.saturating_add(delta);
+                assert_eq!(wheel.schedule(t, t), model.schedule(t));
+            }
+        }
+    });
+}
+
+#[test]
+fn far_future_and_max_timestamps_survive_cancellation() {
+    // Deterministic edge sweep (no RNG): events pinned at level boundaries
+    // and u64::MAX, with cancellations punched into the middle.
+    let mut wheel: EventQueue<u64> = EventQueue::new();
+    let mut model = ModelHeap::default();
+    let times: Vec<u64> = (0..11)
+        .map(|lvl| 1u64.checked_shl(6 * lvl).unwrap_or(u64::MAX))
+        .chain([u64::MAX, u64::MAX - 1, 0, 63, 64, 65])
+        .collect();
+    let mut seqs = Vec::new();
+    for &t in &times {
+        let s = wheel.schedule(t, t);
+        assert_eq!(s, model.schedule(t));
+        seqs.push(s);
+    }
+    for &s in seqs.iter().step_by(3) {
+        assert!(wheel.cancel(s));
+        model.cancel(s);
+    }
+    loop {
+        let got = wheel.pop_at_most(u64::MAX).map(|(at, seq, _)| (at, seq));
+        let want = model.pop_at_most(u64::MAX);
+        assert_eq!(got, want, "edge-time drain diverged");
+        if got.is_none() {
+            break;
+        }
+    }
+    assert!(wheel.is_empty());
+}
