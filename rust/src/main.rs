@@ -5,12 +5,14 @@
 //!              [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]...
 //!              [--agg SPEC]...
 //! ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]
+//! ltp trace <scenario> --out FILE [--seed N | --seeds A..B] [--quick] [--jobs N]
+//! ltp replay <trace> [--out FILE] [--breakdown [FILE]]
 //! ltp proto <list|parse SPEC>               protocol registry / spec grammar
 //! ltp agg <list|parse SPEC>                 aggregation-topology registry
 //! ltp backend <list|parse SPEC>             compute-backend registry
 //! ltp train [--backend native] [--workers 4] [--iters 50] [--loss 0.01]
 //!           [--proto SPEC] [--agg SPEC] [--max-loss X]
-//! ltp bench check --baseline FILE --current FILE [--scenario NAME]
+//! ltp bench check --baseline FILE --current FILE [--scenario NAME|all]
 //!                 [--max-regress-pct P]     CI events/sec regression gate
 //! ltp bench-ltp [--bytes N] [--loss P]      one-flow protocol microbench
 //! ```
@@ -340,9 +342,91 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ltp trace <scenario>` — run a named scenario sweep under trace
+/// capture and write the deterministic packet/event trace (`ltp replay`
+/// re-drives it; `tests/trace.rs` and the CI `trace-determinism` job
+/// hold the byte contracts).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use ltp::scenarios::{self, sweep};
+    let usage = "usage: ltp trace <scenario> --out FILE [--seed N | --seeds A..B] \
+                 [--quick] [--jobs N]";
+    let which = args.positional.get(1).map(String::as_str).context(usage)?;
+    anyhow::ensure!(
+        which != "all" && which != "list",
+        "ltp trace records one named scenario, not `{which}` (see `ltp scenario list`)"
+    );
+    anyhow::ensure!(
+        !args.has("proto") && !args.has("agg"),
+        "ltp trace runs scenario defaults — the trace header has no field for \
+         --proto/--agg overrides, so a replay could not reproduce them"
+    );
+    let out = args.get("out").context(usage)?;
+    anyhow::ensure!(out != "true", "--out requires a file path");
+    let index = scenarios::registry()
+        .iter()
+        .position(|s| s.name == which)
+        .with_context(|| {
+            let names: Vec<&str> = scenarios::registry().iter().map(|s| s.name).collect();
+            format!("unknown scenario `{which}` (known: {})", names.join(", "))
+        })?;
+    let quick = args.has("quick");
+    let n_jobs: usize = args.flag("jobs", 1)?;
+    let seeds = parse_seeds(args)?;
+    let jobs = sweep::sweep_jobs(&[index], &seeds, quick, None, None);
+    let n = jobs.len();
+    let (_, records) = sweep::run_sweep_traced(jobs, n_jobs, true);
+    let records = records.expect("traced sweep returns records");
+    ltp::trace::write_file(out, which, quick, n as u32, &records).map_err(|e| anyhow::anyhow!(e))?;
+    eprintln!("wrote {out}: {} record(s) from {n} job(s) of `{which}`", records.len());
+    Ok(())
+}
+
+/// `ltp replay <trace>` — re-drive a recorded run, verify it reproduces
+/// the trace byte-for-byte, and emit the regenerated report
+/// (byte-identical to the recorded run's `ltp scenario --json` output)
+/// and/or the per-iteration BST breakdown (`--breakdown`).
+fn cmd_replay(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: ltp replay <trace> [--out FILE] [--breakdown [FILE]]")?;
+    let file = ltp::trace::read_file(path).map_err(|e| anyhow::anyhow!(e))?;
+    let outcome = ltp::trace::replay(&file).map_err(|e| anyhow::anyhow!(e))?;
+    eprintln!(
+        "replayed {path}: `{}` reproduced exactly ({} record(s), {} job(s))",
+        file.header.scenario, outcome.records, outcome.jobs
+    );
+    match args.get("out") {
+        Some("true") => bail!("--out requires a file path"),
+        // fs::write, no trailing newline: the bytes must cmp-equal an
+        // `ltp scenario --json --out` report of the same run.
+        Some(p) => {
+            std::fs::write(p, &outcome.report_json).with_context(|| format!("writing {p}"))?;
+            eprintln!("wrote {p}");
+        }
+        None => {
+            if !args.has("breakdown") {
+                println!("{}", outcome.report_json);
+            }
+        }
+    }
+    if let Some(bd) = args.get("breakdown") {
+        let json = ltp::trace::breakdown(&file).render_pretty();
+        if bd == "true" {
+            println!("{json}");
+        } else {
+            std::fs::write(bd, json).with_context(|| format!("writing {bd}"))?;
+            eprintln!("wrote {bd}");
+        }
+    }
+    Ok(())
+}
+
 /// `ltp bench check` — the CI perf gate: compare a freshly written bench
 /// report against the committed snapshot and fail (exit non-zero) when
 /// the scenario's events/sec regresses beyond the threshold.
+/// `--scenario all` gates every scenario the baseline covers; a baseline
+/// scenario missing from the current report is a hard error, not a pass.
 fn cmd_bench(args: &Args) -> Result<()> {
     use ltp::scenarios::sweep;
     match args.positional.get(1).map(String::as_str) {
@@ -361,25 +445,41 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .with_context(|| format!("reading {baseline_path}"))?;
             let current = std::fs::read_to_string(current_path)
                 .with_context(|| format!("reading {current_path}"))?;
-            let check = sweep::check_regression(&baseline, &current, &scenario, max_regress_pct)
-                .map_err(|e| anyhow::anyhow!(e))?;
-            for note in &check.notes {
-                eprintln!("note: {note}");
+            let checks = if scenario == "all" {
+                sweep::check_regression_all(&baseline, &current, max_regress_pct)
+                    .map_err(|e| anyhow::anyhow!(e))?
+            } else {
+                let one =
+                    sweep::check_regression(&baseline, &current, &scenario, max_regress_pct)
+                        .map_err(|e| anyhow::anyhow!(e))?;
+                vec![one]
+            };
+            let mut seen_notes: Vec<&String> = Vec::new();
+            for check in &checks {
+                for note in &check.notes {
+                    if !seen_notes.contains(&note) {
+                        seen_notes.push(note);
+                        eprintln!("note: {note}");
+                    }
+                }
+                println!(
+                    "bench check `{}`: baseline {:.0} ev/s, current {:.0} ev/s ({:+.1}%, threshold -{}%)",
+                    check.scenario,
+                    check.baseline_eps,
+                    check.current_eps,
+                    check.delta_pct,
+                    check.max_regress_pct,
+                );
             }
-            println!(
-                "bench check `{}`: baseline {:.0} ev/s, current {:.0} ev/s ({:+.1}%, threshold -{}%)",
-                check.scenario,
-                check.baseline_eps,
-                check.current_eps,
-                check.delta_pct,
-                check.max_regress_pct,
-            );
+            let failed: Vec<String> = checks
+                .iter()
+                .filter(|c| !c.ok)
+                .map(|c| format!("`{}` {:.1}%", c.scenario, -c.delta_pct))
+                .collect();
             anyhow::ensure!(
-                check.ok,
-                "events/sec on `{}` regressed {:.1}% (> {}% allowed)",
-                check.scenario,
-                -check.delta_pct,
-                check.max_regress_pct
+                failed.is_empty(),
+                "events/sec regressed more than {max_regress_pct}% on: {}",
+                failed.join(", ")
             );
             Ok(())
         }
@@ -501,6 +601,8 @@ fn main() -> Result<()> {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
             ltp::figures::run(which, args.has("quick"), args.flag("jobs", 1)?)
         }
+        Some("trace") => cmd_trace(&args),
+        Some("replay") => cmd_replay(&args),
         Some("proto") => cmd_proto(&args),
         Some("agg") => cmd_agg(&args),
         Some("backend") => cmd_backend(&args),
@@ -512,12 +614,14 @@ fn main() -> Result<()> {
                 "usage:\n  ltp scenario <name|list|all> [--json] [--seed N | --seeds A..B] [--quick]\n  \
                  \x20            [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]... [--agg SPEC]...\n  \
                  ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]\n  \
+                 ltp trace <scenario> --out FILE [--seed N | --seeds A..B] [--quick] [--jobs N]\n  \
+                 ltp replay <trace> [--out FILE] [--breakdown [FILE]]\n  \
                  ltp proto <list|parse SPEC>\n  \
                  ltp agg <list|parse SPEC>\n  \
                  ltp backend <list|parse SPEC>\n  \
                  ltp train [--backend SPEC] [--workers N] [--iters N] [--loss P] [--proto SPEC]\n  \
                  \x20        [--agg SPEC] [--max-loss X]\n  \
-                 ltp bench check --baseline FILE --current FILE [--scenario NAME] [--max-regress-pct P]\n  \
+                 ltp bench check --baseline FILE --current FILE [--scenario NAME|all] [--max-regress-pct P]\n  \
                  ltp bench-ltp [--bytes N] [--loss P]"
             );
             bail!("missing or unknown subcommand");

@@ -1032,6 +1032,7 @@ impl RelayAggNode {
                 rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
             }
             for p in outgoing {
+                crate::trace::note_ack(ctx, &p);
                 ctx.send(p);
             }
         } else if pkt.flow == next {
@@ -1048,6 +1049,7 @@ impl RelayAggNode {
                 }
             }
             for p in outgoing {
+                crate::trace::note_ack(ctx, &p);
                 ctx.send(p);
             }
         }
@@ -1069,6 +1071,15 @@ impl RelayAggNode {
                     self.c.tracker.record_flow(j, now - started, rx.reached_full());
                     self.delivered_fractions.push(rx.delivered_fraction());
                     if let Some((reason, criticals_ok, delivered)) = rx.close_info() {
+                        crate::trace::note_close(
+                            ctx,
+                            self.c.worker_base + j,
+                            self.expected_gather_flow(j, self.iter),
+                            self.iter,
+                            reason,
+                            criticals_ok,
+                            delivered,
+                        );
                         self.c.closes.borrow_mut().push(GatherClose {
                             iter: self.iter,
                             worker: self.c.worker_base + j,
@@ -1282,6 +1293,7 @@ impl Node for RelayAggNode {
                 }
             }
             for p in outgoing {
+                crate::trace::note_ack(ctx, &p);
                 ctx.send(p);
             }
         }
@@ -1319,6 +1331,7 @@ impl Node for RelayAggNode {
             rx.drain(me, self.c.root, &mut |p| outgoing.push(p));
         }
         for p in outgoing {
+            crate::trace::note_ack(ctx, &p);
             ctx.send(p);
         }
         self.drain(ctx);

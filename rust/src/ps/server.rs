@@ -246,6 +246,7 @@ impl PsNode {
                 rx.handle(now, &pkt, me, &mut |p| outgoing.push(p));
             }
             for p in outgoing {
+                crate::trace::note_ack(ctx, &p);
                 ctx.send(p);
             }
         } else if pkt.flow == next {
@@ -262,6 +263,7 @@ impl PsNode {
                 }
             }
             for p in outgoing {
+                crate::trace::note_ack(ctx, &p);
                 ctx.send(p);
             }
         }
@@ -284,6 +286,15 @@ impl PsNode {
                         self.tracker.record_flow(w, now - started, rx.reached_full());
                         self.delivered_fractions.push(rx.delivered_fraction());
                         if let Some((reason, criticals_ok, delivered)) = rx.close_info() {
+                            crate::trace::note_close(
+                                ctx,
+                                self.worker_base + w,
+                                self.expected_gather_flow(w, self.iter),
+                                self.iter,
+                                reason,
+                                criticals_ok,
+                                delivered,
+                            );
                             self.closes.borrow_mut().push(GatherClose {
                                 iter: self.iter,
                                 worker: self.worker_base + w,
@@ -454,6 +465,7 @@ impl Node for PsNode {
             }
         }
         for p in outgoing {
+            crate::trace::note_ack(ctx, &p);
             ctx.send(p);
         }
         self.drain(ctx);

@@ -295,6 +295,7 @@ impl Node for WorkerNode {
                     }
                 }
                 for p in outgoing {
+                    crate::trace::note_ack(ctx, &p);
                     ctx.send(p);
                 }
                 break;

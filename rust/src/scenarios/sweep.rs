@@ -18,6 +18,7 @@ use super::{registry, ScenarioParams, ScenarioReport};
 use crate::metrics::Json;
 use crate::ps::{AggSpec, ProtoSpec};
 use crate::runtime::pool;
+use crate::trace;
 
 /// One enumerable unit of sweep work. Protocol and aggregation handles
 /// are cheap clones of thread-shareable specs, so a job remains a pure
@@ -298,6 +299,52 @@ pub fn check_regression(
     })
 }
 
+/// Scenario names appearing in a bench report's runs, first-occurrence
+/// order. Drives the `ltp bench check --scenario all` enumeration.
+pub fn bench_scenarios(json: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(v) = value_pos(json, "scenario", from) {
+        from = v + 1;
+        let Some(body) = json[v..].strip_prefix('"') else { continue };
+        let Some(q) = body.find('"') else { break };
+        let name = &body[..q];
+        if !out.iter().any(|n| n == name) {
+            out.push(name.to_string());
+        }
+    }
+    out
+}
+
+/// Gate *every* scenario the baseline covers (`--scenario all`). The
+/// enumeration comes from the baseline, so a baseline scenario that is
+/// missing from `current_json` is an error naming that scenario — not a
+/// silent pass, which is what per-scenario [`check_regression`] callers
+/// got when they simply skipped absent names.
+pub fn check_regression_all(
+    baseline_json: &str,
+    current_json: &str,
+    max_regress_pct: f64,
+) -> Result<Vec<BenchCheck>, String> {
+    let scenarios = bench_scenarios(baseline_json);
+    if scenarios.is_empty() {
+        return Err("baseline has no scenario runs to gate against".to_string());
+    }
+    let mut checks = Vec::with_capacity(scenarios.len());
+    let mut errs = Vec::new();
+    for s in &scenarios {
+        match check_regression(baseline_json, current_json, s, max_regress_pct) {
+            Ok(c) => checks.push(c),
+            Err(e) => errs.push(e),
+        }
+    }
+    if errs.is_empty() {
+        Ok(checks)
+    } else {
+        Err(errs.join("; "))
+    }
+}
+
 /// A finished sweep: reports in job order plus the bench distillation.
 #[derive(Debug, Clone)]
 pub struct SweepResult {
@@ -320,10 +367,29 @@ impl SweepResult {
 
 /// Run a job list on `n_jobs` workers (0 = auto, 1 = inline serial).
 pub fn run_sweep(jobs: Vec<SweepJob>, n_jobs: usize) -> SweepResult {
+    run_sweep_traced(jobs, n_jobs, false).0
+}
+
+/// [`run_sweep`] with optional trace capture. When `traced`, each job
+/// runs under its own [`crate::trace`] capture scope, prefixed by a
+/// [`trace::Record::job_start`] marker carrying `(scenario_index, seed,
+/// quick)`; per-job record streams are concatenated in job order, so the
+/// combined stream is byte-identical for any `--jobs N` — the same merge
+/// discipline that makes the report bytes jobs-invariant.
+pub fn run_sweep_traced(
+    jobs: Vec<SweepJob>,
+    n_jobs: usize,
+    traced: bool,
+) -> (SweepResult, Option<Vec<trace::Record>>) {
     let n_workers = pool::effective_jobs(n_jobs, jobs.len());
     let t0 = std::time::Instant::now();
     let outcomes = pool::run_jobs(n_jobs, jobs, |_, job| {
         let scenario = &registry()[job.scenario_index];
+        let cap = traced.then(|| {
+            let cap = trace::capture();
+            trace::emit(trace::Record::job_start(job.scenario_index, job.seed, job.quick));
+            cap
+        });
         let jt = std::time::Instant::now();
         let report = scenario.run(&ScenarioParams {
             seed: job.seed,
@@ -331,14 +397,18 @@ pub fn run_sweep(jobs: Vec<SweepJob>, n_jobs: usize) -> SweepResult {
             protos: job.protos,
             aggs: job.aggs,
         });
-        (report, jt.elapsed().as_secs_f64())
+        (report, jt.elapsed().as_secs_f64(), cap.map(trace::Capture::finish))
     });
     let wall_secs = t0.elapsed().as_secs_f64();
     let mut reports = Vec::with_capacity(outcomes.len());
     let mut per_job = Vec::with_capacity(outcomes.len());
     let mut cpu_secs = 0.0;
     let mut total_events = 0u64;
-    for (report, job_secs) in outcomes {
+    let mut records = traced.then(Vec::new);
+    for (report, job_secs, job_records) in outcomes {
+        if let (Some(all), Some(mut recs)) = (records.as_mut(), job_records) {
+            all.append(&mut recs);
+        }
         let events: u64 = report.cases.iter().map(|c| c.sim_events).sum();
         let ncases = report.cases.len().max(1);
         let mut protos: Vec<String> = Vec::new();
@@ -383,7 +453,7 @@ pub fn run_sweep(jobs: Vec<SweepJob>, n_jobs: usize) -> SweepResult {
         total_events += events;
         reports.push(report);
     }
-    SweepResult {
+    let result = SweepResult {
         reports,
         bench: BenchReport {
             jobs_requested: n_jobs,
@@ -393,7 +463,8 @@ pub fn run_sweep(jobs: Vec<SweepJob>, n_jobs: usize) -> SweepResult {
             sim_events: total_events,
             per_job,
         },
-    }
+    };
+    (result, records)
 }
 
 #[cfg(test)]
@@ -513,6 +584,60 @@ mod tests {
         // Missing scenario on either side is an error, not a pass.
         assert!(check_regression(&baseline, &bench(1.0, "measured"), "wan_clean", 20.0).is_err());
         assert!(check_regression("{}", &baseline, "incast_sweep", 20.0).is_err());
+    }
+
+    #[test]
+    fn bench_scenarios_enumerates_first_occurrence_order() {
+        let json = r#"{"schema": "ltp-bench-v5", "runs": [
+            {"scenario": "incast_sweep", "events_per_sec": 10.0},
+            {"scenario": "wan_clean", "events_per_sec": 50.0},
+            {"scenario": "incast_sweep", "events_per_sec": 30.0}]}"#;
+        assert_eq!(bench_scenarios(json), ["incast_sweep", "wan_clean"]);
+        assert!(bench_scenarios("{}").is_empty());
+    }
+
+    #[test]
+    fn all_mode_gate_fails_loudly_when_a_baseline_scenario_is_missing() {
+        let baseline = r#"{"schema": "ltp-bench-v5", "provenance": "measured", "runs": [
+            {"scenario": "incast_sweep", "events_per_sec": 1000.0},
+            {"scenario": "incast_xl", "events_per_sec": 500.0}]}"#;
+        // Current covers both baseline scenarios: two checks, both ok.
+        let full = r#"{"schema": "ltp-bench-v5", "provenance": "measured", "runs": [
+            {"scenario": "incast_sweep", "events_per_sec": 1100.0},
+            {"scenario": "incast_xl", "events_per_sec": 600.0},
+            {"scenario": "wan_clean", "events_per_sec": 9.0}]}"#;
+        let checks = check_regression_all(baseline, full, 20.0).unwrap();
+        assert_eq!(checks.len(), 2);
+        assert!(checks.iter().all(|c| c.ok), "{checks:?}");
+        // Current missing a baseline scenario: an error naming it — the
+        // silent-pass regression this mode exists to prevent.
+        let partial = r#"{"schema": "ltp-bench-v5", "provenance": "measured", "runs": [
+            {"scenario": "incast_sweep", "events_per_sec": 1100.0}]}"#;
+        let err = check_regression_all(baseline, partial, 20.0).unwrap_err();
+        assert!(err.contains("incast_xl"), "error names the missing scenario: {err}");
+        // An empty baseline cannot gate anything.
+        assert!(check_regression_all("{}", full, 20.0).is_err());
+    }
+
+    #[test]
+    fn traced_sweep_records_match_across_job_counts() {
+        let jobs = || sweep_jobs(&[index_of("wan_clean")], &[7, 8], true, None, None);
+        let (serial, recs1) = run_sweep_traced(jobs(), 1, true);
+        let (pooled, recs2) = run_sweep_traced(jobs(), 2, true);
+        let recs1 = recs1.expect("traced run returns records");
+        let recs2 = recs2.expect("traced run returns records");
+        assert!(!recs1.is_empty());
+        assert_eq!(recs1, recs2, "job-order merge makes the stream jobs-invariant");
+        assert_eq!(serial.render_json(), pooled.render_json());
+        assert_eq!(
+            recs1.iter().filter(|r| r.kind == trace::KIND_JOB_START).count(),
+            2,
+            "one job-start marker per sweep job"
+        );
+        // Untraced runs return no records and identical report bytes.
+        let (untraced, none) = run_sweep_traced(jobs(), 1, false);
+        assert!(none.is_none());
+        assert_eq!(untraced.render_json(), serial.render_json());
     }
 
     #[test]

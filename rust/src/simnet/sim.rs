@@ -12,6 +12,7 @@
 use super::eventq::EventQueue;
 use super::link::{Link, LinkCfg};
 use super::Packet;
+use crate::trace::{Record, TraceSink};
 use crate::util::Pcg64;
 use crate::Nanos;
 
@@ -104,6 +105,22 @@ impl<'a> Ctx<'a> {
     pub fn link_queue_bytes(&self, link: LinkId) -> u64 {
         self.net.links[link].queue_bytes()
     }
+
+    /// True when a [`crate::trace`] capture scope is recording this
+    /// simulation. Nodes guard record construction behind this so the
+    /// disabled path costs one branch and builds nothing.
+    #[inline]
+    pub fn trace_on(&self) -> bool {
+        self.net.trace.is_some()
+    }
+
+    /// Append a protocol-level record to this simulation's trace (no-op
+    /// when tracing is off).
+    pub fn trace(&mut self, rec: Record) {
+        if let Some(t) = &self.net.trace {
+            t.borrow_mut().record(rec);
+        }
+    }
 }
 
 /// Network-side state, split from the node list so nodes can be invoked
@@ -121,6 +138,9 @@ struct NetState {
     default_uplink: Vec<Option<LinkId>>,
     node_rngs: Vec<Pcg64>,
     events_processed: u64,
+    /// The capture scope's sink, resolved once at `Sim::new`; `None`
+    /// (tracing off) costs one branch per hook and nothing else.
+    trace: Option<crate::trace::SharedSink>,
 }
 
 impl NetState {
@@ -152,6 +172,11 @@ impl NetState {
         if link.busy {
             if link.queued_bytes + pkt.size as u64 > link.cfg.queue_cap_bytes {
                 link.stats.drops_queue += 1;
+                if let Some(t) = &self.trace {
+                    let rec =
+                        Record::packet(crate::trace::KIND_DROP_QUEUE, self.now, link_id, &pkt);
+                    t.borrow_mut().record(rec);
+                }
                 return;
             }
             if let Some(t) = link.cfg.ecn_thresh_bytes {
@@ -161,12 +186,20 @@ impl NetState {
                 }
             }
             link.queued_bytes += pkt.size as u64;
+            if let Some(t) = &self.trace {
+                let rec = Record::packet(crate::trace::KIND_ENQUEUE, self.now, link_id, &pkt);
+                t.borrow_mut().record(rec);
+            }
             link.queue.push_back(pkt);
         } else {
             // Serializer idle: transmit immediately.
             link.busy = true;
             let ser = link.cfg.ser_time(pkt.size);
             link.stats.busy += ser;
+            if let Some(t) = &self.trace {
+                let rec = Record::packet(crate::trace::KIND_ENQUEUE, self.now, link_id, &pkt);
+                t.borrow_mut().record(rec);
+            }
             link.queue.push_front(pkt);
             self.schedule(self.now + ser, Event::Dequeue(link_id));
         }
@@ -193,6 +226,13 @@ impl NetState {
         } else {
             link.busy = false;
         }
+        if let Some(t) = &self.trace {
+            let mut sink = t.borrow_mut();
+            sink.record(Record::packet(crate::trace::KIND_TX, self.now, link_id, &pkt));
+            if lost {
+                sink.record(Record::packet(crate::trace::KIND_DROP_WIRE, self.now, link_id, &pkt));
+            }
+        }
         if !lost {
             self.schedule(self.now + delay, Event::Arrive(link_id, pkt));
         }
@@ -212,6 +252,10 @@ pub struct Sim {
 
 impl Sim {
     pub fn new(seed: u64) -> Sim {
+        let trace = crate::trace::active();
+        if let Some(t) = &trace {
+            t.borrow_mut().record(Record::sim_start(seed));
+        }
         Sim {
             net: NetState {
                 now: 0,
@@ -222,6 +266,7 @@ impl Sim {
                 default_uplink: Vec::new(),
                 node_rngs: Vec::new(),
                 events_processed: 0,
+                trace,
             },
             nodes: Vec::new(),
             started: false,
@@ -378,6 +423,9 @@ impl Sim {
                     }
                 }
                 Event::Timer(entity, token) => {
+                    if let Some(t) = &self.net.trace {
+                        t.borrow_mut().record(Record::timer(self.net.now, entity, token));
+                    }
                     if let Some(mut node) = self.nodes[entity].take() {
                         let mut ctx = Ctx { net: &mut self.net, me: entity };
                         node.on_timer(&mut ctx, token);
@@ -412,6 +460,9 @@ impl Sim {
                 }
             }
             Entity::Host => {
+                if let Some(t) = &self.net.trace {
+                    t.borrow_mut().record(Record::deliver(self.net.now, link, dst, &pkt));
+                }
                 if let Some(mut node) = self.nodes[dst].take() {
                     let mut ctx = Ctx { net: &mut self.net, me: dst };
                     node.on_packet(&mut ctx, pkt);

@@ -1,0 +1,185 @@
+//! Per-iteration BST breakdown from a recorded trace: where did each
+//! LTP gather flow's time go — queueing (+ serialization), retransmit,
+//! or Early-Close wait?
+//!
+//! Definitions (per gather flow, i.e. per [`super::KIND_CLOSE`] record):
+//!
+//! * **queueing_ns** — Σ over the flow's data packets of (serializer
+//!   start − enqueue), paired FIFO per link. Includes time behind other
+//!   packets in drop-tail queues on every hop; zero on an idle link.
+//! * **retransmit_ns** — Σ over data sequence ids of (last − first
+//!   transmission) on the flow's first hop: the extra wall-clock each
+//!   lost segment spent being re-sent (0 when nothing was lost).
+//! * **early_close_wait_ns** — close decision − last data delivery: how
+//!   long the receiver held the flow open past its final arrival
+//!   (threshold/deadline wait — the time Early Close exists to bound).
+//!
+//! All maps are `BTreeMap`s, so the report is deterministic and renders
+//! byte-identically for the same trace.
+
+use super::reader::TraceFile;
+use super::{
+    reason_name, Record, KIND_CLOSE, KIND_DELIVER, KIND_ENQUEUE, KIND_JOB_START,
+    KIND_SIM_START, KIND_TX, PTYPE_LTP_DATA,
+};
+use crate::metrics::Json;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Per-link FIFO of pending (flow, ptype, enqueue time) awaiting TX.
+type EnqFifo = VecDeque<(u64, u8, u64)>;
+
+#[derive(Debug, Clone, Copy)]
+struct CloseInfo {
+    worker: u32,
+    iter: u64,
+    reason: u8,
+    criticals_ok: bool,
+    delivered_ppm: u64,
+    t: u64,
+}
+
+#[derive(Default)]
+struct FlowAcc {
+    queueing: u64,
+    first_hop: Option<u32>,
+    /// seq → (first TX, last TX) on the flow's first hop.
+    tx_seq: BTreeMap<u64, (u64, u64)>,
+    last_deliver: Option<u64>,
+    close: Option<CloseInfo>,
+}
+
+struct SimAcc {
+    index: usize,
+    seed: u64,
+    enq: BTreeMap<u32, EnqFifo>,
+    flows: BTreeMap<u64, FlowAcc>,
+}
+
+impl SimAcc {
+    fn new(index: usize, seed: u64) -> SimAcc {
+        SimAcc { index, seed, enq: BTreeMap::new(), flows: BTreeMap::new() }
+    }
+
+    fn observe(&mut self, rec: &Record) {
+        match rec.kind {
+            KIND_ENQUEUE => {
+                self.enq.entry(rec.a).or_default().push_back((rec.flow, rec.ptype, rec.t));
+                if rec.ptype == PTYPE_LTP_DATA {
+                    let f = self.flows.entry(rec.flow).or_default();
+                    f.first_hop.get_or_insert(rec.a);
+                }
+            }
+            KIND_TX => {
+                let popped = self.enq.entry(rec.a).or_default().pop_front();
+                if let Some((flow, ptype, t_enq)) = popped {
+                    if ptype == PTYPE_LTP_DATA {
+                        let f = self.flows.entry(flow).or_default();
+                        f.queueing += rec.t.saturating_sub(t_enq);
+                        if f.first_hop == Some(rec.a) {
+                            let e = f.tx_seq.entry(rec.c).or_insert((rec.t, rec.t));
+                            e.1 = rec.t;
+                        }
+                    }
+                }
+            }
+            KIND_DELIVER => {
+                if rec.ptype == PTYPE_LTP_DATA {
+                    self.flows.entry(rec.flow).or_default().last_deliver = Some(rec.t);
+                }
+            }
+            KIND_CLOSE => {
+                self.flows.entry(rec.flow).or_default().close = Some(CloseInfo {
+                    worker: rec.a,
+                    iter: rec.c >> 8,
+                    reason: (rec.c & 0xff) as u8,
+                    criticals_ok: rec.ptype != 0,
+                    delivered_ppm: rec.d,
+                    t: rec.t,
+                });
+            }
+            _ => {}
+        }
+    }
+
+    fn finish(self) -> Json {
+        let mut flow_rows = Vec::new();
+        let mut iters: BTreeMap<u64, [u64; 4]> = BTreeMap::new();
+        for (flow, f) in &self.flows {
+            let Some(close) = f.close else { continue };
+            let retransmit: u64 = f.tx_seq.values().map(|(first, last)| last - first).sum();
+            let wait = f.last_deliver.map(|d| close.t.saturating_sub(d)).unwrap_or(0);
+            flow_rows.push(Json::obj(vec![
+                ("flow", (*flow).into()),
+                ("worker", (close.worker as u64).into()),
+                ("iter", close.iter.into()),
+                ("reason", reason_name(close.reason).into()),
+                ("criticals_ok", close.criticals_ok.into()),
+                ("delivered_ppm", close.delivered_ppm.into()),
+                ("queueing_ns", f.queueing.into()),
+                ("retransmit_ns", retransmit.into()),
+                ("early_close_wait_ns", wait.into()),
+            ]));
+            let e = iters.entry(close.iter).or_default();
+            e[0] += 1;
+            e[1] += f.queueing;
+            e[2] += retransmit;
+            e[3] += wait;
+        }
+        let iter_rows: Vec<Json> = iters
+            .into_iter()
+            .map(|(iter, [flows, q, rtx, wait])| {
+                Json::obj(vec![
+                    ("iter", iter.into()),
+                    ("flows", flows.into()),
+                    ("queueing_ns", q.into()),
+                    ("retransmit_ns", rtx.into()),
+                    ("early_close_wait_ns", wait.into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("sim", self.index.into()),
+            ("seed", self.seed.into()),
+            ("flows", Json::Arr(flow_rows)),
+            ("iterations", Json::Arr(iter_rows)),
+        ])
+    }
+}
+
+/// Distill a trace into the per-flow/per-iteration BST breakdown report
+/// (schema `ltp-trace-breakdown-v1`).
+pub fn breakdown(file: &TraceFile) -> Json {
+    let mut sims = Vec::new();
+    let mut cur: Option<SimAcc> = None;
+    let mut next_index = 0usize;
+    for rec in &file.records {
+        match rec.kind {
+            KIND_JOB_START => {
+                if let Some(sim) = cur.take() {
+                    sims.push(sim.finish());
+                }
+            }
+            KIND_SIM_START => {
+                if let Some(sim) = cur.take() {
+                    sims.push(sim.finish());
+                }
+                cur = Some(SimAcc::new(next_index, rec.flow));
+                next_index += 1;
+            }
+            _ => {
+                if let Some(sim) = cur.as_mut() {
+                    sim.observe(rec);
+                }
+            }
+        }
+    }
+    if let Some(sim) = cur.take() {
+        sims.push(sim.finish());
+    }
+    Json::obj(vec![
+        ("schema", "ltp-trace-breakdown-v1".into()),
+        ("scenario", file.header.scenario.as_str().into()),
+        ("quick", file.header.quick.into()),
+        ("sims", Json::Arr(sims)),
+    ])
+}

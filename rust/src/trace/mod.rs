@@ -1,0 +1,354 @@
+//! Deterministic packet/event trace capture and replay (DESIGN.md §4.6).
+//!
+//! An opt-in observation layer over the simulator core: when a capture
+//! scope is active ([`capture`]), every [`crate::simnet::Sim`] created on
+//! the thread appends fixed-width [`Record`]s to the scope's
+//! [`TraceSink`] — link enqueue/transmit/drop/deliver, timer dispatch,
+//! and the protocol-level LTP close and ACK decisions noted by the PS
+//! nodes ([`note_close`], [`note_ack`]). The stream is a pure function of
+//! the simulation's seed, so it is byte-identical across runs and across
+//! `--jobs N` (per-job captures are merged in job order by
+//! [`crate::scenarios::sweep::run_sweep_traced`]).
+//!
+//! **Zero cost when disabled.** The simulator holds an
+//! `Option<`[`SharedSink`]`>` resolved once at `Sim::new`; with no scope
+//! active every hook is a single `None` branch, no record is built, and
+//! no RNG stream is touched — the golden report bytes
+//! (`tests/golden/scenario_hashes.txt`) hold with tracing compiled in.
+//!
+//! On-disk format: a 64-byte versioned header followed by packed 40-byte
+//! little-endian records ([`encode`], [`decode`]). `ltp trace` records a
+//! scenario run, `ltp replay` re-drives it from the trace and must
+//! reproduce both the record stream and the original report bytes
+//! ([`replay()`]), and `ltp replay --breakdown` distills the per-flow
+//! BST split ([`breakdown()`]).
+
+mod breakdown;
+mod reader;
+mod replay;
+mod writer;
+
+pub use breakdown::breakdown;
+pub use reader::{decode, read_file, TraceFile};
+pub use replay::{replay, ReplayOutcome};
+pub use writer::{encode, write_file, TraceHeader, HEADER_BYTES, MAGIC, SCENARIO_FIELD, VERSION};
+
+use crate::proto::CloseReason;
+use crate::simnet::{Ctx, Packet};
+use crate::wire::{LtpType, PacketKind};
+use crate::Nanos;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Size of one encoded [`Record`] on disk.
+pub const RECORD_BYTES: usize = 40;
+
+/// Job boundary in a sweep capture: `a` = scenario registry index,
+/// `flow` = seed, `d` = quick flag. Emitted before the job's first sim.
+pub const KIND_JOB_START: u8 = 0;
+/// A `Sim::new` under the capture scope; `flow` = the sim's seed.
+pub const KIND_SIM_START: u8 = 1;
+/// Packet accepted onto a link queue (`a` = link id, `d` = size).
+pub const KIND_ENQUEUE: u8 = 2;
+/// Packet finished serialization and entered the wire (`a` = link id).
+pub const KIND_TX: u8 = 3;
+/// Drop-tail: packet rejected by a full link queue (`a` = link id).
+pub const KIND_DROP_QUEUE: u8 = 4;
+/// Wire loss: packet lost by the link's loss model after serialization.
+pub const KIND_DROP_WIRE: u8 = 5;
+/// Packet delivered to a host node (`a` = link id, `d` = dst entity).
+pub const KIND_DELIVER: u8 = 6;
+/// Timer dispatched to a node (`a` = entity, `c` = token).
+pub const KIND_TIMER: u8 = 7;
+/// LTP gather close decision (`a` = worker, `c` = `iter << 8 | reason`,
+/// `d` = delivered ppm, `ptype` = criticals-ok flag).
+pub const KIND_CLOSE: u8 = 8;
+/// PS emitted an ACK/Stop packet for a gather flow (`a` = entity,
+/// `c` = acked seq).
+pub const KIND_ACK: u8 = 9;
+/// Highest valid record kind (decode rejects beyond this).
+pub const KIND_MAX: u8 = KIND_ACK;
+
+/// `ptype` for records that carry no packet.
+pub const PTYPE_NONE: u8 = 0;
+/// LTP data segment.
+pub const PTYPE_LTP_DATA: u8 = 1;
+/// LTP per-packet ACK.
+pub const PTYPE_LTP_ACK: u8 = 2;
+/// LTP end/stop.
+pub const PTYPE_LTP_END: u8 = 3;
+/// LTP flow registration.
+pub const PTYPE_LTP_REG: u8 = 4;
+/// TCP segment (baseline protocols).
+pub const PTYPE_TCP: u8 = 5;
+/// Opaque test/background payload.
+pub const PTYPE_RAW: u8 = 6;
+
+/// One fixed-width trace record (40 bytes little-endian on disk). Field
+/// meaning depends on `kind` — see the `KIND_*` constants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Record {
+    /// Simulation time (ns); 0 for job/sim markers.
+    pub t: Nanos,
+    /// One of the `KIND_*` constants.
+    pub kind: u8,
+    /// One of the `PTYPE_*` constants (criticals-ok flag for closes).
+    pub ptype: u8,
+    /// Link id, entity id, worker index, or scenario index (per kind).
+    pub a: u32,
+    /// Flow id (or seed for job/sim markers).
+    pub flow: u64,
+    /// Sequence id, timer token, or `iter << 8 | close reason`.
+    pub c: u64,
+    /// Packet size, destination entity, delivered ppm, or quick flag.
+    pub d: u64,
+}
+
+/// `(ptype, seq)` of a packet's payload, for packet-carrying records.
+fn packet_meta(pkt: &Packet) -> (u8, u64) {
+    match &pkt.kind {
+        PacketKind::Ltp(h) => {
+            let p = match h.ty {
+                LtpType::Registration => PTYPE_LTP_REG,
+                LtpType::Data => PTYPE_LTP_DATA,
+                LtpType::Ack => PTYPE_LTP_ACK,
+                LtpType::End => PTYPE_LTP_END,
+            };
+            (p, h.seq as u64)
+        }
+        PacketKind::Tcp(s) => (PTYPE_TCP, s.seq),
+        PacketKind::Raw(id) => (PTYPE_RAW, *id),
+    }
+}
+
+/// Close-reason wire code (`Complete`=0, `EarlyPct`=1, `Deadline`=2).
+pub fn reason_code(r: CloseReason) -> u8 {
+    match r {
+        CloseReason::Complete => 0,
+        CloseReason::EarlyPct => 1,
+        CloseReason::Deadline => 2,
+    }
+}
+
+/// Human name for a close-reason wire code (breakdown reports).
+pub fn reason_name(code: u8) -> &'static str {
+    match code {
+        0 => "complete",
+        1 => "early_pct",
+        2 => "deadline",
+        _ => "unknown",
+    }
+}
+
+impl Record {
+    /// Job boundary marker for a sweep job (see [`KIND_JOB_START`]).
+    pub fn job_start(scenario_index: usize, seed: u64, quick: bool) -> Record {
+        Record {
+            t: 0,
+            kind: KIND_JOB_START,
+            ptype: PTYPE_NONE,
+            a: scenario_index as u32,
+            flow: seed,
+            c: 0,
+            d: quick as u64,
+        }
+    }
+
+    /// Sim construction marker (see [`KIND_SIM_START`]).
+    pub fn sim_start(seed: u64) -> Record {
+        Record { t: 0, kind: KIND_SIM_START, ptype: PTYPE_NONE, a: 0, flow: seed, c: 0, d: 0 }
+    }
+
+    /// Packet record on a link (enqueue/tx/drop kinds; `d` = size).
+    pub fn packet(kind: u8, t: Nanos, link: usize, pkt: &Packet) -> Record {
+        let (ptype, seq) = packet_meta(pkt);
+        Record { t, kind, ptype, a: link as u32, flow: pkt.flow, c: seq, d: pkt.size as u64 }
+    }
+
+    /// Host delivery record (`d` = destination entity).
+    pub fn deliver(t: Nanos, link: usize, dst: usize, pkt: &Packet) -> Record {
+        let (ptype, seq) = packet_meta(pkt);
+        Record {
+            t,
+            kind: KIND_DELIVER,
+            ptype,
+            a: link as u32,
+            flow: pkt.flow,
+            c: seq,
+            d: dst as u64,
+        }
+    }
+
+    /// Timer dispatch record.
+    pub fn timer(t: Nanos, entity: usize, token: u64) -> Record {
+        Record { t, kind: KIND_TIMER, ptype: PTYPE_NONE, a: entity as u32, flow: 0, c: token, d: 0 }
+    }
+
+    /// Encode as the on-disk 40-byte little-endian layout (bytes 10–11
+    /// are reserved padding, always zero).
+    pub fn encode(&self) -> [u8; RECORD_BYTES] {
+        let mut b = [0u8; RECORD_BYTES];
+        b[0..8].copy_from_slice(&self.t.to_le_bytes());
+        b[8] = self.kind;
+        b[9] = self.ptype;
+        b[12..16].copy_from_slice(&self.a.to_le_bytes());
+        b[16..24].copy_from_slice(&self.flow.to_le_bytes());
+        b[24..32].copy_from_slice(&self.c.to_le_bytes());
+        b[32..40].copy_from_slice(&self.d.to_le_bytes());
+        b
+    }
+
+    /// Decode the on-disk layout (the inverse of [`Record::encode`]).
+    pub fn decode(b: &[u8; RECORD_BYTES]) -> Record {
+        Record {
+            t: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+            kind: b[8],
+            ptype: b[9],
+            a: u32::from_le_bytes(b[12..16].try_into().unwrap()),
+            flow: u64::from_le_bytes(b[16..24].try_into().unwrap()),
+            c: u64::from_le_bytes(b[24..32].try_into().unwrap()),
+            d: u64::from_le_bytes(b[32..40].try_into().unwrap()),
+        }
+    }
+}
+
+/// Where records go while a capture scope is active. The simulator holds
+/// a shared handle and appends through this trait, so alternative sinks
+/// (counting, streaming) can replace the in-memory buffer.
+pub trait TraceSink {
+    /// Append one record.
+    fn record(&mut self, rec: Record);
+}
+
+/// The default sink: an in-memory record buffer.
+#[derive(Default)]
+pub struct TraceBuf {
+    /// Records in emission order.
+    pub records: Vec<Record>,
+}
+
+impl TraceSink for TraceBuf {
+    fn record(&mut self, rec: Record) {
+        self.records.push(rec);
+    }
+}
+
+/// Shared sink handle stored by each `Sim` created under a scope.
+pub type SharedSink = Rc<RefCell<dyn TraceSink>>;
+
+thread_local! {
+    /// The thread's active capture scope, if any. Thread-local (not
+    /// global) so each sweep-pool worker captures its own jobs.
+    static SCOPE: RefCell<Option<SharedSink>> = const { RefCell::new(None) };
+}
+
+/// An active capture scope: every `Sim::new` on this thread until
+/// [`Capture::finish`] (or drop) records into the scope's buffer.
+pub struct Capture {
+    buf: Rc<RefCell<TraceBuf>>,
+    prev: Option<SharedSink>,
+    restored: bool,
+}
+
+/// Open a capture scope on the current thread (restores any previously
+/// active scope when it ends).
+pub fn capture() -> Capture {
+    let buf = Rc::new(RefCell::new(TraceBuf::default()));
+    let sink: SharedSink = buf.clone();
+    let prev = SCOPE.with(|s| s.borrow_mut().replace(sink));
+    Capture { buf, prev, restored: false }
+}
+
+impl Capture {
+    fn restore(&mut self) {
+        if !self.restored {
+            let prev = self.prev.take();
+            SCOPE.with(|s| *s.borrow_mut() = prev);
+            self.restored = true;
+        }
+    }
+
+    /// Close the scope and take the captured records.
+    pub fn finish(mut self) -> Vec<Record> {
+        self.restore();
+        std::mem::take(&mut self.buf.borrow_mut().records)
+    }
+}
+
+impl Drop for Capture {
+    fn drop(&mut self) {
+        self.restore();
+    }
+}
+
+/// The current scope's sink, for `Sim::new` to store (one resolution per
+/// simulation, not per event).
+pub(crate) fn active() -> Option<SharedSink> {
+    SCOPE.with(|s| s.borrow().clone())
+}
+
+/// True when a capture scope is active on this thread.
+pub fn is_active() -> bool {
+    SCOPE.with(|s| s.borrow().is_some())
+}
+
+/// Append a record to the active scope, if any (used for out-of-sim
+/// markers like [`Record::job_start`]).
+pub fn emit(rec: Record) {
+    SCOPE.with(|s| {
+        if let Some(sink) = s.borrow().as_ref() {
+            sink.borrow_mut().record(rec);
+        }
+    });
+}
+
+/// Note an LTP gather-close decision (PS/relay `check_progress`). No-op
+/// unless this simulation is being traced.
+pub fn note_close(
+    ctx: &mut Ctx,
+    worker: usize,
+    flow: u64,
+    iter: u64,
+    reason: CloseReason,
+    criticals_ok: bool,
+    delivered: f64,
+) {
+    if !ctx.trace_on() {
+        return;
+    }
+    let ppm = (delivered * 1_000_000.0).round() as u64;
+    let rec = Record {
+        t: ctx.now(),
+        kind: KIND_CLOSE,
+        ptype: criticals_ok as u8,
+        a: worker as u32,
+        flow,
+        c: (iter << 8) | reason_code(reason) as u64,
+        d: ppm,
+    };
+    ctx.trace(rec);
+}
+
+/// Note a receiver-side ACK/Stop decision about to be transmitted (the
+/// PS drain sites call this just before `ctx.send`). Only LTP ACK/End
+/// packets produce a record; no-op unless this simulation is traced.
+pub fn note_ack(ctx: &mut Ctx, pkt: &Packet) {
+    if !ctx.trace_on() {
+        return;
+    }
+    if let PacketKind::Ltp(h) = &pkt.kind {
+        if matches!(h.ty, LtpType::Ack | LtpType::End) {
+            let (ptype, seq) = packet_meta(pkt);
+            let rec = Record {
+                t: ctx.now(),
+                kind: KIND_ACK,
+                ptype,
+                a: ctx.me as u32,
+                flow: pkt.flow,
+                c: seq,
+                d: 0,
+            };
+            ctx.trace(rec);
+        }
+    }
+}

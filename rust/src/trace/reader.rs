@@ -1,0 +1,85 @@
+//! Trace file decoding. Every rejection names the byte offset of the
+//! problem, so a truncated artifact or a non-trace file fails with
+//! context instead of a silent mis-parse.
+
+use super::writer::{TraceHeader, HEADER_BYTES, MAGIC, SCENARIO_FIELD, VERSION};
+use super::{Record, KIND_MAX, RECORD_BYTES};
+
+/// A decoded trace: header + records in emission order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceFile {
+    /// The decoded 64-byte header.
+    pub header: TraceHeader,
+    /// The record stream.
+    pub records: Vec<Record>,
+}
+
+fn le_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap())
+}
+
+/// Decode a trace file from its raw bytes.
+pub fn decode(bytes: &[u8]) -> Result<TraceFile, String> {
+    if bytes.len() < HEADER_BYTES {
+        return Err(format!(
+            "trace header truncated at offset {}: need {HEADER_BYTES} header bytes, found {}",
+            bytes.len(),
+            bytes.len()
+        ));
+    }
+    if bytes[0..8] != MAGIC {
+        let msg = "bad magic at offset 0: expected `LTPTRACE` — not an ltp trace file";
+        return Err(msg.to_string());
+    }
+    let version = le_u32(bytes, 8);
+    if version != VERSION {
+        return Err(format!(
+            "unsupported trace version {version} at offset 8 (this build reads version {VERSION})"
+        ));
+    }
+    let rec_size = le_u32(bytes, 12);
+    if rec_size as usize != RECORD_BYTES {
+        return Err(format!("record size {rec_size} at offset 12, expected {RECORD_BYTES}"));
+    }
+    let quick = le_u32(bytes, 16) != 0;
+    let jobs = le_u32(bytes, 20);
+    let name_bytes = &bytes[24..24 + SCENARIO_FIELD];
+    let name_end = name_bytes.iter().position(|&b| b == 0).unwrap_or(SCENARIO_FIELD);
+    let scenario = std::str::from_utf8(&name_bytes[..name_end])
+        .map_err(|_| "scenario name at offset 24 is not UTF-8".to_string())?
+        .to_string();
+    let record_count = u64::from_le_bytes(bytes[56..64].try_into().unwrap());
+    let body = &bytes[HEADER_BYTES..];
+    let promised = record_count
+        .checked_mul(RECORD_BYTES as u64)
+        .ok_or_else(|| format!("record count {record_count} at offset 56 overflows"))?;
+    if body.len() as u64 != promised {
+        return Err(format!(
+            "trace truncated at offset {}: header promises {record_count} records \
+             ({promised} bytes after the header), found {} bytes",
+            HEADER_BYTES + body.len(),
+            body.len()
+        ));
+    }
+    let mut records = Vec::with_capacity(record_count as usize);
+    for (i, chunk) in body.chunks_exact(RECORD_BYTES).enumerate() {
+        let arr: &[u8; RECORD_BYTES] = chunk.try_into().unwrap();
+        let rec = Record::decode(arr);
+        if rec.kind > KIND_MAX {
+            return Err(format!(
+                "unknown record kind {} at offset {}",
+                rec.kind,
+                HEADER_BYTES + i * RECORD_BYTES + 8
+            ));
+        }
+        records.push(rec);
+    }
+    let header = TraceHeader { version, quick, jobs, scenario, record_count };
+    Ok(TraceFile { header, records })
+}
+
+/// Read and decode a trace file from `path`.
+pub fn read_file(path: &str) -> Result<TraceFile, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("reading {path}: {e}"))?;
+    decode(&bytes).map_err(|e| format!("{path}: {e}"))
+}

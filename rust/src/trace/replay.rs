@@ -1,0 +1,86 @@
+//! Replay: re-drive a recorded run from its trace and verify that both
+//! the record stream and the report bytes reproduce exactly.
+//!
+//! A trace does not carry enough state to *play back* a simulation — it
+//! carries enough to *re-run* it: the scenario (header), and one
+//! [`super::KIND_JOB_START`] record per sweep job naming the scenario
+//! registry index, seed, and quick flag. Replay rebuilds that job list,
+//! runs it serially under a fresh capture, and compares the regenerated
+//! record stream against the recorded one byte-for-byte. Any divergence
+//! (a code change, a registry reorder, a nondeterminism bug) fails with
+//! the first diverging record's index, byte offset, and decoded
+//! contents. On success the regenerated report **is** the recorded
+//! run's report — the CI `trace-determinism` job diffs it against the
+//! live `ltp scenario --json` output.
+
+use super::reader::TraceFile;
+use super::writer::HEADER_BYTES;
+use super::{Record, KIND_JOB_START, RECORD_BYTES};
+use crate::scenarios::{registry, sweep};
+
+/// A successful replay.
+#[derive(Debug)]
+pub struct ReplayOutcome {
+    /// The regenerated (== recorded) sweep report JSON.
+    pub report_json: String,
+    /// Records verified identical.
+    pub records: usize,
+    /// Sweep jobs re-driven.
+    pub jobs: usize,
+}
+
+/// Re-drive `file`'s recorded run and verify it reproduces the trace.
+pub fn replay(file: &TraceFile) -> Result<ReplayOutcome, String> {
+    let starts: Vec<&Record> = file.records.iter().filter(|r| r.kind == KIND_JOB_START).collect();
+    if starts.is_empty() {
+        return Err("trace has no job-start records; nothing to replay".to_string());
+    }
+    let n_scenarios = registry().len();
+    let mut jobs = Vec::with_capacity(starts.len());
+    for r in &starts {
+        let idx = r.a as usize;
+        if idx >= n_scenarios {
+            return Err(format!(
+                "job-start names scenario index {idx}, but this build registers \
+                 {n_scenarios} scenarios — the trace was written by an incompatible build"
+            ));
+        }
+        jobs.push(sweep::SweepJob {
+            scenario_index: idx,
+            seed: r.flow,
+            quick: r.d & 1 == 1,
+            protos: None,
+            aggs: None,
+        });
+    }
+    // Cross-check the header's scenario name against the registry: a
+    // reordered registry would otherwise replay the wrong scenario.
+    let resolved = registry()[jobs[0].scenario_index].name;
+    if resolved != file.header.scenario {
+        return Err(format!(
+            "header names scenario `{}`, but job-start index {} resolves to `{resolved}` — \
+             the scenario registry changed since capture",
+            file.header.scenario, jobs[0].scenario_index
+        ));
+    }
+    let n_jobs = jobs.len();
+    let (result, regen) = sweep::run_sweep_traced(jobs, 1, true);
+    let regen = regen.expect("traced sweep returns records");
+    if regen != file.records {
+        let i = regen
+            .iter()
+            .zip(file.records.iter())
+            .position(|(a, b)| a != b)
+            .unwrap_or_else(|| regen.len().min(file.records.len()));
+        let offset = HEADER_BYTES + i * RECORD_BYTES;
+        return Err(format!(
+            "replay diverged at record {i} (byte offset {offset}): recorded {:?}, \
+             regenerated {:?} ({} records recorded, {} regenerated)",
+            file.records.get(i),
+            regen.get(i),
+            file.records.len(),
+            regen.len()
+        ));
+    }
+    Ok(ReplayOutcome { report_json: result.render_json(), records: regen.len(), jobs: n_jobs })
+}

@@ -1,0 +1,85 @@
+//! Trace file encoding: a 64-byte versioned header followed by packed
+//! 40-byte little-endian [`Record`]s.
+//!
+//! Header layout (all little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  b"LTPTRACE"
+//!      8     4  format version (1)
+//!     12     4  record size in bytes (40)
+//!     16     4  quick flag (0/1)
+//!     20     4  job count (number of KIND_JOB_START records)
+//!     24    32  scenario name, NUL-padded UTF-8
+//!     56     8  record count
+//!     64     …  records (record_count × 40 bytes)
+//! ```
+
+use super::{Record, RECORD_BYTES};
+
+/// Trace file magic bytes.
+pub const MAGIC: [u8; 8] = *b"LTPTRACE";
+/// Current trace format version.
+pub const VERSION: u32 = 1;
+/// Size of the file header.
+pub const HEADER_BYTES: usize = 64;
+/// Width of the NUL-padded scenario-name field.
+pub const SCENARIO_FIELD: usize = 32;
+
+/// Decoded trace file header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceHeader {
+    /// Format version ([`VERSION`] for files this build writes).
+    pub version: u32,
+    /// Whether the recorded sweep ran with `--quick`.
+    pub quick: bool,
+    /// Number of sweep jobs captured (seeds × scenarios).
+    pub jobs: u32,
+    /// Scenario name the trace was recorded from.
+    pub scenario: String,
+    /// Number of records following the header.
+    pub record_count: u64,
+}
+
+/// Encode a header + record stream into the on-disk byte layout.
+pub fn encode(
+    scenario: &str,
+    quick: bool,
+    jobs: u32,
+    records: &[Record],
+) -> Result<Vec<u8>, String> {
+    if scenario.len() >= SCENARIO_FIELD {
+        return Err(format!(
+            "scenario name `{scenario}` is {} bytes, max {} (header field is NUL-terminated)",
+            scenario.len(),
+            SCENARIO_FIELD - 1
+        ));
+    }
+    let mut out = Vec::with_capacity(HEADER_BYTES + records.len() * RECORD_BYTES);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(RECORD_BYTES as u32).to_le_bytes());
+    out.extend_from_slice(&(quick as u32).to_le_bytes());
+    out.extend_from_slice(&jobs.to_le_bytes());
+    let mut name = [0u8; SCENARIO_FIELD];
+    name[..scenario.len()].copy_from_slice(scenario.as_bytes());
+    out.extend_from_slice(&name);
+    out.extend_from_slice(&(records.len() as u64).to_le_bytes());
+    debug_assert_eq!(out.len(), HEADER_BYTES);
+    for r in records {
+        out.extend_from_slice(&r.encode());
+    }
+    Ok(out)
+}
+
+/// Encode and write a trace file to `path`.
+pub fn write_file(
+    path: &str,
+    scenario: &str,
+    quick: bool,
+    jobs: u32,
+    records: &[Record],
+) -> Result<(), String> {
+    let bytes = encode(scenario, quick, jobs, records)?;
+    std::fs::write(path, bytes).map_err(|e| format!("writing {path}: {e}"))
+}

@@ -1,0 +1,207 @@
+//! The trace subsystem's byte contracts (DESIGN.md §4.6):
+//!
+//! * **Zero cost when disabled** — tracing compiled in but off must not
+//!   perturb a single report byte (the golden-hash lock in
+//!   `tests/scenarios.rs` runs with no capture scope; here we pin that a
+//!   capture scope itself changes nothing either).
+//! * **Jobs-invariance** — the record stream is byte-identical for
+//!   `--jobs 1` and `--jobs N`.
+//! * **Replay** — re-driving a recorded run reproduces the record stream
+//!   and the original report bytes exactly; any tampering fails with the
+//!   diverging record's index and byte offset.
+//! * **Format** — records round-trip through the on-disk encoding
+//!   (property-tested), and corrupt/truncated files are rejected with
+//!   offset context.
+
+use ltp::scenarios::sweep::{run_sweep_traced, sweep_jobs};
+use ltp::scenarios::{find, registry, ScenarioParams};
+use ltp::trace::{self, Record};
+use ltp::util::proptest;
+
+fn index_of(name: &str) -> usize {
+    registry().iter().position(|s| s.name == name).expect("scenario registered")
+}
+
+fn params() -> ScenarioParams {
+    ScenarioParams::new(7, true)
+}
+
+#[test]
+fn capture_scope_does_not_perturb_report_bytes() {
+    // The zero-cost contract, strengthened: not only is the disabled path
+    // a no-op (the golden hashes pin that), an *enabled* capture observes
+    // without steering — no RNG stream is touched, no event reordered.
+    let sc = find("wan_clean").unwrap();
+    assert!(!trace::is_active(), "no capture scope outside a test's own");
+    let baseline = sc.run(&params()).render_json();
+    let cap = trace::capture();
+    assert!(trace::is_active());
+    let traced = sc.run(&params()).render_json();
+    let records = cap.finish();
+    assert!(!trace::is_active(), "finish() closes the scope");
+    assert_eq!(baseline, traced, "capture must observe, not steer");
+    assert!(!records.is_empty(), "a traced run produces records");
+    assert!(records.iter().any(|r| r.kind == trace::KIND_SIM_START));
+    assert!(records.iter().any(|r| r.kind == trace::KIND_DELIVER));
+    assert!(records.iter().any(|r| r.kind == trace::KIND_CLOSE), "LTP gathers close");
+}
+
+#[test]
+fn trace_records_are_byte_identical_across_job_counts() {
+    let jobs = || sweep_jobs(&[index_of("incast_heavy_loss")], &[7, 8], true, None, None);
+    let (serial, recs1) = run_sweep_traced(jobs(), 1, true);
+    let (pooled, recs2) = run_sweep_traced(jobs(), 2, true);
+    let (recs1, recs2) = (recs1.unwrap(), recs2.unwrap());
+    assert_eq!(recs1, recs2, "--jobs 2 must record the same stream as --jobs 1");
+    assert_eq!(serial.render_json(), pooled.render_json());
+    // And the encoded artifacts agree byte for byte — what the CI
+    // trace-determinism job cmp(1)s.
+    let enc1 = trace::encode("incast_heavy_loss", true, 2, &recs1).unwrap();
+    let enc2 = trace::encode("incast_heavy_loss", true, 2, &recs2).unwrap();
+    assert_eq!(enc1, enc2);
+}
+
+#[test]
+fn replay_reproduces_the_recorded_report_bytes() {
+    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None);
+    let (live, records) = run_sweep_traced(jobs, 1, true);
+    let records = records.unwrap();
+    let bytes = trace::encode("wan_clean", true, 1, &records).unwrap();
+    let file = trace::decode(&bytes).unwrap();
+    assert_eq!(file.header.scenario, "wan_clean");
+    assert!(file.header.quick);
+    assert_eq!(file.header.record_count, records.len() as u64);
+    assert_eq!(file.records, records, "decode inverts encode");
+    let outcome = trace::replay(&file).unwrap();
+    assert_eq!(outcome.jobs, 1);
+    assert_eq!(outcome.records, records.len());
+    assert_eq!(
+        outcome.report_json,
+        live.render_json(),
+        "replay must regenerate the recorded run's report bytes exactly"
+    );
+}
+
+#[test]
+fn replay_reports_divergence_with_record_context() {
+    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None);
+    let (_, records) = run_sweep_traced(jobs, 1, true);
+    let mut records = records.unwrap();
+    // Tamper with a mid-stream packet record (not a job marker, which
+    // would change the replayed job list instead of the comparison).
+    let i = records.iter().position(|r| r.kind == trace::KIND_ENQUEUE).unwrap();
+    records[i].t += 1;
+    let bytes = trace::encode("wan_clean", true, 1, &records).unwrap();
+    let err = trace::replay(&trace::decode(&bytes).unwrap()).unwrap_err();
+    assert!(err.contains(&format!("diverged at record {i}")), "{err}");
+    assert!(err.contains("byte offset"), "{err}");
+}
+
+#[test]
+fn replay_rejects_a_header_registry_mismatch() {
+    // A header naming one scenario while the job-start records resolve to
+    // another means the registry moved under the trace — refuse to
+    // silently replay the wrong experiment.
+    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None);
+    let (_, records) = run_sweep_traced(jobs, 1, true);
+    let bytes = trace::encode("incast_sweep", true, 1, &records.unwrap()).unwrap();
+    let err = trace::replay(&trace::decode(&bytes).unwrap()).unwrap_err();
+    assert!(err.contains("registry changed"), "{err}");
+    // No job-start records at all: nothing to replay.
+    let bytes = trace::encode("wan_clean", true, 1, &[Record::sim_start(7)]).unwrap();
+    let err = trace::replay(&trace::decode(&bytes).unwrap()).unwrap_err();
+    assert!(err.contains("no job-start"), "{err}");
+}
+
+#[test]
+fn breakdown_splits_flow_time_under_loss() {
+    let jobs = sweep_jobs(&[index_of("incast_heavy_loss")], &[7], true, None, None);
+    let (_, records) = run_sweep_traced(jobs, 1, true);
+    let bytes = trace::encode("incast_heavy_loss", true, 1, &records.unwrap()).unwrap();
+    let file = trace::decode(&bytes).unwrap();
+    let json = trace::breakdown(&file).render();
+    assert!(json.contains("\"schema\":\"ltp-trace-breakdown-v1\""), "{json}");
+    assert!(json.contains("\"scenario\":\"incast_heavy_loss\""), "{json}");
+    for key in ["\"queueing_ns\":", "\"retransmit_ns\":", "\"early_close_wait_ns\":", "\"iter\":"] {
+        assert!(json.contains(key), "missing `{key}` in breakdown");
+    }
+    // 2% wire loss forces retransmissions: some flow's retransmit time is
+    // nonzero (the column exists to show exactly this).
+    let total = json.matches("\"retransmit_ns\":").count();
+    let zeros = json.matches("\"retransmit_ns\":0,").count();
+    assert!(total > 0);
+    assert!(zeros < total, "2% loss must surface nonzero retransmit time: {json}");
+    // Same trace → same breakdown bytes (BTreeMap determinism).
+    assert_eq!(json, trace::breakdown(&file).render());
+}
+
+#[test]
+fn record_roundtrip_holds_for_arbitrary_records() {
+    proptest::check("trace record encode/decode roundtrip", |rng| {
+        let rec = Record {
+            t: rng.next_u64(),
+            kind: rng.gen_range(trace::KIND_MAX as u64 + 1) as u8,
+            ptype: rng.gen_range(7) as u8,
+            a: rng.next_u32(),
+            flow: rng.next_u64(),
+            c: rng.next_u64(),
+            d: rng.next_u64(),
+        };
+        assert_eq!(Record::decode(&rec.encode()), rec);
+        // And through a whole encoded file.
+        let quick = rng.chance(0.5);
+        let file = trace::decode(&trace::encode("p", quick, 3, &[rec]).unwrap()).unwrap();
+        assert_eq!(file.records, vec![rec]);
+        assert_eq!(file.header.quick, quick);
+        assert_eq!(file.header.jobs, 3);
+    });
+}
+
+#[test]
+fn corrupt_traces_are_rejected_with_offset_context() {
+    // Too short for a header.
+    let err = trace::decode(&[1, 2, 3]).unwrap_err();
+    assert!(err.contains("truncated at offset"), "{err}");
+    // Wrong magic.
+    let err = trace::decode(&[0u8; 64]).unwrap_err();
+    assert!(err.contains("bad magic at offset 0"), "{err}");
+    // Unsupported version.
+    let mut bytes = trace::encode("x", false, 1, &[]).unwrap();
+    bytes[8] = 99;
+    let err = trace::decode(&bytes).unwrap_err();
+    assert!(err.contains("version 99"), "{err}");
+    assert!(err.contains("offset 8"), "{err}");
+    // Body shorter than the header's record count promises.
+    let rec = Record::sim_start(7);
+    let bytes = trace::encode("x", false, 1, &[rec, rec]).unwrap();
+    let err = trace::decode(&bytes[..bytes.len() - 1]).unwrap_err();
+    assert!(err.contains("truncated at offset"), "{err}");
+    assert!(err.contains("promises 2 records"), "{err}");
+    // Unknown record kind, located by its byte offset.
+    let mut bad = rec;
+    bad.kind = 200;
+    let bytes = trace::encode("x", false, 1, &[rec, bad]).unwrap();
+    let err = trace::decode(&bytes).unwrap_err();
+    assert!(err.contains("unknown record kind 200"), "{err}");
+    let kind_offset = trace::HEADER_BYTES + trace::RECORD_BYTES + 8;
+    assert!(err.contains(&format!("offset {kind_offset}")), "{err}");
+    // Oversized scenario names are rejected at encode time.
+    assert!(trace::encode(&"n".repeat(trace::SCENARIO_FIELD), false, 1, &[]).is_err());
+}
+
+#[test]
+fn trace_files_roundtrip_through_disk() {
+    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None);
+    let (_, records) = run_sweep_traced(jobs, 1, true);
+    let records = records.unwrap();
+    let path = std::env::temp_dir().join(format!("ltp-trace-test-{}.ltt", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    trace::write_file(&path, "wan_clean", true, 1, &records).unwrap();
+    let file = trace::read_file(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(file.records, records);
+    assert_eq!(file.header.scenario, "wan_clean");
+    // read_file errors carry the path.
+    let err = trace::read_file("/nonexistent/ltp-trace.ltt").unwrap_err();
+    assert!(err.contains("/nonexistent/ltp-trace.ltt"), "{err}");
+}
