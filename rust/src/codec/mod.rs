@@ -1,0 +1,739 @@
+//! The pluggable **gradient codec plane** (DESIGN.md §1.4) — the fourth
+//! pluggable layer after transports (§1.1), aggregation topologies (§1.2),
+//! and compute backends (§1.3).
+//!
+//! A [`GradCodec`] decides *which bytes a gather flow actually carries*:
+//! it maps a worker's dense f32 gradient range to a (usually smaller) wire
+//! image, and — on the PS side — decodes a partial arrival back into the
+//! per-element mask the masked-mean aggregation kernel divides by. Codecs
+//! are registered under string keys and instantiated from specs reusing
+//! the transport/aggregation/backend grammar (`key[:name=value,...]`,
+//! [`parse_codec`]):
+//!
+//! * `dense` — the identity codec: the wire image is the flat f32 buffer,
+//!   byte-for-byte. This is the default, and default runs keep their
+//!   golden report bytes.
+//! * `topk` — Top-k sparsification (`grad/sparsify.rs`): the wire image
+//!   is `kept` (index, value) pairs of 8 bytes each, packed in ascending
+//!   index order, for the `kept` largest-|g| elements.
+//! * `threshold` — magnitude-threshold sparsification under a provisioned
+//!   wire budget: elements with `|g| ≥ t`, largest magnitudes first, up to
+//!   `cap` of the dense element count.
+//!
+//! Any codec can additionally enable **tensor-priority scheduling**
+//! (`priority=on`): the flow's normal segments are handed to the LTP
+//! sender in [`PriorityScheduler`] order (deepest layers — the
+//! largest-magnitude tail of the flat gradient — first), so Early Close
+//! sheds only the low-importance head instead of whatever happened to be
+//! queued last. Delivered importance is scored per gather flow and
+//! surfaced as `mean_importance` in run reports.
+//!
+//! Wire-size accounting is deterministic: [`GradCodec::encoded_bytes`] is
+//! a pure function of the dense byte count, so modeled (backend-free)
+//! runs size their simnet flows without ever materializing gradients, and
+//! `--jobs N` sweeps stay byte-identical to serial ones.
+
+mod priority;
+
+pub use priority::PriorityScheduler;
+
+use crate::grad::top_k_indices;
+use crate::proto::SegmentMap;
+use crate::ps::spec::{canonical, parse_fraction, parse_params, unknown_param};
+use crate::util::Bitmap;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Bytes of one (index: u32 LE, value: f32 LE) pair on the wire.
+pub const PAIR_BYTES: u64 = 8;
+
+/// A gradient codec: thread-shareable, registered under a string key,
+/// instantiated from CLI specs like `topk:pct=0.1` or
+/// `dense:priority=on`.
+pub trait GradCodec: Send + Sync {
+    /// Canonical spec string — the codec's label everywhere.
+    fn name(&self) -> &str;
+
+    /// Wire bytes carried for a `dense_bytes`-byte f32 gradient range.
+    /// Pure in `dense_bytes` (never data-dependent): flow sizing must be
+    /// known before any gradient exists, and must replay byte-identically.
+    fn encoded_bytes(&self, dense_bytes: u64) -> u64;
+
+    /// Does the wire image equal the dense buffer byte-for-byte? Identity
+    /// codecs keep every dense decode path (and golden report) untouched.
+    fn wire_identity(&self) -> bool;
+
+    /// Is tensor-priority segment scheduling enabled for gather flows?
+    fn priority(&self) -> bool;
+
+    /// Decode a (possibly partial) arrival into the per-element mask the
+    /// masked-mean kernel divides by: `mask[i] == 1.0` iff element `i`
+    /// was selected by the codec for `grad` *and* every wire segment
+    /// carrying its pair arrived. `wire_map` segments the encoded image
+    /// ([`Self::encoded_bytes`] of `4 * grad.len()`); `arrival == None`
+    /// means a reliable transport delivered the whole image.
+    fn element_mask(
+        &self,
+        grad: &[f32],
+        wire_map: &SegmentMap,
+        arrival: Option<&Bitmap>,
+    ) -> Vec<f32>;
+}
+
+/// A parsed, validated codec spec: the handle stored in run
+/// configurations and carried across worker threads by the sweep driver.
+/// Clones share the underlying [`GradCodec`].
+#[derive(Clone)]
+pub struct CodecSpec(Arc<dyn GradCodec>);
+
+impl CodecSpec {
+    /// Canonical spec string — the codec's name everywhere (labels, JSON
+    /// reports, bench records). Borrowed; no per-call allocation.
+    pub fn name(&self) -> &str {
+        self.0.name()
+    }
+
+    /// Is this the bare default (`dense`, no parameters)? Default runs
+    /// must keep their report bytes golden, so reporting layers emit
+    /// codec fields only when this is false.
+    pub fn is_default(&self) -> bool {
+        self.name() == "dense"
+    }
+
+    /// The critical segment set of the *encoded* gather flow. Identity
+    /// codecs keep the model's tensor-boundary criticals; sparsifying
+    /// codecs re-derive them for the packed image (first and last wire
+    /// segments: the index plane's framing must survive Early Close).
+    pub fn wire_critical(&self, dense_critical: &[u32], wire_map: &SegmentMap) -> Vec<u32> {
+        if self.wire_identity() {
+            return dense_critical.to_vec();
+        }
+        if wire_map.n_segs <= 1 {
+            vec![0]
+        } else {
+            vec![0, wire_map.n_segs - 1]
+        }
+    }
+
+    /// The normal-queue transmission order for a gather flow, or `None`
+    /// when priority scheduling is off (the sender keeps its ascending
+    /// default, byte-identical to pre-codec builds).
+    pub fn nq_order(&self, wire_map: &SegmentMap) -> Option<Vec<u32>> {
+        if self.priority() {
+            Some(PriorityScheduler::order(wire_map))
+        } else {
+            None
+        }
+    }
+}
+
+impl std::ops::Deref for CodecSpec {
+    type Target = dyn GradCodec;
+
+    fn deref(&self) -> &(dyn GradCodec + 'static) {
+        &*self.0
+    }
+}
+
+impl std::fmt::Display for CodecSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::fmt::Debug for CodecSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CodecSpec({})", self.name())
+    }
+}
+
+/// Two specs are equal iff their canonical names are.
+impl PartialEq for CodecSpec {
+    fn eq(&self, other: &CodecSpec) -> bool {
+        self.name() == other.name()
+    }
+}
+
+impl std::str::FromStr for CodecSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<CodecSpec> {
+        parse_codec(s)
+    }
+}
+
+/// One registered codec family.
+pub struct CodecDef {
+    /// Spec key (`--codec <key>[:params]`).
+    pub key: &'static str,
+    pub summary: &'static str,
+    /// Accepted `name=value` parameters, for `ltp codec list`.
+    pub params: &'static str,
+    build: fn(&[(String, String)]) -> Result<CodecSpec>,
+}
+
+/// The codec registry. Append entries here (and their implementations in
+/// this module); the CLI (`--codec`, `ltp codec list`), the
+/// `compression_matrix` scenario, and the conformance tests follow.
+pub const CODEC_REGISTRY: &[CodecDef] = &[
+    CodecDef {
+        key: "dense",
+        summary: "identity codec: the dense f32 buffer is the wire image (the default)",
+        params: "priority=<on|off>",
+        build: build_dense,
+    },
+    CodecDef {
+        key: "topk",
+        summary: "top-k sparsification: (index, value) pairs for the largest-|g| elements",
+        params: "k=<count> | pct=<0..1> (exactly one), priority=<on|off>",
+        build: build_topk,
+    },
+    CodecDef {
+        key: "threshold",
+        summary: "magnitude-threshold sparsification under a provisioned wire budget",
+        params: "t=<abs threshold>, cap=<0..1>, priority=<on|off>",
+        build: build_threshold,
+    },
+];
+
+/// The registry (function form, for iteration symmetry with the protocol,
+/// aggregation, backend, and scenario registries).
+pub fn codec_registry() -> &'static [CodecDef] {
+    CODEC_REGISTRY
+}
+
+/// Parse a codec spec (`dense`, `topk:pct=0.1`, `threshold:t=0.01`,
+/// `topk:pct=0.1,priority=on`) against the registry.
+pub fn parse_codec(spec: &str) -> Result<CodecSpec> {
+    let spec = spec.trim();
+    let (key, rest) = match spec.split_once(':') {
+        Some((k, r)) => (k, Some(r)),
+        None => (spec, None),
+    };
+    let key = key.to_ascii_lowercase();
+    let Some(def) = CODEC_REGISTRY.iter().find(|d| d.key == key) else {
+        let known: Vec<&str> = CODEC_REGISTRY.iter().map(|d| d.key).collect();
+        bail!("unknown codec `{key}` in spec `{spec}` (known: {})", known.join(", "));
+    };
+    let params = parse_params(rest).with_context(|| format!("in codec spec `{spec}`"))?;
+    (def.build)(&params).with_context(|| format!("in codec spec `{spec}`"))
+}
+
+/// The default codec: bare `dense` (identity wire image, no scheduling).
+pub fn default_codec() -> CodecSpec {
+    parse_codec("dense").expect("registry default")
+}
+
+// ---------------------------------------------------------------------------
+// Wire packing of a top-k selection: the byte-level encode/decode pair the
+// UDP path carries and the proptest oracle round-trips. (The simulator
+// models sizes only, but sizes are derived from exactly this layout.)
+// ---------------------------------------------------------------------------
+
+/// Encode the `keep` largest-|g| elements of `grad` as little-endian
+/// (index: u32, value: f32) pairs in ascending index order.
+pub fn pack_topk(grad: &[f32], keep: usize) -> Vec<u8> {
+    let idx = top_k_indices(grad, keep);
+    let mut out = Vec::with_capacity(idx.len() * PAIR_BYTES as usize);
+    for &i in &idx {
+        out.extend_from_slice(&i.to_le_bytes());
+        out.extend_from_slice(&grad[i as usize].to_le_bytes());
+    }
+    out
+}
+
+/// Decode a [`pack_topk`] image back into a dense `numel`-element buffer
+/// (unsent elements are zero — the packet-bubble convention).
+pub fn unpack_topk(bytes: &[u8], numel: usize) -> Result<Vec<f32>> {
+    if bytes.len() % PAIR_BYTES as usize != 0 {
+        bail!("topk image length {} is not a multiple of {PAIR_BYTES}", bytes.len());
+    }
+    let mut out = vec![0.0f32; numel];
+    for pair in bytes.chunks_exact(PAIR_BYTES as usize) {
+        let i = u32::from_le_bytes(pair[..4].try_into().unwrap()) as usize;
+        if i >= numel {
+            bail!("topk pair index {i} out of range (numel {numel})");
+        }
+        out[i] = f32::from_le_bytes(pair[4..].try_into().unwrap());
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Codec implementations.
+// ---------------------------------------------------------------------------
+
+/// Mask the elements whose (index, value) pairs fully arrived. Pair `j`
+/// occupies encoded bytes `[8j, 8j+8)`; it is delivered iff every wire
+/// segment overlapping that range arrived.
+fn pair_mask(
+    idx: &[u32],
+    numel: usize,
+    wire_map: &SegmentMap,
+    arrival: Option<&Bitmap>,
+) -> Vec<f32> {
+    let mut mask = vec![0.0f32; numel];
+    for (j, &i) in idx.iter().enumerate() {
+        let delivered = match arrival {
+            None => true,
+            Some(bm) => {
+                let a = j as u64 * PAIR_BYTES;
+                let b = a + PAIR_BYTES;
+                let s0 = a / wire_map.seg_payload as u64;
+                let s1 = (b - 1) / wire_map.seg_payload as u64;
+                (s0..=s1).all(|s| s < wire_map.n_segs as u64 && bm.get(s as usize))
+            }
+        };
+        if delivered {
+            mask[i as usize] = 1.0;
+        }
+    }
+    mask
+}
+
+struct DenseCodec {
+    priority: bool,
+    spec: String,
+}
+
+impl GradCodec for DenseCodec {
+    fn name(&self) -> &str {
+        &self.spec
+    }
+
+    fn encoded_bytes(&self, dense_bytes: u64) -> u64 {
+        dense_bytes
+    }
+
+    fn wire_identity(&self) -> bool {
+        true
+    }
+
+    fn priority(&self) -> bool {
+        self.priority
+    }
+
+    fn element_mask(
+        &self,
+        grad: &[f32],
+        wire_map: &SegmentMap,
+        arrival: Option<&Bitmap>,
+    ) -> Vec<f32> {
+        match arrival {
+            Some(bm) => crate::grad::element_mask(wire_map, bm, grad.len()),
+            None => vec![1.0; grad.len()],
+        }
+    }
+}
+
+struct TopkCodec {
+    /// Exactly one of `k` (absolute count) and `pct` (fraction) is set.
+    k: Option<usize>,
+    pct: Option<f64>,
+    priority: bool,
+    spec: String,
+}
+
+impl TopkCodec {
+    /// Elements kept of a `numel`-element range: `k` capped to `numel`,
+    /// or `round(numel · pct)` — matching [`crate::grad::top_k`]'s
+    /// rounding — clamped to at least one (a flow must carry bytes).
+    fn kept(&self, numel: usize) -> usize {
+        let raw = match (self.k, self.pct) {
+            (Some(k), _) => k,
+            (None, Some(p)) => (numel as f64 * p).round() as usize,
+            (None, None) => unreachable!("builder enforces k xor pct"),
+        };
+        raw.clamp(1, numel.max(1))
+    }
+}
+
+impl GradCodec for TopkCodec {
+    fn name(&self) -> &str {
+        &self.spec
+    }
+
+    fn encoded_bytes(&self, dense_bytes: u64) -> u64 {
+        let numel = dense_bytes.div_ceil(4) as usize;
+        self.kept(numel) as u64 * PAIR_BYTES
+    }
+
+    fn wire_identity(&self) -> bool {
+        false
+    }
+
+    fn priority(&self) -> bool {
+        self.priority
+    }
+
+    fn element_mask(
+        &self,
+        grad: &[f32],
+        wire_map: &SegmentMap,
+        arrival: Option<&Bitmap>,
+    ) -> Vec<f32> {
+        let idx = top_k_indices(grad, self.kept(grad.len()));
+        pair_mask(&idx, grad.len(), wire_map, arrival)
+    }
+}
+
+/// Default absolute-magnitude threshold (`t`) and provisioned wire budget
+/// (`cap`, fraction of the dense element count) for `threshold`.
+const THRESHOLD_T: f32 = 0.001;
+const THRESHOLD_CAP: f64 = 0.25;
+
+struct ThresholdCodec {
+    t: f32,
+    cap: f64,
+    priority: bool,
+    spec: String,
+}
+
+impl ThresholdCodec {
+    fn budget(&self, numel: usize) -> usize {
+        ((numel as f64 * self.cap).round() as usize).clamp(1, numel.max(1))
+    }
+}
+
+impl GradCodec for ThresholdCodec {
+    fn name(&self) -> &str {
+        &self.spec
+    }
+
+    /// The wire carries the provisioned budget: threshold selection is
+    /// data-dependent, so the flow is sized for the worst case `cap`
+    /// admits (sizes must be pure in `dense_bytes` — see the trait doc).
+    fn encoded_bytes(&self, dense_bytes: u64) -> u64 {
+        let numel = dense_bytes.div_ceil(4) as usize;
+        self.budget(numel) as u64 * PAIR_BYTES
+    }
+
+    fn wire_identity(&self) -> bool {
+        false
+    }
+
+    fn priority(&self) -> bool {
+        self.priority
+    }
+
+    fn element_mask(
+        &self,
+        grad: &[f32],
+        wire_map: &SegmentMap,
+        arrival: Option<&Bitmap>,
+    ) -> Vec<f32> {
+        // Largest magnitudes first up to the budget, then the threshold
+        // trims the data-dependent tail below `t`.
+        let mut idx = top_k_indices(grad, self.budget(grad.len()));
+        idx.retain(|&i| grad[i as usize].abs() >= self.t);
+        pair_mask(&idx, grad.len(), wire_map, arrival)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-codec builders.
+// ---------------------------------------------------------------------------
+
+fn fmt_switch(on: bool) -> &'static str {
+    if on {
+        "on"
+    } else {
+        "off"
+    }
+}
+
+fn build_dense(params: &[(String, String)]) -> Result<CodecSpec> {
+    let mut priority = None;
+    for (k, v) in params {
+        match k.as_str() {
+            "priority" => priority = Some(crate::compute::parse_switch(k, v)?),
+            _ => return Err(unknown_param("dense", k, "priority")),
+        }
+    }
+    let mut parts = Vec::new();
+    if let Some(p) = priority {
+        parts.push(format!("priority={}", fmt_switch(p)));
+    }
+    Ok(CodecSpec(Arc::new(DenseCodec {
+        priority: priority.unwrap_or(false),
+        spec: canonical("dense", &parts),
+    })))
+}
+
+fn build_topk(params: &[(String, String)]) -> Result<CodecSpec> {
+    let (mut k, mut pct, mut priority) = (None, None, None);
+    for (key, v) in params {
+        match key.as_str() {
+            "k" => {
+                let n: usize =
+                    v.parse().with_context(|| format!("bad value for `k`: `{v}`"))?;
+                if n == 0 {
+                    bail!("`k=0`: need at least one kept element");
+                }
+                k = Some(n);
+            }
+            "pct" => pct = Some(parse_fraction(key, v)?),
+            "priority" => priority = Some(crate::compute::parse_switch(key, v)?),
+            _ => return Err(unknown_param("topk", key, "k, pct, priority")),
+        }
+    }
+    match (k, pct) {
+        (None, None) => bail!("`topk` needs a budget: topk:k=<count> or topk:pct=<0..1>"),
+        (Some(_), Some(_)) => bail!("`topk` takes `k` or `pct`, not both"),
+        _ => {}
+    }
+    // Canonical order: k, pct, priority.
+    let mut parts = Vec::new();
+    if let Some(n) = k {
+        parts.push(format!("k={n}"));
+    }
+    if let Some(p) = pct {
+        parts.push(format!("pct={p}"));
+    }
+    if let Some(p) = priority {
+        parts.push(format!("priority={}", fmt_switch(p)));
+    }
+    Ok(CodecSpec(Arc::new(TopkCodec {
+        k,
+        pct,
+        priority: priority.unwrap_or(false),
+        spec: canonical("topk", &parts),
+    })))
+}
+
+fn build_threshold(params: &[(String, String)]) -> Result<CodecSpec> {
+    let (mut t, mut cap, mut priority) = (None, None, None);
+    for (k, v) in params {
+        match k.as_str() {
+            "t" => {
+                let x: f32 =
+                    v.parse().with_context(|| format!("bad value for `t`: `{v}`"))?;
+                if !(x > 0.0 && x.is_finite()) {
+                    bail!("`t={v}` out of range (need a positive finite threshold)");
+                }
+                t = Some(x);
+            }
+            "cap" => cap = Some(parse_fraction(k, v)?),
+            "priority" => priority = Some(crate::compute::parse_switch(k, v)?),
+            _ => return Err(unknown_param("threshold", k, "t, cap, priority")),
+        }
+    }
+    // Canonical order: t, cap, priority.
+    let mut parts = Vec::new();
+    if let Some(x) = t {
+        parts.push(format!("t={x}"));
+    }
+    if let Some(x) = cap {
+        parts.push(format!("cap={x}"));
+    }
+    if let Some(p) = priority {
+        parts.push(format!("priority={}", fmt_switch(p)));
+    }
+    Ok(CodecSpec(Arc::new(ThresholdCodec {
+        t: t.unwrap_or(THRESHOLD_T),
+        cap: cap.unwrap_or(THRESHOLD_CAP),
+        priority: priority.unwrap_or(false),
+        spec: canonical("threshold", &parts),
+    })))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn defaults_parse_with_canonical_names() {
+        for (spec, canon) in [
+            ("dense", "dense"),
+            ("DENSE", "dense"),
+            ("dense:priority=on", "dense:priority=on"),
+            ("dense:priority=off", "dense:priority=off"),
+            ("topk:pct=0.1", "topk:pct=0.1"),
+            ("topk:k=100", "topk:k=100"),
+            ("TOPK:PCT=0.01", "topk:pct=0.01"),
+            ("topk:priority=on,pct=0.1", "topk:pct=0.1,priority=on"),
+            ("threshold", "threshold"),
+            ("threshold:t=0.01", "threshold:t=0.01"),
+            ("threshold:cap=0.5,t=0.01", "threshold:t=0.01,cap=0.5"),
+        ] {
+            let c = parse_codec(spec).unwrap_or_else(|e| panic!("{spec}: {e:#}"));
+            assert_eq!(c.name(), canon, "{spec}");
+            // Canonical form is a fixed point of the grammar.
+            assert_eq!(parse_codec(c.name()).unwrap().name(), canon, "{spec}");
+        }
+    }
+
+    #[test]
+    fn spec_equality_is_canonical() {
+        assert_eq!(parse_codec("dense").unwrap(), parse_codec("DENSE").unwrap());
+        assert_ne!(parse_codec("dense").unwrap(), parse_codec("dense:priority=on").unwrap());
+        assert!(default_codec().is_default());
+        assert!(!parse_codec("dense:priority=on").unwrap().is_default());
+        assert!(!parse_codec("topk:pct=0.1").unwrap().is_default());
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "gzip",                    // unknown codec
+            "topk",                    // missing budget
+            "topk:",                   // empty parameter list
+            "topk:pct",                // malformed parameter
+            "topk:pct=",               // empty value
+            "topk:pct=0",              // out of range
+            "topk:pct=1.5",            // out of range
+            "topk:k=0",                // zero
+            "topk:k=10,pct=0.1",       // both budgets
+            "topk:pct=0.1,pct=0.2",    // duplicate parameter
+            "topk:window=3",           // unknown parameter
+            "dense:pct=0.1",           // unknown parameter
+            "dense:priority=maybe",    // bad switch
+            "threshold:t=0",           // out of range
+            "threshold:t=-1",          // out of range
+            "threshold:cap=2",         // out of range
+        ] {
+            assert!(parse_codec(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn registry_is_well_formed() {
+        let mut keys: Vec<&str> = CODEC_REGISTRY.iter().map(|d| d.key).collect();
+        assert!(keys.contains(&"dense") && keys.contains(&"topk") && keys.contains(&"threshold"));
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), CODEC_REGISTRY.len(), "codec keys must be unique");
+    }
+
+    #[test]
+    fn wire_sizes_are_deterministic_and_reduced() {
+        let dense = default_codec();
+        assert_eq!(dense.encoded_bytes(35360), 35360);
+        assert!(dense.wire_identity());
+        // 8840 elements at pct=0.1 → 884 pairs → 7072 bytes: exactly 5×.
+        let topk = parse_codec("topk:pct=0.1").unwrap();
+        assert_eq!(topk.encoded_bytes(35360), 7072);
+        assert!(!topk.wire_identity());
+        // pct=0.01 → round(88.4) = 88 pairs.
+        let topk1 = parse_codec("topk:pct=0.01").unwrap();
+        assert_eq!(topk1.encoded_bytes(35360), 88 * PAIR_BYTES);
+        // Absolute k caps at numel; tiny ranges still carry one pair.
+        let k = parse_codec("topk:k=1000000").unwrap();
+        assert_eq!(k.encoded_bytes(40), 10 * PAIR_BYTES);
+        let tiny = parse_codec("topk:pct=0.001").unwrap();
+        assert_eq!(tiny.encoded_bytes(40), PAIR_BYTES);
+        // threshold sizes by its provisioned cap, not by data.
+        let th = parse_codec("threshold:t=0.01,cap=0.5").unwrap();
+        assert_eq!(th.encoded_bytes(800), 100 * PAIR_BYTES);
+    }
+
+    #[test]
+    fn wire_critical_reframes_for_sparse_codecs() {
+        let dense = default_codec();
+        let map = SegmentMap::new(10_000, 1460, vec![]);
+        assert_eq!(dense.wire_critical(&[0, 3, 6], &map), vec![0, 3, 6]);
+        let topk = parse_codec("topk:pct=0.1").unwrap();
+        assert_eq!(topk.wire_critical(&[0, 3, 6], &map), vec![0, map.n_segs - 1]);
+        let one = SegmentMap::new(8, 1460, vec![]);
+        assert_eq!(topk.wire_critical(&[0, 3, 6], &one), vec![0]);
+    }
+
+    #[test]
+    fn nq_order_follows_the_priority_switch() {
+        let map = SegmentMap::new(4 * 1460, 1460, vec![0]);
+        assert_eq!(default_codec().nq_order(&map), None);
+        let prio = parse_codec("dense:priority=on").unwrap();
+        assert_eq!(prio.nq_order(&map), Some(vec![3, 2, 1]));
+    }
+
+    #[test]
+    fn dense_mask_matches_bubble_mask() {
+        let grad = vec![1.0f32; 730];
+        let map = SegmentMap::new(2920, 1460, vec![]);
+        let mut bm = Bitmap::new(2);
+        bm.set(1);
+        let mask = default_codec().element_mask(&grad, &map, Some(&bm));
+        assert_eq!(mask, crate::grad::element_mask(&map, &bm, 730));
+        let full = default_codec().element_mask(&grad, &map, None);
+        assert!(full.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn topk_mask_keeps_selected_delivered_elements() {
+        // 400 elements, keep 25% = 100 pairs = 800 bytes = 2 wire segments
+        // of 400 bytes (50 pairs each). Lose segment 1: only the first 50
+        // kept indices survive.
+        let codec = parse_codec("topk:pct=0.25").unwrap();
+        let grad: Vec<f32> = (0..400).map(|i| i as f32).collect();
+        let map = SegmentMap::new(codec.encoded_bytes(1600), 400, vec![]);
+        assert_eq!(map.n_segs, 2);
+        let mut bm = Bitmap::new(2);
+        bm.set(0);
+        let mask = codec.element_mask(&grad, &map, Some(&bm));
+        // Kept indices are 300..400 (largest values), ascending; the
+        // arrived first segment carries pairs 0..50 → indices 300..350.
+        for (i, &m) in mask.iter().enumerate() {
+            let want = if (300..350).contains(&i) { 1.0 } else { 0.0 };
+            assert_eq!(m, want, "elem {i}");
+        }
+        // Reliable delivery masks the whole selection.
+        let full = codec.element_mask(&grad, &map, None);
+        assert_eq!(full.iter().filter(|&&m| m == 1.0).count(), 100);
+    }
+
+    #[test]
+    fn threshold_mask_trims_below_t() {
+        let codec = parse_codec("threshold:t=0.5,cap=0.5").unwrap();
+        let grad = vec![0.1f32, -2.0, 0.3, 0.9, 0.2, -0.4, 0.6, 0.05];
+        let map = SegmentMap::new(codec.encoded_bytes(32), 1460, vec![]);
+        let mask = codec.element_mask(&grad, &map, None);
+        // Budget = 4 largest magnitudes {1, 3, 6, 7→no: |0.05|} → top 4 are
+        // indices 1 (2.0), 3 (0.9), 6 (0.6), 5 (0.4); threshold 0.5 trims
+        // index 5.
+        assert_eq!(mask, vec![0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrips_against_brute_force_oracle() {
+        // encode→decode must equal a brute-force top-k reference (full
+        // sort by |g| descending, index-ascending tie-break) — mirroring
+        // `grad/bubble.rs`'s oracle style.
+        check("topk pack/unpack oracle", |rng| {
+            let n = 1 + rng.gen_range(300) as usize;
+            let g: Vec<f32> = (0..n)
+                .map(|_| {
+                    let v = (rng.gen_range(33) as f32 - 16.0) / 4.0;
+                    if rng.chance(0.5) {
+                        -v
+                    } else {
+                        v
+                    }
+                })
+                .collect();
+            let keep = rng.gen_range(n as u64 + 1) as usize;
+            let bytes = pack_topk(&g, keep);
+            assert_eq!(bytes.len(), keep.min(n) * PAIR_BYTES as usize);
+            let decoded = unpack_topk(&bytes, n).unwrap();
+            // Brute-force oracle.
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                g[b].abs().partial_cmp(&g[a].abs()).unwrap().then(a.cmp(&b))
+            });
+            let mut want = vec![0.0f32; n];
+            for &i in order.iter().take(keep) {
+                want[i] = g[i];
+            }
+            assert_eq!(decoded, want);
+        });
+    }
+
+    #[test]
+    fn unpack_rejects_malformed_images() {
+        assert!(unpack_topk(&[0u8; 7], 4).is_err(), "ragged length");
+        let mut pair = Vec::new();
+        pair.extend_from_slice(&9u32.to_le_bytes());
+        pair.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(unpack_topk(&pair, 4).is_err(), "index out of range");
+    }
+}

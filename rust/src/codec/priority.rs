@@ -1,0 +1,98 @@
+//! Tensor-priority segment scheduling, co-designed with Early Close
+//! (paper §III-B + Domain-specific Communication Optimization, PAPERS.md).
+//!
+//! The flat gradient is laid out shallow→deep (`layer0.w, layer0.b, …,
+//! head.w, head.b`), and per-element magnitude skews heavily toward the
+//! classifier head at the tail — so a flow's *later* segments carry the
+//! most update mass. The default LTP sender transmits normals in
+//! ascending order, which means Early Close sheds exactly the wrong
+//! (high-importance) tail. [`PriorityScheduler`] inverts that: normals go
+//! out deepest-first, so whatever Early Close truncates is the
+//! low-importance head, and the delivered-importance score of a closed
+//! gather strictly improves.
+//!
+//! Importance is scored with the same model the scheduler sorts by:
+//! segment `s` weighs `s + 1` (linear proxy for the tail-heavy magnitude
+//! skew). The weights are integers summed exactly, so the score is
+//! deterministic across platforms.
+
+use crate::proto::SegmentMap;
+use crate::util::Bitmap;
+
+/// Orders a flow's normal segments by tensor priority and scores partial
+/// deliveries against the same weight model.
+pub struct PriorityScheduler;
+
+impl PriorityScheduler {
+    /// Importance weight of segment `s`: deeper (higher-index) segments
+    /// carry more update mass.
+    pub fn weight(seg: u32) -> u64 {
+        seg as u64 + 1
+    }
+
+    /// The normal-queue transmission order: every non-critical segment,
+    /// deepest first. Criticals are excluded — they ride the reliable
+    /// critical queue ahead of all normals regardless of scheduling.
+    pub fn order(map: &SegmentMap) -> Vec<u32> {
+        (0..map.n_segs).rev().filter(|&s| !map.is_critical(s)).collect()
+    }
+
+    /// Delivered importance of a (possibly early-closed) flow: the
+    /// weight-sum of arrived segments over the weight-sum of all
+    /// `n_segs` segments. `1.0` for a full delivery; reliable transports
+    /// (no arrival bitmap) score `1.0` by construction.
+    pub fn delivered_importance(received: &Bitmap, n_segs: u32) -> f64 {
+        if n_segs == 0 {
+            return 1.0;
+        }
+        let total = (n_segs as u64 * (n_segs as u64 + 1)) / 2;
+        let mut got = 0u64;
+        for s in 0..n_segs {
+            if received.get(s as usize) {
+                got += Self::weight(s);
+            }
+        }
+        got as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_is_deepest_first_without_criticals() {
+        let map = SegmentMap::new(6 * 1460, 1460, vec![0, 5]);
+        assert_eq!(PriorityScheduler::order(&map), vec![4, 3, 2, 1]);
+        let no_crit = SegmentMap::new(3 * 1460, 1460, vec![]);
+        assert_eq!(PriorityScheduler::order(&no_crit), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn importance_weighs_the_tail_heavier() {
+        let n = 4u32; // weights 1+2+3+4 = 10
+        let mut head = Bitmap::new(4);
+        head.set(0);
+        head.set(1);
+        let mut tail = Bitmap::new(4);
+        tail.set(2);
+        tail.set(3);
+        let hi = PriorityScheduler::delivered_importance(&head, n);
+        let ti = PriorityScheduler::delivered_importance(&tail, n);
+        assert!((hi - 0.3).abs() < 1e-12);
+        assert!((ti - 0.7).abs() < 1e-12);
+        assert!(ti > hi, "same count, but the tail must score higher");
+    }
+
+    #[test]
+    fn importance_edges() {
+        let mut all = Bitmap::new(3);
+        for s in 0..3 {
+            all.set(s);
+        }
+        assert_eq!(PriorityScheduler::delivered_importance(&all, 3), 1.0);
+        let none = Bitmap::new(3);
+        assert_eq!(PriorityScheduler::delivered_importance(&none, 3), 0.0);
+        assert_eq!(PriorityScheduler::delivered_importance(&none, 0), 1.0);
+    }
+}

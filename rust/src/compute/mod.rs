@@ -80,6 +80,10 @@ pub struct RunCtx {
     /// One role per aggregator endpoint, in endpoint order (from
     /// [`crate::ps::Aggregation::endpoint_roles`]).
     pub roles: Vec<EndpointRole>,
+    /// The run's gradient codec (DESIGN.md §1.4). `dense` for classic
+    /// runs; sparsifying codecs shrink the wire image and make the
+    /// aggregator decode with loss-mask awareness.
+    pub codec: crate::codec::CodecSpec,
 }
 
 /// A training backend: thread-shareable, registered under a string key,
@@ -250,7 +254,7 @@ fn parse_rate(key: &str, v: &str) -> Result<f32> {
     Ok(x)
 }
 
-fn parse_switch(key: &str, v: &str) -> Result<bool> {
+pub(crate) fn parse_switch(key: &str, v: &str) -> Result<bool> {
     match v.to_ascii_lowercase().as_str() {
         "on" | "true" | "1" => Ok(true),
         "off" | "false" | "0" => Ok(false),

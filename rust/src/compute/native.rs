@@ -33,7 +33,7 @@ use super::{
     parse_count, parse_rate, parse_switch, Backend, BackendSpec, ModelInfo, RunCtx,
     TrainSession, TrainStats,
 };
-use crate::grad::{element_mask, Manifest};
+use crate::grad::{element_mask, ErrorFeedback, Manifest};
 use crate::proto::SegmentMap;
 use crate::ps::spec::{canonical, unknown_param};
 use crate::ps::{Aggregate, Compute, EndpointRole, IterStats};
@@ -456,7 +456,13 @@ impl TrainSession for NativeSession {
                 state: self.state.clone(),
                 elem0: (byte_offset / 4) as usize,
                 numel: (bytes / 4) as usize,
-                seg_map: SegmentMap::new(bytes, payload, vec![]),
+                seg_map: SegmentMap::new(
+                    self.run.codec.encoded_bytes(bytes),
+                    payload,
+                    vec![],
+                ),
+                codec: self.run.codec.clone(),
+                residuals: HashMap::new(),
                 workers: (0, self.run.n_workers),
                 agg_time: self.run.agg_time,
             }),
@@ -559,30 +565,38 @@ struct NativeAggregate {
     state: Rc<RefCell<NativeState>>,
     elem0: usize,
     numel: usize,
-    /// Segmentation of *this endpoint's* flows (shard bytes).
+    /// Segmentation of *this endpoint's* gather flows — the codec's
+    /// *encoded* image of the shard bytes.
     seg_map: SegmentMap,
+    /// The gradient codec shaping the gather wire image (DESIGN.md §1.4);
+    /// identity codecs reproduce the pre-codec decode path bit for bit.
+    codec: crate::codec::CodecSpec,
+    /// Per-worker error-feedback residuals for sparsifying codecs: the
+    /// coordinates a codec drops accumulate here and re-enter later
+    /// selections, keeping sparsified SGD convergent.
+    residuals: HashMap<usize, ErrorFeedback>,
     /// Global worker range feeding this endpoint (`(first, count)`).
     workers: (usize, usize),
     agg_time: Nanos,
 }
 
-/// The shared update rule: masked mean over `rows` (each `(grad slice at
-/// elem0, mask slice)` in worker order), then momentum SGD on
-/// `params[elem0..elem0+numel]`.
+/// The shared update rule: masked mean over `rows` (each `(grad, mask)`
+/// already positioned at the endpoint's element range, in worker order),
+/// then momentum SGD on `params[elem0..elem0+numel]`.
 fn masked_mean_sgd(
     state: &mut NativeState,
     fill: bool,
     lr: f32,
     elem0: usize,
     numel: usize,
-    rows: &[(&[f32], Vec<f32>)],
+    rows: &[(&[f32], &[f32])],
 ) {
     for i in 0..numel {
         let mut sum = 0.0f64;
         let mut cnt = 0.0f64;
         for (g, m) in rows {
             let mi = m[i];
-            sum += (g[elem0 + i] * mi) as f64;
+            sum += (g[i] * mi) as f64;
             cnt += mi as f64;
         }
         let denom = if fill { cnt.max(1.0) } else { (rows.len() as f64).max(1.0) };
@@ -601,17 +615,38 @@ impl Aggregate for NativeAggregate {
     fn aggregate(&mut self, iter: u64, arrivals: &[Option<(Bitmap, u64)>]) -> Nanos {
         let state = &mut *self.state.borrow_mut();
         let (first, count) = self.workers;
-        // Collect (grad, mask) rows in global worker order; workers that
-        // deposited nothing this round contribute nothing.
-        let mut rows: Vec<(&[f32], Vec<f32>)> = Vec::with_capacity(count);
+        // Collect (effective grad, mask) rows in global worker order;
+        // workers that deposited nothing this round contribute nothing.
+        let mut rows: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(count);
         // Split borrows: grads are read, params/momentum written below.
         let grads = std::mem::take(&mut state.grads);
         for w in first..first + count {
             let Some(g) = grads.get(&(w, iter)) else { continue };
-            let mask = flow_mask(&self.seg_map, &arrivals[w - first], self.numel);
-            rows.push((g.as_slice(), mask));
+            let slice = &g[self.elem0..self.elem0 + self.numel];
+            let arrival = arrivals[w - first].as_ref().map(|(bm, _)| bm);
+            if self.codec.wire_identity() {
+                let mask = self.codec.element_mask(slice, &self.seg_map, arrival);
+                rows.push((slice.to_vec(), mask));
+            } else {
+                // Error feedback: the worker sends grad + residual, the
+                // unsent remainder becomes the next residual.
+                let ef = self
+                    .residuals
+                    .entry(w)
+                    .or_insert_with(|| ErrorFeedback::new(self.numel));
+                let mut eff = slice.to_vec();
+                ef.compensate(&mut eff);
+                let mask = self.codec.element_mask(&eff, &self.seg_map, arrival);
+                let post: Vec<f32> =
+                    eff.iter().zip(&mask).map(|(&g, &m)| g * m).collect();
+                ef.absorb(&eff, &post);
+                rows.push((eff, mask));
+            }
         }
-        masked_mean_sgd(state, self.cfg.fill, self.cfg.lr, self.elem0, self.numel, &rows);
+        let views: Vec<(&[f32], &[f32])> =
+            rows.iter().map(|(g, m)| (g.as_slice(), m.as_slice())).collect();
+        masked_mean_sgd(state, self.cfg.fill, self.cfg.lr, self.elem0, self.numel, &views);
+        drop(views);
         drop(rows);
         state.grads = grads;
         state.gc(iter);
@@ -686,7 +721,10 @@ impl Aggregate for NativeRoot {
             };
             rows.push((g.as_slice(), mask));
         }
-        masked_mean_sgd(state, self.cfg.fill, self.cfg.lr, 0, numel, &rows);
+        let views: Vec<(&[f32], &[f32])> =
+            rows.iter().map(|&(g, ref m)| (g, m.as_slice())).collect();
+        masked_mean_sgd(state, self.cfg.fill, self.cfg.lr, 0, numel, &views);
+        drop(views);
         drop(rows);
         state.grads = grads;
         state.masks = masks;
@@ -718,6 +756,7 @@ mod tests {
             compute_time: crate::MS,
             agg_time: crate::MS,
             roles,
+            codec: crate::codec::default_codec(),
         })
         .unwrap()
     }
@@ -786,6 +825,7 @@ mod tests {
                 compute_time: crate::MS,
                 agg_time: crate::MS,
                 roles: vec![EndpointRole::Final { byte_offset: 0, bytes: info.wire_bytes }],
+                codec: crate::codec::default_codec(),
             })
             .unwrap();
         let mut cs: Vec<Box<dyn Compute>> = (0..2).map(|w| s.make_compute(w)).collect();
@@ -858,6 +898,7 @@ mod tests {
                         byte_offset: 0,
                         bytes: info.wire_bytes,
                     }],
+                    codec: crate::codec::default_codec(),
                 })
                 .unwrap();
             let mut cs: Vec<Box<dyn Compute>> = (0..2).map(|w| s.make_compute(w)).collect();

@@ -11,4 +11,4 @@ mod sparsify;
 
 pub use bubble::{bubble_fill, bubble_fill_into, element_mask, misaligned_corruption_demo};
 pub use manifest::{Manifest, TensorSpec, ALIGN};
-pub use sparsify::{random_k, top_k, ErrorFeedback};
+pub use sparsify::{random_k, top_k, top_k_indices, ErrorFeedback};

@@ -62,6 +62,39 @@ pub fn top_k(grad: &mut [f32], k: f64) -> usize {
     kept
 }
 
+/// Indices of the `keep` elements with the largest |value|, sorted
+/// ascending — the index plane of a top-k (index, value) wire packing.
+/// Selection matches [`top_k`] exactly (strictly-above-threshold elements
+/// first, then threshold ties in ascending index order), so zeroing every
+/// index *not* returned reproduces `top_k`'s output bit-for-bit.
+pub fn top_k_indices(grad: &[f32], keep: usize) -> Vec<u32> {
+    let n = grad.len();
+    if keep == 0 {
+        return Vec::new();
+    }
+    if keep >= n {
+        return (0..n as u32).collect();
+    }
+    let mut mags: Vec<f32> = grad.iter().map(|g| g.abs()).collect();
+    let nth = n - keep;
+    mags.select_nth_unstable_by(nth, |a, b| a.partial_cmp(b).unwrap());
+    let thresh = mags[nth];
+    let mut idx = Vec::with_capacity(keep);
+    let mut ties = Vec::new();
+    for (i, g) in grad.iter().enumerate() {
+        let a = g.abs();
+        if a > thresh {
+            idx.push(i as u32);
+        } else if a == thresh {
+            ties.push(i as u32);
+        }
+    }
+    let room = keep - idx.len();
+    idx.extend(ties.into_iter().take(room));
+    idx.sort_unstable();
+    idx
+}
+
 /// Error feedback: carries the un-transmitted residual into the next
 /// iteration (`g ← g + residual; residual ← g − sparsified(g)`).
 #[derive(Debug, Clone)]
@@ -135,6 +168,54 @@ mod tests {
         let mut g = vec![1.0f32, 2.0];
         assert_eq!(top_k(&mut g, 0.0), 0);
         assert!(g.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn top_k_indices_agree_with_top_k() {
+        let g = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        assert_eq!(top_k_indices(&g, 3), vec![1, 3, 5]);
+        assert_eq!(top_k_indices(&g, 0), Vec::<u32>::new());
+        assert_eq!(top_k_indices(&g, 6), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(top_k_indices(&g, 99), vec![0, 1, 2, 3, 4, 5]);
+        // Ties resolve in ascending index order, like `top_k`.
+        let ones = vec![1.0f32; 10];
+        assert_eq!(top_k_indices(&ones, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn prop_top_k_indices_match_in_place_top_k() {
+        // The index plane and the in-place reference must pick the exact
+        // same element set for every (values, keep) — the decode side of
+        // the topk codec relies on this equivalence.
+        crate::util::proptest::check("top_k index/in-place agreement", |rng| {
+            let n = 1 + rng.gen_range(500) as usize;
+            let g: Vec<f32> = (0..n)
+                .map(|_| {
+                    // Coarse quantization forces frequent magnitude ties.
+                    let v = (rng.gen_range(41) as f32 - 20.0) / 8.0;
+                    if rng.chance(0.5) {
+                        -v
+                    } else {
+                        v
+                    }
+                })
+                .collect();
+            let keep = rng.gen_range(n as u64 + 1) as usize;
+            let idx = top_k_indices(&g, keep);
+            assert_eq!(idx.len(), keep.min(n));
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "sorted, unique");
+            let mut dense = g.clone();
+            let kept = top_k(&mut dense, keep as f64 / n as f64);
+            // `top_k` rounds its fraction; only compare when the counts
+            // agree (they do whenever keep/n survives the round-trip).
+            if kept == idx.len() {
+                let mut from_idx = vec![0.0f32; n];
+                for &i in &idx {
+                    from_idx[i as usize] = g[i as usize];
+                }
+                assert_eq!(from_idx, dense, "index plane must reproduce top_k");
+            }
+        });
     }
 
     #[test]

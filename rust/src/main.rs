@@ -3,15 +3,16 @@
 //! ```text
 //! ltp scenario <name|list|all> [--json] [--seed N | --seeds A..B] [--quick]
 //!              [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]...
-//!              [--agg SPEC]...
+//!              [--agg SPEC]... [--codec SPEC]...
 //! ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]
 //! ltp trace <scenario> --out FILE [--seed N | --seeds A..B] [--quick] [--jobs N]
 //! ltp replay <trace> [--out FILE] [--breakdown [FILE]]
 //! ltp proto <list|parse SPEC>               protocol registry / spec grammar
 //! ltp agg <list|parse SPEC>                 aggregation-topology registry
 //! ltp backend <list|parse SPEC>             compute-backend registry
+//! ltp codec <list|parse SPEC>               gradient-codec registry
 //! ltp train [--backend native] [--workers 4] [--iters 50] [--loss 0.01]
-//!           [--proto SPEC] [--agg SPEC] [--max-loss X]
+//!           [--proto SPEC] [--agg SPEC] [--codec SPEC] [--max-loss X]
 //! ltp bench check --baseline FILE --current FILE [--scenario NAME|all]
 //!                 [--max-regress-pct P]     CI events/sec regression gate
 //! ltp bench-ltp [--bytes N] [--loss P]      one-flow protocol microbench
@@ -21,11 +22,14 @@
 //! `ltp`, `ltp:pct=0.9,slack=100ms`, `ltp-adaptive`, `tcp:cc=cubic`, …
 //! Aggregation specs use the same grammar (`ltp agg list`): `ps`,
 //! `sharded:n=4`, `hier:racks=2`. Compute backends too (`ltp backend
-//! list`): `native`, `native:dim=64,fill=off`, `xla:preset=tiny`.
+//! list`): `native`, `native:dim=64,fill=off`, `xla:preset=tiny`. And
+//! gradient codecs (`ltp codec list`): `dense`, `topk:pct=0.1`,
+//! `threshold:t=0.01,priority=on`.
 //!
 //! (Hand-rolled argument parsing: the vendored dependency set has no clap.)
 
 use anyhow::{bail, Context, Result};
+use ltp::codec::{codec_registry, parse_codec, CodecSpec};
 use ltp::compute::{backend_registry, parse_backend};
 use ltp::ps::{
     agg_registry, parse_agg, parse_proto, proto_registry, run_training, AggSpec, ProtoSpec,
@@ -114,6 +118,21 @@ impl Args {
         }
         Ok(Some(out))
     }
+
+    /// Parse every `--codec SPEC` against the gradient-codec registry;
+    /// `None` when the flag was not given.
+    fn codecs(&self) -> Result<Option<Vec<CodecSpec>>> {
+        let specs = self.all("codec");
+        if specs.is_empty() {
+            return Ok(None);
+        }
+        let mut out = Vec::with_capacity(specs.len());
+        for s in specs {
+            anyhow::ensure!(s != "true", "--codec requires a spec (see `ltp codec list`)");
+            out.push(parse_codec(s).with_context(|| format!("--codec {s}"))?);
+        }
+        Ok(Some(out))
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -133,6 +152,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let loss: f64 = args.flag("loss", 0.0)?;
     let proto = parse_proto(&args.flag("proto", "ltp".to_string())?)?;
     let agg = parse_agg(&args.flag("agg", "ps".to_string())?)?;
+    let codec = parse_codec(&args.flag("codec", "dense".to_string())?)?;
     // The compute backend (DESIGN.md §1.3). `native` is the default: it
     // needs no artifacts, so `ltp train` works out of the box; `--backend
     // xla[:preset=..]` selects the PJRT path and fails fast with the
@@ -158,7 +178,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         .iters(iters)
         .compute_time(50 * MS)
         .horizon(24 * 3600 * SEC)
-        .agg(agg);
+        .agg(agg)
+        .codec(codec);
     if loss > 0.0 {
         b = b.loss(LossModel::Bernoulli { p: loss });
     }
@@ -178,6 +199,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     let train = report.train.expect("a backend is always attached to `ltp train`");
+    if report.codec != "dense" {
+        println!(
+            "\ncodec: {} | gather bytes on wire {} | mean delivered importance {}",
+            report.codec,
+            ltp::util::fmt_bytes(report.gather_wire_bytes),
+            report
+                .mean_importance
+                .map(|i| format!("{i:.4}"))
+                .unwrap_or_else(|| "—".to_string()),
+        );
+    }
     println!(
         "\ncompleted {}/{} iterations | proto={} | loss rate {:.2}% | wall {:.1}s",
         report.iters.len(),
@@ -272,10 +304,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             "--bench {v}: expected a .json path (bare --bench writes BENCH_scenarios.json)"
         ),
     };
-    // Protocol and aggregation specs fail fast too, before any simulation
-    // runs.
+    // Protocol, aggregation, and codec specs fail fast too, before any
+    // simulation runs.
     let protos = args.protos()?;
     let aggs = args.aggs()?;
+    let codecs = args.codecs()?;
     if which == "list" {
         println!("registered scenarios (run with `ltp scenario <name|all> [--json]`):\n");
         for s in scenarios::registry() {
@@ -302,7 +335,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             }
         }
     };
-    let jobs = sweep::sweep_jobs(&indices, &seeds, args.has("quick"), protos, aggs);
+    let jobs = sweep::sweep_jobs(&indices, &seeds, args.has("quick"), protos, aggs, codecs);
     let result = sweep::run_sweep(jobs, n_jobs);
     // A scenario skips (agg, degree) combinations its aggregations
     // reject; if that leaves a report empty, say so rather than emit a
@@ -356,9 +389,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
         "ltp trace records one named scenario, not `{which}` (see `ltp scenario list`)"
     );
     anyhow::ensure!(
-        !args.has("proto") && !args.has("agg"),
+        !args.has("proto") && !args.has("agg") && !args.has("codec"),
         "ltp trace runs scenario defaults — the trace header has no field for \
-         --proto/--agg overrides, so a replay could not reproduce them"
+         --proto/--agg/--codec overrides, so a replay could not reproduce them"
     );
     let out = args.get("out").context(usage)?;
     anyhow::ensure!(out != "true", "--out requires a file path");
@@ -372,7 +405,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let quick = args.has("quick");
     let n_jobs: usize = args.flag("jobs", 1)?;
     let seeds = parse_seeds(args)?;
-    let jobs = sweep::sweep_jobs(&[index], &seeds, quick, None, None);
+    let jobs = sweep::sweep_jobs(&[index], &seeds, quick, None, None, None);
     let n = jobs.len();
     let (_, records) = sweep::run_sweep_traced(jobs, n_jobs, true);
     let records = records.expect("traced sweep returns records");
@@ -593,6 +626,47 @@ fn cmd_backend(args: &Args) -> Result<()> {
     }
 }
 
+/// `ltp codec list` — the gradient-codec registry; `ltp codec parse
+/// <spec>` — echo a spec's canonical form and its wire footprint for the
+/// default native model.
+fn cmd_codec(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str).unwrap_or("list") {
+        "list" => {
+            println!(
+                "registered gradient codecs (use with `--codec <key>[:name=value,...]`):\n"
+            );
+            for d in codec_registry() {
+                println!("  {:<10} {}", d.key, d.summary);
+                if !d.params.is_empty() {
+                    println!("  {:<10}   params: {}", "", d.params);
+                }
+            }
+            println!(
+                "\nthe `compression_matrix` scenario sweeps dense and topk:pct∈{{0.1,0.01}} \
+                 across protocols and loss rates."
+            );
+            Ok(())
+        }
+        "parse" => {
+            let spec = args.positional.get(2).context("usage: ltp codec parse <spec>")?;
+            let c = parse_codec(spec)?;
+            // Wire footprint can depend on the model size; report for the
+            // default native backend's gradient.
+            let dense = parse_backend("native")?.model()?.wire_bytes;
+            println!(
+                "{} -> canonical `{}` ({} of {} on the wire for `native`{})",
+                spec,
+                c.name(),
+                ltp::util::fmt_bytes(c.encoded_bytes(dense)),
+                ltp::util::fmt_bytes(dense),
+                if c.priority() { ", tensor-priority scheduling on" } else { "" }
+            );
+            Ok(())
+        }
+        other => bail!("unknown codec subcommand `{other}` (list|parse)"),
+    }
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     match args.positional.first().map(String::as_str) {
@@ -606,6 +680,7 @@ fn main() -> Result<()> {
         Some("proto") => cmd_proto(&args),
         Some("agg") => cmd_agg(&args),
         Some("backend") => cmd_backend(&args),
+        Some("codec") => cmd_codec(&args),
         Some("train") => cmd_train(&args),
         Some("bench") => cmd_bench(&args),
         Some("bench-ltp") => cmd_bench_ltp(&args),
@@ -613,14 +688,16 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage:\n  ltp scenario <name|list|all> [--json] [--seed N | --seeds A..B] [--quick]\n  \
                  \x20            [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]... [--agg SPEC]...\n  \
+                 \x20            [--codec SPEC]...\n  \
                  ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]\n  \
                  ltp trace <scenario> --out FILE [--seed N | --seeds A..B] [--quick] [--jobs N]\n  \
                  ltp replay <trace> [--out FILE] [--breakdown [FILE]]\n  \
                  ltp proto <list|parse SPEC>\n  \
                  ltp agg <list|parse SPEC>\n  \
                  ltp backend <list|parse SPEC>\n  \
+                 ltp codec <list|parse SPEC>\n  \
                  ltp train [--backend SPEC] [--workers N] [--iters N] [--loss P] [--proto SPEC]\n  \
-                 \x20        [--agg SPEC] [--max-loss X]\n  \
+                 \x20        [--agg SPEC] [--codec SPEC] [--max-loss X]\n  \
                  ltp bench check --baseline FILE --current FILE [--scenario NAME|all] [--max-regress-pct P]\n  \
                  ltp bench-ltp [--bytes N] [--loss P]"
             );

@@ -78,6 +78,12 @@ pub struct LtpSender {
     cq: VecDeque<u32>,
     nq: VecDeque<u32>,
     rq: VecDeque<u32>,
+    /// Priority rank per segment (position in the scheduled NQ order),
+    /// set by [`Self::set_nq_order`]. While set, lost normals re-enter
+    /// the RQ in rank order instead of loss-detection order, so the
+    /// retransmission pass keeps the scheduled priority too. `None` for
+    /// unscheduled flows (the pre-codec behavior, byte-identical).
+    rank: Option<Vec<u32>>,
     /// Registration bookkeeping (not a data segment).
     reg_acked: bool,
     reg_queued: bool,
@@ -130,6 +136,7 @@ impl LtpSender {
             cq,
             nq,
             rq: VecDeque::new(),
+            rank: None,
             reg_acked: false,
             reg_queued: true,
             end_inflight: false,
@@ -151,6 +158,35 @@ impl LtpSender {
             complete: false,
             stats: SenderStats::default(),
         }
+    }
+
+    /// Override the Normal Queue transmission order (tensor-priority
+    /// scheduling, [`crate::codec::PriorityScheduler`]). Call before the
+    /// first `poll_transmit`. Entries that are out of range, critical, or
+    /// duplicated are ignored; normals missing from `order` are appended
+    /// in ascending order so every segment still transmits exactly once.
+    pub fn set_nq_order(&mut self, order: &[u32]) {
+        let mut rank = vec![u32::MAX; self.map.n_segs as usize];
+        self.nq.clear();
+        let mut next = 0u32;
+        let mut push = |nq: &mut VecDeque<u32>, rank: &mut Vec<u32>, s: u32| {
+            if rank[s as usize] == u32::MAX {
+                rank[s as usize] = next;
+                next += 1;
+                nq.push_back(s);
+            }
+        };
+        for &s in order {
+            if s < self.map.n_segs && !self.map.is_critical(s) {
+                push(&mut self.nq, &mut rank, s);
+            }
+        }
+        for s in 0..self.map.n_segs {
+            if !self.map.is_critical(s) {
+                push(&mut self.nq, &mut rank, s);
+            }
+        }
+        self.rank = Some(rank);
     }
 
     /// Seed congestion estimates from path knowledge (previous epoch).
@@ -323,8 +359,16 @@ impl LtpSender {
             self.cq.push_back(seg);
         } else {
             // Lost normals go to the RQ, drained after CQ and NQ
-            // (paper Fig 11b).
-            self.rq.push_back(seg);
+            // (paper Fig 11b) — in scheduled-priority order when a
+            // priority order was set, in loss-detection order otherwise.
+            match &self.rank {
+                Some(rank) => {
+                    let r = rank[s];
+                    let at = self.rq.partition_point(|&q| rank[q as usize] <= r);
+                    self.rq.insert(at, seg);
+                }
+                None => self.rq.push_back(seg),
+            }
         }
     }
 
@@ -549,6 +593,61 @@ mod tests {
         let p3 = s.poll_transmit(3).unwrap();
         assert_eq!(p3.hdr.seq, 0); // first normal
         assert_eq!(p3.hdr.importance, Importance::Normal);
+    }
+
+    #[test]
+    fn nq_order_overrides_normal_transmission_order() {
+        let mut s = mk_sender(LTP_MSS as u64 * 6, vec![0]);
+        // 0 is critical, 4 is duplicated, 99 is out of range — all ignored;
+        // missing normals (1, 2) append in ascending order.
+        s.set_nq_order(&[5, 0, 4, 4, 99, 3]);
+        let mut order = vec![];
+        let mut now = 0;
+        loop {
+            s.refill_tokens(now);
+            match s.poll_transmit(now) {
+                Some(p) if p.hdr.ty == LtpType::Data => order.push(p.hdr.seq),
+                Some(_) => {}
+                None => break,
+            }
+            now += 1000;
+        }
+        assert_eq!(order, vec![0, 5, 4, 3, 1, 2]);
+    }
+
+    #[test]
+    fn scheduled_flows_retransmit_in_priority_order() {
+        let mut s = mk_sender(LTP_MSS as u64 * 6, vec![]);
+        s.set_nq_order(&[5, 4, 3, 2, 1, 0]);
+        let mut now = 0;
+        loop {
+            s.refill_tokens(now);
+            if s.poll_transmit(now).is_none() {
+                break;
+            }
+            now += 1000;
+        }
+        // pktnums: reg=0, then segs 5,4,3,2,1,0. Acking reg + segs 2,1,0
+        // (pktnums 4,5,6) puts pktnums 1..3 three behind → segs 5,4,3 lost.
+        s.handle(now, ack(CTRL_SEQ));
+        for q in [2, 1, 0] {
+            s.handle(now + q as u64 + 1, ack(q));
+        }
+        assert_eq!(s.stats.losses_detected, 3);
+        let mut resent = vec![];
+        let mut t = now + 100;
+        loop {
+            s.refill_tokens(t);
+            match s.poll_transmit(t) {
+                Some(p) if p.hdr.ty == LtpType::Data => resent.push(p.hdr.seq),
+                Some(_) => {}
+                None => break,
+            }
+            t += 1000;
+        }
+        // The RQ drains highest-priority first, not loss-detection order.
+        assert_eq!(resent, vec![5, 4, 3]);
+        assert_eq!(s.stats.retransmissions, 3);
     }
 
     #[test]

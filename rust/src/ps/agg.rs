@@ -392,6 +392,7 @@ pub(super) fn merge_iters(shards: &[ShardObs]) -> Vec<IterStats> {
     for i in 0..n {
         let mut merged = IterStats::default();
         let mut delivered = 0.0;
+        let mut importance = 0.0;
         for s in &barrier {
             let rep = s.report.borrow();
             let rec = &rep[i];
@@ -402,12 +403,15 @@ pub(super) fn merge_iters(shards: &[ShardObs]) -> Vec<IterStats> {
                 merged.loss = rec.loss;
             }
             delivered += rec.mean_delivered * s.weight.max(1) as f64;
+            importance += rec.mean_importance * s.weight.max(1) as f64;
         }
         merged.mean_delivered = delivered / weight_sum as f64;
+        merged.mean_importance = importance / weight_sum as f64;
         for s in &uppers {
             let rep = s.report.borrow();
             if let Some(rec) = rep.get(i) {
                 merged.mean_delivered *= rec.mean_delivered;
+                merged.mean_importance *= rec.mean_importance;
             }
         }
         out.push(merged);
@@ -444,6 +448,17 @@ impl Aggregation for PsAggregation {
         let report: Rc<RefCell<Vec<IterStats>>> = Rc::new(RefCell::new(Vec::new()));
         let closes: Rc<RefCell<Vec<GatherClose>>> = Rc::new(RefCell::new(Vec::new()));
         let tracker = tracker_for(cfg, cfg.n_workers);
+        // Codec wire image (DESIGN.md §1.4): gather flows carry the
+        // encoded gradient; criticals and the priority order are reframed
+        // onto the encoded segment map. For the identity codec this is
+        // byte-for-byte the dense plumbing (enc == model_bytes, criticals
+        // pass through, no reordering unless priority=on).
+        let enc = cfg.codec.encoded_bytes(cfg.model_bytes);
+        let payload = Manifest::aligned_payload(LTP_MSS);
+        let probe = crate::proto::SegmentMap::new(enc, payload, vec![]);
+        let wire_crit = cfg.codec.wire_critical(&cfg.critical, &probe);
+        let wire_map = crate::proto::SegmentMap::new(enc, payload, wire_crit.clone());
+        let nq_order = cfg.codec.nq_order(&wire_map);
         // Entity-id layout is deterministic per topology: switches first,
         // then the PS, then workers in index order (background hosts last).
         let first_host = match cfg.topo {
@@ -457,7 +472,7 @@ impl Aggregation for PsAggregation {
             worker_ids.clone(),
             cfg.proto.clone(),
             cfg.model_bytes,
-            cfg.critical.clone(),
+            wire_crit.clone(),
             PsFlowPlan::single(cfg.n_workers),
             (env.make_agg)(0),
             tracker,
@@ -465,16 +480,19 @@ impl Aggregation for PsAggregation {
             cfg.batches_per_epoch,
             report.clone(),
             closes.clone(),
-        );
+        )
+        .with_gather_bytes(enc);
         let mut nodes: Vec<Box<dyn Node>> = vec![Box::new(ps)];
         for w in 0..cfg.n_workers {
-            let route = WorkerRoute::single(
+            let mut route = WorkerRoute::single(
                 ps_id,
                 w,
                 cfg.n_workers,
                 cfg.model_bytes,
-                cfg.critical.clone(),
+                wire_crit.clone(),
             );
+            route.gather_bytes = enc;
+            route.nq_order = nq_order.clone();
             nodes.push(Box::new(WorkerNode::new(
                 w,
                 vec![route],
@@ -655,7 +673,9 @@ impl Aggregation for ShardedAggregation {
                 .map(|(s, &(bytes, _, _))| WorkerRoute {
                     dst: shard_ids[s],
                     bytes,
+                    gather_bytes: bytes,
                     critical: crits[s].clone(),
+                    nq_order: None,
                     gather_slot: (s * 2 * w + i) as u64,
                     bcast_slot: (s * 2 * w + w + i) as u64,
                     stride,
@@ -778,7 +798,9 @@ impl Aggregation for HierAggregation {
                 let route = WorkerRoute {
                     dst: relay_ids[r],
                     bytes: cfg.model_bytes,
+                    gather_bytes: cfg.model_bytes,
                     critical: cfg.critical.clone(),
+                    nq_order: None,
                     gather_slot: i as u64,
                     bcast_slot: (w + i) as u64,
                     stride,
@@ -935,6 +957,9 @@ struct RelayAggNode {
     timer_gen: u64,
     arrivals: Vec<Option<(Bitmap, u64)>>,
     delivered_fractions: Vec<f64>,
+    /// Per-flow tensor-priority-weighted delivered importance, parallel
+    /// to `delivered_fractions` (mirrors `PsNode::importances`).
+    importances: Vec<f64>,
 }
 
 impl RelayAggNode {
@@ -958,6 +983,7 @@ impl RelayAggNode {
             timer_gen: 0,
             arrivals: (0..n).map(|_| None).collect(),
             delivered_fractions: vec![],
+            importances: vec![],
         }
     }
 
@@ -1091,6 +1117,15 @@ impl RelayAggNode {
                     self.arrivals[j] = rx.bitmap().map(|b| {
                         (b.clone(), rx.segment_map().map(|m| m.n_segs as u64).unwrap_or(0))
                     });
+                    self.importances.push(match &self.arrivals[j] {
+                        Some((bm, n_segs)) => {
+                            crate::codec::PriorityScheduler::delivered_importance(
+                                bm,
+                                *n_segs as u32,
+                            )
+                        }
+                        None => 1.0,
+                    });
                 }
             }
             if self.gather_done.iter().all(|&d| d) {
@@ -1131,6 +1166,7 @@ impl RelayAggNode {
             critical: self.c.critical.clone(),
             seed_rtprop: rt,
             seed_btlbw_bytes: bw,
+            nq_order: None,
         }));
         // The root's broadcast comes back reliably on this iteration's
         // down-slot; open the receiver now, like a worker does.
@@ -1155,6 +1191,7 @@ impl RelayAggNode {
                 critical: vec![],
                 seed_rtprop: 0,
                 seed_btlbw_bytes: 0,
+                nq_order: None,
             }));
         }
         self.drain(ctx);
@@ -1167,6 +1204,7 @@ impl RelayAggNode {
         let n = self.n() as f64;
         let recent: f64 =
             self.delivered_fractions.iter().rev().take(self.n()).sum::<f64>() / n;
+        let recent_imp: f64 = self.importances.iter().rev().take(self.n()).sum::<f64>() / n;
         let stats = IterStats {
             // The whole synchronization span of this rack — local gather,
             // forward, root round-trip, local re-broadcast — minus this
@@ -1178,6 +1216,7 @@ impl RelayAggNode {
             bst: (now - first_gather).saturating_sub(self.reduce_dur),
             gather_time: self.gather_phase_done - first_gather,
             mean_delivered: recent,
+            mean_importance: recent_imp,
             loss: self.c.agg.loss(self.iter),
             end: now,
         };

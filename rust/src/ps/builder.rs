@@ -11,6 +11,7 @@
 use super::agg::{default_agg, AggSpec, Topo};
 use super::runner::{BgFlow, RunReport, TrainingCfg};
 use super::spec::ProtoSpec;
+use crate::codec::{default_codec, CodecSpec};
 use crate::compute::BackendSpec;
 use crate::config::{NetEnv, Workload};
 use crate::grad::Manifest;
@@ -64,6 +65,7 @@ pub struct RunBuilder {
     bg: Vec<BgFlow>,
     agg: AggSpec,
     backend: Option<BackendSpec>,
+    codec: CodecSpec,
 }
 
 impl RunBuilder {
@@ -90,6 +92,7 @@ impl RunBuilder {
             bg: vec![],
             agg: default_agg(),
             backend: None,
+            codec: default_codec(),
         }
     }
 
@@ -221,6 +224,17 @@ impl RunBuilder {
         self
     }
 
+    /// Choose the gradient codec (`dense`, `topk:pct=0.1`,
+    /// `threshold:t=0.001`, … — see [`crate::codec::parse_codec`]). The
+    /// default identity codec leaves every run byte-identical to the
+    /// pre-codec plumbing; sparsifying codecs shrink the gather wire
+    /// image and are validated against the aggregation/backend in
+    /// [`RunBuilder::build`] (DESIGN.md §1.4).
+    pub fn codec(mut self, codec: CodecSpec) -> RunBuilder {
+        self.codec = codec;
+        self
+    }
+
     /// Validate and produce the run configuration.
     pub fn build(mut self) -> Result<TrainingCfg> {
         if let Some(b) = &self.backend {
@@ -262,6 +276,28 @@ impl RunBuilder {
         // The aggregation's own consistency rules: worker count divisible
         // across `hier` racks / `sharded` shards, fabric compatibility.
         self.agg.validate(self.workers, self.model_bytes, &self.topo)?;
+        // Codec compatibility (DESIGN.md §1.4): the encoded wire image is
+        // built per full-gradient gather flow, so anything beyond the bare
+        // identity codec needs the single-PS aggregation, and sparsifying
+        // codecs decode on the CPU aggregation path.
+        if !self.codec.is_default() {
+            ensure!(
+                self.agg.name() == "ps",
+                "codec `{}` requires the single-PS aggregation (got `{}`)",
+                self.codec.name(),
+                self.agg.name()
+            );
+        }
+        if !self.codec.wire_identity() {
+            if let Some(b) = &self.backend {
+                ensure!(
+                    b.name() != "xla" && !b.name().starts_with("xla:"),
+                    "codec `{}` decodes on the CPU aggregation path; the `xla` \
+                     backend's Pallas kernel consumes the dense wire image",
+                    self.codec.name()
+                );
+            }
+        }
         // Can the backend serve this topology's endpoints at this worker
         // count? (The `xla` Pallas kernel spans the full model — single PS
         // only — and its artifact bakes in a worker capacity.)
@@ -308,6 +344,7 @@ impl RunBuilder {
             bg: self.bg,
             agg: self.agg,
             backend: self.backend,
+            codec: self.codec,
         })
     }
 
@@ -420,6 +457,22 @@ mod tests {
             .iters(6000)
             .build()
             .is_ok());
+    }
+
+    #[test]
+    fn codec_gates_enforce_topology() {
+        let b = || RunBuilder::modeled(ltp(), Workload::Micro, 4);
+        let codec = |s: &str| crate::codec::parse_codec(s).unwrap();
+        let agg = |s: &str| crate::ps::parse_agg(s).unwrap();
+        // Any codec rides the single-PS aggregation.
+        assert!(b().codec(codec("topk:pct=0.1")).build().is_ok());
+        assert!(b().codec(codec("threshold:t=0.01")).build().is_ok());
+        assert!(b().codec(codec("dense:priority=on")).build().is_ok());
+        // Non-default codecs reject multi-endpoint aggregations…
+        assert!(b().codec(codec("topk:pct=0.1")).agg(agg("sharded:n=2")).build().is_err());
+        assert!(b().codec(codec("dense:priority=on")).agg(agg("hier")).build().is_err());
+        // …while the bare identity codec stays unrestricted.
+        assert!(b().codec(codec("dense")).agg(agg("sharded:n=2")).build().is_ok());
     }
 
     #[test]

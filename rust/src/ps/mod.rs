@@ -85,6 +85,11 @@ pub struct IterStats {
     /// Mean fraction of gradient data delivered across workers (1.0 = no
     /// loss-tolerant dropping).
     pub mean_delivered: f64,
+    /// Mean tensor-priority-weighted delivered importance across workers
+    /// ([`crate::codec::PriorityScheduler::delivered_importance`]); equals
+    /// 1.0 for reliable transports and 0.0-weighted losses only under
+    /// Early Close.
+    pub mean_importance: f64,
     /// Training loss (real compute only).
     pub loss: Option<f32>,
     /// Wall-clock the iteration ended (sim time).

@@ -98,6 +98,10 @@ pub struct TrainingCfg {
     /// `None` keeps modeled compute: fixed durations, no numerics, and a
     /// report without a `train` block (the original byte layout).
     pub backend: Option<BackendSpec>,
+    /// Gradient codec (`dense`, `topk:pct=0.1`, … — DESIGN.md §1.4). The
+    /// default identity codec keeps every run byte-identical to the
+    /// pre-codec plumbing.
+    pub codec: crate::codec::CodecSpec,
 }
 
 impl TrainingCfg {
@@ -132,6 +136,18 @@ pub struct RunReport {
     pub proto: String,
     /// Canonical aggregation spec the run used (`ps` by default).
     pub agg: String,
+    /// Canonical gradient-codec spec the run used (`dense` by default).
+    pub codec: String,
+    /// Gather-direction payload bytes put on the wire across the whole
+    /// run under the codec's wire model: `encoded_bytes(model_bytes) ×
+    /// workers × iterations` (DESIGN.md §1.4). Retransmissions and
+    /// headers are excluded — this is the codec's size claim, the
+    /// quantity compression ratios are quoted on.
+    pub gather_wire_bytes: u64,
+    /// Mean tensor-priority-weighted delivered importance over the run's
+    /// iterations — present **only when a non-default codec is
+    /// configured**, so classic reports keep their original byte layout.
+    pub mean_importance: Option<f64>,
     pub iters: Vec<IterStats>,
     pub total_time: Nanos,
     /// Mean per-worker gather times (incast direction).
@@ -230,6 +246,7 @@ pub fn run_training_session(cfg: &TrainingCfg) -> (RunReport, Box<dyn TrainSessi
             compute_time: cfg.compute_time,
             agg_time: cfg.agg_time,
             roles: cfg.agg.endpoint_roles(cfg.n_workers, cfg.model_bytes),
+            codec: cfg.codec.clone(),
         })
         .unwrap_or_else(|e| panic!("backend `{}` failed to open: {e:#}", backend.name()));
     let session = RefCell::new(session);
@@ -358,9 +375,19 @@ pub fn run_with(
             BgHandle::Udp { src_host } => sim.node_as::<CrossTraffic>(*src_host).sent_bytes,
         })
         .collect();
+    let gather_wire_bytes =
+        cfg.codec.encoded_bytes(cfg.model_bytes) * cfg.n_workers as u64 * iters.len() as u64;
+    let mean_importance = if cfg.codec.is_default() || iters.is_empty() {
+        None
+    } else {
+        Some(iters.iter().map(|i| i.mean_importance).sum::<f64>() / iters.len() as f64)
+    };
     RunReport {
         proto: cfg.proto.name().to_string(),
         agg: cfg.agg.name().to_string(),
+        codec: cfg.codec.name().to_string(),
+        gather_wire_bytes,
+        mean_importance,
         iters,
         total_time,
         gather_summary: Summary::of(&gathers),

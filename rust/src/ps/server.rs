@@ -87,6 +87,10 @@ pub struct PsNode {
     workers: Vec<EntityId>,
     proto: ProtoSpec,
     model_bytes: u64,
+    /// Bytes each gather flow actually carries on the wire — the codec's
+    /// encoded image of `model_bytes` (DESIGN.md §1.4). Equal to
+    /// `model_bytes` for the identity codec.
+    gather_bytes: u64,
     critical: Vec<u32>,
     plan: PsFlowPlan,
     /// Offset added to local source indices in [`GatherClose::worker`], so
@@ -113,6 +117,9 @@ pub struct PsNode {
     pub report: Rc<RefCell<Vec<IterStats>>>,
     arrivals: Vec<Option<(Bitmap, u64)>>,
     pub delivered_fractions: Vec<f64>,
+    /// Per-flow tensor-priority-weighted delivered importance, parallel to
+    /// `delivered_fractions` (reliable flows score 1.0).
+    pub importances: Vec<f64>,
     /// Per-flow close records (LTP gathers only), across all iterations —
     /// shared with the runner, which merges every aggregator's records.
     pub closes: Rc<RefCell<Vec<GatherClose>>>,
@@ -138,6 +145,7 @@ impl PsNode {
             workers,
             proto,
             model_bytes,
+            gather_bytes: model_bytes,
             critical,
             plan,
             worker_base: 0,
@@ -158,6 +166,7 @@ impl PsNode {
             report,
             arrivals: (0..w).map(|_| None).collect(),
             delivered_fractions: vec![],
+            importances: vec![],
             closes,
         }
     }
@@ -167,6 +176,14 @@ impl PsNode {
     /// the run-wide close list stays unambiguous).
     pub fn with_worker_base(mut self, base: usize) -> PsNode {
         self.worker_base = base;
+        self
+    }
+
+    /// Serve gather flows whose wire image is `bytes` long (a sparsifying
+    /// codec's encoded size — DESIGN.md §1.4). The broadcast direction
+    /// keeps carrying the dense `model_bytes`.
+    pub fn with_gather_bytes(mut self, bytes: u64) -> PsNode {
+        self.gather_bytes = bytes;
         self
     }
 
@@ -227,14 +244,14 @@ impl PsNode {
                         self.tracker.init_link(
                             w,
                             hdr.rtprop_us as Nanos * crate::US,
-                            self.model_bytes,
+                            self.gather_bytes,
                             hdr.btlbw_mbps as u64 * 1_000_000 / 8,
                         );
                     }
                 }
                 self.rx[w] = Some(self.proto.make_rx(RxCfg {
                     flow: pkt.flow,
-                    bytes: self.model_bytes,
+                    bytes: self.gather_bytes,
                     ec: self.ec_cfg(w),
                     critical: self.critical.clone(),
                     iter: self.iter,
@@ -306,6 +323,15 @@ impl PsNode {
                         self.arrivals[w] = rx.bitmap().map(|b| {
                             (b.clone(), rx.segment_map().map(|m| m.n_segs as u64).unwrap_or(0))
                         });
+                        self.importances.push(match &self.arrivals[w] {
+                            Some((bm, n_segs)) => {
+                                crate::codec::PriorityScheduler::delivered_importance(
+                                    bm,
+                                    *n_segs as u32,
+                                )
+                            }
+                            None => 1.0,
+                        });
                     }
                 }
                 if self.gather_done.iter().all(|&d| d) {
@@ -339,6 +365,7 @@ impl PsNode {
                 critical: vec![],
                 seed_rtprop: 0,
                 seed_btlbw_bytes: 0,
+                nq_order: None,
             }));
         }
         self.drain(ctx);
@@ -349,10 +376,12 @@ impl PsNode {
         let first_gather = self.gather_started.iter().flatten().min().copied().unwrap_or(now);
         let n = self.n() as f64;
         let recent: f64 = self.delivered_fractions.iter().rev().take(self.n()).sum::<f64>() / n;
+        let recent_imp: f64 = self.importances.iter().rev().take(self.n()).sum::<f64>() / n;
         let stats = IterStats {
             bst: (self.gather_phase_done - first_gather) + (now - self.bcast_started),
             gather_time: self.gather_phase_done - first_gather,
             mean_delivered: recent,
+            mean_importance: recent_imp,
             loss: self.agg.loss(self.iter),
             end: now,
         };

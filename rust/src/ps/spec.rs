@@ -240,7 +240,7 @@ fn fmt_duration(n: Nanos) -> String {
     format!("{n}ns")
 }
 
-fn parse_fraction(k: &str, v: &str) -> Result<f64> {
+pub(crate) fn parse_fraction(k: &str, v: &str) -> Result<f64> {
     let x: f64 = v.parse().with_context(|| format!("bad value for `{k}`: `{v}`"))?;
     if !(x > 0.0 && x <= 1.0) {
         bail!("`{k}={v}` out of range (need 0 < {k} <= 1)");

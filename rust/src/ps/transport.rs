@@ -37,6 +37,11 @@ pub struct TxCfg {
     pub seed_rtprop: Nanos,
     /// Path bottleneck-bandwidth estimate in bytes/sec (0 = none).
     pub seed_btlbw_bytes: u64,
+    /// Tensor-priority transmission order for normal segments
+    /// ([`crate::codec::PriorityScheduler`]); `None` keeps the sender's
+    /// ascending default. Reliable transports deliver everything anyway
+    /// and ignore it.
+    pub nq_order: Option<Vec<u32>>,
 }
 
 /// Everything a transport needs to open the receiving side of one flow.
@@ -203,6 +208,9 @@ impl LtpFlowTx {
         let mut s = LtpSender::new(cfg.flow as u16, map, crate::wire::MTU);
         if cfg.seed_btlbw_bytes > 0 {
             s.seed_cc(cfg.seed_rtprop, cfg.seed_btlbw_bytes);
+        }
+        if let Some(order) = &cfg.nq_order {
+            s.set_nq_order(order);
         }
         Box::new(LtpFlowTx { s })
     }

@@ -43,8 +43,17 @@ pub struct WorkerRoute {
     pub dst: EntityId,
     /// Gradient bytes this leg carries (the aggregator's shard range).
     pub bytes: u64,
-    /// Critical segment ids *within this leg's range* (re-based to 0).
+    /// Bytes actually put on the wire for the gather direction — the
+    /// codec's encoded image of `bytes` (DESIGN.md §1.4). Equal to
+    /// `bytes` for the identity codec; the broadcast leg always carries
+    /// the dense `bytes`.
+    pub gather_bytes: u64,
+    /// Critical segment ids *within this leg's encoded range* (re-based
+    /// to 0, in terms of the `gather_bytes` segment map).
     pub critical: Vec<u32>,
+    /// Tensor-priority transmission order for the gather flow's normal
+    /// segments; `None` keeps the sender's ascending default.
+    pub nq_order: Option<Vec<u32>>,
     pub gather_slot: u64,
     pub bcast_slot: u64,
     pub stride: u64,
@@ -64,7 +73,9 @@ impl WorkerRoute {
         WorkerRoute {
             dst: ps,
             bytes,
+            gather_bytes: bytes,
             critical,
+            nq_order: None,
             gather_slot: index as u64,
             bcast_slot: (n_workers + index) as u64,
             stride: 2 * n_workers as u64,
@@ -170,10 +181,11 @@ impl WorkerNode {
             let (rt, bw) = self.paths[r].unwrap_or((0, 0));
             self.txs[r] = Some(self.proto.make_tx(TxCfg {
                 flow: route.gather_flow(self.iter),
-                bytes: route.bytes,
+                bytes: route.gather_bytes,
                 critical: route.critical.clone(),
                 seed_rtprop: rt,
                 seed_btlbw_bytes: bw,
+                nq_order: route.nq_order.clone(),
             }));
             // Broadcast receiver for this iteration: always reliable.
             self.rxs[r] = Some(self.proto.make_rx(RxCfg {

@@ -18,6 +18,7 @@
 
 use super::{CaseResult, ScenarioParams};
 use crate::cc::CcAlgo;
+use crate::codec::{parse_codec, CodecSpec};
 use crate::compute::parse_backend;
 use crate::config::{NetEnv, Workload};
 use crate::ps::{parse_agg, parse_proto, AggSpec, BgFlow, ProtoSpec, RunBuilder, Topo};
@@ -69,6 +70,23 @@ fn applicable_aggs(p: &ScenarioParams, w: usize, bytes: u64) -> Vec<AggSpec> {
     p.aggs().into_iter().filter(|a| a.validate(w, bytes, &Topo::Star).is_ok()).collect()
 }
 
+/// The `--codec` specs applicable under aggregation `agg`: non-default
+/// codecs require the single-PS topology (the builder's gate), so other
+/// aggregations skip them rather than error.
+fn applicable_codecs(p: &ScenarioParams, agg: &AggSpec) -> Vec<CodecSpec> {
+    p.codecs().into_iter().filter(|c| c.is_default() || agg.name() == "ps").collect()
+}
+
+/// Case label with an optional codec prefix: non-default codecs prepend
+/// their canonical spec, so `--codec`-free runs keep the golden layout.
+fn codec_label(codec: &CodecSpec, label: String) -> String {
+    if codec.is_default() {
+        label
+    } else {
+        format!("{}/{label}", codec.name())
+    }
+}
+
 /// `incast_sweep`: N→1 incast at degrees 2..64 under 0.5 % wire loss.
 pub(super) fn incast_sweep(p: &ScenarioParams) -> Vec<CaseResult> {
     let degrees: &[usize] = if p.quick { &[2, 8, 32] } else { &[2, 4, 8, 16, 32, 64] };
@@ -77,10 +95,17 @@ pub(super) fn incast_sweep(p: &ScenarioParams) -> Vec<CaseResult> {
         let bytes = per_worker_bytes(w, p);
         for agg in applicable_aggs(p, w, bytes) {
             for proto in p.matrix() {
-                let b = base(&proto, w, bytes, p)
-                    .agg(agg.clone())
-                    .loss(LossModel::Bernoulli { p: 0.005 });
-                out.push(run_case(case_label(&agg, &proto, w), w, b));
+                for codec in applicable_codecs(p, &agg) {
+                    let b = base(&proto, w, bytes, p)
+                        .agg(agg.clone())
+                        .codec(codec.clone())
+                        .loss(LossModel::Bernoulli { p: 0.005 });
+                    out.push(run_case(
+                        codec_label(&codec, case_label(&agg, &proto, w)),
+                        w,
+                        b,
+                    ));
+                }
             }
         }
     }
@@ -95,9 +120,13 @@ pub(super) fn incast_heavy_loss(p: &ScenarioParams) -> Vec<CaseResult> {
     let mut out = Vec::new();
     for agg in applicable_aggs(p, w, bytes) {
         for proto in p.matrix() {
-            let b =
-                base(&proto, w, bytes, p).agg(agg.clone()).loss(LossModel::Bernoulli { p: 0.02 });
-            out.push(run_case(case_label(&agg, &proto, w), w, b));
+            for codec in applicable_codecs(p, &agg) {
+                let b = base(&proto, w, bytes, p)
+                    .agg(agg.clone())
+                    .codec(codec.clone())
+                    .loss(LossModel::Bernoulli { p: 0.02 });
+                out.push(run_case(codec_label(&codec, case_label(&agg, &proto, w)), w, b));
+            }
         }
     }
     out
@@ -129,8 +158,13 @@ pub(super) fn wan_bursty(p: &ScenarioParams) -> Vec<CaseResult> {
     let mut out = Vec::new();
     for agg in applicable_aggs(p, w, bytes) {
         for proto in p.matrix() {
-            let b = base(&proto, w, bytes, p).agg(agg.clone()).net_env(NetEnv::WanBursty);
-            out.push(run_case(case_label(&agg, &proto, w), w, b));
+            for codec in applicable_codecs(p, &agg) {
+                let b = base(&proto, w, bytes, p)
+                    .agg(agg.clone())
+                    .codec(codec.clone())
+                    .net_env(NetEnv::WanBursty);
+                out.push(run_case(codec_label(&codec, case_label(&agg, &proto, w)), w, b));
+            }
         }
     }
     out
@@ -146,10 +180,13 @@ pub(super) fn cross_traffic(p: &ScenarioParams) -> Vec<CaseResult> {
     let mut out = Vec::new();
     for agg in applicable_aggs(p, w, bytes) {
         for proto in p.matrix() {
-            let b = base(&proto, w, bytes, p)
-                .agg(agg.clone())
-                .bg(BgFlow::udp_to_ps(BG_RATE, BG_STOP));
-            out.push(run_case(case_label(&agg, &proto, w), w, b));
+            for codec in applicable_codecs(p, &agg) {
+                let b = base(&proto, w, bytes, p)
+                    .agg(agg.clone())
+                    .codec(codec.clone())
+                    .bg(BgFlow::udp_to_ps(BG_RATE, BG_STOP));
+                out.push(run_case(codec_label(&codec, case_label(&agg, &proto, w)), w, b));
+            }
         }
     }
     out
@@ -179,8 +216,13 @@ pub(super) fn wan_clean(p: &ScenarioParams) -> Vec<CaseResult> {
     let mut out = Vec::new();
     for agg in applicable_aggs(p, w, bytes) {
         for proto in p.matrix() {
-            let b = base(&proto, w, bytes, p).agg(agg.clone()).net_env(NetEnv::Wan1g);
-            out.push(run_case(case_label(&agg, &proto, w), w, b));
+            for codec in applicable_codecs(p, &agg) {
+                let b = base(&proto, w, bytes, p)
+                    .agg(agg.clone())
+                    .codec(codec.clone())
+                    .net_env(NetEnv::Wan1g);
+                out.push(run_case(codec_label(&codec, case_label(&agg, &proto, w)), w, b));
+            }
         }
     }
     out
@@ -222,6 +264,12 @@ pub(super) fn proto_matrix(p: &ScenarioParams) -> Vec<CaseResult> {
 /// reference at every rate (TCP delivers 100 % whatever the wire does).
 /// `--proto`/`--agg` overrides are deliberately ignored so the scenario
 /// always reflects the whole matrix; labels read `<bf|nobf>/<proto>/l<p>`.
+///
+/// Appended after the original 24-case matrix (keeping its byte layout):
+/// a codec × loss × fill crossing — `topk:pct=0.1` under LTP at every
+/// loss rate, bubble filling on and off, labeled
+/// `topk10/<bf|nobf>/ltp/l<p>` — asserting the no-sacrifice bound
+/// survives a ~10× wire reduction.
 pub(super) fn accuracy_matrix(p: &ScenarioParams) -> Vec<CaseResult> {
     let w = 8;
     let iters: u64 = if p.quick { 16 } else { 28 };
@@ -250,6 +298,94 @@ pub(super) fn accuracy_matrix(p: &ScenarioParams) -> Vec<CaseResult> {
                 out.push(run_case(format!("{tag}/{}/l{pct}", proto.name()), w, b));
             }
         }
+    }
+    let topk = parse_codec("topk:pct=0.1").expect("registry codec");
+    let ltp = parse_proto("ltp").expect("registry default");
+    for (tag, backend) in &backends {
+        for &(pct, rate) in losses {
+            let mut b = RunBuilder::modeled(ltp.clone(), Workload::Micro, w)
+                .seed(p.seed)
+                .iters(iters)
+                .batches_per_epoch(4)
+                .backend(backend.clone())
+                .codec(topk.clone())
+                .horizon(600 * SEC);
+            if rate > 0.0 {
+                b = b.loss(LossModel::Bernoulli { p: rate });
+            }
+            out.push(run_case(format!("topk10/{tag}/ltp/l{pct}"), w, b));
+        }
+    }
+    out
+}
+
+/// `compression_matrix`: the codec subsystem's conformance surface
+/// (DESIGN.md §1.4). Two parts:
+///
+/// * **Part A — accuracy vs wire volume.** Native-backend training on a
+///   4-worker incast, {`dense`, `topk:pct=0.1`, `topk:pct=0.01`} ×
+///   {ltp, ltp-adaptive, reno} × {0, 2, 5} % wire loss. The conformance
+///   test asserts `topk:pct=0.1` + LTP + bubble filling at 2 % loss lands
+///   within 1 % absolute accuracy of the lossless dense baseline while
+///   cutting gather bytes-on-wire ≥5×. Labels read
+///   `<dense|topk10|topk1>/<proto>/l<p>`.
+/// * **Part B — tensor-priority scheduling.** Modeled 8→1 incast at 2 %
+///   loss under LTP, priority off/on (`dense:priority=…`) plus the
+///   combined `topk:pct=0.1,priority=on`: scheduled runs must strictly
+///   beat the unscheduled one on mean delivered importance (Early Close
+///   sheds only the low-value head). Labels read `<sched-…>/ltp/w8`.
+///
+/// `--proto`/`--agg`/`--codec` overrides are deliberately ignored so the
+/// scenario always reflects the whole matrix.
+pub(super) fn compression_matrix(p: &ScenarioParams) -> Vec<CaseResult> {
+    let w = 4;
+    let iters: u64 = if p.quick { 16 } else { 28 };
+    let losses: &[(u32, f64)] = &[(0, 0.0), (2, 0.02), (5, 0.05)];
+    let codecs = [
+        ("dense", parse_codec("dense").expect("registry default")),
+        ("topk10", parse_codec("topk:pct=0.1").expect("registry codec")),
+        ("topk1", parse_codec("topk:pct=0.01").expect("registry codec")),
+    ];
+    let protos: Vec<ProtoSpec> = ["ltp", "ltp-adaptive", "reno"]
+        .iter()
+        .map(|s| {
+            parse_proto(s).expect("compression_matrix protocols parse against the registry")
+        })
+        .collect();
+    let backend = parse_backend("native").expect("registry default");
+    let mut out = Vec::new();
+    for (tag, codec) in &codecs {
+        for proto in &protos {
+            for &(pct, rate) in losses {
+                let mut b = RunBuilder::modeled(proto.clone(), Workload::Micro, w)
+                    .seed(p.seed)
+                    .iters(iters)
+                    .batches_per_epoch(4)
+                    .backend(backend.clone())
+                    .codec(codec.clone())
+                    .horizon(600 * SEC);
+                if rate > 0.0 {
+                    b = b.loss(LossModel::Bernoulli { p: rate });
+                }
+                out.push(run_case(format!("{tag}/{}/l{pct}", proto.name()), w, b));
+            }
+        }
+    }
+    // Part B: scheduling changes which segments survive Early Close, so
+    // it is measured on the modeled incast (real message sizes), not the
+    // tiny MLP gradient.
+    let w = 8;
+    let ltp = parse_proto("ltp").expect("registry default");
+    let scheds = [
+        ("sched-off", "dense:priority=off"),
+        ("sched-on", "dense:priority=on"),
+        ("topk10-sched", "topk:pct=0.1,priority=on"),
+    ];
+    for (tag, spec) in scheds {
+        let b = base(&ltp, w, per_worker_bytes(w, p), p)
+            .codec(parse_codec(spec).expect("registry codec"))
+            .loss(LossModel::Bernoulli { p: 0.02 });
+        out.push(run_case(format!("{tag}/ltp/w{w}"), w, b));
     }
     out
 }

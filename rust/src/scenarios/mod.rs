@@ -51,11 +51,17 @@ pub struct ScenarioParams {
     /// fixed matrices ignore the override; star scenarios skip (agg,
     /// degree) points the aggregation rejects (non-divisible workers).
     pub aggs: Option<Vec<crate::ps::AggSpec>>,
+    /// Gradient-codec override (`--codec` specs, in order). `None` keeps
+    /// the default identity codec, whose reports are byte-identical to
+    /// the pre-codec engine. Fixed-matrix scenarios ignore the override;
+    /// non-default codecs apply only to single-PS cases (the builder's
+    /// topology gate), so other aggregations skip them.
+    pub codecs: Option<Vec<crate::codec::CodecSpec>>,
 }
 
 impl ScenarioParams {
     pub fn new(seed: u64, quick: bool) -> ScenarioParams {
-        ScenarioParams { seed, quick, protos: None, aggs: None }
+        ScenarioParams { seed, quick, protos: None, aggs: None, codecs: None }
     }
 
     /// The protocol matrix this run sweeps: the `--proto` override, or the
@@ -68,6 +74,12 @@ impl ScenarioParams {
     /// or the default single PS.
     pub fn aggs(&self) -> Vec<crate::ps::AggSpec> {
         self.aggs.clone().unwrap_or_else(|| vec![crate::ps::default_agg()])
+    }
+
+    /// The gradient codecs this run sweeps: the `--codec` override, or
+    /// the default identity codec.
+    pub fn codecs(&self) -> Vec<crate::codec::CodecSpec> {
+        self.codecs.clone().unwrap_or_else(|| vec![crate::codec::default_codec()])
     }
 }
 
@@ -173,6 +185,14 @@ pub const REGISTRY: &[Scenario] = &[
         incast_class: true,
         cases: defs::incast_xl,
     },
+    Scenario {
+        name: "compression_matrix",
+        summary: "gradient codecs (dense, topk:pct∈{0.1,0.01}) × {ltp, ltp-adaptive, reno} × {0,2,5}% loss, plus tensor-priority scheduling on/off under Early Close",
+        // An accuracy/wire-volume scenario over tiny MLP gradients, like
+        // `accuracy_matrix`: the BST invariant is not asserted.
+        incast_class: false,
+        cases: defs::compression_matrix,
+    },
 ];
 
 /// The registry (function form, for iteration symmetry with `find`).
@@ -227,6 +247,15 @@ pub struct CaseResult {
     /// runs (`accuracy_matrix`), absent from every modeled-compute case so
     /// pre-compute-plane reports stay byte-identical.
     pub train: Option<crate::compute::TrainStats>,
+    /// Canonical gradient-codec spec the case ran under (`dense` by
+    /// default).
+    pub codec: String,
+    /// Gather-direction application bytes on the wire across the whole
+    /// run — the codec's size claim ([`RunReport::gather_wire_bytes`]).
+    pub gather_wire_bytes: u64,
+    /// Mean tensor-priority-weighted delivered importance; `None` under
+    /// the default codec.
+    pub mean_importance: Option<f64>,
 }
 
 impl CaseResult {
@@ -263,6 +292,9 @@ impl CaseResult {
             total_time_ms: r.total_time as f64 / MS as f64,
             sim_events: r.sim_events,
             train: r.train,
+            codec: r.codec.clone(),
+            gather_wire_bytes: r.gather_wire_bytes,
+            mean_importance: r.mean_importance,
         }
     }
 
@@ -300,6 +332,17 @@ impl CaseResult {
                         t.iters_to_target.map(Json::from).unwrap_or(Json::Null),
                     ),
                 ]),
+            ));
+        }
+        // Codec-shaped runs append their codec block; default-`dense`
+        // cases keep the original key set, so pre-codec reports stay
+        // byte-identical.
+        if self.codec != "dense" {
+            pairs.push(("codec", self.codec.as_str().into()));
+            pairs.push(("gather_wire_bytes", self.gather_wire_bytes.into()));
+            pairs.push((
+                "mean_importance",
+                self.mean_importance.map(Json::Num).unwrap_or(Json::Null),
             ));
         }
         // Multi-aggregator runs append their spec and per-aggregator

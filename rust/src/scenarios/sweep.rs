@@ -3,7 +3,7 @@
 //! distill a machine-readable bench report (`BENCH_scenarios.json`).
 //!
 //! **Determinism contract.** A [`SweepJob`] is a pure function of
-//! `(scenario_index, seed, quick, protos, aggs)`: every simulation owns
+//! `(scenario_index, seed, quick, protos, aggs, codecs)`: every simulation owns
 //! its `Sim`, whose RNG streams derive from the job's seed, and nothing
 //! is shared between jobs. Results are merged in job order, so the report list — and its
 //! serialized bytes — are identical for any `--jobs N`. Wall-clock timing
@@ -15,14 +15,15 @@
 //! serial loop.
 
 use super::{registry, ScenarioParams, ScenarioReport};
+use crate::codec::CodecSpec;
 use crate::metrics::Json;
 use crate::ps::{AggSpec, ProtoSpec};
 use crate::runtime::pool;
 use crate::trace;
 
-/// One enumerable unit of sweep work. Protocol and aggregation handles
-/// are cheap clones of thread-shareable specs, so a job remains a pure
-/// function of `(scenario_index, seed, quick, protos, aggs)`.
+/// One enumerable unit of sweep work. Protocol, aggregation, and codec
+/// handles are cheap clones of thread-shareable specs, so a job remains a
+/// pure function of `(scenario_index, seed, quick, protos, aggs, codecs)`.
 #[derive(Debug, Clone)]
 pub struct SweepJob {
     /// Index into [`registry`].
@@ -35,6 +36,9 @@ pub struct SweepJob {
     /// Aggregation-topology override (`--agg` specs); `None` keeps the
     /// default single PS.
     pub aggs: Option<Vec<AggSpec>>,
+    /// Gradient-codec override (`--codec` specs); `None` keeps the
+    /// default identity codec.
+    pub codecs: Option<Vec<CodecSpec>>,
 }
 
 /// Enumerate the (seed-major) job list for a set of registry indices.
@@ -44,6 +48,7 @@ pub fn sweep_jobs(
     quick: bool,
     protos: Option<Vec<ProtoSpec>>,
     aggs: Option<Vec<AggSpec>>,
+    codecs: Option<Vec<CodecSpec>>,
 ) -> Vec<SweepJob> {
     let mut out = Vec::with_capacity(indices.len() * seeds.len());
     for &seed in seeds {
@@ -55,6 +60,7 @@ pub fn sweep_jobs(
                 quick,
                 protos: protos.clone(),
                 aggs: aggs.clone(),
+                codecs: codecs.clone(),
             });
         }
     }
@@ -62,7 +68,7 @@ pub fn sweep_jobs(
 }
 
 /// Deterministic training summary of one job's backend-attached cases
-/// (schema ltp-bench-v5; `null` for jobs whose scenario trains nothing).
+/// (schema ltp-bench-v6; `null` for jobs whose scenario trains nothing).
 #[derive(Debug, Clone, Copy)]
 pub struct BenchTrain {
     /// Cases that carried a `train` block.
@@ -85,12 +91,18 @@ pub struct BenchJob {
     /// Canonical aggregation spec strings the job's cases exercised,
     /// first-occurrence order (`["ps"]` for the default topology).
     pub aggs: Vec<String>,
+    /// Canonical gradient-codec spec strings the job's cases exercised,
+    /// first-occurrence order (`["dense"]` without a `--codec` override).
+    pub codecs: Vec<String>,
     pub cases: usize,
     /// BSP iterations completed, summed over the scenario's cases.
     pub iters: usize,
     /// Mean of the cases' mean BSTs (ms) — the per-scenario perf headline.
     pub mean_bst_ms: f64,
     pub mean_delivered: f64,
+    /// Gather-direction application bytes on the wire, summed over the
+    /// job's cases — the codec plane's size claim (schema v6).
+    pub wire_bytes: u64,
     /// Training summary over the job's backend-attached cases, if any
     /// (the key is always present, `null` without a backend).
     pub train: Option<BenchTrain>,
@@ -106,10 +118,12 @@ impl BenchJob {
             ("seed", self.seed.into()),
             ("protos", Json::Arr(self.protos.iter().map(|p| p.as_str().into()).collect())),
             ("aggs", Json::Arr(self.aggs.iter().map(|a| a.as_str().into()).collect())),
+            ("codecs", Json::Arr(self.codecs.iter().map(|c| c.as_str().into()).collect())),
             ("cases", self.cases.into()),
             ("iters", self.iters.into()),
             ("mean_bst_ms", self.mean_bst_ms.into()),
             ("mean_delivered", self.mean_delivered.into()),
+            ("wire_bytes", self.wire_bytes.into()),
             (
                 "train",
                 match &self.train {
@@ -146,7 +160,7 @@ pub struct BenchReport {
 
 impl BenchReport {
     /// Minimum per-job events/sec — the regression-threshold headline
-    /// (schema v5). The floor, not the mean: one scenario collapsing is
+    /// (schema v6). The floor, not the mean: one scenario collapsing is
     /// what a perf gate must catch, and a mean would average it away.
     pub fn events_per_sec_floor(&self) -> f64 {
         let floor =
@@ -159,7 +173,7 @@ impl BenchReport {
             if self.wall_secs > 0.0 { self.sim_events as f64 / self.wall_secs } else { 0.0 };
         let speedup = if self.wall_secs > 0.0 { self.cpu_secs / self.wall_secs } else { 1.0 };
         Json::obj(vec![
-            ("schema", "ltp-bench-v5".into()),
+            ("schema", "ltp-bench-v6".into()),
             // How the numbers came to be: "measured" (this process timed
             // the runs) vs "bootstrap" (a hand-committed seed snapshot —
             // see rust/BENCH_scenarios.json).
@@ -267,8 +281,8 @@ pub fn check_regression(
     let mut notes = Vec::new();
     for (side, json) in [("baseline", baseline_json), ("current", current_json)] {
         match bench_field_str(json, "schema") {
-            Some(s) if s == "ltp-bench-v5" => {}
-            Some(s) => notes.push(format!("{side} uses schema {s}, expected ltp-bench-v5")),
+            Some(s) if s == "ltp-bench-v6" => {}
+            Some(s) => notes.push(format!("{side} uses schema {s}, expected ltp-bench-v6")),
             None => return Err(format!("{side} is not a bench report (no schema field)")),
         }
     }
@@ -396,6 +410,7 @@ pub fn run_sweep_traced(
             quick: job.quick,
             protos: job.protos,
             aggs: job.aggs,
+            codecs: job.codecs,
         });
         (report, jt.elapsed().as_secs_f64(), cap.map(trace::Capture::finish))
     });
@@ -413,12 +428,16 @@ pub fn run_sweep_traced(
         let ncases = report.cases.len().max(1);
         let mut protos: Vec<String> = Vec::new();
         let mut aggs: Vec<String> = Vec::new();
+        let mut codecs: Vec<String> = Vec::new();
         for c in &report.cases {
             if !protos.contains(&c.proto) {
                 protos.push(c.proto.clone());
             }
             if !aggs.contains(&c.agg) {
                 aggs.push(c.agg.clone());
+            }
+            if !codecs.contains(&c.codec) {
+                codecs.push(c.codec.clone());
             }
         }
         let trained: Vec<&crate::compute::TrainStats> =
@@ -438,12 +457,14 @@ pub fn run_sweep_traced(
             seed: report.seed,
             protos,
             aggs,
+            codecs,
             cases: report.cases.len(),
             iters: report.cases.iter().map(|c| c.iters).sum(),
             mean_bst_ms: report.cases.iter().map(|c| c.mean_bst_ms).sum::<f64>()
                 / ncases as f64,
             mean_delivered: report.cases.iter().map(|c| c.mean_delivered).sum::<f64>()
                 / ncases as f64,
+            wire_bytes: report.cases.iter().map(|c| c.gather_wire_bytes).sum(),
             train,
             sim_events: events,
             wall_secs: job_secs,
@@ -477,14 +498,14 @@ mod tests {
 
     #[test]
     fn job_enumeration_is_seed_major() {
-        let jobs = sweep_jobs(&[0, 1], &[5, 6], true, None, None);
+        let jobs = sweep_jobs(&[0, 1], &[5, 6], true, None, None, None);
         let key: Vec<(u64, usize)> = jobs.iter().map(|j| (j.seed, j.scenario_index)).collect();
         assert_eq!(key, vec![(5, 0), (5, 1), (6, 0), (6, 1)]);
     }
 
     #[test]
     fn bench_report_carries_perf_fields() {
-        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, None, None);
+        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, None, None, None);
         let result = run_sweep(jobs, 2);
         assert_eq!(result.reports.len(), 1);
         assert_eq!(result.bench.per_job.len(), 1);
@@ -497,7 +518,7 @@ mod tests {
         assert!(j.mean_bst_ms > 0.0);
         let json = result.bench.to_json().render();
         for key in [
-            "\"schema\":\"ltp-bench-v5\"",
+            "\"schema\":\"ltp-bench-v6\"",
             "\"provenance\":\"measured\"",
             "\"runs\":[",
             "\"events_per_sec\":",
@@ -505,7 +526,9 @@ mod tests {
             "\"speedup\":",
             "\"protos\":[\"ltp\",\"reno\"]",
             "\"aggs\":[\"ps\"]",
-            // No backend attached: the v5 train block is present but null.
+            "\"codecs\":[\"dense\"]",
+            "\"wire_bytes\":",
+            // No backend attached: the v6 train block is present but null.
             "\"train\":null",
         ] {
             assert!(json.contains(key), "missing `{key}` in {json}");
@@ -530,10 +553,12 @@ mod tests {
                 seed: 1,
                 protos: vec!["ltp".to_string()],
                 aggs: vec!["ps".to_string()],
+                codecs: vec!["dense".to_string()],
                 cases: 3,
                 iters: 9,
                 mean_bst_ms: 1.5,
                 mean_delivered: 0.99,
+                wire_bytes: 1_000_000,
                 train: None,
                 sim_events: 4_000_000,
                 wall_secs: 2.0,
@@ -541,7 +566,7 @@ mod tests {
             }],
         };
         for json in [report.to_json().render(), report.render_json()] {
-            assert_eq!(bench_field_str(&json, "schema").as_deref(), Some("ltp-bench-v5"));
+            assert_eq!(bench_field_str(&json, "schema").as_deref(), Some("ltp-bench-v6"));
             assert_eq!(bench_field_num(&json, "sim_events"), Some(4_000_000.0));
             assert_eq!(
                 bench_scenario_events_per_sec(&json, "incast_sweep"),
@@ -554,7 +579,7 @@ mod tests {
 
     #[test]
     fn scenario_scan_takes_the_best_run_and_ignores_others() {
-        let json = r#"{"schema": "ltp-bench-v5", "events_per_sec": 9.0, "runs": [
+        let json = r#"{"schema": "ltp-bench-v6", "events_per_sec": 9.0, "runs": [
             {"scenario": "wan_clean", "events_per_sec": 50.0},
             {"scenario": "incast_sweep", "events_per_sec": 10.0},
             {"scenario": "incast_sweep", "events_per_sec": 30.0}]}"#;
@@ -566,7 +591,7 @@ mod tests {
     fn regression_gate_passes_within_threshold_and_fails_beyond() {
         let bench = |eps: f64, provenance: &str| {
             format!(
-                r#"{{"schema": "ltp-bench-v5", "provenance": "{provenance}",
+                r#"{{"schema": "ltp-bench-v6", "provenance": "{provenance}",
                      "runs": [{{"scenario": "incast_sweep", "events_per_sec": {eps}}}]}}"#
             )
         };
@@ -588,7 +613,7 @@ mod tests {
 
     #[test]
     fn bench_scenarios_enumerates_first_occurrence_order() {
-        let json = r#"{"schema": "ltp-bench-v5", "runs": [
+        let json = r#"{"schema": "ltp-bench-v6", "runs": [
             {"scenario": "incast_sweep", "events_per_sec": 10.0},
             {"scenario": "wan_clean", "events_per_sec": 50.0},
             {"scenario": "incast_sweep", "events_per_sec": 30.0}]}"#;
@@ -598,11 +623,11 @@ mod tests {
 
     #[test]
     fn all_mode_gate_fails_loudly_when_a_baseline_scenario_is_missing() {
-        let baseline = r#"{"schema": "ltp-bench-v5", "provenance": "measured", "runs": [
+        let baseline = r#"{"schema": "ltp-bench-v6", "provenance": "measured", "runs": [
             {"scenario": "incast_sweep", "events_per_sec": 1000.0},
             {"scenario": "incast_xl", "events_per_sec": 500.0}]}"#;
         // Current covers both baseline scenarios: two checks, both ok.
-        let full = r#"{"schema": "ltp-bench-v5", "provenance": "measured", "runs": [
+        let full = r#"{"schema": "ltp-bench-v6", "provenance": "measured", "runs": [
             {"scenario": "incast_sweep", "events_per_sec": 1100.0},
             {"scenario": "incast_xl", "events_per_sec": 600.0},
             {"scenario": "wan_clean", "events_per_sec": 9.0}]}"#;
@@ -611,7 +636,7 @@ mod tests {
         assert!(checks.iter().all(|c| c.ok), "{checks:?}");
         // Current missing a baseline scenario: an error naming it — the
         // silent-pass regression this mode exists to prevent.
-        let partial = r#"{"schema": "ltp-bench-v5", "provenance": "measured", "runs": [
+        let partial = r#"{"schema": "ltp-bench-v6", "provenance": "measured", "runs": [
             {"scenario": "incast_sweep", "events_per_sec": 1100.0}]}"#;
         let err = check_regression_all(baseline, partial, 20.0).unwrap_err();
         assert!(err.contains("incast_xl"), "error names the missing scenario: {err}");
@@ -621,7 +646,7 @@ mod tests {
 
     #[test]
     fn traced_sweep_records_match_across_job_counts() {
-        let jobs = || sweep_jobs(&[index_of("wan_clean")], &[7, 8], true, None, None);
+        let jobs = || sweep_jobs(&[index_of("wan_clean")], &[7, 8], true, None, None, None);
         let (serial, recs1) = run_sweep_traced(jobs(), 1, true);
         let (pooled, recs2) = run_sweep_traced(jobs(), 2, true);
         let recs1 = recs1.expect("traced run returns records");
@@ -642,7 +667,7 @@ mod tests {
 
     #[test]
     fn accuracy_matrix_jobs_carry_the_train_block() {
-        let jobs = sweep_jobs(&[index_of("accuracy_matrix")], &[3], true, None, None);
+        let jobs = sweep_jobs(&[index_of("accuracy_matrix")], &[3], true, None, None, None);
         let result = run_sweep(jobs, 1);
         let j = &result.bench.per_job[0];
         let t = j.train.expect("backend-attached scenario summarizes training");
@@ -654,7 +679,7 @@ mod tests {
         // Byte-identity across job counts holds for the training scenario
         // too (the pool determinism contract).
         let again = run_sweep(
-            sweep_jobs(&[index_of("accuracy_matrix")], &[3], true, None, None),
+            sweep_jobs(&[index_of("accuracy_matrix")], &[3], true, None, None, None),
             2,
         );
         assert_eq!(result.render_json(), again.render_json());
@@ -663,7 +688,7 @@ mod tests {
     #[test]
     fn proto_override_reaches_the_cases() {
         let protos = vec![crate::ps::parse_proto("cubic").unwrap()];
-        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, Some(protos), None);
+        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, Some(protos), None, None);
         let result = run_sweep(jobs, 1);
         let report = &result.reports[0];
         assert!(!report.cases.is_empty());
@@ -675,7 +700,7 @@ mod tests {
     fn agg_override_reaches_the_cases_and_bench() {
         let aggs = vec![crate::ps::parse_agg("sharded:n=2").unwrap()];
         let jobs =
-            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, Some(aggs));
+            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, Some(aggs), None);
         let result = run_sweep(jobs, 1);
         let report = &result.reports[0];
         assert!(!report.cases.is_empty());
@@ -689,11 +714,44 @@ mod tests {
     }
 
     #[test]
+    fn codec_override_reaches_the_cases_and_bench() {
+        let codecs = vec![crate::codec::parse_codec("topk:pct=0.1").unwrap()];
+        let jobs =
+            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, None, Some(codecs));
+        let result = run_sweep(jobs, 1);
+        let report = &result.reports[0];
+        assert!(!report.cases.is_empty());
+        assert!(
+            report.cases.iter().all(|c| c.codec == "topk:pct=0.1"),
+            "{:?}",
+            report.cases
+        );
+        assert!(report.cases.iter().all(|c| c.label.starts_with("topk:pct=0.1/")));
+        assert!(report.cases.iter().all(|c| c.mean_importance.is_some()));
+        assert_eq!(result.bench.per_job[0].codecs, ["topk:pct=0.1"]);
+        assert!(result.bench.per_job[0].wire_bytes > 0);
+        // The codec JSON block rides along, and sparsification shrinks the
+        // wire relative to the dense default.
+        let json = result.render_json();
+        assert!(json.contains("\"codec\": \"topk:pct=0.1\""), "{json}");
+        let dense = run_sweep(
+            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, None, None),
+            1,
+        );
+        assert!(
+            result.bench.per_job[0].wire_bytes * 5 <= dense.bench.per_job[0].wire_bytes,
+            "topk:pct=0.1 must cut gather bytes ≥5×: {} vs {}",
+            result.bench.per_job[0].wire_bytes,
+            dense.bench.per_job[0].wire_bytes
+        );
+    }
+
+    #[test]
     fn single_report_renders_as_object_many_as_array() {
-        let one = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1], true, None, None), 1);
+        let one = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1], true, None, None, None), 1);
         assert!(one.render_json().starts_with('{'));
         let two =
-            run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1, 2], true, None, None), 2);
+            run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1, 2], true, None, None, None), 2);
         assert!(two.render_json().starts_with('['));
         assert_eq!(two.reports[0].seed, 1);
         assert_eq!(two.reports[1].seed, 2);

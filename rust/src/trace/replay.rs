@@ -51,6 +51,7 @@ pub fn replay(file: &TraceFile) -> Result<ReplayOutcome, String> {
             quick: r.d & 1 == 1,
             protos: None,
             aggs: None,
+            codecs: None,
         });
     }
     // Cross-check the header's scenario name against the registry: a

@@ -258,8 +258,9 @@ fn scenario_agg_matrix() {
 #[test]
 fn scenario_accuracy_matrix() {
     let report = conformance("accuracy_matrix");
-    // {0,2,5,10}% loss × {ltp, ltp-adaptive, reno} × bubble filling on/off.
-    assert_eq!(report.cases.len(), 4 * 3 * 2, "{:?}", report.cases);
+    // {0,2,5,10}% loss × {ltp, ltp-adaptive, reno} × bubble filling on/off,
+    // plus the appended codec crossing: topk:pct=0.1 × {bf,nobf} × 4 rates.
+    assert_eq!(report.cases.len(), 4 * 3 * 2 + 8, "{:?}", report.cases);
     for c in &report.cases {
         let t = c.train.unwrap_or_else(|| panic!("{}: missing train block", c.label));
         assert!(t.final_loss.is_finite(), "{}: {t:?}", c.label);
@@ -304,6 +305,114 @@ fn scenario_accuracy_matrix() {
             );
         }
     }
+    // The codec crossing is appended AFTER the original 24 cases (their
+    // byte layout is golden), and the no-sacrifice bound survives the
+    // ~10× wire reduction: bubble-filled LTP with topk:pct=0.1 at 2 %
+    // loss stays within 1 % absolute of the lossless dense baseline.
+    assert!(
+        report.cases[24..].iter().all(|c| c.label.starts_with("topk10/")),
+        "codec rows must be appended after the dense matrix: {:?}",
+        report.cases.iter().map(|c| &c.label).collect::<Vec<_>>()
+    );
+    for c in &report.cases[24..] {
+        assert_eq!(c.codec, "topk:pct=0.1", "{}: wrong codec", c.label);
+        assert!(c.gather_wire_bytes > 0, "{}: no wire bytes recorded", c.label);
+    }
+    let topk2 = acc("topk10/bf/ltp/l2");
+    assert!(
+        topk2 + 0.01 >= baseline,
+        "topk:pct=0.1 + bubble-filled LTP at 2% loss must stay within 1% of \
+         the lossless baseline: topk {topk2} vs reno {baseline}"
+    );
+    // The compressed rows really moved less data than their dense twins.
+    let dense_bytes = case("bf/ltp/l2").gather_wire_bytes;
+    let topk_bytes = case("topk10/bf/ltp/l2").gather_wire_bytes;
+    assert!(
+        dense_bytes >= 5 * topk_bytes,
+        "topk:pct=0.1 must cut gather bytes ≥5×: dense {dense_bytes} vs topk {topk_bytes}"
+    );
+}
+
+#[test]
+fn scenario_compression_matrix() {
+    let report = conformance("compression_matrix");
+    // Part A: {dense, topk10, topk1} × {ltp, ltp-adaptive, reno} × {0,2,5}%
+    // loss on the native backend; Part B: three scheduling cases on the
+    // modeled 8→1 incast.
+    assert_eq!(report.cases.len(), 3 * 3 * 3 + 3, "{:?}", report.cases);
+    let case = |label: &str| {
+        report
+            .cases
+            .iter()
+            .find(|c| c.label == label)
+            .unwrap_or_else(|| panic!("missing case `{label}`"))
+    };
+    // Every Part-A case trained for real and records its wire volume.
+    for c in &report.cases[..27] {
+        let t = c.train.unwrap_or_else(|| panic!("{}: missing train block", c.label));
+        assert!(t.final_loss.is_finite(), "{}: {t:?}", c.label);
+        assert!(c.gather_wire_bytes > 0, "{}: no wire bytes recorded", c.label);
+    }
+    let acc = |label: &str| case(label).train.unwrap().accuracy;
+    // The tentpole acceptance bound: topk:pct=0.1 + LTP + bubble filling
+    // at 2 % loss within 1 % absolute accuracy of the lossless dense
+    // baseline, at ≥5× fewer gather bytes on the wire.
+    let baseline = acc("dense/reno/l0");
+    assert!(baseline > 0.9, "the lossless dense baseline must converge: {baseline}");
+    let topk2 = acc("topk10/ltp/l2");
+    assert!(
+        topk2 + 0.01 >= baseline,
+        "topk:pct=0.1 + ltp at 2% loss must stay within 1% of lossless dense: \
+         topk {topk2} vs dense {baseline}"
+    );
+    let dense_bytes = case("dense/ltp/l2").gather_wire_bytes;
+    let topk_bytes = case("topk10/ltp/l2").gather_wire_bytes;
+    assert!(
+        dense_bytes >= 5 * topk_bytes,
+        "topk:pct=0.1 must cut gather bytes ≥5×: dense {dense_bytes} vs topk {topk_bytes}"
+    );
+    // topk1 moves less than topk10 (monotone in the keep fraction).
+    assert!(case("topk1/ltp/l2").gather_wire_bytes < topk_bytes);
+    // Part B: tensor-priority scheduling strictly beats unscheduled LTP
+    // on delivered importance under 2 % loss — Early Close sheds only the
+    // low-value head when the NQ is reordered.
+    let imp = |label: &str| {
+        case(label)
+            .mean_importance
+            .unwrap_or_else(|| panic!("{label}: missing importance"))
+    };
+    let (off, on) = (imp("sched-off/ltp/w8"), imp("sched-on/ltp/w8"));
+    assert!((0.0..=1.0 + 1e-9).contains(&off), "implausible importance {off}");
+    assert!(
+        on > off,
+        "priority scheduling must strictly raise delivered importance: on {on} vs off {off}"
+    );
+    // Scheduling is non-vacuous: the unscheduled run actually shed data.
+    assert!(case("sched-off/ltp/w8").mean_delivered < 1.0);
+    // Bare-dense rows keep the legacy JSON shape: no codec keys emitted.
+    let json = report.to_json().render();
+    assert!(json.contains("\"codec\":\"topk:pct=0.1\""), "{json}");
+    assert!(json.contains("\"codec\":\"dense:priority=on\""), "{json}");
+    assert!(
+        !json.contains("\"codec\":\"dense\""),
+        "default-dense cases must not emit codec keys"
+    );
+}
+
+#[test]
+fn compression_matrix_is_byte_identical_serial_vs_parallel() {
+    // The sweep determinism contract holds with the codec layer in the
+    // pipeline: error-feedback state, encoded sizes, and importance
+    // accounting are all per-job and seed-driven.
+    use ltp::scenarios::sweep::{run_sweep, sweep_jobs};
+    let idx = registry().iter().position(|s| s.name == "compression_matrix").unwrap();
+    let serial = run_sweep(sweep_jobs(&[idx], &[7], true, None, None, None), 1);
+    let parallel = run_sweep(sweep_jobs(&[idx], &[7], true, None, None, None), 4);
+    assert_eq!(
+        serial.render_json(),
+        parallel.render_json(),
+        "compression_matrix must serialize byte-identically for --jobs 1 and --jobs 4"
+    );
 }
 
 #[test]
@@ -349,8 +458,8 @@ fn incast_xl_is_byte_identical_serial_vs_parallel() {
     // exercised on the largest scenario in the registry.
     use ltp::scenarios::sweep::{run_sweep, sweep_jobs};
     let idx = registry().iter().position(|s| s.name == "incast_xl").unwrap();
-    let serial = run_sweep(sweep_jobs(&[idx], &[7, 8], true, None, None), 1);
-    let parallel = run_sweep(sweep_jobs(&[idx], &[7, 8], true, None, None), 4);
+    let serial = run_sweep(sweep_jobs(&[idx], &[7, 8], true, None, None, None), 1);
+    let parallel = run_sweep(sweep_jobs(&[idx], &[7, 8], true, None, None, None), 4);
     assert_eq!(
         serial.render_json(),
         parallel.render_json(),

@@ -41,6 +41,7 @@ fn drive_pair(
         critical: critical.clone(),
         seed_rtprop: 0,
         seed_btlbw_bytes: 0,
+        nq_order: None,
     });
     let mut rx = proto.make_rx(RxCfg { flow, bytes, ec, critical, iter: 1 });
     assert!(tx.flow_matches(flow) && rx.flow_matches(flow));
