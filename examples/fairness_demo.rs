@@ -1,7 +1,19 @@
-//! Fairness (paper Fig 15): an LTP flow and a BBR flow share a 1 Gbps
-//! bottleneck; neither starves the other.
+//! Fairness, twice over:
+//!
+//! 1. Flow-level (paper Fig 15): an LTP flow and a BBR flow share a
+//!    1 Gbps bottleneck; neither starves the other.
+//! 2. Job-level (DESIGN.md §1.5): two training jobs coexist on one shared
+//!    fabric trunk — one with stable membership, one losing workers to
+//!    churn — and the Jain index of their synchronization goodputs
+//!    certifies that the trunk is still shared evenly.
 //!
 //! Run: `cargo run --release --example fairness_demo`
+
+use ltp::churn::coexist::run_coexist;
+use ltp::churn::parse_churn;
+use ltp::config::Workload;
+use ltp::ps::{parse_proto, TrainingCfg};
+use ltp::MS;
 
 fn main() {
     let r = ltp::figures::fig15(false);
@@ -12,4 +24,28 @@ fn main() {
         r.share * 100.0,
         r.jain
     );
+
+    // Two 4-worker LTP jobs on one trunk; job B additionally loses half
+    // its workers at every epoch boundary (they flap back one iteration
+    // later). Coexistence must not let either job starve.
+    let job = |label: &str, churn: &str| {
+        let mut cfg = TrainingCfg::modeled(parse_proto("ltp").unwrap(), Workload::Micro, 4);
+        cfg.iters = 4;
+        cfg.batches_per_epoch = 2;
+        cfg.churn = parse_churn(churn).unwrap();
+        (label.to_string(), cfg)
+    };
+    let c = run_coexist(&[job("stable", "none"), job("churned", "churn:rate=0.5,flap=1")]);
+    for j in &c.jobs {
+        println!(
+            "job {:>7} | iters {} | mean BST {:>8.1} ms | delivered {:>6.2}% | goodput {:>7.1} Mbit/s",
+            j.label,
+            j.iters_done,
+            j.mean_bst_ms,
+            j.mean_delivered * 100.0,
+            j.goodput_mbps
+        );
+    }
+    println!("coexistence Jain {:.4} over {:.1} ms", c.jain, c.total_time as f64 / MS as f64);
+    assert!(c.jain >= 0.8, "two jobs on one trunk must share it evenly: {}", c.jain);
 }

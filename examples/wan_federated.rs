@@ -1,35 +1,39 @@
 //! Federated/WAN scenario (paper §VI-C): heterogeneous worker links over a
-//! 1 Gbps/40 ms WAN with bursty loss. LTP's per-link LT thresholds give
-//! each worker its own budget; slow links contribute fewer gradients but
-//! never stall the round past the deadline.
+//! 1 Gbps/40 ms WAN. The churn plane (DESIGN.md §1.5) gives every worker
+//! its own link: a seeded straggler fraction runs 3× slower, each edge
+//! draws independent Gilbert–Elliott loss, and a small per-epoch departure
+//! rate models devices dropping out and rejoining — the federated regime.
+//! LTP's per-link LT thresholds give each worker its own budget; slow or
+//! absent links contribute fewer gradients but never stall the round.
 //!
 //! Run: `cargo run --release --example wan_federated`
 
+use ltp::churn::parse_churn;
 use ltp::config::{NetEnv, Workload};
 use ltp::ps::{parse_proto, RunBuilder};
-use ltp::simnet::LossModel;
 use ltp::MS;
 
 fn main() {
-    let ge = LossModel::GilbertElliott {
-        p_gb: 0.002,
-        p_bg: 0.05,
-        loss_good: 0.0005,
-        loss_bad: 0.15,
-    };
+    // One spec drives all the heterogeneity: 5% of workers depart per
+    // epoch (back after 2 iterations), a quarter are 3× stragglers, and
+    // every worker edge draws its own Gilbert–Elliott loss process.
+    let churn = parse_churn("churn:rate=0.05,flap=2,stragglers=0.25,slow=3,ge=on").unwrap();
     // Protocols are registry specs — try `ltp proto list` for the grammar
     // (e.g. swap in "ltp-adaptive" or "ltp:pct=0.9,slack=200ms").
     for spec in ["ltp", "bbr", "cubic"] {
         let r = RunBuilder::modeled(parse_proto(spec).unwrap(), Workload::Micro, 8)
             .net_env(NetEnv::Wan1g)
-            .loss(ge)
+            .churn(churn.clone())
             .iters(4)
+            .batches_per_epoch(2)
             .run()
             .unwrap();
         println!(
-            "{:>5} | iters {} | mean BST {:>9.1} ms | gather p50/p99 {:>7.1}/{:>7.1} ms | delivered {:>6.2}%",
+            "{:>5} | iters {} | active {}..{} of 8 | mean BST {:>9.1} ms | gather p50/p99 {:>7.1}/{:>7.1} ms | delivered {:>6.2}%",
             r.proto,
             r.iters.len(),
+            r.active_min,
+            r.active_max,
             r.mean_bst() as f64 / MS as f64,
             r.gather_summary.p50,
             r.gather_summary.p99,

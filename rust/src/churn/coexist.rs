@@ -1,0 +1,224 @@
+//! Multi-job coexistence: several independent BSP training jobs sharing
+//! one fabric (DESIGN.md §1.5).
+//!
+//! The jobs are placed on a two-rack topology whose inter-rack trunk runs
+//! at a single edge rate: every parameter server sits in rack 0, every
+//! worker in rack 1, so all gather incasts and model broadcasts contend
+//! on the trunk. Each job keeps its own [`PsNode`] endpoint, flow space,
+//! and per-iteration report; cross-job isolation comes from entity-level
+//! routing (a PS only ever sees packets addressed to it), so the jobs
+//! interact exactly one way — queueing on the shared links.
+//!
+//! Coexistence runs are modeled-compute only (no backend, dense codec);
+//! each job's churn spec still applies — membership rows and schedules
+//! are attached per job — but per-worker link dynamics are not, because
+//! the shared fabric's edges are common property of all jobs.
+
+use crate::proto::ThresholdTracker;
+use crate::ps::{
+    IterStats, ModeledCompute, NullAggregate, PsFlowPlan, PsNode, TrainingCfg, WorkerNode,
+    WorkerRoute,
+};
+use crate::simnet::{two_rack, EntityId, Node, Sim};
+use crate::util::jain_fairness;
+use crate::{Nanos, MS, SEC};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// One job's outcome after a shared-fabric run.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub label: String,
+    /// Iterations the job's barrier completed before the horizon.
+    pub iters_done: u64,
+    pub mean_bst_ms: f64,
+    pub mean_delivered: f64,
+    /// Nominal synchronization goodput: `iters × workers × model_bytes`
+    /// over the job's own completion span, in Mbit/s. This is the
+    /// quantity the fairness index is computed on.
+    pub goodput_mbps: f64,
+}
+
+/// The outcome of a coexistence run.
+#[derive(Debug, Clone)]
+pub struct CoexistReport {
+    /// Per-job outcomes, in submission order.
+    pub jobs: Vec<JobOutcome>,
+    /// Jain fairness index over the jobs' goodputs (1.0 = perfectly
+    /// even sharing of the trunk).
+    pub jain: f64,
+    /// Simulated time when the last barrier finished (or the horizon).
+    pub total_time: Nanos,
+}
+
+/// Run `jobs` concurrently on one shared two-rack fabric and report
+/// per-job results plus the Jain fairness index of their goodputs.
+///
+/// The fabric seed, edge link, and switch delay come from the first job;
+/// the trunk runs at one edge rate so the jobs genuinely contend.
+///
+/// # Panics
+///
+/// Panics when `jobs` is empty.
+pub fn run_coexist(jobs: &[(String, TrainingCfg)]) -> CoexistReport {
+    assert!(!jobs.is_empty(), "a coexistence run needs at least one job");
+    let base = &jobs[0].1;
+    let mut sim = Sim::new(base.seed);
+    // Entity-id layout mirrors `two_rack`: agg 0, tor0 1, tor1 2, then
+    // rack-0 hosts (one PS per job), then rack-1 hosts (workers,
+    // job-major).
+    let n_jobs = jobs.len();
+    let mut rack0: Vec<Box<dyn Node>> = Vec::with_capacity(n_jobs);
+    let mut rack1: Vec<Box<dyn Node>> = Vec::new();
+    let mut reports: Vec<Rc<RefCell<Vec<IterStats>>>> = Vec::with_capacity(n_jobs);
+    let mut worker_off = 0usize;
+    for (j, (_label, cfg)) in jobs.iter().enumerate() {
+        let ps_id: EntityId = 3 + j;
+        let report: Rc<RefCell<Vec<IterStats>>> = Rc::new(RefCell::new(Vec::new()));
+        let closes = Rc::new(RefCell::new(Vec::new()));
+        let tuning = cfg.proto.tuning();
+        let tracker = ThresholdTracker::new(
+            cfg.n_workers,
+            tuning.deadline_slack.unwrap_or(cfg.deadline_slack),
+            tuning.pct_threshold.unwrap_or(cfg.pct_threshold),
+        );
+        let plan = (!cfg.churn.is_default()).then(|| {
+            cfg.churn.plan(cfg.n_workers, cfg.iters, cfg.batches_per_epoch, cfg.seed)
+        });
+        let worker_ids: Vec<EntityId> =
+            (0..cfg.n_workers).map(|w| 3 + n_jobs + worker_off + w).collect();
+        let mut ps = PsNode::new(
+            worker_ids,
+            cfg.proto.clone(),
+            cfg.model_bytes,
+            cfg.critical.clone(),
+            PsFlowPlan::single(cfg.n_workers),
+            Box::new(NullAggregate(cfg.agg_time)),
+            tracker,
+            cfg.iters,
+            cfg.batches_per_epoch,
+            report.clone(),
+            closes,
+        );
+        if let Some(p) = &plan {
+            ps = ps.with_membership(p.rows_for(0..cfg.n_workers));
+        }
+        rack0.push(Box::new(ps));
+        for w in 0..cfg.n_workers {
+            let route = WorkerRoute::single(
+                ps_id,
+                w,
+                cfg.n_workers,
+                cfg.model_bytes,
+                cfg.critical.clone(),
+            );
+            let mut node = WorkerNode::new(
+                w,
+                vec![route],
+                cfg.proto.clone(),
+                Box::new(ModeledCompute(cfg.compute_time)),
+                cfg.iters,
+            );
+            if let Some(p) = &plan {
+                node = node.with_schedule(p.schedule(w));
+            }
+            rack1.push(Box::new(node));
+        }
+        reports.push(report);
+        worker_off += cfg.n_workers;
+    }
+    let topo = two_rack(&mut sim, [rack0, rack1], base.link, base.link, base.switch_delay);
+    debug_assert_eq!(topo.hosts.first().copied(), Some(3));
+    // Same sliced loop as `run_with`: stop as soon as every job's barrier
+    // has finished all its iterations.
+    let horizon = jobs.iter().map(|(_, c)| c.horizon).max().unwrap();
+    let slice = 100 * MS;
+    let mut until = slice;
+    loop {
+        sim.run_until(until.min(horizon));
+        let done = jobs
+            .iter()
+            .zip(&reports)
+            .all(|((_, c), r)| r.borrow().len() as u64 >= c.iters);
+        if done || sim.is_idle() || until >= horizon {
+            break;
+        }
+        until += slice;
+    }
+    let mut outs = Vec::with_capacity(n_jobs);
+    let mut total_time = 0;
+    for ((label, cfg), report) in jobs.iter().zip(&reports) {
+        let rep = report.borrow();
+        let iters_done = rep.len() as u64;
+        let span = rep.last().map(|i| i.end).unwrap_or(sim.now()).max(1);
+        total_time = total_time.max(span);
+        let n = rep.len().max(1) as f64;
+        let bits = iters_done * cfg.n_workers as u64 * cfg.model_bytes * 8;
+        outs.push(JobOutcome {
+            label: label.clone(),
+            iters_done,
+            mean_bst_ms: rep.iter().map(|i| i.bst as f64).sum::<f64>() / n / MS as f64,
+            mean_delivered: if rep.is_empty() {
+                1.0
+            } else {
+                rep.iter().map(|i| i.mean_delivered).sum::<f64>() / n
+            },
+            goodput_mbps: bits as f64 / (span as f64 / SEC as f64) / 1e6,
+        });
+    }
+    let goodputs: Vec<f64> = outs.iter().map(|o| o.goodput_mbps).collect();
+    CoexistReport { jobs: outs, jain: jain_fairness(&goodputs), total_time }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Workload;
+    use crate::ps::parse_proto;
+
+    fn quick_job(label: &str, iters: u64) -> (String, TrainingCfg) {
+        let mut cfg =
+            TrainingCfg::modeled(parse_proto("ltp").unwrap(), Workload::Micro, 2);
+        cfg.iters = iters;
+        (label.to_string(), cfg)
+    }
+
+    #[test]
+    fn identical_jobs_share_the_trunk_fairly() {
+        let jobs = vec![quick_job("a", 2), quick_job("b", 2)];
+        let r = run_coexist(&jobs);
+        assert_eq!(r.jobs.len(), 2);
+        for j in &r.jobs {
+            assert_eq!(j.iters_done, 2, "{}: barrier must complete", j.label);
+            assert!(j.goodput_mbps > 0.0, "{}", j.label);
+        }
+        assert!(r.jain >= 0.8, "identical jobs must share evenly: jain {}", r.jain);
+        assert!(r.total_time > 0);
+    }
+
+    #[test]
+    fn coexisting_jobs_cost_each_other_sync_time() {
+        let solo = run_coexist(&[quick_job("solo", 2)]);
+        assert!((solo.jain - 1.0).abs() < 1e-9, "single job is trivially fair");
+        let pair = run_coexist(&[quick_job("a", 2), quick_job("b", 2)]);
+        assert!(
+            pair.jobs[0].mean_bst_ms >= solo.jobs[0].mean_bst_ms,
+            "trunk contention cannot make a job faster: {} vs {}",
+            pair.jobs[0].mean_bst_ms,
+            solo.jobs[0].mean_bst_ms
+        );
+    }
+
+    #[test]
+    fn churned_job_coexists_with_a_stable_one() {
+        let stable = quick_job("stable", 3);
+        let mut churned = quick_job("churned", 3);
+        churned.1.batches_per_epoch = 1;
+        churned.1.churn = crate::churn::parse_churn("churn:rate=0.5,flap=1").unwrap();
+        let r = run_coexist(&[stable, churned]);
+        for j in &r.jobs {
+            assert_eq!(j.iters_done, 3, "{}: barrier must complete", j.label);
+        }
+        assert!(r.jain > 0.0);
+    }
+}

@@ -1,0 +1,690 @@
+//! The **churn plane** (DESIGN.md §1.5) — the fifth pluggable layer after
+//! transports (§1.1), aggregation topologies (§1.2), compute backends
+//! (§1.3), and gradient codecs (§1.4).
+//!
+//! A [`ChurnModel`] decides *who is training and over what link*: it maps a
+//! run configuration to a deterministic [`ChurnPlan`] holding a per-iteration
+//! membership schedule (which workers are active at each barrier) and a
+//! per-worker link profile (straggler bandwidth/latency multipliers and an
+//! independent Gilbert–Elliott loss process per worker edge). Models are
+//! registered under string keys and instantiated from specs reusing the
+//! transport/aggregation/backend/codec grammar (`key[:name=value,...]`,
+//! [`parse_churn`]):
+//!
+//! * `none` — the identity model: every worker is present for every
+//!   iteration and every worker edge uses the fabric's shared [`LinkCfg`].
+//!   This is the default, and default runs keep their golden report bytes.
+//! * `churn` — seeded per-worker departure/rejoin processes drawn at epoch
+//!   boundaries (`rate=<0..1>` departure probability per worker per epoch,
+//!   `flap=<iters>` absence length, `min=<count>` active-set floor) plus
+//!   optional link heterogeneity (`stragglers=<0..1>` straggler fraction,
+//!   `slow=<mult>` bandwidth/latency multiplier, `ge=<on|off>` independent
+//!   per-worker Gilbert–Elliott loss).
+//!
+//! Determinism is per-worker, not per-run: worker `w`'s membership process
+//! draws from PCG stream [`MEMBERSHIP_STREAM`]` + w` and its link profile
+//! from [`LINK_STREAM`]` + w`, so worker 3's schedule in an 8-worker run is
+//! byte-identical to worker 3's schedule in a 16-worker run at the same
+//! seed, and `--jobs N` sweeps reproduce serial plans exactly. The plan is
+//! a pure function of `(spec, workers, iters, batches_per_epoch, seed)` —
+//! nothing is drawn at simulation time.
+
+pub mod coexist;
+
+use crate::ps::spec::{canonical, parse_params, unknown_param};
+use crate::simnet::{LinkCfg, LossModel};
+use crate::util::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// PCG stream base for worker membership processes: worker `w` draws its
+/// departure/rejoin schedule from stream `MEMBERSHIP_STREAM + w`. High
+/// above the simnet's node (`1000 + entity`) and link (`2000 + link_id`)
+/// stream ranges so churn draws never collide with wire randomness.
+pub const MEMBERSHIP_STREAM: u64 = 1 << 32;
+
+/// PCG stream base for worker link profiles: worker `w` draws its
+/// straggler flag and Gilbert–Elliott parameters from `LINK_STREAM + w`.
+pub const LINK_STREAM: u64 = 1 << 33;
+
+/// A churn model: thread-shareable, registered under a string key,
+/// instantiated from CLI specs like `churn:rate=0.1,flap=2`.
+pub trait ChurnModel: Send + Sync {
+    /// Canonical spec string — the model's label everywhere.
+    fn name(&self) -> &str;
+
+    /// Can any worker ever be absent from a barrier? `false` means the
+    /// plan's schedule is all-true and the runner may keep the fixed
+    /// worker-set fast path.
+    fn perturbs_membership(&self) -> bool;
+
+    /// Does any worker edge deviate from the fabric's shared [`LinkCfg`]?
+    /// `false` means [`ChurnPlan::edge_cfg`] is the identity.
+    fn perturbs_links(&self) -> bool;
+
+    /// Materialize the deterministic plan for a run shape. Pure in its
+    /// arguments: same inputs, same plan, on any thread.
+    fn plan(&self, workers: usize, iters: u64, batches_per_epoch: u64, seed: u64) -> ChurnPlan;
+}
+
+/// A parsed, validated churn spec: the handle stored in run configurations
+/// and carried across worker threads by the sweep driver. Clones share the
+/// underlying [`ChurnModel`].
+#[derive(Clone)]
+pub struct ChurnSpec(Arc<dyn ChurnModel>);
+
+impl ChurnSpec {
+    /// Canonical spec string — the model's name everywhere (labels, JSON
+    /// reports, bench records). Borrowed; no per-call allocation.
+    pub fn name(&self) -> &str {
+        self.0.name()
+    }
+
+    /// Is this the bare default (`none`)? Default runs must keep their
+    /// report bytes golden, so reporting layers emit churn fields only
+    /// when this is false.
+    pub fn is_default(&self) -> bool {
+        self.name() == "none"
+    }
+}
+
+impl std::ops::Deref for ChurnSpec {
+    type Target = dyn ChurnModel;
+
+    fn deref(&self) -> &(dyn ChurnModel + 'static) {
+        &*self.0
+    }
+}
+
+impl std::fmt::Display for ChurnSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::fmt::Debug for ChurnSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ChurnSpec({})", self.name())
+    }
+}
+
+/// Two specs are equal iff their canonical names are.
+impl PartialEq for ChurnSpec {
+    fn eq(&self, other: &ChurnSpec) -> bool {
+        self.name() == other.name()
+    }
+}
+
+impl std::str::FromStr for ChurnSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ChurnSpec> {
+        parse_churn(s)
+    }
+}
+
+/// One worker edge's link profile: divisors/multipliers applied to the
+/// fabric's shared [`LinkCfg`] plus an optional per-worker loss process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerLink {
+    /// Bandwidth divisor (stragglers get `rate_bps / rate_div`).
+    pub rate_div: u64,
+    /// Propagation-delay multiplier.
+    pub delay_mult: u64,
+    /// Per-worker loss process; `None` keeps the fabric's shared model.
+    pub loss: Option<LossModel>,
+}
+
+impl WorkerLink {
+    /// The identity profile: the worker edge equals the fabric default.
+    pub fn identity() -> WorkerLink {
+        WorkerLink { rate_div: 1, delay_mult: 1, loss: None }
+    }
+}
+
+/// A materialized churn plan: the per-iteration membership schedule and the
+/// per-worker link profiles for one run. Pure data — builders slice it into
+/// node-local views, the simnet never sees it.
+#[derive(Debug, Clone)]
+pub struct ChurnPlan {
+    /// `active[iter][worker]`: is `worker` a barrier participant at `iter`?
+    pub active: Vec<Vec<bool>>,
+    /// Per-worker link profiles, indexed by global worker index.
+    pub links: Vec<WorkerLink>,
+}
+
+impl ChurnPlan {
+    /// An all-present, identity-link plan (what `none` materializes).
+    pub fn stable(workers: usize, iters: u64) -> ChurnPlan {
+        ChurnPlan {
+            active: vec![vec![true; workers]; iters as usize],
+            links: vec![WorkerLink::identity(); workers],
+        }
+    }
+
+    /// Number of workers the plan was materialized for.
+    pub fn workers(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Is `worker` a barrier participant at `iter`? Out-of-range iterations
+    /// read as active (the run is over; nothing consults them).
+    pub fn is_active(&self, iter: u64, worker: usize) -> bool {
+        self.active.get(iter as usize).map_or(true, |row| row[worker])
+    }
+
+    /// One worker's membership column across all iterations.
+    pub fn schedule(&self, worker: usize) -> Vec<bool> {
+        self.active.iter().map(|row| row[worker]).collect()
+    }
+
+    /// The schedule rows restricted to a contiguous worker range — the
+    /// node-local view a rack relay or shard PS indexes by local slot.
+    pub fn rows_for(&self, range: std::ops::Range<usize>) -> Vec<Vec<bool>> {
+        self.active.iter().map(|row| row[range.clone()].to_vec()).collect()
+    }
+
+    /// How many workers are active at `iter`?
+    pub fn active_count(&self, iter: u64) -> usize {
+        self.active
+            .get(iter as usize)
+            .map_or(self.workers(), |row| row.iter().filter(|a| **a).count())
+    }
+
+    /// `(min, max)` active-set size over the first `n_iters` iterations;
+    /// `(workers, workers)` when no iteration ran.
+    pub fn active_bounds(&self, n_iters: u64) -> (usize, usize) {
+        let n = (n_iters as usize).min(self.active.len());
+        if n == 0 {
+            return (self.workers(), self.workers());
+        }
+        let mut lo = usize::MAX;
+        let mut hi = 0;
+        for iter in 0..n {
+            let c = self.active_count(iter as u64);
+            lo = lo.min(c);
+            hi = hi.max(c);
+        }
+        (lo, hi)
+    }
+
+    /// Total worker-iterations over the first `n_iters` iterations — the
+    /// denominator-aware replacement for `workers * iters` in wire-byte
+    /// accounting.
+    pub fn active_total(&self, n_iters: u64) -> u64 {
+        let n = (n_iters as usize).min(self.active.len());
+        (0..n).map(|i| self.active_count(i as u64) as u64).sum()
+    }
+
+    /// Does any worker miss any of the first `n_iters` barriers?
+    pub fn perturbs_membership(&self, n_iters: u64) -> bool {
+        let n = (n_iters as usize).min(self.active.len());
+        (0..n).any(|i| self.active_count(i as u64) < self.workers())
+    }
+
+    /// Does any worker edge deviate from the fabric default?
+    pub fn perturbs_links(&self) -> bool {
+        self.links.iter().any(|l| *l != WorkerLink::identity())
+    }
+
+    /// Worker `w`'s edge config: the fabric `base` with this worker's
+    /// profile applied. Queue and ECN provisioning stay the fabric's.
+    pub fn edge_cfg(&self, base: LinkCfg, w: usize) -> LinkCfg {
+        let wl = self.links[w];
+        let mut cfg = base;
+        cfg.rate_bps = (base.rate_bps / wl.rate_div).max(1);
+        cfg.delay = base.delay.saturating_mul(wl.delay_mult);
+        if let Some(loss) = wl.loss {
+            cfg.loss = loss;
+        }
+        cfg
+    }
+}
+
+/// One registered churn model family.
+pub struct ChurnDef {
+    /// Spec key (`--churn <key>[:params]`).
+    pub key: &'static str,
+    pub summary: &'static str,
+    /// Accepted `name=value` parameters, for `ltp churn list`.
+    pub params: &'static str,
+    build: fn(&[(String, String)]) -> Result<ChurnSpec>,
+}
+
+/// The churn registry. Append entries here; the CLI (`ltp churn list`),
+/// `--churn` flags, and the `churn_matrix` scenario follow.
+pub const CHURN_REGISTRY: &[ChurnDef] = &[
+    ChurnDef {
+        key: "none",
+        summary: "stable membership on the shared fabric link (default; golden bytes)",
+        params: "",
+        build: build_none,
+    },
+    ChurnDef {
+        key: "churn",
+        summary: "seeded per-worker departure/rejoin at epoch boundaries, optional stragglers and per-worker GE loss",
+        params: "rate=<0..1> (required), flap=<iters>, min=<count>, stragglers=<0..1>, slow=<mult>, ge=<on|off>",
+        build: build_churn,
+    },
+];
+
+/// The registry (function form, for iteration symmetry with the scenario
+/// engine).
+pub fn churn_registry() -> &'static [ChurnDef] {
+    CHURN_REGISTRY
+}
+
+/// Parse a churn spec (`none`, `churn:rate=0.1,flap=2`) against the
+/// registry.
+pub fn parse_churn(spec: &str) -> Result<ChurnSpec> {
+    let spec = spec.trim();
+    let (key, rest) = match spec.split_once(':') {
+        Some((k, r)) => (k, Some(r)),
+        None => (spec, None),
+    };
+    let key = key.to_ascii_lowercase();
+    let Some(def) = CHURN_REGISTRY.iter().find(|d| d.key == key) else {
+        let known: Vec<&str> = CHURN_REGISTRY.iter().map(|d| d.key).collect();
+        bail!("unknown churn model `{key}` in spec `{spec}` (known: {})", known.join(", "));
+    };
+    let params = parse_params(rest).with_context(|| format!("in churn spec `{spec}`"))?;
+    (def.build)(&params).with_context(|| format!("in churn spec `{spec}`"))
+}
+
+/// The default spec: stable membership, shared fabric link.
+pub fn default_churn() -> ChurnSpec {
+    parse_churn("none").expect("registry default")
+}
+
+// ---------------------------------------------------------------------------
+// Registered models.
+// ---------------------------------------------------------------------------
+
+/// The identity model behind `none`.
+struct NoChurn;
+
+impl ChurnModel for NoChurn {
+    fn name(&self) -> &str {
+        "none"
+    }
+
+    fn perturbs_membership(&self) -> bool {
+        false
+    }
+
+    fn perturbs_links(&self) -> bool {
+        false
+    }
+
+    fn plan(&self, workers: usize, iters: u64, _bpe: u64, _seed: u64) -> ChurnPlan {
+        ChurnPlan::stable(workers, iters)
+    }
+}
+
+fn build_none(params: &[(String, String)]) -> Result<ChurnSpec> {
+    if let Some((k, _)) = params.first() {
+        return Err(unknown_param("none", k, "none"));
+    }
+    Ok(ChurnSpec(Arc::new(NoChurn)))
+}
+
+/// Straggler `slow` default: a 4× slower worker, the classic tail-latency
+/// regime.
+const DEFAULT_SLOW: u64 = 4;
+/// Flap default: a departed worker rejoins after 2 iterations.
+const DEFAULT_FLAP: u64 = 2;
+
+/// The seeded process behind `churn:rate=...`.
+struct ChurnProcess {
+    spec: String,
+    /// Per-worker departure probability at each epoch boundary.
+    rate: f64,
+    /// Iterations a departed worker stays away; 0 = departed forever.
+    flap: u64,
+    /// Active-set floor: departures that would drop below it are vetoed.
+    min: usize,
+    /// Fraction of workers drawn as stragglers.
+    stragglers: f64,
+    /// Straggler bandwidth divisor / delay multiplier.
+    slow: u64,
+    /// Give every worker an independent Gilbert–Elliott loss process?
+    ge: bool,
+}
+
+impl ChurnModel for ChurnProcess {
+    fn name(&self) -> &str {
+        &self.spec
+    }
+
+    fn perturbs_membership(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    fn perturbs_links(&self) -> bool {
+        self.stragglers > 0.0 || self.ge
+    }
+
+    fn plan(&self, workers: usize, iters: u64, batches_per_epoch: u64, seed: u64) -> ChurnPlan {
+        let bpe = batches_per_epoch.max(1);
+        // Membership: worker w draws only from its own stream, and draws
+        // *unconditionally* at every epoch boundary — the stream position
+        // depends on the epoch count alone, never on other workers or on
+        // the worker's own history, so w's column is invariant under the
+        // total worker count and the draw order.
+        let mut rngs: Vec<Pcg64> =
+            (0..workers).map(|w| Pcg64::new(seed, MEMBERSHIP_STREAM + w as u64)).collect();
+        let mut active_now = vec![true; workers];
+        let mut rejoin_at = vec![0u64; workers];
+        let mut active = Vec::with_capacity(iters as usize);
+        for iter in 0..iters {
+            // Admissions first: a flapped worker rejoins at its barrier.
+            for w in 0..workers {
+                if !active_now[w] && rejoin_at[w] <= iter {
+                    active_now[w] = true;
+                }
+            }
+            if iter > 0 && iter % bpe == 0 {
+                for w in 0..workers {
+                    let departs = rngs[w].chance(self.rate);
+                    let n_active = active_now.iter().filter(|a| **a).count();
+                    if departs && active_now[w] && n_active > self.min {
+                        active_now[w] = false;
+                        rejoin_at[w] = if self.flap == 0 { u64::MAX } else { iter + self.flap };
+                    }
+                }
+            }
+            active.push(active_now.clone());
+        }
+        // Link profiles: again one stream per worker, with a fixed draw
+        // order (straggler flag, then the four GE parameters) so enabling
+        // `ge` never shifts the straggler draw and vice versa.
+        let links = (0..workers)
+            .map(|w| {
+                let mut rng = Pcg64::new(seed, LINK_STREAM + w as u64);
+                let straggler = rng.chance(self.stragglers);
+                let p_gb = 0.001 + 0.009 * rng.next_f64();
+                let p_bg = 0.02 + 0.08 * rng.next_f64();
+                let loss_good = 0.005 * rng.next_f64();
+                let loss_bad = 0.05 + 0.20 * rng.next_f64();
+                WorkerLink {
+                    rate_div: if straggler { self.slow } else { 1 },
+                    delay_mult: if straggler { self.slow } else { 1 },
+                    loss: self.ge.then_some(LossModel::GilbertElliott {
+                        p_gb,
+                        p_bg,
+                        loss_good,
+                        loss_bad,
+                    }),
+                }
+            })
+            .collect();
+        ChurnPlan { active, links }
+    }
+}
+
+fn build_churn(params: &[(String, String)]) -> Result<ChurnSpec> {
+    let (mut rate, mut flap, mut min, mut stragglers, mut slow, mut ge) =
+        (None, None, None, None, None, None);
+    for (k, v) in params {
+        match k.as_str() {
+            "rate" => rate = Some(parse_rate(k, v, false)?),
+            "flap" => {
+                let n: u64 =
+                    v.parse().with_context(|| format!("bad value for `flap`: `{v}`"))?;
+                flap = Some(n);
+            }
+            "min" => {
+                let n: usize =
+                    v.parse().with_context(|| format!("bad value for `min`: `{v}`"))?;
+                if n == 0 {
+                    bail!("`min=0`: the active set needs at least one worker");
+                }
+                min = Some(n);
+            }
+            "stragglers" => stragglers = Some(parse_rate(k, v, true)?),
+            "slow" => {
+                let n: u64 =
+                    v.parse().with_context(|| format!("bad value for `slow`: `{v}`"))?;
+                if n == 0 {
+                    bail!("`slow=0`: the straggler multiplier must be >= 1");
+                }
+                slow = Some(n);
+            }
+            "ge" => ge = Some(crate::compute::parse_switch(k, v)?),
+            _ => {
+                return Err(unknown_param("churn", k, "rate, flap, min, stragglers, slow, ge"))
+            }
+        }
+    }
+    let Some(rate) = rate else {
+        bail!("`churn` needs a departure rate: churn:rate=<0..1> (rate=0 keeps membership stable)");
+    };
+    // Canonical order: rate, flap, min, stragglers, slow, ge. `rate` always
+    // renders (it is required); the rest only when explicitly given, so the
+    // canonical form is a fixed point of the parser.
+    let mut parts = vec![format!("rate={rate}")];
+    if let Some(x) = flap {
+        parts.push(format!("flap={x}"));
+    }
+    if let Some(x) = min {
+        parts.push(format!("min={x}"));
+    }
+    if let Some(x) = stragglers {
+        parts.push(format!("stragglers={x}"));
+    }
+    if let Some(x) = slow {
+        parts.push(format!("slow={x}"));
+    }
+    if let Some(x) = ge {
+        parts.push(format!("ge={}", if x { "on" } else { "off" }));
+    }
+    Ok(ChurnSpec(Arc::new(ChurnProcess {
+        spec: canonical("churn", &parts),
+        rate,
+        flap: flap.unwrap_or(DEFAULT_FLAP),
+        min: min.unwrap_or(1),
+        stragglers: stragglers.unwrap_or(0.0),
+        slow: slow.unwrap_or(DEFAULT_SLOW),
+        ge: ge.unwrap_or(false),
+    })))
+}
+
+/// Parse a probability in `[0, 1)` (or `[0, 1]` when `inclusive`): unlike
+/// `spec::parse_fraction`, zero is legal — `rate=0` is the stable-membership
+/// control row of the churn matrix.
+fn parse_rate(k: &str, v: &str, inclusive: bool) -> Result<f64> {
+    let x: f64 = v.parse().with_context(|| format!("bad value for `{k}`: `{v}`"))?;
+    let ok = if inclusive { (0.0..=1.0).contains(&x) } else { (0.0..1.0).contains(&x) };
+    if !ok {
+        let hi = if inclusive { "<=" } else { "<" };
+        bail!("`{k}={v}` out of range (need 0 <= {k} {hi} 1)");
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_parse_with_canonical_names() {
+        let none = parse_churn("none").unwrap();
+        assert_eq!(none.name(), "none");
+        assert!(none.is_default());
+        assert!(!none.perturbs_membership() && !none.perturbs_links());
+
+        let c = parse_churn("churn:rate=0.1,flap=2").unwrap();
+        assert_eq!(c.name(), "churn:rate=0.1,flap=2");
+        assert!(!c.is_default());
+        assert!(c.perturbs_membership() && !c.perturbs_links());
+
+        let s = parse_churn("churn:rate=0,stragglers=0.25,slow=3,ge=on").unwrap();
+        assert_eq!(s.name(), "churn:rate=0,stragglers=0.25,slow=3,ge=on");
+        assert!(!s.perturbs_membership());
+        assert!(s.perturbs_links());
+    }
+
+    #[test]
+    fn canonical_names_are_fixed_points() {
+        for spec in [
+            "churn:rate=0.1",
+            "churn:rate=0.1,flap=4,min=2",
+            "churn:rate=0,stragglers=0.5,slow=8,ge=off",
+            "churn:rate=0.05,flap=2,min=1,stragglers=0.25,slow=4,ge=on",
+        ] {
+            let once = parse_churn(spec).unwrap();
+            let twice = parse_churn(once.name()).unwrap();
+            assert_eq!(once.name(), twice.name(), "canonical form must be a fixed point");
+        }
+        // Parameter order normalizes.
+        let c = parse_churn("churn:flap=3,rate=0.2").unwrap();
+        assert_eq!(c.name(), "churn:rate=0.2,flap=3");
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "nope",
+            "none:rate=0.1",
+            "churn",
+            "churn:",
+            "churn:rate",
+            "churn:rate=",
+            "churn:rate=1",
+            "churn:rate=-0.1",
+            "churn:rate=0.1,rate=0.2",
+            "churn:flap=2", // rate is required
+            "churn:rate=0.1,min=0",
+            "churn:rate=0.1,slow=0",
+            "churn:rate=0.1,stragglers=1.5",
+            "churn:rate=0.1,ge=maybe",
+            "churn:rate=0.1,window=3",
+        ] {
+            assert!(parse_churn(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn stable_plan_is_the_identity() {
+        let plan = default_churn().plan(4, 6, 2, 7);
+        assert!(!plan.perturbs_membership(6));
+        assert!(!plan.perturbs_links());
+        assert_eq!(plan.active_bounds(6), (4, 4));
+        assert_eq!(plan.active_total(6), 24);
+        let base = LinkCfg::dcn(10, 5);
+        let cfg = plan.edge_cfg(base, 0);
+        assert_eq!(cfg.rate_bps, base.rate_bps);
+        assert_eq!(cfg.delay, base.delay);
+        assert_eq!(cfg.loss, base.loss);
+    }
+
+    #[test]
+    fn plans_are_seed_reproducible() {
+        let c = parse_churn("churn:rate=0.3,flap=2,stragglers=0.5,ge=on").unwrap();
+        let a = c.plan(8, 20, 2, 42);
+        let b = c.plan(8, 20, 2, 42);
+        assert_eq!(a.active, b.active);
+        assert_eq!(a.links, b.links);
+        let other = c.plan(8, 20, 2, 43);
+        assert!(
+            other.active != a.active || other.links != a.links,
+            "different seeds should perturb differently"
+        );
+    }
+
+    #[test]
+    fn worker_columns_are_independent_of_worker_count() {
+        // Worker w draws only from its own streams, so its schedule and
+        // link profile are identical whether the run has 8 or 16 workers.
+        // (The min-floor veto is the only cross-worker coupling; at
+        // rate=0.15 with flap=2 absences never accumulate, so the floor
+        // of 1 cannot bind in either plan.)
+        let c = parse_churn("churn:rate=0.15,flap=2,min=1,stragglers=0.5,ge=on").unwrap();
+        let small = c.plan(8, 24, 2, 9);
+        let big = c.plan(16, 24, 2, 9);
+        for w in 0..8 {
+            assert_eq!(small.links[w], big.links[w], "link profile for worker {w}");
+            assert_eq!(small.schedule(w), big.schedule(w), "membership column for worker {w}");
+        }
+        assert!(small.perturbs_membership(24), "seed 9 should produce at least one departure");
+    }
+
+    #[test]
+    fn min_floor_is_honored() {
+        let c = parse_churn("churn:rate=0.9,flap=0,min=2").unwrap();
+        let plan = c.plan(8, 40, 2, 5);
+        for iter in 0..40 {
+            assert!(plan.active_count(iter) >= 2, "floor violated at iter {iter}");
+        }
+        let (lo, _hi) = plan.active_bounds(40);
+        assert!(lo >= 2);
+    }
+
+    #[test]
+    fn flap_brings_workers_back() {
+        // flap=1 with bpe=2: a departure at boundary k rejoins at k+1,
+        // which is not a boundary, so no redraw can extend the absence —
+        // every absent run is exactly one iteration.
+        let c = parse_churn("churn:rate=0.5,flap=1").unwrap();
+        let plan = c.plan(8, 30, 2, 3);
+        let mut departures = 0;
+        for w in 0..8 {
+            let col = plan.schedule(w);
+            let mut absent_run = 0;
+            for active in &col {
+                if *active {
+                    absent_run = 0;
+                } else {
+                    absent_run += 1;
+                    departures += 1;
+                    assert!(absent_run <= 1, "flap=1 worker {w} absent too long");
+                }
+            }
+        }
+        assert!(departures > 0, "rate=0.5 over 14 boundaries should produce departures");
+    }
+
+    #[test]
+    fn straggler_profiles_divide_bandwidth() {
+        let c = parse_churn("churn:rate=0,stragglers=1,slow=3").unwrap();
+        let plan = c.plan(4, 4, 2, 11);
+        let base = LinkCfg::dcn(10, 5);
+        for w in 0..4 {
+            let cfg = plan.edge_cfg(base, w);
+            assert_eq!(cfg.rate_bps, base.rate_bps / 3);
+            assert_eq!(cfg.delay, base.delay * 3);
+            assert_eq!(cfg.loss, base.loss, "no ge => fabric loss model");
+        }
+    }
+
+    #[test]
+    fn ge_profiles_are_heterogeneous() {
+        let c = parse_churn("churn:rate=0,ge=on").unwrap();
+        let plan = c.plan(8, 4, 2, 13);
+        let mut rates: Vec<u64> = Vec::new();
+        for wl in &plan.links {
+            let Some(LossModel::GilbertElliott { p_gb, p_bg, loss_good, loss_bad }) = wl.loss
+            else {
+                panic!("ge=on must give every worker a GE process");
+            };
+            assert!((0.001..0.010).contains(&p_gb));
+            assert!((0.02..0.10).contains(&p_bg));
+            assert!((0.0..0.005).contains(&loss_good));
+            assert!((0.05..0.25).contains(&loss_bad));
+            rates.push((loss_bad * 1e9) as u64);
+        }
+        rates.dedup();
+        assert!(rates.len() > 1, "workers must draw distinct GE processes");
+    }
+
+    #[test]
+    fn registry_is_well_formed() {
+        assert_eq!(churn_registry()[0].key, "none");
+        for def in churn_registry() {
+            assert!(!def.summary.is_empty());
+        }
+        // Every registry key parses at its minimal spec.
+        assert!(parse_churn("none").is_ok());
+        assert!(parse_churn("churn:rate=0").is_ok());
+    }
+}

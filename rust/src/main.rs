@@ -3,7 +3,7 @@
 //! ```text
 //! ltp scenario <name|list|all> [--json] [--seed N | --seeds A..B] [--quick]
 //!              [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]...
-//!              [--agg SPEC]... [--codec SPEC]...
+//!              [--agg SPEC]... [--codec SPEC]... [--churn SPEC]...
 //! ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]
 //! ltp trace <scenario> --out FILE [--seed N | --seeds A..B] [--quick] [--jobs N]
 //! ltp replay <trace> [--out FILE] [--breakdown [FILE]]
@@ -11,8 +11,10 @@
 //! ltp agg <list|parse SPEC>                 aggregation-topology registry
 //! ltp backend <list|parse SPEC>             compute-backend registry
 //! ltp codec <list|parse SPEC>               gradient-codec registry
+//! ltp churn <list|parse SPEC>               churn-plane registry
 //! ltp train [--backend native] [--workers 4] [--iters 50] [--loss 0.01]
-//!           [--proto SPEC] [--agg SPEC] [--codec SPEC] [--max-loss X]
+//!           [--proto SPEC] [--agg SPEC] [--codec SPEC] [--churn SPEC]
+//!           [--max-loss X]
 //! ltp bench check --baseline FILE --current FILE [--scenario NAME|all]
 //!                 [--max-regress-pct P]     CI events/sec regression gate
 //! ltp bench-ltp [--bytes N] [--loss P]      one-flow protocol microbench
@@ -24,11 +26,13 @@
 //! `sharded:n=4`, `hier:racks=2`. Compute backends too (`ltp backend
 //! list`): `native`, `native:dim=64,fill=off`, `xla:preset=tiny`. And
 //! gradient codecs (`ltp codec list`): `dense`, `topk:pct=0.1`,
-//! `threshold:t=0.01,priority=on`.
+//! `threshold:t=0.01,priority=on`. And churn specs (`ltp churn list`):
+//! `none`, `churn:rate=0.1,flap=2`, `churn:rate=0,stragglers=0.25,ge=on`.
 //!
 //! (Hand-rolled argument parsing: the vendored dependency set has no clap.)
 
 use anyhow::{bail, Context, Result};
+use ltp::churn::{churn_registry, parse_churn, ChurnSpec};
 use ltp::codec::{codec_registry, parse_codec, CodecSpec};
 use ltp::compute::{backend_registry, parse_backend};
 use ltp::ps::{
@@ -133,6 +137,21 @@ impl Args {
         }
         Ok(Some(out))
     }
+
+    /// Parse every `--churn SPEC` against the churn registry; `None` when
+    /// the flag was not given.
+    fn churns(&self) -> Result<Option<Vec<ChurnSpec>>> {
+        let specs = self.all("churn");
+        if specs.is_empty() {
+            return Ok(None);
+        }
+        let mut out = Vec::with_capacity(specs.len());
+        for s in specs {
+            anyhow::ensure!(s != "true", "--churn requires a spec (see `ltp churn list`)");
+            out.push(parse_churn(s).with_context(|| format!("--churn {s}"))?);
+        }
+        Ok(Some(out))
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -153,6 +172,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let proto = parse_proto(&args.flag("proto", "ltp".to_string())?)?;
     let agg = parse_agg(&args.flag("agg", "ps".to_string())?)?;
     let codec = parse_codec(&args.flag("codec", "dense".to_string())?)?;
+    let churn = parse_churn(&args.flag("churn", "none".to_string())?)?;
     // The compute backend (DESIGN.md §1.3). `native` is the default: it
     // needs no artifacts, so `ltp train` works out of the box; `--backend
     // xla[:preset=..]` selects the PJRT path and fails fast with the
@@ -179,7 +199,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         .compute_time(50 * MS)
         .horizon(24 * 3600 * SEC)
         .agg(agg)
-        .codec(codec);
+        .codec(codec)
+        .churn(churn);
     if loss > 0.0 {
         b = b.loss(LossModel::Bernoulli { p: loss });
     }
@@ -208,6 +229,12 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .mean_importance
                 .map(|i| format!("{i:.4}"))
                 .unwrap_or_else(|| "—".to_string()),
+        );
+    }
+    if report.churn != "none" {
+        println!(
+            "\nchurn: {} | active workers {}..{} of {workers} per iteration",
+            report.churn, report.active_min, report.active_max,
         );
     }
     println!(
@@ -304,11 +331,12 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             "--bench {v}: expected a .json path (bare --bench writes BENCH_scenarios.json)"
         ),
     };
-    // Protocol, aggregation, and codec specs fail fast too, before any
-    // simulation runs.
+    // Protocol, aggregation, codec, and churn specs fail fast too, before
+    // any simulation runs.
     let protos = args.protos()?;
     let aggs = args.aggs()?;
     let codecs = args.codecs()?;
+    let churns = args.churns()?;
     if which == "list" {
         println!("registered scenarios (run with `ltp scenario <name|all> [--json]`):\n");
         for s in scenarios::registry() {
@@ -335,7 +363,8 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             }
         }
     };
-    let jobs = sweep::sweep_jobs(&indices, &seeds, args.has("quick"), protos, aggs, codecs);
+    let jobs =
+        sweep::sweep_jobs(&indices, &seeds, args.has("quick"), protos, aggs, codecs, churns);
     let result = sweep::run_sweep(jobs, n_jobs);
     // A scenario skips (agg, degree) combinations its aggregations
     // reject; if that leaves a report empty, say so rather than emit a
@@ -389,9 +418,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
         "ltp trace records one named scenario, not `{which}` (see `ltp scenario list`)"
     );
     anyhow::ensure!(
-        !args.has("proto") && !args.has("agg") && !args.has("codec"),
+        !args.has("proto") && !args.has("agg") && !args.has("codec") && !args.has("churn"),
         "ltp trace runs scenario defaults — the trace header has no field for \
-         --proto/--agg/--codec overrides, so a replay could not reproduce them"
+         --proto/--agg/--codec/--churn overrides, so a replay could not reproduce them"
     );
     let out = args.get("out").context(usage)?;
     anyhow::ensure!(out != "true", "--out requires a file path");
@@ -405,7 +434,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let quick = args.has("quick");
     let n_jobs: usize = args.flag("jobs", 1)?;
     let seeds = parse_seeds(args)?;
-    let jobs = sweep::sweep_jobs(&[index], &seeds, quick, None, None, None);
+    let jobs = sweep::sweep_jobs(&[index], &seeds, quick, None, None, None, None);
     let n = jobs.len();
     let (_, records) = sweep::run_sweep_traced(jobs, n_jobs, true);
     let records = records.expect("traced sweep returns records");
@@ -667,6 +696,42 @@ fn cmd_codec(args: &Args) -> Result<()> {
     }
 }
 
+/// `ltp churn list` — the churn-plane registry; `ltp churn parse <spec>`
+/// — echo a spec's canonical form and which planes it perturbs.
+fn cmd_churn(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str).unwrap_or("list") {
+        "list" => {
+            println!(
+                "registered churn models (use with `--churn <key>[:name=value,...]`):\n"
+            );
+            for d in churn_registry() {
+                println!("  {:<7} {}", d.key, d.summary);
+                if !d.params.is_empty() {
+                    println!("  {:<7}   params: {}", "", d.params);
+                }
+            }
+            println!(
+                "\nthe `churn_matrix` scenario sweeps rate∈{{0,0.05,0.1}} across protocols, \
+                 stragglers off/on."
+            );
+            Ok(())
+        }
+        "parse" => {
+            let spec = args.positional.get(2).context("usage: ltp churn parse <spec>")?;
+            let c = parse_churn(spec)?;
+            let planes = match (c.perturbs_membership(), c.perturbs_links()) {
+                (false, false) => "stable membership, pristine links",
+                (true, false) => "elastic membership",
+                (false, true) => "per-worker link dynamics",
+                (true, true) => "elastic membership + per-worker link dynamics",
+            };
+            println!("{} -> canonical `{}` ({planes})", spec, c.name());
+            Ok(())
+        }
+        other => bail!("unknown churn subcommand `{other}` (list|parse)"),
+    }
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     match args.positional.first().map(String::as_str) {
@@ -681,6 +746,7 @@ fn main() -> Result<()> {
         Some("agg") => cmd_agg(&args),
         Some("backend") => cmd_backend(&args),
         Some("codec") => cmd_codec(&args),
+        Some("churn") => cmd_churn(&args),
         Some("train") => cmd_train(&args),
         Some("bench") => cmd_bench(&args),
         Some("bench-ltp") => cmd_bench_ltp(&args),
@@ -688,7 +754,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage:\n  ltp scenario <name|list|all> [--json] [--seed N | --seeds A..B] [--quick]\n  \
                  \x20            [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]... [--agg SPEC]...\n  \
-                 \x20            [--codec SPEC]...\n  \
+                 \x20            [--codec SPEC]... [--churn SPEC]...\n  \
                  ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]\n  \
                  ltp trace <scenario> --out FILE [--seed N | --seeds A..B] [--quick] [--jobs N]\n  \
                  ltp replay <trace> [--out FILE] [--breakdown [FILE]]\n  \
@@ -696,8 +762,9 @@ fn main() -> Result<()> {
                  ltp agg <list|parse SPEC>\n  \
                  ltp backend <list|parse SPEC>\n  \
                  ltp codec <list|parse SPEC>\n  \
+                 ltp churn <list|parse SPEC>\n  \
                  ltp train [--backend SPEC] [--workers N] [--iters N] [--loss P] [--proto SPEC]\n  \
-                 \x20        [--agg SPEC] [--codec SPEC] [--max-loss X]\n  \
+                 \x20        [--agg SPEC] [--codec SPEC] [--churn SPEC] [--max-loss X]\n  \
                  ltp bench check --baseline FILE --current FILE [--scenario NAME|all] [--max-regress-pct P]\n  \
                  ltp bench-ltp [--bytes N] [--loss P]"
             );

@@ -32,10 +32,11 @@ use super::spec::{canonical, parse_params, unknown_param};
 use super::transport::{FlowRx, FlowTx, RxCfg, TxCfg};
 use super::worker::{Compute, WorkerNode, WorkerRoute};
 use super::{GatherClose, IterStats};
+use crate::churn::ChurnPlan;
 use crate::grad::Manifest;
 use crate::proto::{EarlyCloseCfg, ThresholdTracker};
 use crate::simnet::{
-    n_rack, star, two_rack, Ctx, EntityId, LinkCfg, LinkId, Node, Packet, Sim,
+    n_rack, star, star_with, two_rack, Ctx, EntityId, LinkCfg, LinkId, Node, Packet, Sim,
 };
 use crate::util::Bitmap;
 use crate::wire::{PacketKind, LTP_MSS};
@@ -468,7 +469,10 @@ impl Aggregation for PsAggregation {
         let ps_id: EntityId = first_host;
         let worker_ids: Vec<EntityId> =
             (0..cfg.n_workers).map(|w| first_host + 1 + w).collect();
-        let ps = PsNode::new(
+        // Churn plan (DESIGN.md §1.5): the default spec takes the exact
+        // pre-existing code paths — no membership attached, uniform links.
+        let plan = churn_plan(cfg);
+        let mut ps = PsNode::new(
             worker_ids.clone(),
             cfg.proto.clone(),
             cfg.model_bytes,
@@ -482,6 +486,9 @@ impl Aggregation for PsAggregation {
             closes.clone(),
         )
         .with_gather_bytes(enc);
+        if let Some(p) = &plan {
+            ps = ps.with_membership(p.rows_for(0..cfg.n_workers));
+        }
         let mut nodes: Vec<Box<dyn Node>> = vec![Box::new(ps)];
         for w in 0..cfg.n_workers {
             let mut route = WorkerRoute::single(
@@ -493,17 +500,31 @@ impl Aggregation for PsAggregation {
             );
             route.gather_bytes = enc;
             route.nq_order = nq_order.clone();
-            nodes.push(Box::new(WorkerNode::new(
+            let mut node = WorkerNode::new(
                 w,
                 vec![route],
                 cfg.proto.clone(),
                 (env.make_compute)(w, cfg),
                 cfg.iters,
-            )));
+            );
+            if let Some(p) = &plan {
+                node = node.with_schedule(p.schedule(w));
+            }
+            nodes.push(Box::new(node));
         }
         let fabric = match cfg.topo {
             Topo::Star => {
-                let topo = star(sim, nodes, cfg.link, cfg.switch_delay);
+                let topo = match &plan {
+                    Some(p) if p.perturbs_links() => {
+                        // PS keeps the base edge; each worker gets its
+                        // planned per-worker link profile.
+                        let mut cfgs = Vec::with_capacity(1 + cfg.n_workers);
+                        cfgs.push(cfg.link);
+                        cfgs.extend((0..cfg.n_workers).map(|w| p.edge_cfg(cfg.link, w)));
+                        star_with(sim, nodes, &cfgs, cfg.switch_delay)
+                    }
+                    _ => star(sim, nodes, cfg.link, cfg.switch_delay),
+                };
                 debug_assert_eq!(topo.hosts[0], ps_id);
                 Fabric::Star { switch: topo.switch }
             }
@@ -635,6 +656,9 @@ impl Aggregation for ShardedAggregation {
         // Entity-id layout: switch 0, shards 1..=N, then workers.
         let shard_ids: Vec<EntityId> = (0..nsh).map(|s| 1 + s).collect();
         let worker_ids: Vec<EntityId> = (0..w).map(|i| 1 + nsh + i).collect();
+        // Every shard sees every worker, so each shard PS carries the
+        // full membership matrix (DESIGN.md §1.5).
+        let churn = churn_plan(cfg);
         let mut nodes: Vec<Box<dyn Node>> = Vec::with_capacity(nsh + w);
         let mut shards = Vec::with_capacity(nsh);
         for (s, &(bytes, _, _)) in ranges.iter().enumerate() {
@@ -645,7 +669,7 @@ impl Aggregation for ShardedAggregation {
                 bcast_base: (s * 2 * w + w) as u64,
                 stride,
             };
-            nodes.push(Box::new(PsNode::new(
+            let mut ps = PsNode::new(
                 worker_ids.clone(),
                 cfg.proto.clone(),
                 bytes,
@@ -657,7 +681,11 @@ impl Aggregation for ShardedAggregation {
                 cfg.batches_per_epoch,
                 report.clone(),
                 closes.clone(),
-            )));
+            );
+            if let Some(p) = &churn {
+                ps = ps.with_membership(p.rows_for(0..w));
+            }
+            nodes.push(Box::new(ps));
             shards.push(ShardObs {
                 label: format!("shard{s}"),
                 report,
@@ -681,15 +709,26 @@ impl Aggregation for ShardedAggregation {
                     stride,
                 })
                 .collect();
-            nodes.push(Box::new(WorkerNode::new(
+            let mut node = WorkerNode::new(
                 i,
                 routes,
                 cfg.proto.clone(),
                 (env.make_compute)(i, cfg),
                 cfg.iters,
-            )));
+            );
+            if let Some(p) = &churn {
+                node = node.with_schedule(p.schedule(i));
+            }
+            nodes.push(Box::new(node));
         }
-        let topo = star(sim, nodes, cfg.link, cfg.switch_delay);
+        let topo = match &churn {
+            Some(p) if p.perturbs_links() => {
+                let mut cfgs = vec![cfg.link; nsh];
+                cfgs.extend((0..w).map(|i| p.edge_cfg(cfg.link, i)));
+                star_with(sim, nodes, &cfgs, cfg.switch_delay)
+            }
+            _ => star(sim, nodes, cfg.link, cfg.switch_delay),
+        };
         debug_assert_eq!(topo.hosts[0], shard_ids[0]);
         AggRun {
             ps_id: shard_ids[0],
@@ -764,6 +803,11 @@ impl Aggregation for HierAggregation {
             .map(|i| first_host + (i / per) * (1 + per) + 1 + (i % per))
             .collect();
         let root_id: EntityId = first_host + r_n * (1 + per);
+        // Membership churn only: relays stay in the root's barrier every
+        // iteration (a zero-active rack forwards an empty partial), so the
+        // root PS itself never carries a membership matrix. The builder
+        // rejects link-perturbing churn for `hier`.
+        let churn = churn_plan(cfg);
         let mut shards = Vec::with_capacity(r_n + 1);
         let mut racks: Vec<Vec<Box<dyn Node>>> = Vec::with_capacity(r_n);
         for r in 0..r_n {
@@ -791,6 +835,7 @@ impl Aggregation for HierAggregation {
                 batches_per_epoch: cfg.batches_per_epoch,
                 report: report.clone(),
                 closes: closes.clone(),
+                membership: churn.as_ref().map(|p| p.rows_for(r * per..(r + 1) * per)),
             });
             let mut rack_nodes: Vec<Box<dyn Node>> = vec![Box::new(relay)];
             for j in 0..per {
@@ -805,13 +850,17 @@ impl Aggregation for HierAggregation {
                     bcast_slot: (w + i) as u64,
                     stride,
                 };
-                rack_nodes.push(Box::new(WorkerNode::new(
+                let mut node = WorkerNode::new(
                     i,
                     vec![route],
                     cfg.proto.clone(),
                     (env.make_compute)(i, cfg),
                     cfg.iters,
-                )));
+                );
+                if let Some(p) = &churn {
+                    node = node.with_schedule(p.schedule(i));
+                }
+                rack_nodes.push(Box::new(node));
             }
             racks.push(rack_nodes);
             shards.push(ShardObs {
@@ -873,6 +922,14 @@ impl Aggregation for HierAggregation {
     }
 }
 
+/// The run's churn plan, or `None` for the default spec so that stable
+/// runs take the exact pre-existing (membership-free) code paths and
+/// stay byte-identical.
+fn churn_plan(cfg: &TrainingCfg) -> Option<ChurnPlan> {
+    (!cfg.churn.is_default())
+        .then(|| cfg.churn.plan(cfg.n_workers, cfg.iters, cfg.batches_per_epoch, cfg.seed))
+}
+
 /// The run's threshold tracker for one aggregator endpoint over
 /// `n_links` incoming gather links, honoring spec-level tuning overrides.
 fn tracker_for(cfg: &TrainingCfg, n_links: usize) -> ThresholdTracker {
@@ -926,6 +983,10 @@ struct RelayCfg {
     batches_per_epoch: u64,
     report: Rc<RefCell<Vec<IterStats>>>,
     closes: Rc<RefCell<Vec<GatherClose>>>,
+    /// Rack-local membership rows (`[iter][local worker]`), or `None` for
+    /// a stable rack. Mirrors `PsNode::membership` over this rack's
+    /// columns; the relay itself always stays in the root's barrier.
+    membership: Option<Vec<Vec<bool>>>,
 }
 
 /// A rack-local aggregator: PS-like toward its rack's workers (gather
@@ -960,6 +1021,10 @@ struct RelayAggNode {
     /// Per-flow tensor-priority-weighted delivered importance, parallel
     /// to `delivered_fractions` (mirrors `PsNode::importances`).
     importances: Vec<f64>,
+    /// `delivered_fractions.len()` at the start of the current iteration —
+    /// under churn fewer than `n` flows close per iteration, and the
+    /// per-iteration means must not reach into earlier iterations.
+    frac_mark: usize,
 }
 
 impl RelayAggNode {
@@ -984,11 +1049,25 @@ impl RelayAggNode {
             arrivals: (0..n).map(|_| None).collect(),
             delivered_fractions: vec![],
             importances: vec![],
+            frac_mark: 0,
         }
     }
 
     fn n(&self) -> usize {
         self.c.workers.len()
+    }
+
+    /// Is local worker `j` a member of the barrier at `iter`? Absent a
+    /// membership matrix (stable rack) every worker always is.
+    fn active_at(&self, iter: u64, j: usize) -> bool {
+        self.c
+            .membership
+            .as_ref()
+            .map_or(true, |m| m.get(iter as usize).map_or(true, |row| row[j]))
+    }
+
+    fn active_now(&self, j: usize) -> bool {
+        self.active_at(self.iter, j)
     }
 
     fn expected_gather_flow(&self, j: usize, iter: u64) -> u64 {
@@ -1086,7 +1165,10 @@ impl RelayAggNode {
         let now = ctx.now();
         if self.phase == RelayPhase::Gathering {
             for j in 0..self.n() {
-                if self.gather_done[j] {
+                // Departed workers are pre-excluded from the barrier:
+                // their gathers are never awaited and no delivered
+                // fraction is pushed (bubble-filling, DESIGN.md §1.5).
+                if self.gather_done[j] || !self.active_now(j) {
                     continue;
                 }
                 let done = self.rx[j].as_ref().map(|r| r.is_done()).unwrap_or(false);
@@ -1128,7 +1210,10 @@ impl RelayAggNode {
                     });
                 }
             }
-            if self.gather_done.iter().all(|&d| d) {
+            if (0..self.n()).all(|j| self.gather_done[j] || !self.active_now(j)) {
+                // A zero-active rack still reduces (over all-`None`
+                // arrivals) and forwards an empty partial: the relay
+                // itself never leaves the root's barrier.
                 self.gather_phase_done = now;
                 self.phase = RelayPhase::Reducing;
                 let dur = self.c.agg.aggregate(self.iter, &self.arrivals);
@@ -1149,8 +1234,9 @@ impl RelayAggNode {
             self.begin_local_broadcast(ctx);
         }
         if self.phase == RelayPhase::Broadcasting {
-            let all = (0..self.n())
-                .all(|j| self.tx_down[j].as_ref().map(|t| t.is_complete()).unwrap_or(false));
+            // Workers absent for this iteration (and not joining at the
+            // next barrier) have no sender; vacuous-true when none exist.
+            let all = self.tx_down.iter().flatten().all(|t| t.is_complete());
             if all {
                 self.finish_iteration(ctx);
             }
@@ -1183,6 +1269,13 @@ impl RelayAggNode {
     fn begin_local_broadcast(&mut self, ctx: &mut Ctx) {
         self.phase = RelayPhase::Broadcasting;
         for j in 0..self.n() {
+            // Join push: a worker rejoining at the next barrier listens on
+            // this iteration's broadcast flow to resynchronize its model
+            // before computing (mirrors `PsNode::begin_broadcast`).
+            let joins_next = self.iter + 1 < self.c.iters && self.active_at(self.iter + 1, j);
+            if !self.active_now(j) && !joins_next {
+                continue;
+            }
             let flow = self.iter * self.c.plan.stride + self.c.plan.bcast_base + j as u64;
             // Rack-local broadcast is reliable, like every model push.
             self.tx_down[j] = Some(self.c.proto.make_tx(TxCfg {
@@ -1199,12 +1292,16 @@ impl RelayAggNode {
 
     fn finish_iteration(&mut self, ctx: &mut Ctx) {
         let now = ctx.now();
+        // Zero-gather iterations (all rack workers departed) fall back to
+        // the gather-phase close so the BST subtraction stays in range.
         let first_gather =
-            self.gather_started.iter().flatten().min().copied().unwrap_or(now);
-        let n = self.n() as f64;
-        let recent: f64 =
-            self.delivered_fractions.iter().rev().take(self.n()).sum::<f64>() / n;
-        let recent_imp: f64 = self.importances.iter().rev().take(self.n()).sum::<f64>() / n;
+            self.gather_started.iter().flatten().min().copied().unwrap_or(self.gather_phase_done);
+        // Under churn fewer than `n` flows closed this iteration; average
+        // over exactly the flows pushed since the last barrier.
+        let pushed = self.delivered_fractions.len() - self.frac_mark;
+        let n = pushed.max(1) as f64;
+        let recent: f64 = self.delivered_fractions.iter().rev().take(pushed).sum::<f64>() / n;
+        let recent_imp: f64 = self.importances.iter().rev().take(pushed).sum::<f64>() / n;
         let stats = IterStats {
             // The whole synchronization span of this rack — local gather,
             // forward, root round-trip, local re-broadcast — minus this
@@ -1226,6 +1323,7 @@ impl RelayAggNode {
             self.c.tracker.end_epoch();
         }
         self.iter += 1;
+        self.frac_mark = self.delivered_fractions.len();
         for j in 0..self.n() {
             self.rx[j] = None;
             self.tx_down[j] = None;
@@ -1245,6 +1343,12 @@ impl RelayAggNode {
                 for pkt in pkts {
                     self.on_gather_packet(ctx, j, pkt);
                 }
+            }
+            // A zero-active iteration produces no gather packets to kick
+            // the barrier; recheck now. Recursion is bounded: the check
+            // only arms the aggregation timer (→ Reducing) and returns.
+            if self.c.membership.is_some() && (0..self.n()).all(|j| !self.active_now(j)) {
+                self.check_progress(ctx);
             }
         }
     }
@@ -1290,6 +1394,15 @@ impl RelayAggNode {
 impl Node for RelayAggNode {
     fn as_any(&mut self) -> &mut dyn std::any::Any {
         self
+    }
+
+    fn start(&mut self, ctx: &mut Ctx) {
+        // If iteration 0 opens with every rack worker departed, no gather
+        // packet will ever arrive to drive the barrier — kick it here.
+        // Stable racks (no membership) keep the default no-op.
+        if self.c.membership.is_some() && (0..self.n()).all(|j| !self.active_now(j)) {
+            self.check_progress(ctx);
+        }
     }
 
     fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {

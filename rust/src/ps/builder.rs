@@ -11,6 +11,7 @@
 use super::agg::{default_agg, AggSpec, Topo};
 use super::runner::{BgFlow, RunReport, TrainingCfg};
 use super::spec::ProtoSpec;
+use crate::churn::{default_churn, ChurnSpec};
 use crate::codec::{default_codec, CodecSpec};
 use crate::compute::BackendSpec;
 use crate::config::{NetEnv, Workload};
@@ -66,6 +67,7 @@ pub struct RunBuilder {
     agg: AggSpec,
     backend: Option<BackendSpec>,
     codec: CodecSpec,
+    churn: ChurnSpec,
 }
 
 impl RunBuilder {
@@ -93,6 +95,7 @@ impl RunBuilder {
             agg: default_agg(),
             backend: None,
             codec: default_codec(),
+            churn: default_churn(),
         }
     }
 
@@ -235,6 +238,18 @@ impl RunBuilder {
         self
     }
 
+    /// Choose the churn plane (`none`, `churn:rate=0.1,flap=2`, … — see
+    /// [`crate::churn::parse_churn`]): a deterministic per-worker
+    /// arrival/departure schedule plus optional per-worker link dynamics
+    /// (stragglers, Gilbert–Elliott edges). The default `none` attaches
+    /// no membership and leaves every run byte-identical to the pre-churn
+    /// plumbing; link-perturbing specs are validated against the
+    /// topology/aggregation in [`RunBuilder::build`] (DESIGN.md §1.5).
+    pub fn churn(mut self, churn: ChurnSpec) -> RunBuilder {
+        self.churn = churn;
+        self
+    }
+
     /// Validate and produce the run configuration.
     pub fn build(mut self) -> Result<TrainingCfg> {
         if let Some(b) = &self.backend {
@@ -298,6 +313,26 @@ impl RunBuilder {
                 );
             }
         }
+        // Churn compatibility (DESIGN.md §1.5): per-worker link dynamics
+        // replace the star's uniform worker edges, so they need a fabric
+        // whose worker edges the builder owns — the star fabrics of the
+        // `ps` and `sharded` aggregations. Membership-only churn (and the
+        // default `none`) works everywhere.
+        if self.churn.perturbs_links() {
+            ensure!(
+                matches!(self.topo, Topo::Star),
+                "churn spec `{}` perturbs per-worker links; drop the two-rack \
+                 topology override",
+                self.churn.name()
+            );
+            ensure!(
+                self.agg.name() != "hier" && !self.agg.name().starts_with("hier:"),
+                "churn spec `{}` perturbs per-worker links; `{}` builds its own \
+                 rack fabric with uniform edges",
+                self.churn.name(),
+                self.agg.name()
+            );
+        }
         // Can the backend serve this topology's endpoints at this worker
         // count? (The `xla` Pallas kernel spans the full model — single PS
         // only — and its artifact bakes in a worker capacity.)
@@ -345,6 +380,7 @@ impl RunBuilder {
             agg: self.agg,
             backend: self.backend,
             codec: self.codec,
+            churn: self.churn,
         })
     }
 
@@ -473,6 +509,33 @@ mod tests {
         assert!(b().codec(codec("dense:priority=on")).agg(agg("hier")).build().is_err());
         // …while the bare identity codec stays unrestricted.
         assert!(b().codec(codec("dense")).agg(agg("sharded:n=2")).build().is_ok());
+    }
+
+    #[test]
+    fn churn_gates_enforce_topology() {
+        let b = || RunBuilder::modeled(ltp(), Workload::Micro, 4);
+        let churn = |s: &str| crate::churn::parse_churn(s).unwrap();
+        let agg = |s: &str| crate::ps::parse_agg(s).unwrap();
+        let trunk = b().link_cfg();
+        // Membership-only churn rides every topology and aggregation.
+        assert!(b().churn(churn("churn:rate=0.1")).build().is_ok());
+        assert!(b().churn(churn("churn:rate=0.1")).agg(agg("sharded:n=2")).build().is_ok());
+        assert!(b().churn(churn("churn:rate=0.1")).agg(agg("hier")).build().is_ok());
+        assert!(b().churn(churn("churn:rate=0.1")).two_rack(2, trunk).build().is_ok());
+        // Link-perturbing churn needs a builder-owned star fabric…
+        assert!(b().churn(churn("churn:rate=0,stragglers=0.5")).build().is_ok());
+        assert!(b()
+            .churn(churn("churn:rate=0,ge=on"))
+            .agg(agg("sharded:n=2"))
+            .build()
+            .is_ok());
+        // …and rejects fabrics whose worker edges it cannot own.
+        assert!(b().churn(churn("churn:rate=0,ge=on")).agg(agg("hier")).build().is_err());
+        assert!(b()
+            .churn(churn("churn:rate=0,stragglers=0.5"))
+            .two_rack(2, trunk)
+            .build()
+            .is_err());
     }
 
     #[test]

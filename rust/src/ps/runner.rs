@@ -102,6 +102,11 @@ pub struct TrainingCfg {
     /// default identity codec keeps every run byte-identical to the
     /// pre-codec plumbing.
     pub codec: crate::codec::CodecSpec,
+    /// Churn plane (`none`, `churn:rate=0.1,flap=2`, … — DESIGN.md §1.5):
+    /// elastic membership and per-worker link dynamics. The default
+    /// `none` attaches no membership and keeps every run byte-identical
+    /// to the pre-churn plumbing.
+    pub churn: crate::churn::ChurnSpec,
 }
 
 impl TrainingCfg {
@@ -138,6 +143,13 @@ pub struct RunReport {
     pub agg: String,
     /// Canonical gradient-codec spec the run used (`dense` by default).
     pub codec: String,
+    /// Canonical churn spec the run used (`none` by default).
+    pub churn: String,
+    /// Fewest barrier members over the run's completed iterations
+    /// (`n_workers` for a stable run).
+    pub active_min: usize,
+    /// Most barrier members over the run's completed iterations.
+    pub active_max: usize,
     /// Gather-direction payload bytes put on the wire across the whole
     /// run under the codec's wire model: `encoded_bytes(model_bytes) ×
     /// workers × iterations` (DESIGN.md §1.4). Retransmissions and
@@ -375,8 +387,20 @@ pub fn run_with(
             BgHandle::Udp { src_host } => sim.node_as::<CrossTraffic>(*src_host).sent_bytes,
         })
         .collect();
-    let gather_wire_bytes =
-        cfg.codec.encoded_bytes(cfg.model_bytes) * cfg.n_workers as u64 * iters.len() as u64;
+    // Under churn the wire claim counts only barrier members: departed
+    // workers send no gather (DESIGN.md §1.5).
+    let churn_plan = (!cfg.churn.is_default()).then(|| {
+        cfg.churn.plan(cfg.n_workers, cfg.iters, cfg.batches_per_epoch, cfg.seed)
+    });
+    let gather_wire_bytes = cfg.codec.encoded_bytes(cfg.model_bytes)
+        * match &churn_plan {
+            Some(p) => p.active_total(iters.len() as u64),
+            None => cfg.n_workers as u64 * iters.len() as u64,
+        };
+    let (active_min, active_max) = match &churn_plan {
+        Some(p) => p.active_bounds(iters.len() as u64),
+        None => (cfg.n_workers, cfg.n_workers),
+    };
     let mean_importance = if cfg.codec.is_default() || iters.is_empty() {
         None
     } else {
@@ -386,6 +410,9 @@ pub fn run_with(
         proto: cfg.proto.name().to_string(),
         agg: cfg.agg.name().to_string(),
         codec: cfg.codec.name().to_string(),
+        churn: cfg.churn.name().to_string(),
+        active_min,
+        active_max,
         gather_wire_bytes,
         mean_importance,
         iters,

@@ -114,6 +114,14 @@ pub struct PsNode {
     bcast_started: Nanos,
     batches_per_epoch: u64,
     timer_gen: u64,
+    /// Per-iteration membership rows from the churn plan
+    /// (`membership[iter][w]`, local worker indices); `None` (the default)
+    /// keeps the fixed-worker-set fast path bit-for-bit.
+    membership: Option<Vec<Vec<bool>>>,
+    /// `delivered_fractions`/`importances` length at the start of the
+    /// current iteration — under churn only active workers push, so the
+    /// per-iteration window is a count, not `n()`.
+    frac_mark: usize,
     pub report: Rc<RefCell<Vec<IterStats>>>,
     arrivals: Vec<Option<(Bitmap, u64)>>,
     pub delivered_fractions: Vec<f64>,
@@ -163,6 +171,8 @@ impl PsNode {
             bcast_started: 0,
             batches_per_epoch,
             timer_gen: 0,
+            membership: None,
+            frac_mark: 0,
             report,
             arrivals: (0..w).map(|_| None).collect(),
             delivered_fractions: vec![],
@@ -187,8 +197,32 @@ impl PsNode {
         self
     }
 
+    /// Attach the churn plan's membership rows (`active[iter][w]`, local
+    /// worker indices). Absent workers are excluded from the barrier:
+    /// their gathers are never awaited, they push no delivered fraction,
+    /// and their `arrivals` slot stays `None` so the masked-mean
+    /// denominator never counts them (bubble-filling semantics). Joiners
+    /// are admitted at the next barrier via a join-push broadcast of the
+    /// preceding iteration's model.
+    pub fn with_membership(mut self, active: Vec<Vec<bool>>) -> PsNode {
+        self.membership = Some(active);
+        self
+    }
+
     fn n(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Is local worker `w` a barrier participant at `iter`?
+    fn active_at(&self, iter: u64, w: usize) -> bool {
+        self.membership
+            .as_ref()
+            .map_or(true, |m| m.get(iter as usize).map_or(true, |row| row[w]))
+    }
+
+    /// Is local worker `w` a participant of the current iteration?
+    fn active_now(&self, w: usize) -> bool {
+        self.active_at(self.iter, w)
     }
 
     fn expected_gather_flow(&self, w: usize, iter: u64) -> u64 {
@@ -292,7 +326,7 @@ impl PsNode {
         match self.phase {
             Phase::Gathering => {
                 for w in 0..self.n() {
-                    if self.gather_done[w] {
+                    if self.gather_done[w] || !self.active_now(w) {
                         continue;
                     }
                     let done = self.rx[w].as_ref().map(|r| r.is_done()).unwrap_or(false);
@@ -334,7 +368,7 @@ impl PsNode {
                         });
                     }
                 }
-                if self.gather_done.iter().all(|&d| d) {
+                if (0..self.n()).all(|w| self.gather_done[w] || !self.active_now(w)) {
                     self.gather_phase_done = now;
                     self.phase = Phase::Aggregating;
                     let dur = self.agg.aggregate(self.iter, &self.arrivals);
@@ -342,8 +376,10 @@ impl PsNode {
                 }
             }
             Phase::Broadcasting => {
-                let all = (0..self.n())
-                    .all(|w| self.tx[w].as_ref().map(|t| t.is_complete()).unwrap_or(false));
+                // Absent workers have no broadcast sender — completion is
+                // over the senders that exist (vacuously true when a
+                // zero-active iteration created none).
+                let all = self.tx.iter().flatten().all(|t| t.is_complete());
                 if all {
                     self.finish_iteration(ctx);
                 }
@@ -356,6 +392,14 @@ impl PsNode {
         self.phase = Phase::Broadcasting;
         self.bcast_started = ctx.now();
         for w in 0..self.n() {
+            // Broadcast to this iteration's participants, plus next
+            // iteration's joiners (the join push: a rejoining worker waits
+            // on this flow for the model it will compute from).
+            let joins_next =
+                self.iter + 1 < self.iters && self.active_at(self.iter + 1, w);
+            if !self.active_now(w) && !joins_next {
+                continue;
+            }
             let flow = self.iter * self.plan.stride + self.plan.bcast_base + w as u64;
             // Broadcast is reliable; the sender retransmits until the
             // receiver confirms 100 % (no Early Close on this direction).
@@ -373,10 +417,21 @@ impl PsNode {
 
     fn finish_iteration(&mut self, ctx: &mut Ctx) {
         let now = ctx.now();
-        let first_gather = self.gather_started.iter().flatten().min().copied().unwrap_or(now);
-        let n = self.n() as f64;
-        let recent: f64 = self.delivered_fractions.iter().rev().take(self.n()).sum::<f64>() / n;
-        let recent_imp: f64 = self.importances.iter().rev().take(self.n()).sum::<f64>() / n;
+        // Zero-gather iterations (churn: every worker absent) fall back to
+        // the gather-phase close time, keeping the BST math subtraction-safe.
+        let first_gather = self
+            .gather_started
+            .iter()
+            .flatten()
+            .min()
+            .copied()
+            .unwrap_or(self.gather_phase_done);
+        // The per-iteration window is what this iteration actually pushed:
+        // `n()` for a stable membership, the active count under churn.
+        let pushed = self.delivered_fractions.len() - self.frac_mark;
+        let n = pushed.max(1) as f64;
+        let recent: f64 = self.delivered_fractions.iter().rev().take(pushed).sum::<f64>() / n;
+        let recent_imp: f64 = self.importances.iter().rev().take(pushed).sum::<f64>() / n;
         let stats = IterStats {
             bst: (self.gather_phase_done - first_gather) + (now - self.bcast_started),
             gather_time: self.gather_phase_done - first_gather,
@@ -390,6 +445,7 @@ impl PsNode {
             self.tracker.end_epoch();
         }
         self.iter += 1;
+        self.frac_mark = self.delivered_fractions.len();
         for w in 0..self.n() {
             self.rx[w] = None;
             self.tx[w] = None;
@@ -406,6 +462,12 @@ impl PsNode {
                 for pkt in pkts {
                     self.on_gather_packet(ctx, w, pkt);
                 }
+            }
+            // A zero-active iteration (churn) has no gathers to wait for:
+            // re-check so the vacuous barrier aggregates and moves on.
+            // Bounded recursion — the check arms the aggregation timer.
+            if self.membership.is_some() && (0..self.n()).all(|w| !self.active_now(w)) {
+                self.check_progress(ctx);
             }
         }
     }
@@ -448,6 +510,15 @@ impl PsNode {
 impl Node for PsNode {
     fn as_any(&mut self) -> &mut dyn std::any::Any {
         self
+    }
+
+    fn start(&mut self, ctx: &mut Ctx) {
+        // A churn plan whose first iteration has no active workers must
+        // aggregate the vacuous barrier immediately: nothing will arrive
+        // to trigger progress otherwise.
+        if self.membership.is_some() && (0..self.n()).all(|w| !self.active_now(w)) {
+            self.check_progress(ctx);
+        }
     }
 
     fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {

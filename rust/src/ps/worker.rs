@@ -96,6 +96,9 @@ enum Phase {
     Computing,
     Gathering,
     WaitBroadcast,
+    /// Departed from the barrier (churn plane): waiting for the aggregator's
+    /// join-push broadcast of the iteration before our next active one.
+    JoinWait,
     Done,
 }
 
@@ -134,6 +137,9 @@ pub struct WorkerNode {
     /// LTP path estimates carried across flows, per route (epoch
     /// threshold sharing).
     paths: Vec<Option<(Nanos, u64)>>,
+    /// Per-iteration membership column from the churn plan; `None` (the
+    /// default) keeps the always-active fast path bit-for-bit.
+    schedule: Option<Vec<bool>>,
     timer_gen: u64,
     pub stats: WorkerStats,
 }
@@ -162,8 +168,71 @@ impl WorkerNode {
             gather_started: 0,
             bcast_started: 0,
             paths: vec![None; n],
+            schedule: None,
             timer_gen: 0,
             stats: WorkerStats::default(),
+        }
+    }
+
+    /// Attach this worker's membership column (`schedule[iter]`: is the
+    /// worker a barrier participant at `iter`?). Inactive iterations are
+    /// skipped: the worker neither computes nor gathers, and resumes at
+    /// its next active iteration after receiving the aggregator's
+    /// join-push broadcast of the iteration before it.
+    pub fn with_schedule(mut self, schedule: Vec<bool>) -> WorkerNode {
+        self.schedule = Some(schedule);
+        self
+    }
+
+    fn active_at(&self, iter: u64) -> bool {
+        self.schedule
+            .as_ref()
+            .map_or(true, |s| s.get(iter as usize).copied().unwrap_or(true))
+    }
+
+    /// The first active iteration at or after `from`, if any remains.
+    fn next_active(&self, from: u64) -> Option<u64> {
+        (from..self.iters).find(|i| self.active_at(*i))
+    }
+
+    /// Enter the departed state until iteration `join` (which is active):
+    /// open a reliable receiver per route for the join-push broadcast the
+    /// aggregator sends on iteration `join - 1`'s broadcast flow.
+    fn begin_join_wait(&mut self, join: u64) {
+        debug_assert!(join > 0, "iteration 0 admissions go straight to compute");
+        self.phase = Phase::JoinWait;
+        self.iter = join;
+        for (r, route) in self.routes.iter().enumerate() {
+            self.txs[r] = None;
+            self.rxs[r] = Some(self.proto.make_rx(RxCfg {
+                flow: route.bcast_flow(join - 1),
+                bytes: route.bytes,
+                ec: EarlyCloseCfg::reliable(),
+                critical: vec![],
+                iter: join - 1,
+            }));
+        }
+    }
+
+    /// Advance past a finished iteration boundary (or the start of the
+    /// run): begin computing at `from` if active there, park in
+    /// [`Phase::JoinWait`] until the next active iteration, or finish.
+    fn advance_from(&mut self, ctx: &mut Ctx, from: u64) -> bool {
+        match self.next_active(from) {
+            None => {
+                self.iter = self.iters;
+                self.phase = Phase::Done;
+                false
+            }
+            Some(j) if j == from => {
+                self.iter = from;
+                self.begin_compute(ctx);
+                true
+            }
+            Some(j) => {
+                self.begin_join_wait(j);
+                false
+            }
         }
     }
 
@@ -234,13 +303,22 @@ impl WorkerNode {
                 self.txs[r] = None;
                 self.rx_prevs[r] = self.rxs[r].take();
             }
-            self.iter += 1;
-            if self.iter >= self.iters {
-                self.phase = Phase::Done;
-            } else {
-                self.begin_compute(ctx);
+            if self.advance_from(ctx, self.iter + 1) {
                 return;
             }
+        }
+        // Join-push completion: the model of iteration `iter - 1` arrived
+        // in full; rejoin the barrier by computing iteration `iter`.
+        // (Doneness is recomputed — entering JoinWait above replaced the
+        // receivers this turn's `rx_done` was measured over.)
+        if self.phase == Phase::JoinWait
+            && self.rxs.iter().all(|r| r.as_ref().map(|x| x.is_done()).unwrap_or(false))
+        {
+            for r in 0..self.routes.len() {
+                self.rx_prevs[r] = self.rxs[r].take();
+            }
+            self.begin_compute(ctx);
+            return;
         }
         // Re-arm protocol timers.
         self.timer_gen += 1;
@@ -272,7 +350,7 @@ impl Node for WorkerNode {
     }
 
     fn start(&mut self, ctx: &mut Ctx) {
-        self.begin_compute(ctx);
+        self.advance_from(ctx, 0);
     }
 
     fn on_packet(&mut self, ctx: &mut Ctx, pkt: Packet) {

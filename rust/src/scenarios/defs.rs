@@ -18,6 +18,7 @@
 
 use super::{CaseResult, ScenarioParams};
 use crate::cc::CcAlgo;
+use crate::churn::{parse_churn, ChurnSpec};
 use crate::codec::{parse_codec, CodecSpec};
 use crate::compute::parse_backend;
 use crate::config::{NetEnv, Workload};
@@ -87,6 +88,27 @@ fn codec_label(codec: &CodecSpec, label: String) -> String {
     }
 }
 
+/// The `--churn` specs applicable under aggregation `agg`: link-perturbing
+/// specs need a builder-owned star fabric (the builder's gate), which the
+/// `hier` aggregation does not provide, so those points are skipped rather
+/// than error. Membership-only churn (and the default `none`) applies
+/// everywhere.
+fn applicable_churns(p: &ScenarioParams, agg: &AggSpec) -> Vec<ChurnSpec> {
+    let hier = agg.name() == "hier" || agg.name().starts_with("hier:");
+    p.churns().into_iter().filter(|c| !c.perturbs_links() || !hier).collect()
+}
+
+/// Case label with an optional churn prefix: non-default churn specs
+/// prepend their canonical spec, so `--churn`-free runs keep the golden
+/// layout.
+fn churn_label(churn: &ChurnSpec, label: String) -> String {
+    if churn.is_default() {
+        label
+    } else {
+        format!("{}/{label}", churn.name())
+    }
+}
+
 /// `incast_sweep`: N→1 incast at degrees 2..64 under 0.5 % wire loss.
 pub(super) fn incast_sweep(p: &ScenarioParams) -> Vec<CaseResult> {
     let degrees: &[usize] = if p.quick { &[2, 8, 32] } else { &[2, 4, 8, 16, 32, 64] };
@@ -96,15 +118,21 @@ pub(super) fn incast_sweep(p: &ScenarioParams) -> Vec<CaseResult> {
         for agg in applicable_aggs(p, w, bytes) {
             for proto in p.matrix() {
                 for codec in applicable_codecs(p, &agg) {
-                    let b = base(&proto, w, bytes, p)
-                        .agg(agg.clone())
-                        .codec(codec.clone())
-                        .loss(LossModel::Bernoulli { p: 0.005 });
-                    out.push(run_case(
-                        codec_label(&codec, case_label(&agg, &proto, w)),
-                        w,
-                        b,
-                    ));
+                    for churn in applicable_churns(p, &agg) {
+                        let b = base(&proto, w, bytes, p)
+                            .agg(agg.clone())
+                            .codec(codec.clone())
+                            .churn(churn.clone())
+                            .loss(LossModel::Bernoulli { p: 0.005 });
+                        out.push(run_case(
+                            churn_label(
+                                &churn,
+                                codec_label(&codec, case_label(&agg, &proto, w)),
+                            ),
+                            w,
+                            b,
+                        ));
+                    }
                 }
             }
         }
@@ -121,11 +149,18 @@ pub(super) fn incast_heavy_loss(p: &ScenarioParams) -> Vec<CaseResult> {
     for agg in applicable_aggs(p, w, bytes) {
         for proto in p.matrix() {
             for codec in applicable_codecs(p, &agg) {
-                let b = base(&proto, w, bytes, p)
-                    .agg(agg.clone())
-                    .codec(codec.clone())
-                    .loss(LossModel::Bernoulli { p: 0.02 });
-                out.push(run_case(codec_label(&codec, case_label(&agg, &proto, w)), w, b));
+                for churn in applicable_churns(p, &agg) {
+                    let b = base(&proto, w, bytes, p)
+                        .agg(agg.clone())
+                        .codec(codec.clone())
+                        .churn(churn.clone())
+                        .loss(LossModel::Bernoulli { p: 0.02 });
+                    out.push(run_case(
+                        churn_label(&churn, codec_label(&codec, case_label(&agg, &proto, w))),
+                        w,
+                        b,
+                    ));
+                }
             }
         }
     }
@@ -159,11 +194,18 @@ pub(super) fn wan_bursty(p: &ScenarioParams) -> Vec<CaseResult> {
     for agg in applicable_aggs(p, w, bytes) {
         for proto in p.matrix() {
             for codec in applicable_codecs(p, &agg) {
-                let b = base(&proto, w, bytes, p)
-                    .agg(agg.clone())
-                    .codec(codec.clone())
-                    .net_env(NetEnv::WanBursty);
-                out.push(run_case(codec_label(&codec, case_label(&agg, &proto, w)), w, b));
+                for churn in applicable_churns(p, &agg) {
+                    let b = base(&proto, w, bytes, p)
+                        .agg(agg.clone())
+                        .codec(codec.clone())
+                        .churn(churn.clone())
+                        .net_env(NetEnv::WanBursty);
+                    out.push(run_case(
+                        churn_label(&churn, codec_label(&codec, case_label(&agg, &proto, w))),
+                        w,
+                        b,
+                    ));
+                }
             }
         }
     }
@@ -181,11 +223,18 @@ pub(super) fn cross_traffic(p: &ScenarioParams) -> Vec<CaseResult> {
     for agg in applicable_aggs(p, w, bytes) {
         for proto in p.matrix() {
             for codec in applicable_codecs(p, &agg) {
-                let b = base(&proto, w, bytes, p)
-                    .agg(agg.clone())
-                    .codec(codec.clone())
-                    .bg(BgFlow::udp_to_ps(BG_RATE, BG_STOP));
-                out.push(run_case(codec_label(&codec, case_label(&agg, &proto, w)), w, b));
+                for churn in applicable_churns(p, &agg) {
+                    let b = base(&proto, w, bytes, p)
+                        .agg(agg.clone())
+                        .codec(codec.clone())
+                        .churn(churn.clone())
+                        .bg(BgFlow::udp_to_ps(BG_RATE, BG_STOP));
+                    out.push(run_case(
+                        churn_label(&churn, codec_label(&codec, case_label(&agg, &proto, w))),
+                        w,
+                        b,
+                    ));
+                }
             }
         }
     }
@@ -217,11 +266,18 @@ pub(super) fn wan_clean(p: &ScenarioParams) -> Vec<CaseResult> {
     for agg in applicable_aggs(p, w, bytes) {
         for proto in p.matrix() {
             for codec in applicable_codecs(p, &agg) {
-                let b = base(&proto, w, bytes, p)
-                    .agg(agg.clone())
-                    .codec(codec.clone())
-                    .net_env(NetEnv::Wan1g);
-                out.push(run_case(codec_label(&codec, case_label(&agg, &proto, w)), w, b));
+                for churn in applicable_churns(p, &agg) {
+                    let b = base(&proto, w, bytes, p)
+                        .agg(agg.clone())
+                        .codec(codec.clone())
+                        .churn(churn.clone())
+                        .net_env(NetEnv::Wan1g);
+                    out.push(run_case(
+                        churn_label(&churn, codec_label(&codec, case_label(&agg, &proto, w))),
+                        w,
+                        b,
+                    ));
+                }
             }
         }
     }
@@ -447,6 +503,78 @@ pub(super) fn agg_matrix(p: &ScenarioParams) -> Vec<CaseResult> {
                 .agg(agg.clone())
                 .loss(LossModel::Bernoulli { p: 0.02 });
             out.push(run_case(format!("{}/{}/w{w}", agg.name(), proto.name()), w, b));
+        }
+    }
+    out
+}
+
+/// `churn_matrix`: the churn plane's conformance surface (DESIGN.md §1.5).
+/// Two parts:
+///
+/// * **Part A — accuracy under elastic membership.** Native-backend
+///   training on an 8-worker incast (clean wire, bubble filling on),
+///   churn at {0, 5, 10} % per epoch per worker (flap 2: departed workers
+///   rejoin two iterations later) × {ltp, ltp-adaptive, reno} ×
+///   per-worker straggler/Gilbert–Elliott link dynamics off/on
+///   (`stragglers=0.25,slow=4`). The conformance test asserts LTP at
+///   10 % churn lands within 1 % absolute accuracy of the
+///   stable-membership lossless baseline (the reliable `c0` row). Labels
+///   read `[sg/]bf/<proto>/c<pct>`.
+/// * **Part B — BST under churn.** The paper's modeled 8→1 incast at 2 %
+///   wire loss, churn {0, 10} % × {ltp, reno}: at 10 % churn LTP's mean
+///   BST must stay no worse than Reno's (the headline claim survives an
+///   elastic worker set). Labels read `bst/<proto>/c<pct>`.
+///
+/// `--proto`/`--agg`/`--churn` overrides are deliberately ignored so the
+/// scenario always reflects the whole matrix.
+pub(super) fn churn_matrix(p: &ScenarioParams) -> Vec<CaseResult> {
+    // Part A — accuracy (native backend, clean wire).
+    let w = 8;
+    let iters: u64 = if p.quick { 16 } else { 28 };
+    let points: &[(&str, &str)] =
+        &[("c0", "rate=0"), ("c5", "rate=0.05,flap=2"), ("c10", "rate=0.1,flap=2")];
+    let protos: Vec<ProtoSpec> = ["ltp", "ltp-adaptive", "reno"]
+        .iter()
+        .map(|s| parse_proto(s).expect("churn_matrix protocols parse against the registry"))
+        .collect();
+    let backend = parse_backend("native").expect("registry default");
+    let mut out = Vec::new();
+    for sg in [false, true] {
+        for (ctag, params) in points {
+            // The stable non-straggler point is the pristine baseline:
+            // the default `none` spec, not a zero-rate churn plan.
+            let spec = match (sg, *ctag) {
+                (false, "c0") => "none".to_string(),
+                (false, _) => format!("churn:{params}"),
+                (true, _) => format!("churn:{params},stragglers=0.25,slow=4"),
+            };
+            let churn = parse_churn(&spec).expect("churn_matrix specs parse");
+            for proto in &protos {
+                let b = RunBuilder::modeled(proto.clone(), Workload::Micro, w)
+                    .seed(p.seed)
+                    .iters(iters)
+                    .batches_per_epoch(4)
+                    .backend(backend.clone())
+                    .churn(churn.clone())
+                    .horizon(600 * SEC);
+                let tag = if sg { "sg/" } else { "" };
+                out.push(run_case(format!("{tag}bf/{}/{ctag}", proto.name()), w, b));
+            }
+        }
+    }
+    // Part B — BST on the modeled headline incast (real message sizes).
+    let bytes = per_worker_bytes(w, p);
+    let bst_protos: Vec<ProtoSpec> = ["ltp", "reno"]
+        .iter()
+        .map(|s| parse_proto(s).expect("churn_matrix protocols parse against the registry"))
+        .collect();
+    for (ctag, spec) in [("c0", "none"), ("c10", "churn:rate=0.1,flap=2")] {
+        let churn = parse_churn(spec).expect("churn_matrix specs parse");
+        for proto in &bst_protos {
+            let b = base(proto, w, bytes, p)
+                .churn(churn.clone())
+                .loss(LossModel::Bernoulli { p: 0.02 });
+            out.push(run_case(format!("bst/{}/{ctag}", proto.name()), w, b));
         }
     }
     out

@@ -57,11 +57,18 @@ pub struct ScenarioParams {
     /// non-default codecs apply only to single-PS cases (the builder's
     /// topology gate), so other aggregations skip them.
     pub codecs: Option<Vec<crate::codec::CodecSpec>>,
+    /// Churn-plane override (`--churn` specs, in order). `None` keeps
+    /// each scenario's default — stable membership (`none`), whose
+    /// reports are byte-identical to the pre-churn engine. Fixed-matrix
+    /// scenarios ignore the override; link-perturbing specs apply only
+    /// where the builder's fabric gate admits them, so incompatible
+    /// (agg, churn) points are skipped.
+    pub churns: Option<Vec<crate::churn::ChurnSpec>>,
 }
 
 impl ScenarioParams {
     pub fn new(seed: u64, quick: bool) -> ScenarioParams {
-        ScenarioParams { seed, quick, protos: None, aggs: None, codecs: None }
+        ScenarioParams { seed, quick, protos: None, aggs: None, codecs: None, churns: None }
     }
 
     /// The protocol matrix this run sweeps: the `--proto` override, or the
@@ -80,6 +87,12 @@ impl ScenarioParams {
     /// the default identity codec.
     pub fn codecs(&self) -> Vec<crate::codec::CodecSpec> {
         self.codecs.clone().unwrap_or_else(|| vec![crate::codec::default_codec()])
+    }
+
+    /// The churn specs this run sweeps: the `--churn` override, or the
+    /// default stable membership.
+    pub fn churns(&self) -> Vec<crate::churn::ChurnSpec> {
+        self.churns.clone().unwrap_or_else(|| vec![crate::churn::default_churn()])
     }
 }
 
@@ -193,6 +206,16 @@ pub const REGISTRY: &[Scenario] = &[
         incast_class: false,
         cases: defs::compression_matrix,
     },
+    Scenario {
+        name: "churn_matrix",
+        summary: "elastic membership: {0,5,10}% churn per epoch × {ltp, ltp-adaptive, reno} × stragglers on/off — native-backend accuracy plus a modeled BST part",
+        // Mixed accuracy/BST scenario; its churn-specific invariants
+        // (LTP vs Reno under churn, accuracy vs the stable lossless
+        // baseline) live in the conformance test, not the generic
+        // incast-class pairing.
+        incast_class: false,
+        cases: defs::churn_matrix,
+    },
 ];
 
 /// The registry (function form, for iteration symmetry with `find`).
@@ -256,6 +279,12 @@ pub struct CaseResult {
     /// Mean tensor-priority-weighted delivered importance; `None` under
     /// the default codec.
     pub mean_importance: Option<f64>,
+    /// Canonical churn spec the case ran under (`none` by default).
+    pub churn: String,
+    /// Fewest barrier members over the run (equals `workers` when stable).
+    pub active_min: usize,
+    /// Most barrier members over the run.
+    pub active_max: usize,
 }
 
 impl CaseResult {
@@ -295,6 +324,9 @@ impl CaseResult {
             codec: r.codec.clone(),
             gather_wire_bytes: r.gather_wire_bytes,
             mean_importance: r.mean_importance,
+            churn: r.churn.clone(),
+            active_min: r.active_min,
+            active_max: r.active_max,
         }
     }
 
@@ -344,6 +376,14 @@ impl CaseResult {
                 "mean_importance",
                 self.mean_importance.map(Json::Num).unwrap_or(Json::Null),
             ));
+        }
+        // Churned runs append their churn block; stable (`none`) cases
+        // keep the original key set, so pre-churn reports stay
+        // byte-identical.
+        if self.churn != "none" {
+            pairs.push(("churn", self.churn.as_str().into()));
+            pairs.push(("active_min", self.active_min.into()));
+            pairs.push(("active_max", self.active_max.into()));
         }
         // Multi-aggregator runs append their spec and per-aggregator
         // breakdown; single-PS cases keep the original key set, so

@@ -3,7 +3,8 @@
 //! distill a machine-readable bench report (`BENCH_scenarios.json`).
 //!
 //! **Determinism contract.** A [`SweepJob`] is a pure function of
-//! `(scenario_index, seed, quick, protos, aggs, codecs)`: every simulation owns
+//! `(scenario_index, seed, quick, protos, aggs, codecs, churns)`: every
+//! simulation owns
 //! its `Sim`, whose RNG streams derive from the job's seed, and nothing
 //! is shared between jobs. Results are merged in job order, so the report list — and its
 //! serialized bytes — are identical for any `--jobs N`. Wall-clock timing
@@ -15,15 +16,17 @@
 //! serial loop.
 
 use super::{registry, ScenarioParams, ScenarioReport};
+use crate::churn::ChurnSpec;
 use crate::codec::CodecSpec;
 use crate::metrics::Json;
 use crate::ps::{AggSpec, ProtoSpec};
 use crate::runtime::pool;
 use crate::trace;
 
-/// One enumerable unit of sweep work. Protocol, aggregation, and codec
-/// handles are cheap clones of thread-shareable specs, so a job remains a
-/// pure function of `(scenario_index, seed, quick, protos, aggs, codecs)`.
+/// One enumerable unit of sweep work. Protocol, aggregation, codec, and
+/// churn handles are cheap clones of thread-shareable specs, so a job
+/// remains a pure function of
+/// `(scenario_index, seed, quick, protos, aggs, codecs, churns)`.
 #[derive(Debug, Clone)]
 pub struct SweepJob {
     /// Index into [`registry`].
@@ -39,6 +42,9 @@ pub struct SweepJob {
     /// Gradient-codec override (`--codec` specs); `None` keeps the
     /// default identity codec.
     pub codecs: Option<Vec<CodecSpec>>,
+    /// Churn-plane override (`--churn` specs); `None` keeps stable
+    /// membership on pristine links.
+    pub churns: Option<Vec<ChurnSpec>>,
 }
 
 /// Enumerate the (seed-major) job list for a set of registry indices.
@@ -49,6 +55,7 @@ pub fn sweep_jobs(
     protos: Option<Vec<ProtoSpec>>,
     aggs: Option<Vec<AggSpec>>,
     codecs: Option<Vec<CodecSpec>>,
+    churns: Option<Vec<ChurnSpec>>,
 ) -> Vec<SweepJob> {
     let mut out = Vec::with_capacity(indices.len() * seeds.len());
     for &seed in seeds {
@@ -61,6 +68,7 @@ pub fn sweep_jobs(
                 protos: protos.clone(),
                 aggs: aggs.clone(),
                 codecs: codecs.clone(),
+                churns: churns.clone(),
             });
         }
     }
@@ -68,7 +76,7 @@ pub fn sweep_jobs(
 }
 
 /// Deterministic training summary of one job's backend-attached cases
-/// (schema ltp-bench-v6; `null` for jobs whose scenario trains nothing).
+/// (schema ltp-bench-v7; `null` for jobs whose scenario trains nothing).
 #[derive(Debug, Clone, Copy)]
 pub struct BenchTrain {
     /// Cases that carried a `train` block.
@@ -94,6 +102,17 @@ pub struct BenchJob {
     /// Canonical gradient-codec spec strings the job's cases exercised,
     /// first-occurrence order (`["dense"]` without a `--codec` override).
     pub codecs: Vec<String>,
+    /// Canonical churn spec strings the job's cases exercised,
+    /// first-occurrence order (`["none"]` without a `--churn` override) —
+    /// schema v7.
+    pub churns: Vec<String>,
+    /// Minimum per-iteration active worker count over the job's cases
+    /// (schema v7; equals each case's nominal degree under stable
+    /// membership).
+    pub active_min: usize,
+    /// Maximum per-iteration active worker count over the job's cases
+    /// (schema v7).
+    pub active_max: usize,
     pub cases: usize,
     /// BSP iterations completed, summed over the scenario's cases.
     pub iters: usize,
@@ -101,7 +120,7 @@ pub struct BenchJob {
     pub mean_bst_ms: f64,
     pub mean_delivered: f64,
     /// Gather-direction application bytes on the wire, summed over the
-    /// job's cases — the codec plane's size claim (schema v6).
+    /// job's cases — the codec plane's size claim (since schema v6).
     pub wire_bytes: u64,
     /// Training summary over the job's backend-attached cases, if any
     /// (the key is always present, `null` without a backend).
@@ -119,6 +138,14 @@ impl BenchJob {
             ("protos", Json::Arr(self.protos.iter().map(|p| p.as_str().into()).collect())),
             ("aggs", Json::Arr(self.aggs.iter().map(|a| a.as_str().into()).collect())),
             ("codecs", Json::Arr(self.codecs.iter().map(|c| c.as_str().into()).collect())),
+            ("churns", Json::Arr(self.churns.iter().map(|c| c.as_str().into()).collect())),
+            (
+                "active_workers",
+                Json::obj(vec![
+                    ("min", self.active_min.into()),
+                    ("max", self.active_max.into()),
+                ]),
+            ),
             ("cases", self.cases.into()),
             ("iters", self.iters.into()),
             ("mean_bst_ms", self.mean_bst_ms.into()),
@@ -160,7 +187,7 @@ pub struct BenchReport {
 
 impl BenchReport {
     /// Minimum per-job events/sec — the regression-threshold headline
-    /// (schema v6). The floor, not the mean: one scenario collapsing is
+    /// (since schema v6). The floor, not the mean: one scenario collapsing is
     /// what a perf gate must catch, and a mean would average it away.
     pub fn events_per_sec_floor(&self) -> f64 {
         let floor =
@@ -173,7 +200,7 @@ impl BenchReport {
             if self.wall_secs > 0.0 { self.sim_events as f64 / self.wall_secs } else { 0.0 };
         let speedup = if self.wall_secs > 0.0 { self.cpu_secs / self.wall_secs } else { 1.0 };
         Json::obj(vec![
-            ("schema", "ltp-bench-v6".into()),
+            ("schema", "ltp-bench-v7".into()),
             // How the numbers came to be: "measured" (this process timed
             // the runs) vs "bootstrap" (a hand-committed seed snapshot —
             // see rust/BENCH_scenarios.json).
@@ -281,8 +308,8 @@ pub fn check_regression(
     let mut notes = Vec::new();
     for (side, json) in [("baseline", baseline_json), ("current", current_json)] {
         match bench_field_str(json, "schema") {
-            Some(s) if s == "ltp-bench-v6" => {}
-            Some(s) => notes.push(format!("{side} uses schema {s}, expected ltp-bench-v6")),
+            Some(s) if s == "ltp-bench-v7" => {}
+            Some(s) => notes.push(format!("{side} uses schema {s}, expected ltp-bench-v7")),
             None => return Err(format!("{side} is not a bench report (no schema field)")),
         }
     }
@@ -411,6 +438,7 @@ pub fn run_sweep_traced(
             protos: job.protos,
             aggs: job.aggs,
             codecs: job.codecs,
+            churns: job.churns,
         });
         (report, jt.elapsed().as_secs_f64(), cap.map(trace::Capture::finish))
     });
@@ -429,6 +457,7 @@ pub fn run_sweep_traced(
         let mut protos: Vec<String> = Vec::new();
         let mut aggs: Vec<String> = Vec::new();
         let mut codecs: Vec<String> = Vec::new();
+        let mut churns: Vec<String> = Vec::new();
         for c in &report.cases {
             if !protos.contains(&c.proto) {
                 protos.push(c.proto.clone());
@@ -439,7 +468,12 @@ pub fn run_sweep_traced(
             if !codecs.contains(&c.codec) {
                 codecs.push(c.codec.clone());
             }
+            if !churns.contains(&c.churn) {
+                churns.push(c.churn.clone());
+            }
         }
+        let active_min = report.cases.iter().map(|c| c.active_min).min().unwrap_or(0);
+        let active_max = report.cases.iter().map(|c| c.active_max).max().unwrap_or(0);
         let trained: Vec<&crate::compute::TrainStats> =
             report.cases.iter().filter_map(|c| c.train.as_ref()).collect();
         let train = if trained.is_empty() {
@@ -458,6 +492,9 @@ pub fn run_sweep_traced(
             protos,
             aggs,
             codecs,
+            churns,
+            active_min,
+            active_max,
             cases: report.cases.len(),
             iters: report.cases.iter().map(|c| c.iters).sum(),
             mean_bst_ms: report.cases.iter().map(|c| c.mean_bst_ms).sum::<f64>()
@@ -498,14 +535,14 @@ mod tests {
 
     #[test]
     fn job_enumeration_is_seed_major() {
-        let jobs = sweep_jobs(&[0, 1], &[5, 6], true, None, None, None);
+        let jobs = sweep_jobs(&[0, 1], &[5, 6], true, None, None, None, None);
         let key: Vec<(u64, usize)> = jobs.iter().map(|j| (j.seed, j.scenario_index)).collect();
         assert_eq!(key, vec![(5, 0), (5, 1), (6, 0), (6, 1)]);
     }
 
     #[test]
     fn bench_report_carries_perf_fields() {
-        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, None, None, None);
+        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, None, None, None, None);
         let result = run_sweep(jobs, 2);
         assert_eq!(result.reports.len(), 1);
         assert_eq!(result.bench.per_job.len(), 1);
@@ -518,7 +555,7 @@ mod tests {
         assert!(j.mean_bst_ms > 0.0);
         let json = result.bench.to_json().render();
         for key in [
-            "\"schema\":\"ltp-bench-v6\"",
+            "\"schema\":\"ltp-bench-v7\"",
             "\"provenance\":\"measured\"",
             "\"runs\":[",
             "\"events_per_sec\":",
@@ -527,8 +564,10 @@ mod tests {
             "\"protos\":[\"ltp\",\"reno\"]",
             "\"aggs\":[\"ps\"]",
             "\"codecs\":[\"dense\"]",
+            "\"churns\":[\"none\"]",
+            "\"active_workers\":{\"min\":",
             "\"wire_bytes\":",
-            // No backend attached: the v6 train block is present but null.
+            // No backend attached: the train block is present but null.
             "\"train\":null",
         ] {
             assert!(json.contains(key), "missing `{key}` in {json}");
@@ -554,6 +593,9 @@ mod tests {
                 protos: vec!["ltp".to_string()],
                 aggs: vec!["ps".to_string()],
                 codecs: vec!["dense".to_string()],
+                churns: vec!["none".to_string()],
+                active_min: 2,
+                active_max: 2,
                 cases: 3,
                 iters: 9,
                 mean_bst_ms: 1.5,
@@ -566,7 +608,7 @@ mod tests {
             }],
         };
         for json in [report.to_json().render(), report.render_json()] {
-            assert_eq!(bench_field_str(&json, "schema").as_deref(), Some("ltp-bench-v6"));
+            assert_eq!(bench_field_str(&json, "schema").as_deref(), Some("ltp-bench-v7"));
             assert_eq!(bench_field_num(&json, "sim_events"), Some(4_000_000.0));
             assert_eq!(
                 bench_scenario_events_per_sec(&json, "incast_sweep"),
@@ -579,7 +621,7 @@ mod tests {
 
     #[test]
     fn scenario_scan_takes_the_best_run_and_ignores_others() {
-        let json = r#"{"schema": "ltp-bench-v6", "events_per_sec": 9.0, "runs": [
+        let json = r#"{"schema": "ltp-bench-v7", "events_per_sec": 9.0, "runs": [
             {"scenario": "wan_clean", "events_per_sec": 50.0},
             {"scenario": "incast_sweep", "events_per_sec": 10.0},
             {"scenario": "incast_sweep", "events_per_sec": 30.0}]}"#;
@@ -591,7 +633,7 @@ mod tests {
     fn regression_gate_passes_within_threshold_and_fails_beyond() {
         let bench = |eps: f64, provenance: &str| {
             format!(
-                r#"{{"schema": "ltp-bench-v6", "provenance": "{provenance}",
+                r#"{{"schema": "ltp-bench-v7", "provenance": "{provenance}",
                      "runs": [{{"scenario": "incast_sweep", "events_per_sec": {eps}}}]}}"#
             )
         };
@@ -613,7 +655,7 @@ mod tests {
 
     #[test]
     fn bench_scenarios_enumerates_first_occurrence_order() {
-        let json = r#"{"schema": "ltp-bench-v6", "runs": [
+        let json = r#"{"schema": "ltp-bench-v7", "runs": [
             {"scenario": "incast_sweep", "events_per_sec": 10.0},
             {"scenario": "wan_clean", "events_per_sec": 50.0},
             {"scenario": "incast_sweep", "events_per_sec": 30.0}]}"#;
@@ -623,11 +665,11 @@ mod tests {
 
     #[test]
     fn all_mode_gate_fails_loudly_when_a_baseline_scenario_is_missing() {
-        let baseline = r#"{"schema": "ltp-bench-v6", "provenance": "measured", "runs": [
+        let baseline = r#"{"schema": "ltp-bench-v7", "provenance": "measured", "runs": [
             {"scenario": "incast_sweep", "events_per_sec": 1000.0},
             {"scenario": "incast_xl", "events_per_sec": 500.0}]}"#;
         // Current covers both baseline scenarios: two checks, both ok.
-        let full = r#"{"schema": "ltp-bench-v6", "provenance": "measured", "runs": [
+        let full = r#"{"schema": "ltp-bench-v7", "provenance": "measured", "runs": [
             {"scenario": "incast_sweep", "events_per_sec": 1100.0},
             {"scenario": "incast_xl", "events_per_sec": 600.0},
             {"scenario": "wan_clean", "events_per_sec": 9.0}]}"#;
@@ -636,7 +678,7 @@ mod tests {
         assert!(checks.iter().all(|c| c.ok), "{checks:?}");
         // Current missing a baseline scenario: an error naming it — the
         // silent-pass regression this mode exists to prevent.
-        let partial = r#"{"schema": "ltp-bench-v6", "provenance": "measured", "runs": [
+        let partial = r#"{"schema": "ltp-bench-v7", "provenance": "measured", "runs": [
             {"scenario": "incast_sweep", "events_per_sec": 1100.0}]}"#;
         let err = check_regression_all(baseline, partial, 20.0).unwrap_err();
         assert!(err.contains("incast_xl"), "error names the missing scenario: {err}");
@@ -646,7 +688,7 @@ mod tests {
 
     #[test]
     fn traced_sweep_records_match_across_job_counts() {
-        let jobs = || sweep_jobs(&[index_of("wan_clean")], &[7, 8], true, None, None, None);
+        let jobs = || sweep_jobs(&[index_of("wan_clean")], &[7, 8], true, None, None, None, None);
         let (serial, recs1) = run_sweep_traced(jobs(), 1, true);
         let (pooled, recs2) = run_sweep_traced(jobs(), 2, true);
         let recs1 = recs1.expect("traced run returns records");
@@ -667,7 +709,7 @@ mod tests {
 
     #[test]
     fn accuracy_matrix_jobs_carry_the_train_block() {
-        let jobs = sweep_jobs(&[index_of("accuracy_matrix")], &[3], true, None, None, None);
+        let jobs = sweep_jobs(&[index_of("accuracy_matrix")], &[3], true, None, None, None, None);
         let result = run_sweep(jobs, 1);
         let j = &result.bench.per_job[0];
         let t = j.train.expect("backend-attached scenario summarizes training");
@@ -679,7 +721,7 @@ mod tests {
         // Byte-identity across job counts holds for the training scenario
         // too (the pool determinism contract).
         let again = run_sweep(
-            sweep_jobs(&[index_of("accuracy_matrix")], &[3], true, None, None, None),
+            sweep_jobs(&[index_of("accuracy_matrix")], &[3], true, None, None, None, None),
             2,
         );
         assert_eq!(result.render_json(), again.render_json());
@@ -688,7 +730,7 @@ mod tests {
     #[test]
     fn proto_override_reaches_the_cases() {
         let protos = vec![crate::ps::parse_proto("cubic").unwrap()];
-        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, Some(protos), None, None);
+        let jobs = sweep_jobs(&[index_of("wan_clean")], &[3], true, Some(protos), None, None, None);
         let result = run_sweep(jobs, 1);
         let report = &result.reports[0];
         assert!(!report.cases.is_empty());
@@ -700,7 +742,7 @@ mod tests {
     fn agg_override_reaches_the_cases_and_bench() {
         let aggs = vec![crate::ps::parse_agg("sharded:n=2").unwrap()];
         let jobs =
-            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, Some(aggs), None);
+            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, Some(aggs), None, None);
         let result = run_sweep(jobs, 1);
         let report = &result.reports[0];
         assert!(!report.cases.is_empty());
@@ -717,7 +759,7 @@ mod tests {
     fn codec_override_reaches_the_cases_and_bench() {
         let codecs = vec![crate::codec::parse_codec("topk:pct=0.1").unwrap()];
         let jobs =
-            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, None, Some(codecs));
+            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, None, Some(codecs), None);
         let result = run_sweep(jobs, 1);
         let report = &result.reports[0];
         assert!(!report.cases.is_empty());
@@ -735,7 +777,7 @@ mod tests {
         let json = result.render_json();
         assert!(json.contains("\"codec\": \"topk:pct=0.1\""), "{json}");
         let dense = run_sweep(
-            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, None, None),
+            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, None, None, None),
             1,
         );
         assert!(
@@ -747,11 +789,50 @@ mod tests {
     }
 
     #[test]
+    fn churn_override_reaches_the_cases_and_bench() {
+        let churns = vec![crate::churn::parse_churn("churn:rate=0.9,flap=2").unwrap()];
+        let jobs =
+            sweep_jobs(&[index_of("incast_heavy_loss")], &[3], true, None, None, None, Some(churns));
+        let result = run_sweep(jobs, 1);
+        let report = &result.reports[0];
+        assert!(!report.cases.is_empty());
+        assert!(
+            report.cases.iter().all(|c| c.churn == "churn:rate=0.9,flap=2"),
+            "{:?}",
+            report.cases
+        );
+        assert!(report.cases.iter().all(|c| c.label.starts_with("churn:rate=0.9,flap=2/")));
+        // Departures shrink at least one barrier below the nominal degree,
+        // and the bench record carries the churned bounds.
+        assert!(report.cases.iter().all(|c| c.active_min <= c.active_max));
+        assert!(report.cases.iter().any(|c| c.active_min < c.workers), "{:?}", report.cases);
+        let j = &result.bench.per_job[0];
+        assert_eq!(j.churns, ["churn:rate=0.9,flap=2"]);
+        assert!(j.active_min <= j.active_max);
+        let json = result.render_json();
+        assert!(json.contains("\"churn\": \"churn:rate=0.9,flap=2\""), "{json}");
+        // Byte-identity across job counts holds under churn too.
+        let again = run_sweep(
+            sweep_jobs(
+                &[index_of("incast_heavy_loss")],
+                &[3],
+                true,
+                None,
+                None,
+                None,
+                Some(vec![crate::churn::parse_churn("churn:rate=0.9,flap=2").unwrap()]),
+            ),
+            2,
+        );
+        assert_eq!(result.render_json(), again.render_json());
+    }
+
+    #[test]
     fn single_report_renders_as_object_many_as_array() {
-        let one = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1], true, None, None, None), 1);
+        let one = run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1], true, None, None, None, None), 1);
         assert!(one.render_json().starts_with('{'));
         let two =
-            run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1, 2], true, None, None, None), 2);
+            run_sweep(sweep_jobs(&[index_of("wan_clean")], &[1, 2], true, None, None, None, None), 2);
         assert!(two.render_json().starts_with('['));
         assert_eq!(two.reports[0].seed, 1);
         assert_eq!(two.reports[1].seed, 2);

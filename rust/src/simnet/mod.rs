@@ -22,7 +22,7 @@ pub use link::{Link, LinkCfg, LinkStats, LossModel};
 pub use pool::{BufId, BufPool};
 pub use sim::{Ctx, EntityId, Event, LinkId, Node, Sim};
 pub use topo::{
-    n_rack, star, two_rack, CountingSink, CrossTraffic, RackTopology, StarTopology,
+    n_rack, star, star_with, two_rack, CountingSink, CrossTraffic, RackTopology, StarTopology,
     TwoRackTopology,
 };
 

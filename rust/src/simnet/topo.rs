@@ -27,15 +27,30 @@ pub struct StarTopology {
 /// per-hop route lookup is an indexed load, so an incast-degree-1024 star
 /// builds (and forwards) without hashing or reallocation.
 pub fn star(sim: &mut Sim, nodes: Vec<Box<dyn Node>>, cfg: LinkCfg, fwd_delay: Nanos) -> StarTopology {
+    let cfgs = vec![cfg; nodes.len()];
+    star_with(sim, nodes, &cfgs, fwd_delay)
+}
+
+/// [`star`] with one [`LinkCfg`] per host (`cfgs[i]` configures host i's
+/// duplex edge) — the churn plane's heterogeneous-edge fabric. The entity
+/// and link creation order is identical to [`star`], so a uniform `cfgs`
+/// slice reproduces `star`'s RNG streams (and report bytes) exactly.
+pub fn star_with(
+    sim: &mut Sim,
+    nodes: Vec<Box<dyn Node>>,
+    cfgs: &[LinkCfg],
+    fwd_delay: Nanos,
+) -> StarTopology {
     let n = nodes.len();
+    assert_eq!(cfgs.len(), n, "one LinkCfg per host");
     sim.reserve(n + 1, 2 * n);
     let switch = sim.add_switch(fwd_delay);
     let mut hosts = Vec::with_capacity(n);
     let mut uplinks = Vec::with_capacity(n);
     let mut downlinks = Vec::with_capacity(n);
-    for node in nodes {
+    for (node, cfg) in nodes.into_iter().zip(cfgs) {
         let h = sim.add_host(node);
-        let (up, down) = sim.add_duplex(h, switch, cfg);
+        let (up, down) = sim.add_duplex(h, switch, *cfg);
         sim.set_default_uplink(h, up);
         hosts.push(h);
         uplinks.push(up);

@@ -50,9 +50,12 @@ fn conformance(name: &str) -> ScenarioReport {
             c.mean_delivered
         );
         if is_loss_tolerant(&c.proto) {
-            // Every completed gather produced a close record…
+            // Every completed gather produced a close record. Under churn
+            // the per-iteration gather count is the *active* worker set,
+            // so the provable floor is the smallest barrier's degree.
+            let gathers_floor = if c.churn == "none" { c.workers } else { c.active_min };
             assert!(
-                c.nondeadline_closes + c.deadline_closes >= (c.workers * c.iters) as u64,
+                c.nondeadline_closes + c.deadline_closes >= (gathers_floor * c.iters) as u64,
                 "{name}/{}: missing close records",
                 c.label
             );
@@ -102,6 +105,7 @@ fn registry_enumerates_the_matrix() {
         "cross_traffic",
         "coexist_ltp_tcp",
         "incast_xl",
+        "churn_matrix",
     ] {
         assert!(names.contains(&expected), "missing scenario `{expected}` in {names:?}");
     }
@@ -406,13 +410,125 @@ fn compression_matrix_is_byte_identical_serial_vs_parallel() {
     // accounting are all per-job and seed-driven.
     use ltp::scenarios::sweep::{run_sweep, sweep_jobs};
     let idx = registry().iter().position(|s| s.name == "compression_matrix").unwrap();
-    let serial = run_sweep(sweep_jobs(&[idx], &[7], true, None, None, None), 1);
-    let parallel = run_sweep(sweep_jobs(&[idx], &[7], true, None, None, None), 4);
+    let serial = run_sweep(sweep_jobs(&[idx], &[7], true, None, None, None, None), 1);
+    let parallel = run_sweep(sweep_jobs(&[idx], &[7], true, None, None, None, None), 4);
     assert_eq!(
         serial.render_json(),
         parallel.render_json(),
         "compression_matrix must serialize byte-identically for --jobs 1 and --jobs 4"
     );
+}
+
+#[test]
+fn scenario_churn_matrix() {
+    let report = conformance("churn_matrix");
+    // Part A: {plain, straggler} × {c0, c5, c10} × {ltp, ltp-adaptive,
+    // reno} on the native backend; Part B: {c0, c10} × {ltp, reno} on the
+    // modeled incast.
+    assert_eq!(report.cases.len(), 2 * 3 * 3 + 4, "{:?}", report.cases);
+    let case = |label: &str| {
+        report
+            .cases
+            .iter()
+            .find(|c| c.label == label)
+            .unwrap_or_else(|| panic!("missing case `{label}`"))
+    };
+    let acc = |label: &str| {
+        case(label)
+            .train
+            .unwrap_or_else(|| panic!("{label}: missing train block"))
+            .accuracy
+    };
+    // The stable-membership lossless baseline converges.
+    let baseline = acc("bf/reno/c0");
+    assert!(baseline > 0.95, "the stable lossless baseline must converge: {baseline}");
+    // Churn is non-vacuous at 10%: at least one barrier ran below the
+    // nominal degree (the schedule is a pure function of (spec, workers,
+    // iters, bpe, seed), so this is deterministic at seed 7).
+    let churned = case("bf/ltp/c10");
+    assert_eq!(churned.churn, "churn:rate=0.1,flap=2");
+    assert!(
+        churned.active_min < churned.workers,
+        "10% churn must shrink some barrier: active {}..{} of {}",
+        churned.active_min,
+        churned.active_max,
+        churned.workers
+    );
+    assert!(churned.active_min >= 1, "the min=1 floor holds");
+    // The elastic-membership no-sacrifice bound (the tentpole acceptance
+    // criterion): bubble-filled LTP at 10% churn per epoch lands within
+    // 1% absolute accuracy of the stable-membership lossless baseline.
+    let ltp10 = acc("bf/ltp/c10");
+    assert!(
+        ltp10 + 0.01 >= baseline,
+        "bubble-filled LTP at 10% churn must stay within 1% of the stable \
+         baseline: ltp {ltp10} vs reno {baseline}"
+    );
+    // Stable rows are exactly the stable path: full degree every barrier.
+    for proto in ["ltp", "ltp-adaptive", "reno"] {
+        let c = case(&format!("bf/{proto}/c0"));
+        assert_eq!(c.churn, "none", "{}: the c0 baseline runs the default spec", c.label);
+        assert_eq!((c.active_min, c.active_max), (c.workers, c.workers), "{}", c.label);
+    }
+    // Part B — the headline claim survives an elastic worker set: at 10%
+    // churn LTP's mean BST stays no worse than Reno's under the same
+    // schedule (5% slack guards float-level ties only).
+    let (ltp, reno) = (case("bst/ltp/c10"), case("bst/reno/c10"));
+    assert!(
+        ltp.mean_bst_ms <= reno.mean_bst_ms * 1.05,
+        "churned LTP mean BST {:.2} ms must not exceed reno {:.2} ms",
+        ltp.mean_bst_ms,
+        reno.mean_bst_ms
+    );
+    assert!(ltp.drops_random > 0, "2% wire loss must be in play");
+    // JSON gating: churned rows emit the churn keys, stable rows do not.
+    let json = report.to_json().render();
+    assert!(json.contains("\"churn\":\"churn:rate=0.1,flap=2\""), "{json}");
+    assert!(json.contains("\"active_min\":"), "{json}");
+    // Straggler rows carry their combined canonical spec.
+    assert_eq!(
+        case("sg/bf/ltp/c10").churn,
+        "churn:rate=0.1,flap=2,stragglers=0.25,slow=4"
+    );
+}
+
+#[test]
+fn churn_matrix_is_byte_identical_serial_vs_parallel() {
+    // The churn plane preserves the sweep determinism contract: membership
+    // schedules and per-worker link draws are pure functions of the job
+    // seed, never of scheduling.
+    use ltp::scenarios::sweep::{run_sweep, sweep_jobs};
+    let idx = registry().iter().position(|s| s.name == "churn_matrix").unwrap();
+    let serial = run_sweep(sweep_jobs(&[idx], &[7], true, None, None, None, None), 1);
+    let parallel = run_sweep(sweep_jobs(&[idx], &[7], true, None, None, None, None), 4);
+    assert_eq!(
+        serial.render_json(),
+        parallel.render_json(),
+        "churn_matrix must serialize byte-identically for --jobs 1 and --jobs 4"
+    );
+}
+
+#[test]
+fn scenario_matrix_respects_churn_overrides() {
+    // `--churn none` reproduces the default bytes exactly; a non-default
+    // spec prefixes its canonical form onto every label.
+    let mut p = ScenarioParams::new(7, true);
+    p.churns = Some(vec![ltp::churn::parse_churn("none").unwrap()]);
+    let explicit = find("incast_heavy_loss").unwrap().run(&p);
+    let default = find("incast_heavy_loss").unwrap().run(&params());
+    assert_eq!(
+        explicit.render_json(),
+        default.render_json(),
+        "--churn none must be byte-identical to the bare default"
+    );
+    p.churns = Some(vec![ltp::churn::parse_churn("churn:rate=0.9,flap=2").unwrap()]);
+    let churned = find("incast_heavy_loss").unwrap().run(&p);
+    assert!(
+        churned.cases.iter().all(|c| c.label.starts_with("churn:rate=0.9,flap=2/")),
+        "{:?}",
+        churned.cases
+    );
+    assert!(churned.cases.iter().all(|c| c.churn == "churn:rate=0.9,flap=2"));
 }
 
 #[test]
@@ -458,8 +574,8 @@ fn incast_xl_is_byte_identical_serial_vs_parallel() {
     // exercised on the largest scenario in the registry.
     use ltp::scenarios::sweep::{run_sweep, sweep_jobs};
     let idx = registry().iter().position(|s| s.name == "incast_xl").unwrap();
-    let serial = run_sweep(sweep_jobs(&[idx], &[7, 8], true, None, None, None), 1);
-    let parallel = run_sweep(sweep_jobs(&[idx], &[7, 8], true, None, None, None), 4);
+    let serial = run_sweep(sweep_jobs(&[idx], &[7, 8], true, None, None, None, None), 1);
+    let parallel = run_sweep(sweep_jobs(&[idx], &[7, 8], true, None, None, None, None), 4);
     assert_eq!(
         serial.render_json(),
         parallel.render_json(),
