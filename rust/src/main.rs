@@ -6,7 +6,10 @@
 //!              [--agg SPEC]... [--codec SPEC]... [--churn SPEC]...
 //! ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]
 //! ltp trace <scenario> --out FILE [--seed N | --seeds A..B] [--quick] [--jobs N]
-//! ltp replay <trace> [--out FILE] [--breakdown [FILE]]
+//!           [--bench FILE]
+//! ltp replay <trace> [--out FILE] [--breakdown [FILE]] [--stats [FILE]]
+//!            [--viz FILE.svg|FILE.html] [--sim N]
+//! ltp diff <a.trace> <b.trace> [--top K] [--json] [--out FILE]
 //! ltp proto <list|parse SPEC>               protocol registry / spec grammar
 //! ltp agg <list|parse SPEC>                 aggregation-topology registry
 //! ltp backend <list|parse SPEC>             compute-backend registry
@@ -411,7 +414,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
 fn cmd_trace(args: &Args) -> Result<()> {
     use ltp::scenarios::{self, sweep};
     let usage = "usage: ltp trace <scenario> --out FILE [--seed N | --seeds A..B] \
-                 [--quick] [--jobs N]";
+                 [--quick] [--jobs N] [--bench FILE]";
     let which = args.positional.get(1).map(String::as_str).context(usage)?;
     anyhow::ensure!(
         which != "all" && which != "list",
@@ -436,22 +439,30 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let seeds = parse_seeds(args)?;
     let jobs = sweep::sweep_jobs(&[index], &seeds, quick, None, None, None, None);
     let n = jobs.len();
-    let (_, records) = sweep::run_sweep_traced(jobs, n_jobs, true);
+    let (result, records) = sweep::run_sweep_traced(jobs, n_jobs, true);
     let records = records.expect("traced sweep returns records");
     ltp::trace::write_file(out, which, quick, n as u32, &records).map_err(|e| anyhow::anyhow!(e))?;
     eprintln!("wrote {out}: {} record(s) from {n} job(s) of `{which}`", records.len());
+    if let Some(bp) = args.get("bench") {
+        anyhow::ensure!(bp != "true", "--bench requires a file path under `ltp trace`");
+        let mut bench = result.bench;
+        bench.trace = Some(out.to_string());
+        std::fs::write(bp, bench.render_json()).with_context(|| format!("writing {bp}"))?;
+        eprintln!("wrote {bp} (trace provenance: {out})");
+    }
     Ok(())
 }
 
 /// `ltp replay <trace>` — re-drive a recorded run, verify it reproduces
 /// the trace byte-for-byte, and emit the regenerated report
-/// (byte-identical to the recorded run's `ltp scenario --json` output)
-/// and/or the per-iteration BST breakdown (`--breakdown`).
+/// (byte-identical to the recorded run's `ltp scenario --json` output),
+/// the per-iteration BST breakdown (`--breakdown`), the per-link/flow
+/// stats report (`--stats`), or a link-occupancy timeline (`--viz`).
 fn cmd_replay(args: &Args) -> Result<()> {
-    let path = args
-        .positional
-        .get(1)
-        .context("usage: ltp replay <trace> [--out FILE] [--breakdown [FILE]]")?;
+    let path = args.positional.get(1).context(
+        "usage: ltp replay <trace> [--out FILE] [--breakdown [FILE]] [--stats [FILE]] \
+         [--viz FILE.svg|FILE.html] [--sim N]",
+    )?;
     let file = ltp::trace::read_file(path).map_err(|e| anyhow::anyhow!(e))?;
     let outcome = ltp::trace::replay(&file).map_err(|e| anyhow::anyhow!(e))?;
     eprintln!(
@@ -467,7 +478,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
             eprintln!("wrote {p}");
         }
         None => {
-            if !args.has("breakdown") {
+            if !args.has("breakdown") && !args.has("stats") && !args.has("viz") {
                 println!("{}", outcome.report_json);
             }
         }
@@ -479,6 +490,57 @@ fn cmd_replay(args: &Args) -> Result<()> {
         } else {
             std::fs::write(bd, json).with_context(|| format!("writing {bd}"))?;
             eprintln!("wrote {bd}");
+        }
+    }
+    if let Some(sp) = args.get("stats") {
+        let json = ltp::trace::stats_json(&file).render_pretty();
+        if sp == "true" {
+            println!("{json}");
+        } else {
+            std::fs::write(sp, json).with_context(|| format!("writing {sp}"))?;
+            eprintln!("wrote {sp}");
+        }
+    }
+    if let Some(vz) = args.get("viz") {
+        anyhow::ensure!(vz != "true", "--viz requires an output path (.svg or .html)");
+        let sim: usize = args.flag("sim", 0)?;
+        let rendered = if vz.ends_with(".html") {
+            ltp::trace::render_html(&file, sim)
+        } else {
+            ltp::trace::render_svg(&file, sim)
+        }
+        .map_err(|e| anyhow::anyhow!(e))?;
+        std::fs::write(vz, rendered).with_context(|| format!("writing {vz}"))?;
+        eprintln!("wrote {vz} (sim {sim})");
+    }
+    Ok(())
+}
+
+/// `ltp diff <a.trace> <b.trace>` — align two recorded runs by
+/// (sim, link, iteration) and rank the cells by BST-contribution delta:
+/// the one-command localization of a BST/bench regression to a link and
+/// iteration.
+fn cmd_diff(args: &Args) -> Result<()> {
+    let usage = "usage: ltp diff <a.trace> <b.trace> [--top K] [--json] [--out FILE]";
+    let a_path = args.positional.get(1).context(usage)?;
+    let b_path = args.positional.get(2).context(usage)?;
+    let a = ltp::trace::read_file(a_path).map_err(|e| anyhow::anyhow!(e))?;
+    let b = ltp::trace::read_file(b_path).map_err(|e| anyhow::anyhow!(e))?;
+    let top: usize = args.flag("top", 10)?;
+    let d = ltp::trace::diff(&a, &b, top);
+    match args.get("out") {
+        Some("true") => bail!("--out requires a file path"),
+        Some(p) => {
+            std::fs::write(p, ltp::trace::diff_json(&d).render_pretty())
+                .with_context(|| format!("writing {p}"))?;
+            eprintln!("wrote {p}");
+        }
+        None => {
+            if args.has("json") {
+                println!("{}", ltp::trace::diff_json(&d).render_pretty());
+            } else {
+                print!("{}", ltp::trace::render_diff_table(&d));
+            }
         }
     }
     Ok(())
@@ -538,11 +600,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .filter(|c| !c.ok)
                 .map(|c| format!("`{}` {:.1}%", c.scenario, -c.delta_pct))
                 .collect();
-            anyhow::ensure!(
-                failed.is_empty(),
-                "events/sec regressed more than {max_regress_pct}% on: {}",
-                failed.join(", ")
-            );
+            if let Some(first) = checks.iter().find(|c| !c.ok) {
+                let sc = &first.scenario;
+                bail!(
+                    "events/sec regressed more than {max_regress_pct}% on: {}\n\
+                     localize it — capture a trace at the baseline commit and here, then diff:\n\
+                     \x20 ltp trace {sc} --quick --out baseline.ltt   # at the baseline commit\n\
+                     \x20 ltp trace {sc} --quick --out current.ltt    # at this commit\n\
+                     \x20 ltp diff baseline.ltt current.ltt           # top (link, iteration) BST deltas",
+                    failed.join(", ")
+                );
+            }
             Ok(())
         }
         other => bail!(
@@ -742,6 +810,7 @@ fn main() -> Result<()> {
         }
         Some("trace") => cmd_trace(&args),
         Some("replay") => cmd_replay(&args),
+        Some("diff") => cmd_diff(&args),
         Some("proto") => cmd_proto(&args),
         Some("agg") => cmd_agg(&args),
         Some("backend") => cmd_backend(&args),
@@ -756,8 +825,10 @@ fn main() -> Result<()> {
                  \x20            [--jobs N] [--out FILE] [--bench [FILE]] [--proto SPEC]... [--agg SPEC]...\n  \
                  \x20            [--codec SPEC]... [--churn SPEC]...\n  \
                  ltp figure <fig2|fig3|fig4|fig5|fig12|fig13|fig14|fig15|all> [--quick] [--jobs N]\n  \
-                 ltp trace <scenario> --out FILE [--seed N | --seeds A..B] [--quick] [--jobs N]\n  \
-                 ltp replay <trace> [--out FILE] [--breakdown [FILE]]\n  \
+                 ltp trace <scenario> --out FILE [--seed N | --seeds A..B] [--quick] [--jobs N] [--bench FILE]\n  \
+                 ltp replay <trace> [--out FILE] [--breakdown [FILE]] [--stats [FILE]]\n  \
+                 \x20          [--viz FILE.svg|FILE.html] [--sim N]\n  \
+                 ltp diff <a.trace> <b.trace> [--top K] [--json] [--out FILE]\n  \
                  ltp proto <list|parse SPEC>\n  \
                  ltp agg <list|parse SPEC>\n  \
                  ltp backend <list|parse SPEC>\n  \

@@ -183,6 +183,10 @@ pub struct BenchReport {
     pub cpu_secs: f64,
     pub sim_events: u64,
     pub per_job: Vec<BenchJob>,
+    /// Trace file the sweep was captured to, when run via
+    /// `ltp trace … --bench` (regression-localization provenance:
+    /// `ltp diff` the baseline and current traces).
+    pub trace: Option<String>,
 }
 
 impl BenchReport {
@@ -199,12 +203,19 @@ impl BenchReport {
         let events_per_sec =
             if self.wall_secs > 0.0 { self.sim_events as f64 / self.wall_secs } else { 0.0 };
         let speedup = if self.wall_secs > 0.0 { self.cpu_secs / self.wall_secs } else { 1.0 };
-        Json::obj(vec![
+        let mut kv: Vec<(&str, Json)> = vec![
             ("schema", "ltp-bench-v7".into()),
             // How the numbers came to be: "measured" (this process timed
             // the runs) vs "bootstrap" (a hand-committed seed snapshot —
             // see rust/BENCH_scenarios.json).
             ("provenance", "measured".into()),
+        ];
+        // Optional, directly after provenance: reports without a trace
+        // render byte-identically to schema v7 before the field existed.
+        if let Some(trace) = &self.trace {
+            kv.push(("trace", trace.as_str().into()));
+        }
+        kv.extend([
             ("jobs_requested", self.jobs_requested.into()),
             ("n_jobs", self.n_jobs.into()),
             ("wall_secs", self.wall_secs.into()),
@@ -214,7 +225,8 @@ impl BenchReport {
             ("events_per_sec", events_per_sec.into()),
             ("events_per_sec_floor", self.events_per_sec_floor().into()),
             ("runs", Json::Arr(self.per_job.iter().map(|j| j.to_json()).collect())),
-        ])
+        ]);
+        Json::obj(kv)
     }
 
     pub fn render_json(&self) -> String {
@@ -520,6 +532,7 @@ pub fn run_sweep_traced(
             cpu_secs,
             sim_events: total_events,
             per_job,
+            trace: None,
         },
     };
     (result, records)
@@ -606,6 +619,7 @@ mod tests {
                 wall_secs: 2.0,
                 events_per_sec: 2_000_000.0,
             }],
+            trace: None,
         };
         for json in [report.to_json().render(), report.render_json()] {
             assert_eq!(bench_field_str(&json, "schema").as_deref(), Some("ltp-bench-v7"));

@@ -332,6 +332,19 @@ impl Sim {
         self.net.default_uplink[entity] = Some(link);
     }
 
+    /// Record a link's static metadata (role, endpoints, rate, queue
+    /// capacity) into the active trace so viz/diff can label it.
+    /// Topology builders call this right after creating the link; no-op
+    /// (one branch) when tracing is off.
+    pub fn note_link_meta(&mut self, link: LinkId, role: u8) {
+        if let Some(t) = &self.net.trace {
+            let l = &self.net.links[link];
+            let rec =
+                Record::link_meta(link, role, l.src, l.dst, l.cfg.rate_bps, l.cfg.queue_cap_bytes);
+            t.borrow_mut().record(rec);
+        }
+    }
+
     /// Install an exact route (used on switches: (switch, host) → downlink).
     pub fn set_route(&mut self, at: EntityId, dst: EntityId, link: LinkId) {
         self.net.set_route_entry(at, dst, link);

@@ -6,6 +6,7 @@
 //! generators that share a bottleneck with the training job.
 
 use super::{Ctx, EntityId, LinkCfg, LinkId, Node, Packet, Sim};
+use crate::trace::{ROLE_EDGE_DOWN, ROLE_EDGE_UP, ROLE_TRUNK_DOWN, ROLE_TRUNK_UP};
 use crate::wire::PacketKind;
 use crate::Nanos;
 
@@ -52,6 +53,8 @@ pub fn star_with(
         let h = sim.add_host(node);
         let (up, down) = sim.add_duplex(h, switch, *cfg);
         sim.set_default_uplink(h, up);
+        sim.note_link_meta(up, ROLE_EDGE_UP);
+        sim.note_link_meta(down, ROLE_EDGE_DOWN);
         hosts.push(h);
         uplinks.push(up);
         downlinks.push(down);
@@ -102,14 +105,18 @@ pub fn n_rack(
         trunk_down.push(down);
         // Cross-rack traffic leaves the ToR via its trunk by default.
         sim.set_default_uplink(tor, up);
+        sim.note_link_meta(up, ROLE_TRUNK_UP);
+        sim.note_link_meta(down, ROLE_TRUNK_DOWN);
     }
     let mut hosts = Vec::with_capacity(n_hosts);
     let mut rack_of = Vec::with_capacity(n_hosts);
     for (r, nodes) in racks.into_iter().enumerate() {
         for node in nodes {
             let h = sim.add_host(node);
-            let (up, _down) = sim.add_duplex(h, tors[r], edge);
+            let (up, down) = sim.add_duplex(h, tors[r], edge);
             sim.set_default_uplink(h, up);
+            sim.note_link_meta(up, ROLE_EDGE_UP);
+            sim.note_link_meta(down, ROLE_EDGE_DOWN);
             // The agg switch reaches h through rack r's trunk; the ToR's
             // own (tor → h) exact route was installed by add_duplex.
             sim.set_route(agg, h, trunk_down[r]);

@@ -14,19 +14,91 @@
 //!   long the receiver held the flow open past its final arrival
 //!   (threshold/deadline wait — the time Early Close exists to bound).
 //!
-//! All maps are `BTreeMap`s, so the report is deterministic and renders
-//! byte-identically for the same trace.
+//! The pairing logic runs once, into intermediate [`SimTable`]s
+//! ([`breakdown_table`]) that also keep the per-link queueing split and
+//! per-sequence retransmit detail the stats/diff tools need;
+//! [`breakdown`] renders the classic `ltp-trace-breakdown-v1` report
+//! from it. All maps are `BTreeMap`s, so both are deterministic and the
+//! report renders byte-identically for the same trace.
 
 use super::reader::TraceFile;
 use super::{
-    reason_name, Record, KIND_CLOSE, KIND_DELIVER, KIND_ENQUEUE, KIND_JOB_START,
-    KIND_SIM_START, KIND_TX, PTYPE_LTP_DATA,
+    reason_name, Record, KIND_CLOSE, KIND_DELIVER, KIND_DROP_QUEUE, KIND_DROP_WIRE, KIND_ENQUEUE,
+    KIND_JOB_START, KIND_SIM_START, KIND_TX, PTYPE_LTP_DATA,
 };
 use crate::metrics::Json;
 use std::collections::{BTreeMap, VecDeque};
 
 /// Per-link FIFO of pending (flow, ptype, enqueue time) awaiting TX.
 type EnqFifo = VecDeque<(u64, u8, u64)>;
+
+/// One retransmitted data sequence of a gather flow: first/last
+/// transmission on the flow's first hop, and the link that last dropped
+/// it (if any drop was recorded — an abandoned non-critical segment may
+/// retransmit without a drop on the first hop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeqRetx {
+    /// Data sequence id.
+    pub seq: u64,
+    /// First transmission time on the flow's first hop (ns).
+    pub first_tx_ns: u64,
+    /// Last transmission time on the flow's first hop (ns).
+    pub last_tx_ns: u64,
+    /// Transmissions observed on the first hop (≥ 2 for entries kept).
+    pub tx_count: u64,
+    /// Link that last dropped this sequence (queue or wire), if any.
+    pub drop_link: Option<u32>,
+}
+
+/// One closed gather flow's breakdown row (the intermediate form behind
+/// the `flows` array of `ltp-trace-breakdown-v1`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlowRow {
+    /// Flow id.
+    pub flow: u64,
+    /// Worker index from the close record.
+    pub worker: u32,
+    /// Training iteration from the close record.
+    pub iter: u64,
+    /// Close-reason wire code (see [`super::reason_name`]).
+    pub reason: u8,
+    /// Whether all critical segments had arrived at close time.
+    pub criticals_ok: bool,
+    /// Delivered fraction at close, in parts per million.
+    pub delivered_ppm: u64,
+    /// Close decision time (ns).
+    pub close_ns: u64,
+    /// First link the flow's data was enqueued on (its access link).
+    pub first_hop: Option<u32>,
+    /// First data enqueue time (ns) — the flow's start-of-activity.
+    pub first_enqueue_ns: Option<u64>,
+    /// Last data delivery time (ns).
+    pub last_deliver_ns: Option<u64>,
+    /// Queueing (+ serialization wait) split per link, link-id order.
+    pub queueing_by_link: Vec<(u32, u64)>,
+    /// Σ of [`FlowRow::queueing_by_link`] — the report's `queueing_ns`.
+    pub queueing_ns: u64,
+    /// Σ over sequences of (last − first TX) — the report's
+    /// `retransmit_ns`.
+    pub retransmit_ns: u64,
+    /// Close − last delivery — the report's `early_close_wait_ns`.
+    pub early_close_wait_ns: u64,
+    /// Sequences transmitted more than once, sequence order.
+    pub retx: Vec<SeqRetx>,
+}
+
+/// One simulation's table of closed gather flows, flow-id order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimTable {
+    /// Simulation index within the trace (creation order).
+    pub index: usize,
+    /// The simulation's seed.
+    pub seed: u64,
+    /// End of recorded activity: the largest record time seen (ns).
+    pub t_end_ns: u64,
+    /// Closed gather flows, flow-id order.
+    pub flows: Vec<FlowRow>,
+}
 
 #[derive(Debug, Clone, Copy)]
 struct CloseInfo {
@@ -40,10 +112,14 @@ struct CloseInfo {
 
 #[derive(Default)]
 struct FlowAcc {
-    queueing: u64,
+    /// link → Σ (serializer start − enqueue) for the flow's data packets.
+    queueing: BTreeMap<u32, u64>,
     first_hop: Option<u32>,
-    /// seq → (first TX, last TX) on the flow's first hop.
-    tx_seq: BTreeMap<u64, (u64, u64)>,
+    first_enqueue: Option<u64>,
+    /// seq → (first TX, last TX, TX count) on the flow's first hop.
+    tx_seq: BTreeMap<u64, (u64, u64, u64)>,
+    /// seq → link that last dropped it (queue or wire).
+    drop_link: BTreeMap<u64, u32>,
     last_deliver: Option<u64>,
     close: Option<CloseInfo>,
 }
@@ -51,22 +127,25 @@ struct FlowAcc {
 struct SimAcc {
     index: usize,
     seed: u64,
+    t_end: u64,
     enq: BTreeMap<u32, EnqFifo>,
     flows: BTreeMap<u64, FlowAcc>,
 }
 
 impl SimAcc {
     fn new(index: usize, seed: u64) -> SimAcc {
-        SimAcc { index, seed, enq: BTreeMap::new(), flows: BTreeMap::new() }
+        SimAcc { index, seed, t_end: 0, enq: BTreeMap::new(), flows: BTreeMap::new() }
     }
 
     fn observe(&mut self, rec: &Record) {
+        self.t_end = self.t_end.max(rec.t);
         match rec.kind {
             KIND_ENQUEUE => {
                 self.enq.entry(rec.a).or_default().push_back((rec.flow, rec.ptype, rec.t));
                 if rec.ptype == PTYPE_LTP_DATA {
                     let f = self.flows.entry(rec.flow).or_default();
                     f.first_hop.get_or_insert(rec.a);
+                    f.first_enqueue.get_or_insert(rec.t);
                 }
             }
             KIND_TX => {
@@ -74,12 +153,19 @@ impl SimAcc {
                 if let Some((flow, ptype, t_enq)) = popped {
                     if ptype == PTYPE_LTP_DATA {
                         let f = self.flows.entry(flow).or_default();
-                        f.queueing += rec.t.saturating_sub(t_enq);
+                        *f.queueing.entry(rec.a).or_default() += rec.t.saturating_sub(t_enq);
                         if f.first_hop == Some(rec.a) {
-                            let e = f.tx_seq.entry(rec.c).or_insert((rec.t, rec.t));
+                            let e = f.tx_seq.entry(rec.c).or_insert((rec.t, rec.t, 0));
                             e.1 = rec.t;
+                            e.2 += 1;
                         }
                     }
+                }
+            }
+            KIND_DROP_QUEUE | KIND_DROP_WIRE => {
+                if rec.ptype == PTYPE_LTP_DATA {
+                    let f = self.flows.entry(rec.flow).or_default();
+                    f.drop_link.insert(rec.c, rec.a);
                 }
             }
             KIND_DELIVER => {
@@ -101,54 +187,51 @@ impl SimAcc {
         }
     }
 
-    fn finish(self) -> Json {
-        let mut flow_rows = Vec::new();
-        let mut iters: BTreeMap<u64, [u64; 4]> = BTreeMap::new();
-        for (flow, f) in &self.flows {
+    fn finish(self) -> SimTable {
+        let mut rows = Vec::new();
+        for (flow, f) in self.flows {
             let Some(close) = f.close else { continue };
-            let retransmit: u64 = f.tx_seq.values().map(|(first, last)| last - first).sum();
+            let queueing_ns: u64 = f.queueing.values().sum();
+            let retransmit_ns: u64 = f.tx_seq.values().map(|(first, last, _)| last - first).sum();
             let wait = f.last_deliver.map(|d| close.t.saturating_sub(d)).unwrap_or(0);
-            flow_rows.push(Json::obj(vec![
-                ("flow", (*flow).into()),
-                ("worker", (close.worker as u64).into()),
-                ("iter", close.iter.into()),
-                ("reason", reason_name(close.reason).into()),
-                ("criticals_ok", close.criticals_ok.into()),
-                ("delivered_ppm", close.delivered_ppm.into()),
-                ("queueing_ns", f.queueing.into()),
-                ("retransmit_ns", retransmit.into()),
-                ("early_close_wait_ns", wait.into()),
-            ]));
-            let e = iters.entry(close.iter).or_default();
-            e[0] += 1;
-            e[1] += f.queueing;
-            e[2] += retransmit;
-            e[3] += wait;
+            let retx = f
+                .tx_seq
+                .iter()
+                .filter(|(_, (_, _, count))| *count > 1)
+                .map(|(&seq, &(first, last, count))| SeqRetx {
+                    seq,
+                    first_tx_ns: first,
+                    last_tx_ns: last,
+                    tx_count: count,
+                    drop_link: f.drop_link.get(&seq).copied(),
+                })
+                .collect();
+            rows.push(FlowRow {
+                flow,
+                worker: close.worker,
+                iter: close.iter,
+                reason: close.reason,
+                criticals_ok: close.criticals_ok,
+                delivered_ppm: close.delivered_ppm,
+                close_ns: close.t,
+                first_hop: f.first_hop,
+                first_enqueue_ns: f.first_enqueue,
+                last_deliver_ns: f.last_deliver,
+                queueing_by_link: f.queueing.into_iter().collect(),
+                queueing_ns,
+                retransmit_ns,
+                early_close_wait_ns: wait,
+                retx,
+            });
         }
-        let iter_rows: Vec<Json> = iters
-            .into_iter()
-            .map(|(iter, [flows, q, rtx, wait])| {
-                Json::obj(vec![
-                    ("iter", iter.into()),
-                    ("flows", flows.into()),
-                    ("queueing_ns", q.into()),
-                    ("retransmit_ns", rtx.into()),
-                    ("early_close_wait_ns", wait.into()),
-                ])
-            })
-            .collect();
-        Json::obj(vec![
-            ("sim", self.index.into()),
-            ("seed", self.seed.into()),
-            ("flows", Json::Arr(flow_rows)),
-            ("iterations", Json::Arr(iter_rows)),
-        ])
+        SimTable { index: self.index, seed: self.seed, t_end_ns: self.t_end, flows: rows }
     }
 }
 
-/// Distill a trace into the per-flow/per-iteration BST breakdown report
-/// (schema `ltp-trace-breakdown-v1`).
-pub fn breakdown(file: &TraceFile) -> Json {
+/// Distill a trace into per-sim tables of closed gather flows — the
+/// shared intermediate the breakdown/stats/diff tools all render from.
+/// Sims are segmented on job/sim markers, as in [`breakdown`].
+pub fn breakdown_table(file: &TraceFile) -> Vec<SimTable> {
     let mut sims = Vec::new();
     let mut cur: Option<SimAcc> = None;
     let mut next_index = 0usize;
@@ -176,6 +259,54 @@ pub fn breakdown(file: &TraceFile) -> Json {
     if let Some(sim) = cur.take() {
         sims.push(sim.finish());
     }
+    sims
+}
+
+fn render_sim(table: &SimTable) -> Json {
+    let mut flow_rows = Vec::new();
+    let mut iters: BTreeMap<u64, [u64; 4]> = BTreeMap::new();
+    for f in &table.flows {
+        flow_rows.push(Json::obj(vec![
+            ("flow", f.flow.into()),
+            ("worker", (f.worker as u64).into()),
+            ("iter", f.iter.into()),
+            ("reason", reason_name(f.reason).into()),
+            ("criticals_ok", f.criticals_ok.into()),
+            ("delivered_ppm", f.delivered_ppm.into()),
+            ("queueing_ns", f.queueing_ns.into()),
+            ("retransmit_ns", f.retransmit_ns.into()),
+            ("early_close_wait_ns", f.early_close_wait_ns.into()),
+        ]));
+        let e = iters.entry(f.iter).or_default();
+        e[0] += 1;
+        e[1] += f.queueing_ns;
+        e[2] += f.retransmit_ns;
+        e[3] += f.early_close_wait_ns;
+    }
+    let iter_rows: Vec<Json> = iters
+        .into_iter()
+        .map(|(iter, [flows, q, rtx, wait])| {
+            Json::obj(vec![
+                ("iter", iter.into()),
+                ("flows", flows.into()),
+                ("queueing_ns", q.into()),
+                ("retransmit_ns", rtx.into()),
+                ("early_close_wait_ns", wait.into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("sim", table.index.into()),
+        ("seed", table.seed.into()),
+        ("flows", Json::Arr(flow_rows)),
+        ("iterations", Json::Arr(iter_rows)),
+    ])
+}
+
+/// Distill a trace into the per-flow/per-iteration BST breakdown report
+/// (schema `ltp-trace-breakdown-v1`).
+pub fn breakdown(file: &TraceFile) -> Json {
+    let sims = breakdown_table(file).iter().map(render_sim).collect();
     Json::obj(vec![
         ("schema", "ltp-trace-breakdown-v1".into()),
         ("scenario", file.header.scenario.as_str().into()),

@@ -1,0 +1,231 @@
+//! Trace diff: align two recorded runs by (sim, link, iteration) and
+//! rank the cells by BST-contribution delta, localizing a regression to
+//! a link and iteration in one command (DESIGN.md §4.7).
+//!
+//! A cell's BST contribution is the queueing time the iteration's
+//! gather flows spent on that link plus the retransmit spans attributed
+//! to it. Retransmit attribution: each re-sent sequence's (last − first
+//! TX) span is charged to the link that last dropped it, falling back
+//! to the flow's first hop when no drop was recorded — so under loss
+//! the bottleneck where drops concentrate ranks first. Both sides come
+//! from the shared [`breakdown_table`] pairing pass; diffing a trace
+//! against itself therefore yields no cells at all.
+
+use super::breakdown::breakdown_table;
+use super::reader::TraceFile;
+use super::stats::{link_label, link_meta_map};
+use crate::metrics::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One (sim, link, iteration) cell of a trace diff.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DiffCell {
+    /// Simulation index within both traces.
+    pub sim: usize,
+    /// Link id.
+    pub link: u32,
+    /// Training iteration.
+    pub iter: u64,
+    /// Human link label (metadata-aware, `link<N>` fallback).
+    pub label: String,
+    /// Trace A's BST contribution on this cell (ns).
+    pub a_ns: u64,
+    /// Trace B's BST contribution on this cell (ns).
+    pub b_ns: u64,
+    /// `b_ns − a_ns`.
+    pub delta_ns: i64,
+    /// Queueing part of `a_ns`.
+    pub a_queueing_ns: u64,
+    /// Queueing part of `b_ns`.
+    pub b_queueing_ns: u64,
+    /// Retransmit part of `a_ns`.
+    pub a_retransmit_ns: u64,
+    /// Retransmit part of `b_ns`.
+    pub b_retransmit_ns: u64,
+}
+
+/// Result of diffing two traces: nonzero cells ranked by |delta|.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceDiff {
+    /// Trace A's scenario name.
+    pub a_scenario: String,
+    /// Trace B's scenario name.
+    pub b_scenario: String,
+    /// Σ BST contribution over all of A's cells (ns).
+    pub a_total_ns: u64,
+    /// Σ BST contribution over all of B's cells (ns).
+    pub b_total_ns: u64,
+    /// Cells in the union of both traces' keys.
+    pub cells_considered: usize,
+    /// Nonzero-delta cells, |delta| descending (ties: key order),
+    /// truncated to the requested top-K.
+    pub cells: Vec<DiffCell>,
+}
+
+/// Per-trace cell extraction: (sim, link, iter) → (queueing, retransmit).
+type CellMap = BTreeMap<(usize, u32, u64), (u64, u64)>;
+
+fn cells_of(file: &TraceFile) -> CellMap {
+    let mut cells = CellMap::new();
+    for table in breakdown_table(file) {
+        for row in &table.flows {
+            for &(link, q) in &row.queueing_by_link {
+                cells.entry((table.index, link, row.iter)).or_default().0 += q;
+            }
+            for r in &row.retx {
+                let Some(link) = r.drop_link.or(row.first_hop) else { continue };
+                let span = r.last_tx_ns - r.first_tx_ns;
+                cells.entry((table.index, link, row.iter)).or_default().1 += span;
+            }
+        }
+    }
+    cells
+}
+
+/// Diff two traces, keeping the top-K cells by |BST-contribution delta|.
+pub fn diff(a: &TraceFile, b: &TraceFile, top: usize) -> TraceDiff {
+    let ca = cells_of(a);
+    let cb = cells_of(b);
+    let meta_a = link_meta_map(a);
+    let meta_b = link_meta_map(b);
+    let mut keys: Vec<(usize, u32, u64)> = ca.keys().chain(cb.keys()).copied().collect();
+    keys.sort_unstable();
+    keys.dedup();
+    let cells_considered = keys.len();
+    let mut a_total = 0u64;
+    let mut b_total = 0u64;
+    let mut cells = Vec::new();
+    for key in keys {
+        let (sim, link, iter) = key;
+        let (aq, artx) = ca.get(&key).copied().unwrap_or((0, 0));
+        let (bq, brtx) = cb.get(&key).copied().unwrap_or((0, 0));
+        let a_ns = aq + artx;
+        let b_ns = bq + brtx;
+        a_total += a_ns;
+        b_total += b_ns;
+        if a_ns == b_ns {
+            continue;
+        }
+        let meta = meta_b.get(&(sim, link)).or_else(|| meta_a.get(&(sim, link)));
+        cells.push(DiffCell {
+            sim,
+            link,
+            iter,
+            label: link_label(link, meta),
+            a_ns,
+            b_ns,
+            delta_ns: b_ns as i64 - a_ns as i64,
+            a_queueing_ns: aq,
+            b_queueing_ns: bq,
+            a_retransmit_ns: artx,
+            b_retransmit_ns: brtx,
+        });
+    }
+    cells.sort_by(|x, y| {
+        y.delta_ns
+            .unsigned_abs()
+            .cmp(&x.delta_ns.unsigned_abs())
+            .then((x.sim, x.link, x.iter).cmp(&(y.sim, y.link, y.iter)))
+    });
+    cells.truncate(top);
+    TraceDiff {
+        a_scenario: a.header.scenario.clone(),
+        b_scenario: b.header.scenario.clone(),
+        a_total_ns: a_total,
+        b_total_ns: b_total,
+        cells_considered,
+        cells,
+    }
+}
+
+/// Render a [`TraceDiff`] as the deterministic `ltp-trace-diff-v1` JSON.
+pub fn diff_json(d: &TraceDiff) -> Json {
+    let top: Vec<Json> = d
+        .cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("sim", c.sim.into()),
+                ("link", (c.link as u64).into()),
+                ("iter", c.iter.into()),
+                ("label", c.label.as_str().into()),
+                ("a_ns", c.a_ns.into()),
+                ("b_ns", c.b_ns.into()),
+                ("delta_ns", (c.delta_ns as f64).into()),
+                ("a_queueing_ns", c.a_queueing_ns.into()),
+                ("b_queueing_ns", c.b_queueing_ns.into()),
+                ("a_retransmit_ns", c.a_retransmit_ns.into()),
+                ("b_retransmit_ns", c.b_retransmit_ns.into()),
+            ])
+        })
+        .collect();
+    let delta_total = d.b_total_ns as i64 - d.a_total_ns as i64;
+    Json::obj(vec![
+        ("schema", "ltp-trace-diff-v1".into()),
+        ("a_scenario", d.a_scenario.as_str().into()),
+        ("b_scenario", d.b_scenario.as_str().into()),
+        ("a_total_ns", d.a_total_ns.into()),
+        ("b_total_ns", d.b_total_ns.into()),
+        ("delta_total_ns", (delta_total as f64).into()),
+        ("cells_considered", d.cells_considered.into()),
+        ("top", Json::Arr(top)),
+    ])
+}
+
+fn fmt_signed_ms(ns: i64) -> String {
+    let sign = if ns < 0 { "-" } else { "+" };
+    let abs = ns.unsigned_abs();
+    format!("{sign}{}.{:03}ms", abs / 1_000_000, (abs / 1_000) % 1_000)
+}
+
+fn fmt_ms(ns: u64) -> String {
+    format!("{}.{:03}ms", ns / 1_000_000, (ns / 1_000) % 1_000)
+}
+
+/// Render a [`TraceDiff`] as a human-readable table.
+pub fn render_diff_table(d: &TraceDiff) -> String {
+    let mut out = String::new();
+    let delta_total = d.b_total_ns as i64 - d.a_total_ns as i64;
+    let _ = writeln!(out, "a: {:24} BST contribution {}", d.a_scenario, fmt_ms(d.a_total_ns));
+    let _ = writeln!(
+        out,
+        "b: {:24} BST contribution {}  (delta {})",
+        d.b_scenario,
+        fmt_ms(d.b_total_ns),
+        fmt_signed_ms(delta_total)
+    );
+    if d.cells.is_empty() {
+        let _ = writeln!(
+            out,
+            "no differing (sim, link, iteration) cells across {} considered — runs are identical",
+            d.cells_considered
+        );
+        return out;
+    }
+    let _ = writeln!(
+        out,
+        "top {} of {} (sim, link, iteration) cells by |BST delta|:",
+        d.cells.len(),
+        d.cells_considered
+    );
+    let _ = writeln!(
+        out,
+        "  {:>3} {:>4} {:>4}  {:<18} {:>12} {:>14} {:>14}",
+        "sim", "iter", "link", "label", "delta", "queueing", "retransmit"
+    );
+    for c in &d.cells {
+        let _ = writeln!(
+            out,
+            "  {:>3} {:>4} {:>4}  {:<18} {:>12} {:>14} {:>14}",
+            c.sim,
+            c.iter,
+            c.link,
+            c.label,
+            fmt_signed_ms(c.delta_ns),
+            fmt_signed_ms(c.b_queueing_ns as i64 - c.a_queueing_ns as i64),
+            fmt_signed_ms(c.b_retransmit_ns as i64 - c.a_retransmit_ns as i64)
+        );
+    }
+    out
+}

@@ -22,15 +22,31 @@
 //! reproduce both the record stream and the original report bytes
 //! ([`replay()`]), and `ltp replay --breakdown` distills the per-flow
 //! BST split ([`breakdown()`]).
+//!
+//! The observability layer (DESIGN.md §4.7) builds on the same stream:
+//! [`trace_stats`] distills per-link/per-flow/per-iteration statistics,
+//! [`render_svg`]/[`render_html`] draw a link-occupancy timeline, and
+//! [`diff`] aligns two traces by (sim, link, iteration) to localize a
+//! BST regression. Topology builders label links for these tools via
+//! [`Record::link_meta`] records (format v2; v1 traces still read, with
+//! `link<N>` fallback labels).
 
 mod breakdown;
+mod diff;
 mod reader;
 mod replay;
+mod stats;
+mod viz;
 mod writer;
 
-pub use breakdown::breakdown;
+pub use breakdown::{breakdown, breakdown_table, FlowRow, SeqRetx, SimTable};
+pub use diff::{diff, diff_json, render_diff_table, DiffCell, TraceDiff};
 pub use reader::{decode, read_file, TraceFile};
 pub use replay::{replay, ReplayOutcome};
+pub use stats::{
+    link_label, link_meta_map, stats_json, trace_stats, LinkMeta, LinkUse, SimStats, TraceStats,
+};
+pub use viz::{render_html, render_svg};
 pub use writer::{encode, write_file, TraceHeader, HEADER_BYTES, MAGIC, SCENARIO_FIELD, VERSION};
 
 use crate::proto::CloseReason;
@@ -66,8 +82,25 @@ pub const KIND_CLOSE: u8 = 8;
 /// PS emitted an ACK/Stop packet for a gather flow (`a` = entity,
 /// `c` = acked seq).
 pub const KIND_ACK: u8 = 9;
+/// Static link metadata emitted by topology builders right after the
+/// sim-start marker (format v2+): `a` = link id, `ptype` = one of the
+/// `ROLE_*` constants, `flow` = `src << 32 | dst` entity ids, `c` = rate
+/// (bits/s), `d` = queue capacity (bytes). Lets viz/diff label real
+/// links instead of bare ids; traces without it fall back to `link<N>`.
+pub const KIND_LINK_META: u8 = 10;
 /// Highest valid record kind (decode rejects beyond this).
-pub const KIND_MAX: u8 = KIND_ACK;
+pub const KIND_MAX: u8 = KIND_LINK_META;
+/// Highest record kind a format-v1 trace may carry.
+pub const KIND_MAX_V1: u8 = KIND_ACK;
+
+/// Link-meta role: host edge uplink (host → switch/ToR).
+pub const ROLE_EDGE_UP: u8 = 1;
+/// Link-meta role: host edge downlink (switch/ToR → host).
+pub const ROLE_EDGE_DOWN: u8 = 2;
+/// Link-meta role: rack trunk uplink (ToR → aggregation).
+pub const ROLE_TRUNK_UP: u8 = 3;
+/// Link-meta role: rack trunk downlink (aggregation → ToR).
+pub const ROLE_TRUNK_DOWN: u8 = 4;
 
 /// `ptype` for records that carry no packet.
 pub const PTYPE_NONE: u8 = 0;
@@ -176,6 +209,27 @@ impl Record {
             flow: pkt.flow,
             c: seq,
             d: dst as u64,
+        }
+    }
+
+    /// Static link metadata record (see [`KIND_LINK_META`]). `t` is 0:
+    /// the topology is built before the first event fires.
+    pub fn link_meta(
+        link: usize,
+        role: u8,
+        src: usize,
+        dst: usize,
+        rate_bps: u64,
+        queue_cap_bytes: u64,
+    ) -> Record {
+        Record {
+            t: 0,
+            kind: KIND_LINK_META,
+            ptype: role,
+            a: link as u32,
+            flow: ((src as u64) << 32) | (dst as u64 & 0xffff_ffff),
+            c: rate_bps,
+            d: queue_cap_bytes,
         }
     }
 

@@ -3,7 +3,7 @@
 //! context instead of a silent mis-parse.
 
 use super::writer::{TraceHeader, HEADER_BYTES, MAGIC, SCENARIO_FIELD, VERSION};
-use super::{Record, KIND_MAX, RECORD_BYTES};
+use super::{Record, KIND_MAX, KIND_MAX_V1, RECORD_BYTES};
 
 /// A decoded trace: header + records in emission order.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -32,11 +32,13 @@ pub fn decode(bytes: &[u8]) -> Result<TraceFile, String> {
         return Err(msg.to_string());
     }
     let version = le_u32(bytes, 8);
-    if version != VERSION {
+    if version == 0 || version > VERSION {
         return Err(format!(
-            "unsupported trace version {version} at offset 8 (this build reads version {VERSION})"
+            "unsupported trace version {version} at offset 8 (this build reads versions 1..={VERSION})"
         ));
     }
+    // v1 traces predate link-metadata records; reject kinds they can't carry.
+    let kind_max = if version == 1 { KIND_MAX_V1 } else { KIND_MAX };
     let rec_size = le_u32(bytes, 12);
     if rec_size as usize != RECORD_BYTES {
         return Err(format!("record size {rec_size} at offset 12, expected {RECORD_BYTES}"));
@@ -65,7 +67,7 @@ pub fn decode(bytes: &[u8]) -> Result<TraceFile, String> {
     for (i, chunk) in body.chunks_exact(RECORD_BYTES).enumerate() {
         let arr: &[u8; RECORD_BYTES] = chunk.try_into().unwrap();
         let rec = Record::decode(arr);
-        if rec.kind > KIND_MAX {
+        if rec.kind > kind_max {
             return Err(format!(
                 "unknown record kind {} at offset {}",
                 rec.kind,

@@ -1,0 +1,417 @@
+//! Per-link / per-flow / per-iteration statistics over a recorded trace
+//! (schema `ltp-trace-stats-v1`, DESIGN.md §4.7).
+//!
+//! A single linear pass over each simulation's records accumulates the
+//! link-level view — bytes transmitted, serializer busy time (and the
+//! utilization it implies), drops by kind, and drop-tail queue depth
+//! over time (bucketed maxima) — while the flow and iteration sections
+//! are re-rendered from the shared [`breakdown_table`] so the pairing
+//! logic lives in one place. Everything is keyed through `BTreeMap`s
+//! and integer time math, so the JSON is a pure function of the trace:
+//! serial and `--jobs N` captures of the same run render byte-identical
+//! stats.
+
+use super::breakdown::{breakdown_table, SimTable};
+use super::reader::TraceFile;
+use super::{
+    KIND_DROP_QUEUE, KIND_DROP_WIRE, KIND_ENQUEUE, KIND_JOB_START, KIND_LINK_META,
+    KIND_SIM_START, KIND_TX, ROLE_EDGE_DOWN, ROLE_EDGE_UP, ROLE_TRUNK_DOWN, ROLE_TRUNK_UP,
+};
+use crate::metrics::Json;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Time buckets in each link's queue-depth-over-time series.
+pub const DEPTH_BUCKETS: usize = 32;
+
+/// Static link metadata decoded from a [`super::KIND_LINK_META`] record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkMeta {
+    /// One of the `ROLE_*` constants in [`crate::trace`].
+    pub role: u8,
+    /// Source entity id.
+    pub src: u32,
+    /// Destination entity id.
+    pub dst: u32,
+    /// Serialization rate in bits per second.
+    pub rate_bps: u64,
+    /// Drop-tail queue capacity in bytes.
+    pub queue_cap_bytes: u64,
+}
+
+impl LinkMeta {
+    /// Decode from a [`super::KIND_LINK_META`] record.
+    pub fn from_record(rec: &super::Record) -> LinkMeta {
+        LinkMeta {
+            role: rec.ptype,
+            src: (rec.flow >> 32) as u32,
+            dst: (rec.flow & 0xffff_ffff) as u32,
+            rate_bps: rec.c,
+            queue_cap_bytes: rec.d,
+        }
+    }
+}
+
+/// Human label for a link: role-aware when metadata is present
+/// (`h3.up`, `h1.down`, `tor2.trunk_up`, …), `link<N>` otherwise — the
+/// v1-trace fallback.
+pub fn link_label(link: u32, meta: Option<&LinkMeta>) -> String {
+    match meta {
+        Some(m) if m.role == ROLE_EDGE_UP => format!("h{}.up", m.src),
+        Some(m) if m.role == ROLE_EDGE_DOWN => format!("h{}.down", m.dst),
+        Some(m) if m.role == ROLE_TRUNK_UP => format!("tor{}.trunk_up", m.src),
+        Some(m) if m.role == ROLE_TRUNK_DOWN => format!("tor{}.trunk_down", m.dst),
+        _ => format!("link{link}"),
+    }
+}
+
+/// All link metadata in a trace, keyed `(sim index, link id)`.
+pub fn link_meta_map(file: &TraceFile) -> BTreeMap<(usize, u32), LinkMeta> {
+    let mut map = BTreeMap::new();
+    let mut sim: Option<usize> = None;
+    let mut next = 0usize;
+    for rec in &file.records {
+        match rec.kind {
+            KIND_SIM_START => {
+                sim = Some(next);
+                next += 1;
+            }
+            KIND_LINK_META => {
+                if let Some(s) = sim {
+                    map.insert((s, rec.a), LinkMeta::from_record(rec));
+                }
+            }
+            _ => {}
+        }
+    }
+    map
+}
+
+/// One link's traffic statistics within one simulation.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LinkUse {
+    /// Static metadata, when the trace carries it (format v2+).
+    pub meta: Option<LinkMeta>,
+    /// Packets that finished serialization (entered the wire).
+    pub tx_pkts: u64,
+    /// Bytes that finished serialization.
+    pub tx_bytes: u64,
+    /// Drop-tail rejections (full queue).
+    pub drops_queue: u64,
+    /// Wire losses after serialization.
+    pub drops_wire: u64,
+    /// Total serializer-busy time (ns).
+    pub busy_ns: u64,
+    /// Peak queued packets awaiting serialization.
+    pub peak_queue_pkts: u64,
+    /// Peak queued bytes awaiting serialization.
+    pub peak_queue_bytes: u64,
+    /// Max queued bytes per time bucket ([`DEPTH_BUCKETS`] buckets over
+    /// `[0, t_end]`) — the queue-depth-over-time series.
+    pub queue_depth_bytes: Vec<u64>,
+}
+
+/// One simulation's stats: the link table plus the flow table the
+/// breakdown pass produced.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimStats {
+    /// Simulation index within the trace (creation order).
+    pub index: usize,
+    /// The simulation's seed.
+    pub seed: u64,
+    /// End of recorded activity (largest record time, ns).
+    pub t_end_ns: u64,
+    /// Per-link statistics, link-id order.
+    pub links: BTreeMap<u32, LinkUse>,
+    /// Closed gather flows (see [`breakdown_table`]).
+    pub table: SimTable,
+}
+
+/// A whole trace's statistics (one [`SimStats`] per simulation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceStats {
+    /// Scenario name from the trace header.
+    pub scenario: String,
+    /// Quick flag from the trace header.
+    pub quick: bool,
+    /// Trace format version the stats were derived from.
+    pub version: u32,
+    /// Per-simulation statistics.
+    pub sims: Vec<SimStats>,
+}
+
+#[derive(Default)]
+struct LinkAcc {
+    meta: Option<LinkMeta>,
+    tx_pkts: u64,
+    tx_bytes: u64,
+    drops_queue: u64,
+    drops_wire: u64,
+    busy_ns: u64,
+    last_tx: u64,
+    /// Pending (enqueue time, size) awaiting TX, FIFO per link.
+    pending: VecDeque<(u64, u64)>,
+    queued_bytes: u64,
+    peak_pkts: u64,
+    peak_bytes: u64,
+    /// (time, signed byte delta) queue-depth events in record order.
+    depth_events: Vec<(u64, i64)>,
+}
+
+impl LinkAcc {
+    fn finish(self, t_end: u64) -> LinkUse {
+        let mut buckets = vec![0u64; DEPTH_BUCKETS];
+        let mut depth: i64 = 0;
+        let mut cur = 0usize;
+        for &(t, delta) in &self.depth_events {
+            let b = bucket_of(t, t_end);
+            // Carry the standing depth across buckets with no events.
+            while cur < b {
+                cur += 1;
+                buckets[cur] = buckets[cur].max(depth.max(0) as u64);
+            }
+            depth += delta;
+            buckets[b] = buckets[b].max(depth.max(0) as u64);
+        }
+        LinkUse {
+            meta: self.meta,
+            tx_pkts: self.tx_pkts,
+            tx_bytes: self.tx_bytes,
+            drops_queue: self.drops_queue,
+            drops_wire: self.drops_wire,
+            busy_ns: self.busy_ns,
+            peak_queue_pkts: self.peak_pkts,
+            peak_queue_bytes: self.peak_bytes,
+            queue_depth_bytes: buckets,
+        }
+    }
+}
+
+fn bucket_of(t: u64, t_end: u64) -> usize {
+    let b = (t as u128 * DEPTH_BUCKETS as u128) / (t_end as u128 + 1);
+    (b as usize).min(DEPTH_BUCKETS - 1)
+}
+
+struct LinkPass {
+    links: BTreeMap<u32, LinkAcc>,
+    t_end: u64,
+}
+
+impl LinkPass {
+    fn new() -> LinkPass {
+        LinkPass { links: BTreeMap::new(), t_end: 0 }
+    }
+
+    fn observe(&mut self, rec: &super::Record) {
+        self.t_end = self.t_end.max(rec.t);
+        match rec.kind {
+            KIND_LINK_META => {
+                self.links.entry(rec.a).or_default().meta = Some(LinkMeta::from_record(rec));
+            }
+            KIND_ENQUEUE => {
+                let l = self.links.entry(rec.a).or_default();
+                l.pending.push_back((rec.t, rec.d));
+                l.queued_bytes += rec.d;
+                l.peak_bytes = l.peak_bytes.max(l.queued_bytes);
+                l.peak_pkts = l.peak_pkts.max(l.pending.len() as u64);
+                l.depth_events.push((rec.t, rec.d as i64));
+            }
+            KIND_TX => {
+                let l = self.links.entry(rec.a).or_default();
+                if let Some((t_enq, size)) = l.pending.pop_front() {
+                    l.busy_ns += rec.t.saturating_sub(t_enq.max(l.last_tx));
+                    l.queued_bytes = l.queued_bytes.saturating_sub(size);
+                    l.depth_events.push((rec.t, -(size as i64)));
+                }
+                l.last_tx = rec.t;
+                l.tx_pkts += 1;
+                l.tx_bytes += rec.d;
+            }
+            KIND_DROP_QUEUE => {
+                self.links.entry(rec.a).or_default().drops_queue += 1;
+            }
+            KIND_DROP_WIRE => {
+                self.links.entry(rec.a).or_default().drops_wire += 1;
+            }
+            _ => {}
+        }
+    }
+
+    fn finish(self) -> (BTreeMap<u32, LinkUse>, u64) {
+        let t_end = self.t_end;
+        (self.links.into_iter().map(|(id, acc)| (id, acc.finish(t_end))).collect(), t_end)
+    }
+}
+
+/// Compute a trace's per-link / per-flow / per-iteration statistics.
+pub fn trace_stats(file: &TraceFile) -> TraceStats {
+    // Link-level pass, segmented on job/sim markers exactly like the
+    // breakdown pass so the two sim lists align index-for-index.
+    let mut link_sims: Vec<(BTreeMap<u32, LinkUse>, u64)> = Vec::new();
+    let mut cur: Option<LinkPass> = None;
+    for rec in &file.records {
+        match rec.kind {
+            KIND_JOB_START => {
+                if let Some(p) = cur.take() {
+                    link_sims.push(p.finish());
+                }
+            }
+            KIND_SIM_START => {
+                if let Some(p) = cur.take() {
+                    link_sims.push(p.finish());
+                }
+                cur = Some(LinkPass::new());
+            }
+            _ => {
+                if let Some(p) = cur.as_mut() {
+                    p.observe(rec);
+                }
+            }
+        }
+    }
+    if let Some(p) = cur.take() {
+        link_sims.push(p.finish());
+    }
+    let tables = breakdown_table(file);
+    debug_assert_eq!(link_sims.len(), tables.len());
+    let sims = tables
+        .into_iter()
+        .zip(link_sims)
+        .map(|(table, (links, t_end))| SimStats {
+            index: table.index,
+            seed: table.seed,
+            t_end_ns: t_end.max(table.t_end_ns),
+            links,
+            table,
+        })
+        .collect();
+    TraceStats {
+        scenario: file.header.scenario.clone(),
+        quick: file.header.quick,
+        version: file.header.version,
+        sims,
+    }
+}
+
+impl TraceStats {
+    /// Render as the deterministic `ltp-trace-stats-v1` JSON.
+    pub fn to_json(&self) -> Json {
+        let sims = self.sims.iter().map(render_sim).collect();
+        Json::obj(vec![
+            ("schema", "ltp-trace-stats-v1".into()),
+            ("scenario", self.scenario.as_str().into()),
+            ("quick", self.quick.into()),
+            ("trace_version", (self.version as u64).into()),
+            ("sims", Json::Arr(sims)),
+        ])
+    }
+}
+
+fn render_sim(sim: &SimStats) -> Json {
+    let links: Vec<Json> = sim
+        .links
+        .iter()
+        .map(|(&id, l)| {
+            let mut kv: Vec<(&str, Json)> = vec![
+                ("link", (id as u64).into()),
+                ("label", link_label(id, l.meta.as_ref()).into()),
+            ];
+            if let Some(m) = &l.meta {
+                kv.push(("src", (m.src as u64).into()));
+                kv.push(("dst", (m.dst as u64).into()));
+                kv.push(("rate_bps", m.rate_bps.into()));
+                kv.push(("queue_cap_bytes", m.queue_cap_bytes.into()));
+            }
+            let util = if sim.t_end_ns > 0 {
+                l.busy_ns as f64 / sim.t_end_ns as f64
+            } else {
+                0.0
+            };
+            kv.push(("tx_pkts", l.tx_pkts.into()));
+            kv.push(("tx_bytes", l.tx_bytes.into()));
+            kv.push(("drops_queue", l.drops_queue.into()));
+            kv.push(("drops_wire", l.drops_wire.into()));
+            kv.push(("busy_ns", l.busy_ns.into()));
+            kv.push(("utilization", util.into()));
+            kv.push(("peak_queue_pkts", l.peak_queue_pkts.into()));
+            kv.push(("peak_queue_bytes", l.peak_queue_bytes.into()));
+            let depth = l.queue_depth_bytes.iter().map(|&b| b.into()).collect();
+            kv.push(("queue_depth_bytes", Json::Arr(depth)));
+            Json::obj(kv)
+        })
+        .collect();
+    let flows: Vec<Json> = sim
+        .table
+        .flows
+        .iter()
+        .map(|f| {
+            let extra_tx: u64 = f.retx.iter().map(|r| r.tx_count - 1).sum();
+            Json::obj(vec![
+                ("flow", f.flow.into()),
+                ("worker", (f.worker as u64).into()),
+                ("iter", f.iter.into()),
+                ("reason", super::reason_name(f.reason).into()),
+                ("delivered_ppm", f.delivered_ppm.into()),
+                ("queueing_ns", f.queueing_ns.into()),
+                ("retransmit_ns", f.retransmit_ns.into()),
+                ("early_close_wait_ns", f.early_close_wait_ns.into()),
+                ("retransmitted_seqs", f.retx.len().into()),
+                ("extra_tx", extra_tx.into()),
+            ])
+        })
+        .collect();
+    // Iteration phase spans: first data enqueue → last close (the BSP
+    // barrier for that iteration).
+    let mut iters: BTreeMap<u64, IterAcc> = BTreeMap::new();
+    for f in &sim.table.flows {
+        let e = iters.entry(f.iter).or_default();
+        e.flows += 1;
+        let start = f.first_enqueue_ns.unwrap_or(f.close_ns);
+        e.start = Some(e.start.map_or(start, |s: u64| s.min(start)));
+        e.first_close = Some(e.first_close.map_or(f.close_ns, |c: u64| c.min(f.close_ns)));
+        e.barrier = e.barrier.max(f.close_ns);
+        e.queueing += f.queueing_ns;
+        e.retransmit += f.retransmit_ns;
+        e.wait += f.early_close_wait_ns;
+    }
+    let iterations: Vec<Json> = iters
+        .into_iter()
+        .map(|(iter, e)| {
+            let start = e.start.unwrap_or(0);
+            Json::obj(vec![
+                ("iter", iter.into()),
+                ("flows", e.flows.into()),
+                ("start_ns", start.into()),
+                ("first_close_ns", e.first_close.unwrap_or(0).into()),
+                ("barrier_ns", e.barrier.into()),
+                ("span_ns", e.barrier.saturating_sub(start).into()),
+                ("queueing_ns", e.queueing.into()),
+                ("retransmit_ns", e.retransmit.into()),
+                ("early_close_wait_ns", e.wait.into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("sim", sim.index.into()),
+        ("seed", sim.seed.into()),
+        ("t_end_ns", sim.t_end_ns.into()),
+        ("links", Json::Arr(links)),
+        ("flows", Json::Arr(flows)),
+        ("iterations", Json::Arr(iterations)),
+    ])
+}
+
+#[derive(Default)]
+struct IterAcc {
+    flows: u64,
+    start: Option<u64>,
+    first_close: Option<u64>,
+    barrier: u64,
+    queueing: u64,
+    retransmit: u64,
+    wait: u64,
+}
+
+/// [`trace_stats`] rendered straight to JSON.
+pub fn stats_json(file: &TraceFile) -> Json {
+    trace_stats(file).to_json()
+}

@@ -1,0 +1,298 @@
+//! Link-occupancy timeline rendering: hand-written SVG (and an HTML
+//! wrapper with inline pan/zoom), zero external dependencies.
+//!
+//! One horizontal lane per link (labeled via [`super::KIND_LINK_META`]
+//! when the trace carries it, `link<N>` otherwise), TX serialization
+//! spans colored by flow, drop ticks (red = queue, orange = wire), a
+//! close-marker strip colored by close reason, and dashed vertical
+//! iteration-barrier lines at each iteration's last close.
+//!
+//! **Determinism contract** (DESIGN.md §4.7): the output is a pure
+//! function of the decoded trace and the selected sim index — integer
+//! pixel math, `BTreeMap` ordering, no timestamps, no randomness — so
+//! serial and `--jobs N` captures of the same run render byte-identical
+//! SVG (CI compares hashes).
+
+use super::reader::TraceFile;
+use super::stats::{link_label, LinkMeta};
+use super::{
+    reason_name, Record, KIND_CLOSE, KIND_DROP_QUEUE, KIND_DROP_WIRE, KIND_ENQUEUE,
+    KIND_LINK_META, KIND_SIM_START, KIND_TX,
+};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Label gutter width (px).
+const LABEL_W: u64 = 150;
+/// Plot area width (px).
+const PLOT_W: u64 = 1100;
+/// Lane height (px).
+const LANE_H: u64 = 12;
+/// Vertical stride between lanes (px).
+const LANE_STRIDE: u64 = 16;
+/// Y of the first lane.
+const LANES_Y: u64 = 52;
+/// Height reserved under the lanes for the time axis.
+const AXIS_H: u64 = 30;
+
+/// Flow color palette (12 entries, keyed `flow % 12`).
+const PALETTE: [&str; 12] = [
+    "#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd", "#8c564b", "#e377c2", "#7f7f7f",
+    "#bcbd22", "#17becf", "#aec7e8", "#ffbb78",
+];
+
+#[derive(Default)]
+struct Lane {
+    /// Merged TX spans in px: (x0, x1, flow).
+    spans: Vec<(u64, u64, u64)>,
+    /// Drop tick px positions: (x, is_wire).
+    drops: Vec<(u64, bool)>,
+}
+
+struct SimView<'a> {
+    seed: u64,
+    records: Vec<&'a Record>,
+}
+
+/// Slice out one simulation's records (and count the total).
+fn select_sim(file: &TraceFile, sim_index: usize) -> Result<SimView<'_>, String> {
+    let mut sims = 0usize;
+    let mut view: Option<SimView> = None;
+    for rec in &file.records {
+        if rec.kind == KIND_SIM_START {
+            if sims == sim_index {
+                view = Some(SimView { seed: rec.flow, records: Vec::new() });
+            } else if sims > sim_index {
+                break;
+            }
+            sims += 1;
+        } else if sims == sim_index + 1 {
+            if let Some(v) = view.as_mut() {
+                v.records.push(rec);
+            }
+        }
+    }
+    match view {
+        Some(v) => Ok(v),
+        None => Err(format!(
+            "trace contains {sims} simulation(s); --sim {sim_index} is out of range"
+        )),
+    }
+}
+
+fn fmt_time(ns: u64) -> String {
+    if ns >= 1_000_000 {
+        // ms with one decimal, integer math.
+        format!("{}.{}ms", ns / 1_000_000, (ns / 100_000) % 10)
+    } else if ns >= 1_000 {
+        format!("{}us", ns / 1_000)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Render one simulation of a trace as a link-occupancy timeline SVG.
+pub fn render_svg(file: &TraceFile, sim_index: usize) -> Result<String, String> {
+    let view = select_sim(file, sim_index)?;
+    let t_end = view.records.iter().map(|r| r.t).max().unwrap_or(0);
+    let t_max = t_end.max(1);
+    let x_of = |t: u64| LABEL_W + (t as u128 * PLOT_W as u128 / t_max as u128) as u64;
+
+    // Per-link accumulation: FIFO pairing for serialization spans (same
+    // discipline as the stats pass), plus drop ticks and metadata.
+    let mut metas: BTreeMap<u32, LinkMeta> = BTreeMap::new();
+    let mut lanes: BTreeMap<u32, Lane> = BTreeMap::new();
+    let mut pending: BTreeMap<u32, std::collections::VecDeque<u64>> = BTreeMap::new();
+    let mut last_tx: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut closes: Vec<(u64, u32, u8)> = Vec::new();
+    let mut barriers: BTreeMap<u64, u64> = BTreeMap::new();
+    for rec in &view.records {
+        match rec.kind {
+            KIND_LINK_META => {
+                metas.insert(rec.a, LinkMeta::from_record(rec));
+                lanes.entry(rec.a).or_default();
+            }
+            KIND_ENQUEUE => {
+                pending.entry(rec.a).or_default().push_back(rec.t);
+                lanes.entry(rec.a).or_default();
+            }
+            KIND_TX => {
+                let t_enq = pending.entry(rec.a).or_default().pop_front().unwrap_or(rec.t);
+                let prev = last_tx.get(&rec.a).copied().unwrap_or(0);
+                let x0 = x_of(t_enq.max(prev));
+                let x1 = x_of(rec.t).max(x0 + 1);
+                let lane = lanes.entry(rec.a).or_default();
+                match lane.spans.last_mut() {
+                    // Sub-pixel span already covered by the previous one.
+                    Some(&mut (_, px1, _)) if x1 <= px1 => {}
+                    // Same flow, touching: extend.
+                    Some(s) if s.2 == rec.flow && x0 <= s.1 => s.1 = x1,
+                    _ => lane.spans.push((x0, x1, rec.flow)),
+                }
+                last_tx.insert(rec.a, rec.t);
+            }
+            KIND_DROP_QUEUE | KIND_DROP_WIRE => {
+                let x = x_of(rec.t);
+                let wire = rec.kind == KIND_DROP_WIRE;
+                let lane = lanes.entry(rec.a).or_default();
+                if lane.drops.last() != Some(&(x, wire)) {
+                    lane.drops.push((x, wire));
+                }
+            }
+            KIND_CLOSE => {
+                closes.push((rec.t, rec.a, (rec.c & 0xff) as u8));
+                let iter = rec.c >> 8;
+                let e = barriers.entry(iter).or_default();
+                *e = (*e).max(rec.t);
+            }
+            _ => {}
+        }
+    }
+
+    let n_links = lanes.len() as u64;
+    let width = LABEL_W + PLOT_W + 10;
+    let height = LANES_Y + n_links * LANE_STRIDE + AXIS_H;
+    let lanes_bottom = LANES_Y + n_links * LANE_STRIDE;
+    let mut svg = String::new();
+    let _ = writeln!(
+        svg,
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{width}\" height=\"{height}\" \
+         viewBox=\"0 0 {width} {height}\" font-family=\"monospace\" font-size=\"10\">"
+    );
+    let _ = writeln!(
+        svg,
+        "<rect x=\"0\" y=\"0\" width=\"{width}\" height=\"{height}\" fill=\"#ffffff\"/>"
+    );
+    let _ = writeln!(
+        svg,
+        "<text x=\"4\" y=\"14\" font-size=\"12\">{} · sim {} (seed {}) · {} links · t_end {}</text>",
+        xml_escape(&file.header.scenario),
+        sim_index,
+        view.seed,
+        n_links,
+        fmt_time(t_end)
+    );
+
+    // Close-marker strip (one dot per gather close, colored by reason).
+    let _ = writeln!(svg, "<text x=\"4\" y=\"38\" fill=\"#666666\">closes</text>");
+    for &(t, worker, reason) in &closes {
+        let color = match reason {
+            0 => "#2ca02c",
+            1 => "#1f77b4",
+            _ => "#d62728",
+        };
+        let _ = writeln!(
+            svg,
+            "<circle cx=\"{}\" cy=\"35\" r=\"3\" fill=\"{color}\"><title>w{worker} {} @ {}</title></circle>",
+            x_of(t),
+            reason_name(reason),
+            fmt_time(t)
+        );
+    }
+
+    // Lanes: background, label, TX spans, drop ticks.
+    for (i, (&link, lane)) in lanes.iter().enumerate() {
+        let y = LANES_Y + i as u64 * LANE_STRIDE;
+        let _ = writeln!(
+            svg,
+            "<rect x=\"{LABEL_W}\" y=\"{y}\" width=\"{PLOT_W}\" height=\"{LANE_H}\" fill=\"#f4f4f4\"/>"
+        );
+        let _ = writeln!(
+            svg,
+            "<text x=\"4\" y=\"{}\">{}</text>",
+            y + LANE_H - 2,
+            xml_escape(&link_label(link, metas.get(&link)))
+        );
+        for &(x0, x1, flow) in &lane.spans {
+            let _ = writeln!(
+                svg,
+                "<rect x=\"{x0}\" y=\"{y}\" width=\"{}\" height=\"{LANE_H}\" fill=\"{}\"/>",
+                x1 - x0,
+                PALETTE[(flow % 12) as usize]
+            );
+        }
+        for &(x, wire) in &lane.drops {
+            let color = if wire { "#ff9900" } else { "#d62728" };
+            let _ = writeln!(
+                svg,
+                "<line x1=\"{x}\" y1=\"{}\" x2=\"{x}\" y2=\"{}\" stroke=\"{color}\" stroke-width=\"1\" class=\"drop\"/>",
+                y.saturating_sub(2),
+                y + LANE_H + 2
+            );
+        }
+    }
+
+    // Iteration barrier lines at each iteration's last close.
+    for (&iter, &t) in &barriers {
+        let x = x_of(t);
+        let _ = writeln!(
+            svg,
+            "<line x1=\"{x}\" y1=\"44\" x2=\"{x}\" y2=\"{lanes_bottom}\" stroke=\"#555555\" \
+             stroke-width=\"1\" stroke-dasharray=\"4 3\"/>"
+        );
+        let _ = writeln!(svg, "<text x=\"{}\" y=\"50\" fill=\"#555555\">i{iter}</text>", x + 3);
+    }
+
+    // Time axis.
+    let axis_y = lanes_bottom + 12;
+    let _ = writeln!(
+        svg,
+        "<line x1=\"{LABEL_W}\" y1=\"{axis_y}\" x2=\"{}\" y2=\"{axis_y}\" stroke=\"#333333\"/>",
+        LABEL_W + PLOT_W
+    );
+    for tick in 0..=5u64 {
+        let t = t_end * tick / 5;
+        let x = x_of(t);
+        let _ = writeln!(
+            svg,
+            "<line x1=\"{x}\" y1=\"{axis_y}\" x2=\"{x}\" y2=\"{}\" stroke=\"#333333\"/>",
+            axis_y + 4
+        );
+        let _ = writeln!(svg, "<text x=\"{x}\" y=\"{}\">{}</text>", axis_y + 15, fmt_time(t));
+    }
+    svg.push_str("</svg>\n");
+    Ok(svg)
+}
+
+/// [`render_svg`] wrapped in a self-contained HTML page with inline
+/// wheel-zoom and drag-pan (no external dependencies).
+pub fn render_html(file: &TraceFile, sim_index: usize) -> Result<String, String> {
+    let svg = render_svg(file, sim_index)?;
+    let title = xml_escape(&file.header.scenario);
+    Ok(format!(
+        "<!doctype html>\n<html><head><meta charset=\"utf-8\">\
+         <title>ltp trace · {title} · sim {sim_index}</title>\
+         <style>body{{margin:8px;background:#ffffff;font-family:monospace}}</style>\
+         </head><body>\n{svg}\
+         <script>\n\
+         (function () {{\n\
+           var svg = document.querySelector('svg');\n\
+           var vb = svg.viewBox.baseVal;\n\
+           var drag = null;\n\
+           svg.addEventListener('wheel', function (ev) {{\n\
+             ev.preventDefault();\n\
+             var k = ev.deltaY < 0 ? 0.85 : 1.18;\n\
+             var pt = svg.createSVGPoint();\n\
+             pt.x = ev.clientX; pt.y = ev.clientY;\n\
+             var p = pt.matrixTransform(svg.getScreenCTM().inverse());\n\
+             vb.x = p.x - (p.x - vb.x) * k;\n\
+             vb.y = p.y - (p.y - vb.y) * k;\n\
+             vb.width *= k; vb.height *= k;\n\
+           }});\n\
+           svg.addEventListener('mousedown', function (ev) {{ drag = [ev.clientX, ev.clientY]; }});\n\
+           window.addEventListener('mouseup', function () {{ drag = null; }});\n\
+           window.addEventListener('mousemove', function (ev) {{\n\
+             if (!drag) return;\n\
+             var scale = vb.width / svg.clientWidth;\n\
+             vb.x -= (ev.clientX - drag[0]) * scale;\n\
+             vb.y -= (ev.clientY - drag[1]) * scale;\n\
+             drag = [ev.clientX, ev.clientY];\n\
+           }});\n\
+         }})();\n\
+         </script></body></html>\n"
+    ))
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}

@@ -6,7 +6,7 @@
 //! ```text
 //! offset  size  field
 //!      0     8  magic  b"LTPTRACE"
-//!      8     4  format version (1)
+//!      8     4  format version (2)
 //!     12     4  record size in bytes (40)
 //!     16     4  quick flag (0/1)
 //!     20     4  job count (number of KIND_JOB_START records)
@@ -14,13 +14,17 @@
 //!     56     8  record count
 //!     64     …  records (record_count × 40 bytes)
 //! ```
+//!
+//! Version history: v1 had no link-metadata records; v2 adds
+//! [`super::KIND_LINK_META`] (same header and record layout). The reader
+//! accepts both; tools label links `link<N>` when metadata is absent.
 
 use super::{Record, RECORD_BYTES};
 
 /// Trace file magic bytes.
 pub const MAGIC: [u8; 8] = *b"LTPTRACE";
-/// Current trace format version.
-pub const VERSION: u32 = 1;
+/// Current trace format version (v2 = v1 + link-metadata records).
+pub const VERSION: u32 = 2;
 /// Size of the file header.
 pub const HEADER_BYTES: usize = 64;
 /// Width of the NUL-padded scenario-name field.

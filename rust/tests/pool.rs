@@ -17,7 +17,7 @@ use ltp::scenarios::sweep::{run_sweep, sweep_jobs};
 #[test]
 fn scenario_all_json_is_byte_identical_across_job_counts() {
     let indices: Vec<usize> = (0..registry().len()).collect();
-    let jobs = sweep_jobs(&indices, &[7, 8], true, None, None, None);
+    let jobs = sweep_jobs(&indices, &[7, 8], true, None, None, None, None);
     let serial = run_sweep(jobs.clone(), 1);
     let parallel = run_sweep(jobs, 4);
     assert_eq!(serial.reports.len(), registry().len() * 2);

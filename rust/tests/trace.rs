@@ -48,7 +48,8 @@ fn capture_scope_does_not_perturb_report_bytes() {
 
 #[test]
 fn trace_records_are_byte_identical_across_job_counts() {
-    let jobs = || sweep_jobs(&[index_of("incast_heavy_loss")], &[7, 8], true, None, None, None);
+    let jobs =
+        || sweep_jobs(&[index_of("incast_heavy_loss")], &[7, 8], true, None, None, None, None);
     let (serial, recs1) = run_sweep_traced(jobs(), 1, true);
     let (pooled, recs2) = run_sweep_traced(jobs(), 2, true);
     let (recs1, recs2) = (recs1.unwrap(), recs2.unwrap());
@@ -63,7 +64,7 @@ fn trace_records_are_byte_identical_across_job_counts() {
 
 #[test]
 fn replay_reproduces_the_recorded_report_bytes() {
-    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None, None);
+    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None, None, None);
     let (live, records) = run_sweep_traced(jobs, 1, true);
     let records = records.unwrap();
     let bytes = trace::encode("wan_clean", true, 1, &records).unwrap();
@@ -84,7 +85,7 @@ fn replay_reproduces_the_recorded_report_bytes() {
 
 #[test]
 fn replay_reports_divergence_with_record_context() {
-    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None, None);
+    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None, None, None);
     let (_, records) = run_sweep_traced(jobs, 1, true);
     let mut records = records.unwrap();
     // Tamper with a mid-stream packet record (not a job marker, which
@@ -102,7 +103,7 @@ fn replay_rejects_a_header_registry_mismatch() {
     // A header naming one scenario while the job-start records resolve to
     // another means the registry moved under the trace — refuse to
     // silently replay the wrong experiment.
-    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None, None);
+    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None, None, None);
     let (_, records) = run_sweep_traced(jobs, 1, true);
     let bytes = trace::encode("incast_sweep", true, 1, &records.unwrap()).unwrap();
     let err = trace::replay(&trace::decode(&bytes).unwrap()).unwrap_err();
@@ -115,7 +116,7 @@ fn replay_rejects_a_header_registry_mismatch() {
 
 #[test]
 fn breakdown_splits_flow_time_under_loss() {
-    let jobs = sweep_jobs(&[index_of("incast_heavy_loss")], &[7], true, None, None, None);
+    let jobs = sweep_jobs(&[index_of("incast_heavy_loss")], &[7], true, None, None, None, None);
     let (_, records) = run_sweep_traced(jobs, 1, true);
     let bytes = trace::encode("incast_heavy_loss", true, 1, &records.unwrap()).unwrap();
     let file = trace::decode(&bytes).unwrap();
@@ -191,7 +192,7 @@ fn corrupt_traces_are_rejected_with_offset_context() {
 
 #[test]
 fn trace_files_roundtrip_through_disk() {
-    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None, None);
+    let jobs = sweep_jobs(&[index_of("wan_clean")], &[7], true, None, None, None, None);
     let (_, records) = run_sweep_traced(jobs, 1, true);
     let records = records.unwrap();
     let path = std::env::temp_dir().join(format!("ltp-trace-test-{}.ltt", std::process::id()));
